@@ -1,0 +1,57 @@
+//! Fleet-scale emulation study: sweep all §8.3 workloads and schedulers
+//! across a 7-edge host (the paper's emulation setup), printing the
+//! Fig. 9 scatter rows (tasks completed vs QoS utility).
+//!
+//! ```sh
+//! cargo run --release --example fleet_study
+//! ```
+
+use ocularone::exec::CloudExecModel;
+use ocularone::fleet::Workload;
+use ocularone::net::LognormalWan;
+use ocularone::platform::Platform;
+use ocularone::policy::Policy;
+use ocularone::sim;
+
+fn main() {
+    let seed = 7u64;
+    let edges = 7;
+    println!("workload,algo,edge,completed,utility");
+    let mut best: Vec<(String, String, f64)> = Vec::new();
+    for wl in Workload::fig8_all() {
+        let mut top = ("-".to_string(), f64::MIN);
+        for policy in Policy::fig8_lineup() {
+            let name = policy.kind.name().to_string();
+            let mut med = Vec::new();
+            for e in 0..edges {
+                let s = seed ^ ((e + 1) * 0x9E37);
+                let platform = Platform::new(
+                    policy.clone(),
+                    wl.models.clone(),
+                    CloudExecModel::new(Box::new(LognormalWan::default())),
+                    s,
+                );
+                let m = sim::run(platform, &wl, s);
+                println!(
+                    "{},{},{},{},{:.0}",
+                    wl.name,
+                    name,
+                    e,
+                    m.completed(),
+                    m.qos_utility()
+                );
+                med.push(m.qos_utility());
+            }
+            med.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let m = med[med.len() / 2];
+            if m > top.1 {
+                top = (name.clone(), m);
+            }
+        }
+        best.push((wl.name.clone(), top.0, top.1));
+    }
+    eprintln!("\nbest median-utility scheduler per workload:");
+    for (wl, algo, util) in best {
+        eprintln!("  {wl}: {algo} ({util:.0})");
+    }
+}

@@ -1,0 +1,49 @@
+//! Quickstart: simulate the DEMS scheduler on a paper workload, then (if
+//! `make artifacts` has run) load the compiled PJRT models and do one real
+//! inference per DNN.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ocularone::exp::summarize;
+use ocularone::fleet::Workload;
+use ocularone::policy::Policy;
+use ocularone::runtime::Runtime;
+use ocularone::simulate;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Simulated study: 3 drones, Active mix (= the paper's 3D-A), DEMS.
+    let wl = Workload::emulation(3, true);
+    println!("workload {} ({} tasks over {} s)", wl.name, wl.total_tasks(),
+             wl.duration / 1_000_000);
+    for policy in [Policy::edf_ec(), Policy::dems(), Policy::gems(false)] {
+        let name = policy.kind.name().to_string();
+        let m = simulate(policy, &wl, 42);
+        println!("  {name:10} {}", summarize(&m));
+    }
+
+    // 2. Real inference through the PJRT runtime (all three layers:
+    //    Pallas kernel -> JAX model -> HLO artifact -> Rust).
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            println!("\nPJRT runtime on {}:", rt.platform_name());
+            for kind in rt.kinds() {
+                let frame = rt.synth_frame(kind, 1)?;
+                let t0 = std::time::Instant::now();
+                let out = rt.model(kind).unwrap().infer(&frame)?;
+                println!(
+                    "  {:4} -> {} outputs in {:.2} ms (first: {:.4})",
+                    kind.name(),
+                    out.len(),
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    out[0]
+                );
+            }
+        }
+        Err(e) => {
+            println!("\n(skipping real inference: {e}; run `make artifacts`)");
+        }
+    }
+    Ok(())
+}

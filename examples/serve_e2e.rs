@@ -1,0 +1,63 @@
+//! End-to-end serving driver (the repo's E2E validation): load the six
+//! compiled DNN artifacts, serve two emulated drone streams through the
+//! edge-EDF + cloud-offload pipeline with *real* PJRT inference on the
+//! request path, and report latency/throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::path::Path;
+use std::time::Duration;
+
+use ocularone::metrics::percentile;
+use ocularone::serve::{calibrate, serve, ServeConfig};
+use ocularone::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let rt = Runtime::load(dir)?;
+    println!("PJRT platform: {}", rt.platform_name());
+    println!("calibrating per-model p95 latencies...");
+    for (kind, p95) in calibrate(&rt, 30)? {
+        println!("  {:4}: {:.2} ms", kind.name(), p95);
+    }
+    drop(rt);
+
+    let cfg = ServeConfig {
+        rate: 2.0,
+        drones: 2,
+        duration: Duration::from_secs(15),
+        ..Default::default()
+    };
+    println!(
+        "\nserving {} drones × {} segments/s for {:?} \
+         (each segment fans out to 6 DNN tasks)...",
+        cfg.drones, cfg.rate, cfg.duration
+    );
+    let report = serve(dir, &cfg)?;
+    println!(
+        "\nthroughput {:.1} inferences/s | completion {:.1}% | wall {:.1}s",
+        report.throughput(),
+        100.0 * report.completion_rate(),
+        report.wall_secs
+    );
+    println!("| model | done | missed | dropped | cloud | p50 ms | p95 ms | post-proc p50 µs |");
+    println!("|-------|------|--------|---------|-------|--------|--------|------------------|");
+    for (kind, s) in &report.per_model {
+        println!(
+            "| {} | {} | {} | {} | {} | {:.1} | {:.1} | {:.2} |",
+            kind.name(),
+            s.completed,
+            s.missed,
+            s.dropped,
+            s.on_cloud,
+            percentile(&s.latency_ms, 0.5),
+            percentile(&s.latency_ms, 0.95),
+            percentile(&s.postproc_us, 0.5),
+        );
+    }
+    Ok(())
+}

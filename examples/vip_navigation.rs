@@ -1,0 +1,70 @@
+//! VIP navigation study (§8.8): fly the simulated Tello behind a scripted
+//! proxy VIP using each scheduler's HV tracking completions, and compare
+//! trajectory quality (jerk, yaw error, DNF) — the Fig. 17/18 scenario as
+//! a runnable example.
+//!
+//! ```sh
+//! cargo run --release --example vip_navigation
+//! ```
+
+use ocularone::exec::CloudExecModel;
+use ocularone::fleet::Workload;
+use ocularone::model::{orin_field, DnnKind};
+use ocularone::nav::{fly, TrackingEvent};
+use ocularone::net::LognormalWan;
+use ocularone::platform::Platform;
+use ocularone::policy::Policy;
+use ocularone::sim;
+use ocularone::time::ms;
+
+fn main() {
+    let seed = 42;
+    for fps in [15u32, 30] {
+        println!("== {fps} FPS (HV per frame, DEV/BP every 3rd frame) ==");
+        for policy in [
+            Policy::edge_only_field(),
+            Policy::edf_ec(),
+            Policy::dems(),
+            Policy::gems(false),
+        ] {
+            let wl = Workload::field(fps, orin_field());
+            let name = policy.kind.name().to_string();
+            let mut platform = Platform::new(
+                policy,
+                wl.models.clone(),
+                CloudExecModel::new(Box::new(LognormalWan::default())),
+                seed,
+            );
+            platform.edge_exec = wl.edge_exec.clone();
+            platform.metrics.record_completions = true;
+            let m = sim::run(platform, &wl, seed);
+            let events: Vec<TrackingEvent> = m
+                .completions
+                .iter()
+                .filter(|c| c.model == DnnKind::Hv)
+                .map(|c| TrackingEvent {
+                    at: c.at,
+                    success: c.success && c.latency <= ocularone::exp::FRESH,
+                })
+                .collect();
+            let nav = fly(&events, m.duration, seed ^ fps as u64);
+            print!(
+                "{:10} done {:5.1}%  total-util {:8.0}  ",
+                name,
+                100.0 * m.completion_rate(),
+                m.total_utility()
+            );
+            if nav.dnf {
+                println!("DNF (failsafe landing at {:.0}s)", nav.dnf_at_s);
+            } else {
+                let (_, _, ud95) = nav.jerk_stats(2);
+                let (ymean, ymed, y95) = nav.yaw_stats();
+                println!(
+                    "jerk-UD p95 {ud95:5.2} m/s³  yaw err mean/med/p95 \
+                     {ymean:4.1}/{ymed:4.1}/{y95:5.1}°"
+                );
+            }
+        }
+        println!();
+    }
+}

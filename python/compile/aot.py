@@ -1,0 +1,120 @@
+"""AOT compile path: lower every L2 model to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and EXPERIMENTS.md.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out-dir ../artifacts          # all models
+    python -m compile.aot --models hv,bp --out-dir ...    # subset
+    python -m compile.aot --report                        # roofline report
+
+Each artifact is a single-parameter computation ``f32[NHWC] -> (f32[L],)``
+(lowered with ``return_tuple=True``; the Rust side unwraps with
+``to_tuple1``). A ``manifest.json`` records shapes so the Rust runtime can
+validate what it loads.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels.roofline import estimate, sweep_blocks
+from .model import MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default printer elides
+    big dense literals as ``constant({...})``, which xla_extension 0.5.1's
+    text parser silently reads back as zeros — the model weights would
+    vanish and every inference would return bias-only outputs.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(name: str) -> str:
+    spec = MODELS[name]
+    arg = jax.ShapeDtypeStruct(spec.input_shape, jax.numpy.float32)
+    lowered = jax.jit(spec.fn).lower(arg)
+    return to_hlo_text(lowered)
+
+
+def emit_all(out_dir: str, names: list[str]) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name in names:
+        spec = MODELS[name]
+        text = lower_model(name)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "input_shape": list(spec.input_shape),
+            "output_len": spec.output_len,
+            "hlo": f"{name}.hlo.txt",
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest for {len(names)} models")
+
+
+def report() -> None:
+    """Print the §Perf roofline report for the kernel's model shapes."""
+    # Representative GEMMs: the largest im2col GEMM of each model.
+    shapes = {
+        "hv/dev conv2 (32x32)": (32 * 32, 32, 3 * 3 * 16),
+        "bp conv3 (16x16)": (16 * 16, 64, 3 * 3 * 32),
+        "cd conv3 (24x24)": (24 * 24, 96, 3 * 3 * 48),
+        "deo dec1 (24x24)": (24 * 24, 64, 3 * 3 * 128),
+        "deo enc3 (24x24)": (24 * 24, 128, 3 * 3 * 64),
+    }
+    for label, (m, n, k) in shapes.items():
+        best = sweep_blocks(m, n, k)[0]
+        dflt = estimate(m, n, k)
+        print(f"{label}: M={m} N={n} K={k}")
+        print(f"  default 128^3: vmem={dflt.vmem_bytes/2**10:.0f}KiB "
+              f"mxu={dflt.mxu_utilization:.3f} bound={dflt.roofline_bound} "
+              f"eff={dflt.efficiency:.3f}")
+        print(f"  best {best.block}: vmem={best.vmem_bytes/2**10:.0f}KiB "
+              f"mxu={best.mxu_utilization:.3f} bound={best.roofline_bound} "
+              f"eff={best.efficiency:.3f}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None,
+                   help="compat: emit single combined artifact path marker")
+    p.add_argument("--models", default=",".join(MODELS))
+    p.add_argument("--report", action="store_true")
+    args = p.parse_args()
+    if args.report:
+        report()
+        return
+    names = [n for n in args.models.split(",") if n]
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    emit_all(out_dir or args.out_dir, names)
+    if args.out:
+        # Makefile stamp target: mark completion of the full artifact set.
+        with open(args.out, "w") as f:
+            f.write("see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .fused_matmul import BlockConfig, DEFAULT_BLOCK, fused_matmul_bias_relu
+from .im2col import conv2d, dense, global_avg_pool, im2col, max_pool
+
+__all__ = [
+    "BlockConfig",
+    "DEFAULT_BLOCK",
+    "fused_matmul_bias_relu",
+    "conv2d",
+    "dense",
+    "global_avg_pool",
+    "im2col",
+    "max_pool",
+]

@@ -1,0 +1,150 @@
+"""L1 Pallas kernel: tiled fused ``matmul + bias + ReLU``.
+
+This is the compute hot-spot of every DNN in the Ocularone workload. Each
+convolution layer is lowered to an im2col GEMM (see :mod:`.im2col`), so one
+well-tiled matmul kernel carries the whole inference stack.
+
+TPU adaptation of the paper's CUDA hot loop (DESIGN.md §2):
+
+* The CUDA models tile for shared memory + tensor cores; here the tiling is
+  expressed with ``BlockSpec`` over a ``(M/bm, N/bn, K/bk)`` grid so the
+  HBM->VMEM schedule is explicit and each active tile set fits VMEM.
+* Accumulation happens in an f32 VMEM scratch across the K grid axis
+  (``arbitrary`` semantics on that axis); the bias add and ReLU are fused
+  into the *final* K step so each output tile is written to HBM exactly
+  once — no separate elementwise pass.
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls, so the kernel must lower to plain HLO. Real-TPU efficiency
+  is estimated analytically in :mod:`.roofline`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+class BlockConfig(NamedTuple):
+    """Tile sizes for the fused matmul grid.
+
+    ``bm``/``bn``/``bk`` are the M/N/K tile edges. Defaults are MXU-shaped
+    (128x128 systolic array) while keeping the working set small enough to
+    double-buffer in a 16 MiB VMEM budget (see roofline.py).
+    """
+
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+
+
+DEFAULT_BLOCK = BlockConfig()
+
+
+def _fused_matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                         relu: bool):
+    """Grid point ``(i, j, k)``: accumulate ``x[i,k] @ w[k,j]`` into scratch.
+
+    On the last K step the bias row is added, ReLU applied, and the tile is
+    emitted. ``acc_ref`` is an f32 VMEM scratch that lives across the K axis
+    of the grid (``dimension_semantics`` marks K as ``arbitrary``).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _emit():
+        out = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block"))
+def fused_matmul_bias_relu(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    relu: bool = True,
+    block: BlockConfig = DEFAULT_BLOCK,
+) -> jax.Array:
+    """``relu(x @ w + b)`` via the tiled Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` activations (f32 or bf16).
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias.
+      relu: fuse a ReLU into the epilogue (disabled for regression heads).
+      block: tile configuration; shapes are zero-padded up to tile multiples
+        and the result is sliced back, so arbitrary M/N/K are accepted.
+
+    Returns:
+      ``[M, N]`` array with the dtype of ``x``.
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    if x.shape[1] != w.shape[0] or w.shape[1] != b.shape[0]:
+        raise ValueError(f"bad shapes: x{x.shape} w{w.shape} b{b.shape}")
+
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(block.bm, _ceil_pow2(m))
+    bn = min(block.bn, _ceil_pow2(n))
+    bk = min(block.bk, _ceil_pow2(k))
+
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    bp = _pad_to(b, (bn,))[None, :]  # [1, Np] row, broadcast over the tile
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    n_k = kp // bk
+    grid = (mp // bm, np_ // bn, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_matmul_kernel, n_k=n_k, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )
+
+    return out(xp, wp, bp)[:m, :n]
+
+
+def _ceil_pow2(v: int) -> int:
+    """Smallest power of two >= v (min 8) — keeps tiny shapes one-tile."""
+    p = 8
+    while p < v:
+        p *= 2
+    return p

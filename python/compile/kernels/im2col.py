@@ -1,0 +1,103 @@
+"""conv2d -> GEMM lowering: im2col patch extraction + the L1 fused kernel.
+
+Every convolution in the six Ocularone DNNs goes through this path, so the
+whole inference stack funnels into the single Pallas matmul (DESIGN.md §2).
+
+Layout convention: NHWC activations, HWIO filters — the natural layouts for
+TPU and for jax.lax conv helpers, and the ones XLA keeps without inserting
+transposes (verified in the lowered HLO; see EXPERIMENTS.md §Perf L2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .fused_matmul import BlockConfig, DEFAULT_BLOCK, fused_matmul_bias_relu
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int,
+           padding: str = "SAME") -> jax.Array:
+    """Extract convolution patches as a GEMM-ready matrix.
+
+    Args:
+      x: ``[N, H, W, C]`` input.
+      kh, kw: filter spatial dims.
+      stride: spatial stride (same for H and W).
+      padding: "SAME" or "VALID".
+
+    Returns:
+      ``[N * OH * OW, KH * KW * C]`` patch matrix.
+    """
+    n, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches returns features ordered as C*KH*KW with
+    # channel slowest; reorder to KH*KW*C to match a HWIO filter reshape.
+    oh, ow = patches.shape[1], patches.shape[2]
+    patches = patches.reshape(n, oh, ow, c, kh, kw)
+    patches = patches.transpose(0, 1, 2, 4, 5, 3)
+    return patches.reshape(n * oh * ow, kh * kw * c)
+
+
+def out_spatial(h: int, w: int, kh: int, kw: int, stride: int,
+                padding: str) -> tuple[int, int]:
+    """Output spatial dims of a conv (mirrors XLA's SAME/VALID rules)."""
+    if padding == "SAME":
+        return -(-h // stride), -(-w // stride)
+    return (h - kh) // stride + 1, (w - kw) // stride + 1
+
+
+def conv2d(
+    x: jax.Array,
+    filt: jax.Array,
+    bias: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = True,
+    block: BlockConfig = DEFAULT_BLOCK,
+) -> jax.Array:
+    """2-D convolution via im2col + the L1 Pallas fused GEMM.
+
+    Args:
+      x: ``[N, H, W, C]`` input.
+      filt: ``[KH, KW, C, F]`` filter (HWIO).
+      bias: ``[F]``.
+
+    Returns:
+      ``[N, OH, OW, F]``, ReLU-fused unless ``relu=False``.
+    """
+    n, h, w, c = x.shape
+    kh, kw, ci, f = filt.shape
+    if ci != c:
+        raise ValueError(f"channel mismatch: input {c} vs filter {ci}")
+    cols = im2col(x, kh, kw, stride, padding)
+    wmat = filt.reshape(kh * kw * c, f)
+    out = fused_matmul_bias_relu(cols, wmat, bias, relu=relu, block=block)
+    oh, ow = out_spatial(h, w, kh, kw, stride, padding)
+    return out.reshape(n, oh, ow, f)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, *, relu: bool = True,
+          block: BlockConfig = DEFAULT_BLOCK) -> jax.Array:
+    """Fully-connected layer on the same fused kernel. ``x: [N, K]``."""
+    return fused_matmul_bias_relu(x, w, b, relu=relu, block=block)
+
+
+def max_pool(x: jax.Array, size: int = 2, stride: int = 2) -> jax.Array:
+    """``[N,H,W,C]`` max pool — memory-bound, left to XLA's reduce-window."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, size, size, 1), (1, stride, stride, 1), "VALID",
+    )
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    """``[N,H,W,C] -> [N,C]`` spatial mean."""
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the L1 Pallas kernel and the conv building blocks.
+
+These never touch Pallas; pytest compares the kernel path against them with
+``assert_allclose`` across hypothesis-driven shape/dtype sweeps — the CORE
+correctness signal for layer 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_relu_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+                         relu: bool = True) -> jax.Array:
+    """Reference for ``fused_matmul_bias_relu``: f32-accumulated GEMM."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(
+        jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def conv2d_ref(x: jax.Array, filt: jax.Array, bias: jax.Array, *,
+               stride: int = 1, padding: str = "SAME",
+               relu: bool = True) -> jax.Array:
+    """Reference conv using ``lax.conv_general_dilated`` (NHWC/HWIO)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        filt.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + bias.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+              relu: bool = True) -> jax.Array:
+    """Reference dense layer (same math as the GEMM oracle)."""
+    return matmul_bias_relu_ref(x, w, b, relu)

@@ -1,0 +1,101 @@
+"""Analytic VMEM-footprint / MXU-utilization estimates for the L1 kernel.
+
+``interpret=True`` runs the kernel as numpy on CPU, so wallclock there says
+nothing about TPU performance. Instead we estimate, per ``BlockConfig``:
+
+* the VMEM working set (input, weight, bias, output and accumulator tiles,
+  double-buffered as the Mosaic pipeliner would);
+* MXU utilization: the fraction of issued 128x128x128 systolic passes doing
+  useful work, given tile-edge padding;
+* the HBM traffic and resulting arithmetic intensity, and the roofline-
+  limited efficiency on a nominal TPU-v4-like core (275 TF/s bf16 MXU,
+  1.2 TB/s HBM).
+
+These numbers are reported by ``aot.py --report`` and recorded in
+EXPERIMENTS.md §Perf; the block-shape iteration in DESIGN.md §6 optimizes
+against them.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .fused_matmul import BlockConfig
+
+VMEM_BYTES = 16 * 2**20  # per-core VMEM budget (v4-like)
+MXU_EDGE = 128  # systolic array edge
+PEAK_FLOPS = 275e12  # bf16 MXU peak, nominal
+HBM_BW = 1.2e12  # bytes/s
+
+
+@dataclass(frozen=True)
+class KernelEstimate:
+    """Static performance model of one fused-GEMM launch."""
+
+    m: int
+    n: int
+    k: int
+    block: BlockConfig
+    vmem_bytes: int
+    vmem_ok: bool
+    mxu_utilization: float
+    flops: int
+    hbm_bytes: int
+    arithmetic_intensity: float
+    roofline_bound: str
+    est_time_s: float
+    efficiency: float  # achieved/peak at the roofline bound
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def estimate(m: int, n: int, k: int, block: BlockConfig = BlockConfig(),
+             dtype_bytes: int = 4) -> KernelEstimate:
+    """Estimate the kernel's TPU behaviour for an ``[m,k] @ [k,n]`` GEMM."""
+    bm, bn, bk = block.bm, block.bn, block.bk
+    # Active tiles: x[bm,bk], w[bk,bn], bias[1,bn], out[bm,bn], acc f32.
+    single = (bm * bk + bk * bn + bn + bm * bn) * dtype_bytes + bm * bn * 4
+    vmem = 2 * single  # double-buffered by the pipeliner
+    # Padding waste: tiles cover ceil(dim/edge) systolic passes.
+    mp, np_, kp = (_ceil_div(m, bm) * bm, _ceil_div(n, bn) * bn,
+                   _ceil_div(k, bk) * bk)
+    useful = m * n * k
+    issued = mp * np_ * kp
+    # The MXU additionally pads each tile edge to 128.
+    mxu_passes = (_ceil_div(bm, MXU_EDGE) * _ceil_div(bn, MXU_EDGE)
+                  * _ceil_div(bk, MXU_EDGE))
+    tile_useful = min(bm, MXU_EDGE * _ceil_div(bm, MXU_EDGE)) * bn * bk
+    mxu_util = (useful / issued) * (
+        (bm * bn * bk) / (mxu_passes * MXU_EDGE**3)
+        if mxu_passes * MXU_EDGE**3 > tile_useful else 1.0)
+    mxu_util = min(mxu_util, 1.0)
+
+    flops = 2 * useful
+    # HBM traffic: x read once per N-tile sweep, w once per M-tile sweep,
+    # out written once (epilogue fused).
+    n_tiles_n = _ceil_div(n, bn)
+    n_tiles_m = _ceil_div(m, bm)
+    hbm = (m * k * n_tiles_n + k * n * n_tiles_m + m * n) * dtype_bytes
+    ai = flops / hbm
+    t_compute = flops / (PEAK_FLOPS * max(mxu_util, 1e-9))
+    t_mem = hbm / HBM_BW
+    bound = "compute" if t_compute >= t_mem else "memory"
+    t = max(t_compute, t_mem)
+    eff = (flops / t) / PEAK_FLOPS
+    return KernelEstimate(m, n, k, block, vmem, vmem <= VMEM_BYTES,
+                          mxu_util, flops, hbm, ai, bound, t, eff)
+
+
+def sweep_blocks(m: int, n: int, k: int,
+                 edges=(64, 128, 256, 512)) -> list[KernelEstimate]:
+    """Grid-sweep block shapes, VMEM-feasible only, best efficiency first."""
+    out = []
+    for bm in edges:
+        for bn in edges:
+            for bk in edges:
+                e = estimate(m, n, k, BlockConfig(bm, bn, bk))
+                if e.vmem_ok:
+                    out.append(e)
+    return sorted(out, key=lambda e: -e.efficiency)

@@ -1,0 +1,232 @@
+"""L2: the six Ocularone DNN inferencing models, in JAX over the L1 kernel.
+
+The paper's workload (Table 1) runs six vision DNNs per video segment:
+
+=====  ============================  =================  =====================
+name   paper model                   task               output contract here
+=====  ============================  =================  =====================
+HV     YOLOv8-nano (retrained)       hazard-vest bbox   ``[5]``  x,y,w,h,conf
+DEV    YOLOv8-nano + linear reg.     distance to VIP    ``[1]``  metres
+MD     SSD (AIZOOTech)               face-mask boxes    ``[G*G*6]`` grid boxes
+BP     ResNet-18 pose (18 kp)        body pose          ``[36]`` kp (x,y)
+CD     YOLOv8-medium                 crowd density      ``[1+G*G]`` count+map
+DEO    Monodepth2                    depth to objects   ``[D*D]`` depth map
+=====  ============================  =================  =====================
+
+These are *small but real* conv nets (DESIGN.md §1 substitution table): the
+scheduler treats DNNs as opaque (duration/benefit/deadline), so fidelity of
+the I/O contract and of the compute structure — conv stacks funnelled through
+the Pallas GEMM — is what matters, not the 100-MB weight zoos.
+
+Weights are deterministic (seeded per model) and are closed over, so they
+constant-fold into the lowered HLO: the Rust runtime feeds one image tensor
+and receives one flat f32 vector per model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, dense, global_avg_pool, max_pool
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one deployable model artifact."""
+
+    name: str
+    input_shape: tuple[int, int, int, int]  # NHWC
+    output_len: int
+    seed: int
+    fn: Callable[[jax.Array], jax.Array]
+
+
+def _w(key, *shape, scale=None):
+    fan_in = 1
+    for s in shape[:-1]:
+        fan_in *= s
+    scale = scale if scale is not None else (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _conv_params(key, kh, kw, cin, cout):
+    k1, k2 = jax.random.split(key)
+    return _w(k1, kh, kw, cin, cout), _w(k2, cout, scale=0.01)
+
+
+def _dense_params(key, cin, cout):
+    k1, k2 = jax.random.split(key)
+    return _w(k1, cin, cout), _w(k2, cout, scale=0.01)
+
+
+def _backbone(x, params, strides):
+    """Shared conv backbone: conv(s)->relu chain via the Pallas GEMM."""
+    for (f, b), s in zip(params, strides):
+        x = conv2d(x, f, b, stride=s)
+    return x
+
+
+def _make_backbone_params(key, cins, couts):
+    keys = jax.random.split(key, len(couts))
+    return [_conv_params(k, 3, 3, ci, co)
+            for k, ci, co in zip(keys, cins, couts)]
+
+
+# --------------------------------------------------------------------------
+# HV — hazard-vest detector (YOLO-nano analogue).
+# Grid detector: 8x8 cells x (x,y,w,h,conf); output = best-confidence box.
+# --------------------------------------------------------------------------
+
+def _hv_fn(seed: int):
+    key = jax.random.PRNGKey(seed)
+    kb, kh = jax.random.split(key)
+    bb = _make_backbone_params(kb, [3, 16, 32], [16, 32, 64])
+    head_f, head_b = _conv_params(kh, 1, 1, 64, 5)
+
+    def fn(img: jax.Array) -> jax.Array:
+        x = _backbone(img, bb, [2, 2, 2])          # [1,8,8,64]
+        g = conv2d(x, head_f, head_b, relu=False)  # [1,8,8,5]
+        g = g.reshape(-1, 5)
+        conf = jax.nn.sigmoid(g[:, 4])
+        best = jnp.argmax(conf)
+        box = g[best]
+        return jnp.concatenate([jax.nn.sigmoid(box[:4]), conf[best][None]])
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# DEV — distance estimation to the VIP: HV-style detector + linear
+# regression over (h, w, area) of the best box, as in the paper (§7).
+# --------------------------------------------------------------------------
+
+def _dev_fn(seed: int):
+    key = jax.random.PRNGKey(seed)
+    kb, kh, kr = jax.random.split(key, 3)
+    bb = _make_backbone_params(kb, [3, 16, 32], [16, 32, 64])
+    head_f, head_b = _conv_params(kh, 1, 1, 64, 5)
+    reg_w, reg_b = _dense_params(kr, 3, 1)
+
+    def fn(img: jax.Array) -> jax.Array:
+        x = _backbone(img, bb, [2, 2, 2])
+        g = conv2d(x, head_f, head_b, relu=False).reshape(-1, 5)
+        best = g[jnp.argmax(jax.nn.sigmoid(g[:, 4]))]
+        h = jax.nn.sigmoid(best[2])
+        w = jax.nn.sigmoid(best[3])
+        feats = jnp.stack([h, w, h * w])[None, :]
+        dist = dense(feats, reg_w, reg_b, relu=False)
+        # Calibrated to metres: inverse relation to apparent height.
+        return (3.0 / (h + 0.1) + 0.1 * dist[0]).reshape(1)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# MD — face-mask detection (SSD analogue): per-cell box + 2-class scores.
+# --------------------------------------------------------------------------
+
+def _md_fn(seed: int):
+    key = jax.random.PRNGKey(seed)
+    kb, kh = jax.random.split(key)
+    bb = _make_backbone_params(kb, [3, 12, 24], [12, 24, 48])
+    head_f, head_b = _conv_params(kh, 1, 1, 48, 6)
+
+    def fn(img: jax.Array) -> jax.Array:
+        x = _backbone(img, bb, [2, 2, 2])          # [1,8,8,48]
+        g = conv2d(x, head_f, head_b, relu=False)  # [1,8,8,6]
+        g = g.reshape(-1, 6)
+        boxes = jax.nn.sigmoid(g[:, :4])
+        cls = jax.nn.softmax(g[:, 4:], axis=-1)    # P(mask), P(no-mask)
+        return jnp.concatenate([boxes, cls], axis=1).reshape(-1)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# BP — body-pose estimation (ResNet-18 pose analogue): 18 keypoints.
+# Heatmap head + soft-argmax -> (x, y) per landmark.
+# --------------------------------------------------------------------------
+
+def _bp_fn(seed: int):
+    key = jax.random.PRNGKey(seed)
+    kb, kh = jax.random.split(key)
+    bb = _make_backbone_params(kb, [3, 16, 32, 64], [16, 32, 64, 64])
+    head_f, head_b = _conv_params(kh, 1, 1, 64, 18)
+
+    def fn(img: jax.Array) -> jax.Array:
+        x = _backbone(img, bb, [2, 2, 1, 2])        # [1,8,8,64]
+        hm = conv2d(x, head_f, head_b, relu=False)  # [1,8,8,18]
+        hm = hm.reshape(64, 18)
+        p = jax.nn.softmax(hm, axis=0)              # per-keypoint heatmap
+        idx = jnp.arange(64, dtype=jnp.float32)
+        ys = (p * (idx // 8)[:, None]).sum(0) / 8.0
+        xs = (p * (idx % 8)[:, None]).sum(0) / 8.0
+        return jnp.stack([xs, ys], axis=1).reshape(-1)  # [36]
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# CD — crowd-density estimation (YOLOv8-medium analogue): density map over a
+# larger input + wider backbone; output = [count, 16x16 density map].
+# --------------------------------------------------------------------------
+
+def _cd_fn(seed: int):
+    key = jax.random.PRNGKey(seed)
+    kb, kh = jax.random.split(key)
+    bb = _make_backbone_params(kb, [3, 24, 48, 96], [24, 48, 96, 96])
+    head_f, head_b = _conv_params(kh, 1, 1, 96, 1)
+
+    def fn(img: jax.Array) -> jax.Array:
+        x = _backbone(img, bb, [2, 2, 1, 1])        # [1,24,24,96]
+        x = max_pool(x)                             # [1,12,12,96]
+        d = conv2d(x, head_f, head_b, relu=True)    # [1,12,12,1]
+        dmap = d.reshape(-1)                        # [144]
+        count = dmap.sum()[None]
+        return jnp.concatenate([count, dmap])       # [145]
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# DEO — depth estimation to objects (Monodepth2 analogue): encoder-decoder,
+# dense depth map out. Heaviest model, matching its Table-1 durations.
+# --------------------------------------------------------------------------
+
+def _deo_fn(seed: int):
+    key = jax.random.PRNGKey(seed)
+    ke, kd1, kd2 = jax.random.split(key, 3)
+    enc = _make_backbone_params(ke, [3, 32, 64, 128], [32, 64, 128, 128])
+    dec1_f, dec1_b = _conv_params(kd1, 3, 3, 128, 64)
+    dec2_f, dec2_b = _conv_params(kd2, 1, 1, 64, 1)
+
+    def fn(img: jax.Array) -> jax.Array:
+        x = _backbone(img, enc, [2, 2, 2, 1])        # [1,12,12,128]
+        x = jax.image.resize(x, (1, 24, 24, 128), "nearest")
+        x = conv2d(x, dec1_f, dec1_b)                # [1,24,24,64]
+        d = conv2d(x, dec2_f, dec2_b, relu=False)    # [1,24,24,1]
+        return jax.nn.softplus(d).reshape(-1)        # [576] positive depths
+
+    return fn
+
+
+SMALL = (1, 64, 64, 3)
+MEDIUM = (1, 96, 96, 3)
+
+MODELS: dict[str, ModelSpec] = {
+    "hv": ModelSpec("hv", SMALL, 5, 11, _hv_fn(11)),
+    "dev": ModelSpec("dev", SMALL, 1, 13, _dev_fn(13)),
+    "md": ModelSpec("md", SMALL, 8 * 8 * 6, 17, _md_fn(17)),
+    "bp": ModelSpec("bp", SMALL, 36, 19, _bp_fn(19)),
+    "cd": ModelSpec("cd", MEDIUM, 145, 23, _cd_fn(23)),
+    "deo": ModelSpec("deo", MEDIUM, 576, 29, _deo_fn(29)),
+}
+
+
+def run(name: str, img: jax.Array) -> jax.Array:
+    """Execute model ``name`` eagerly (used by tests)."""
+    return MODELS[name].fn(img)

@@ -1,0 +1,64 @@
+"""AOT path: HLO-text emission, manifest integrity, artifact loadability."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import lower_model, to_hlo_text
+from compile.model import MODELS
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_lower_model_emits_hlo_text(name):
+    text = lower_model(name)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # One image parameter only — weights must be constant-folded. The entry
+    # layout is `{(f32[NHWC])->(f32[L])}`: a single input tuple element.
+    spec = MODELS[name]
+    n, h, w, c = spec.input_shape
+    layout = text.splitlines()[0]
+    assert f"(f32[{n},{h},{w},{c}]" in layout
+    assert layout.count("f32[") == 2  # one input, one output
+    # Large constants must be printed in full: the elided form
+    # "constant({...})" silently parses back as ZEROS under xla_extension
+    # 0.5.1, wiping the model weights (see aot.to_hlo_text).
+    assert "constant({...})" not in text
+
+
+def test_lowering_is_deterministic():
+    assert lower_model("hv") == lower_model("hv")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS,
+                                                    "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_matches_specs():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert set(manifest) == set(MODELS)
+    for name, entry in manifest.items():
+        spec = MODELS[name]
+        assert entry["input_shape"] == list(spec.input_shape)
+        assert entry["output_len"] == spec.output_len
+        path = os.path.join(ARTIFACTS, entry["hlo"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule")
+
+
+def test_to_hlo_text_simple_fn():
+    import jax
+    import jax.numpy as jnp
+
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text

@@ -1,0 +1,154 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/dtypes of the fused GEMM and the conv lowering;
+every property is an ``assert_allclose`` against ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (BlockConfig, conv2d, dense,
+                             fused_matmul_bias_relu, im2col, max_pool)
+from compile.kernels.fused_matmul import _ceil_pow2
+from compile.kernels.ref import conv2d_ref, dense_ref, matmul_bias_relu_ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- fused GEMM
+
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    relu=st.booleans(),
+)
+def test_matmul_matches_ref_shape_sweep(m, k, n, relu):
+    x = _rand(m * 7 + 1, (m, k), jnp.float32)
+    w = _rand(k * 7 + 2, (k, n), jnp.float32)
+    b = _rand(n * 7 + 3, (n,), jnp.float32)
+    out = fused_matmul_bias_relu(x, w, b, relu=relu)
+    ref = matmul_bias_relu_ref(x, w, b, relu=relu)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    bm=st.sampled_from([8, 16, 32, 64, 128]),
+    bn=st.sampled_from([8, 16, 32, 64, 128]),
+    bk=st.sampled_from([8, 16, 32, 64, 128]),
+)
+def test_matmul_block_config_invariance(bm, bn, bk):
+    """The result must be independent of the tile decomposition."""
+    x = _rand(1, (70, 90), jnp.float32)
+    w = _rand(2, (90, 50), jnp.float32)
+    b = _rand(3, (50,), jnp.float32)
+    out = fused_matmul_bias_relu(x, w, b, block=BlockConfig(bm, bn, bk))
+    ref = matmul_bias_relu_ref(x, w, b)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5),
+                                        (jnp.bfloat16, 5e-2)])
+def test_matmul_dtypes(dtype, rtol):
+    x = _rand(1, (64, 64), dtype)
+    w = _rand(2, (64, 64), dtype)
+    b = _rand(3, (64,), dtype)
+    out = fused_matmul_bias_relu(x, w, b)
+    ref = matmul_bias_relu_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=rtol, atol=rtol)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))  # inner mismatch
+    b = jnp.zeros((7,))
+    with pytest.raises(ValueError):
+        fused_matmul_bias_relu(x, w, b)
+    with pytest.raises(ValueError):
+        fused_matmul_bias_relu(x[0], w, b)  # bad rank
+
+
+def test_matmul_relu_clamps_negative():
+    x = -jnp.ones((8, 8))
+    w = jnp.eye(8)
+    b = jnp.zeros((8,))
+    out = fused_matmul_bias_relu(x, w, b, relu=True)
+    assert float(out.min()) == 0.0
+    out = fused_matmul_bias_relu(x, w, b, relu=False)
+    assert float(out.max()) == -1.0
+
+
+def test_ceil_pow2():
+    assert _ceil_pow2(1) == 8
+    assert _ceil_pow2(8) == 8
+    assert _ceil_pow2(9) == 16
+    assert _ceil_pow2(128) == 128
+    assert _ceil_pow2(129) == 256
+
+
+# -------------------------------------------------------------------- conv2d
+
+@given(
+    h=st.integers(4, 24),
+    c=st.integers(1, 8),
+    f=st.integers(1, 8),
+    kk=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    relu=st.booleans(),
+)
+def test_conv_matches_ref_sweep(h, c, f, kk, stride, padding, relu):
+    x = _rand(h * 31 + c, (1, h, h, c), jnp.float32)
+    filt = _rand(f * 13 + 5, (kk, kk, c, f), jnp.float32)
+    b = _rand(f * 13 + 6, (f,), jnp.float32)
+    out = conv2d(x, filt, b, stride=stride, padding=padding, relu=relu)
+    ref = conv2d_ref(x, filt, b, stride=stride, padding=padding, relu=relu)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_batched():
+    x = _rand(1, (3, 16, 16, 4), jnp.float32)
+    filt = _rand(2, (3, 3, 4, 8), jnp.float32)
+    b = _rand(3, (8,), jnp.float32)
+    out = conv2d(x, filt, b)
+    ref = conv2d_ref(x, filt, b)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_channel_mismatch_raises():
+    with pytest.raises(ValueError):
+        conv2d(jnp.zeros((1, 8, 8, 3)), jnp.zeros((3, 3, 4, 8)),
+               jnp.zeros((8,)))
+
+
+def test_im2col_identity_kernel():
+    """1x1/stride-1 im2col is a pure reshape of the input."""
+    x = _rand(9, (1, 6, 6, 5), jnp.float32)
+    cols = im2col(x, 1, 1, 1)
+    np.testing.assert_allclose(cols, x.reshape(36, 5))
+
+
+def test_dense_matches_ref():
+    x = _rand(1, (10, 33), jnp.float32)
+    w = _rand(2, (33, 7), jnp.float32)
+    b = _rand(3, (7,), jnp.float32)
+    np.testing.assert_allclose(dense(x, w, b), dense_ref(x, w, b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_max_pool():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    out = max_pool(x)
+    np.testing.assert_allclose(out.reshape(4), [5.0, 7.0, 13.0, 15.0])

@@ -1,0 +1,70 @@
+"""L2 model contracts: shapes, determinism, value sanity per DNN."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import MODELS, run
+
+
+def _img(spec, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), spec.input_shape,
+                              jnp.float32)
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_output_contract(name):
+    spec = MODELS[name]
+    out = run(name, _img(spec))
+    assert out.shape == (spec.output_len,)
+    assert out.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_deterministic(name):
+    spec = MODELS[name]
+    a = run(name, _img(spec, 3))
+    b = run(name, _img(spec, 3))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_input_sensitivity(name):
+    """Different frames must produce different inferences (non-degenerate)."""
+    spec = MODELS[name]
+    a = run(name, _img(spec, 1))
+    b = run(name, _img(spec, 2))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_hv_box_normalized():
+    out = np.asarray(run("hv", _img(MODELS["hv"])))
+    assert ((out >= 0.0) & (out <= 1.0)).all()  # sigmoid box + conf
+
+
+def test_dev_distance_positive_and_plausible():
+    out = float(run("dev", _img(MODELS["dev"]))[0])
+    assert 0.0 < out < 50.0  # metres
+
+
+def test_md_class_scores_sum_to_one():
+    out = np.asarray(run("md", _img(MODELS["md"]))).reshape(-1, 6)
+    np.testing.assert_allclose(out[:, 4] + out[:, 5], 1.0, rtol=1e-5)
+
+
+def test_bp_keypoints_in_unit_square():
+    out = np.asarray(run("bp", _img(MODELS["bp"]))).reshape(18, 2)
+    assert ((out >= 0.0) & (out <= 1.0)).all()
+
+
+def test_cd_count_equals_density_sum():
+    out = np.asarray(run("cd", _img(MODELS["cd"])))
+    np.testing.assert_allclose(out[0], out[1:].sum(), rtol=1e-4)
+    assert (out[1:] >= 0.0).all()  # ReLU density map
+
+
+def test_deo_depths_positive():
+    out = np.asarray(run("deo", _img(MODELS["deo"])))
+    assert (out > 0.0).all()  # softplus

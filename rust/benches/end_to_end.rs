@@ -1,0 +1,126 @@
+//! End-to-end benches — one per paper table/figure family, each running the
+//! full experiment pipeline (workload generation → scheduling → executors →
+//! metrics) under the DES engine and reporting wall time:
+//!
+//! * Fig 8/9  — DEMS + baselines across the six emulation workloads.
+//! * Fig 10   — the E+C → DEM → DEMS ablation.
+//! * Fig 11/12 — DEMS-A under shaped latency / replayed 4G bandwidth.
+//! * Fig 13   — weak scaling to 28 edges.
+//! * Fig 14/15 + Table 2 — GEMS on WL1/WL2.
+//! * Fig 17/18 — the field workload + navigation coupling.
+
+use ocularone::benchutil::{bench, black_box};
+use ocularone::exec::CloudExecModel;
+use ocularone::fleet::Workload;
+use ocularone::model::{orin_field, DnnKind, GemsWorkload};
+use ocularone::nav;
+use ocularone::net::{mobility_trace, LognormalWan, TraceBandwidth,
+                     TrapeziumLatency};
+use ocularone::platform::Platform;
+use ocularone::policy::Policy;
+use ocularone::sim;
+use ocularone::time::{ms, secs};
+
+fn wan() -> CloudExecModel {
+    CloudExecModel::new(Box::new(LognormalWan::default()))
+}
+
+fn main() {
+    println!("== end-to-end experiment benches (wall time per full run) ==");
+
+    // Fig 8: one 300 s run per workload, DEMS vs the strongest baseline.
+    for wl in Workload::fig8_all() {
+        for policy in [Policy::edf_ec(), Policy::dems()] {
+            let name =
+                format!("fig8 {} [{}] 300s run", wl.name, policy.kind.name());
+            let wl2 = wl.clone();
+            bench(&name, 1200, || {
+                let p = Platform::new(policy.clone(), wl2.models.clone(),
+                                      wan(), 3);
+                black_box(sim::run(p, &wl2, 3));
+            });
+        }
+    }
+
+    // Fig 10 ablation chain on the stress workload.
+    {
+        let wl = Workload::emulation(4, true);
+        for policy in [Policy::edf_ec(), Policy::dem(), Policy::dems()] {
+            let name = format!("fig10 4D-A [{}]", policy.kind.name());
+            bench(&name, 1000, || {
+                let p = Platform::new(policy.clone(), wl.models.clone(),
+                                      wan(), 5);
+                black_box(sim::run(p, &wl, 5));
+            });
+        }
+    }
+
+    // Fig 11: variability studies.
+    {
+        let wl = Workload::emulation(4, false);
+        bench("fig11 latency-shaped [DEMS-A]", 1000, || {
+            let cloud = CloudExecModel::new(Box::new(
+                TrapeziumLatency::paper_default(LognormalWan::default()),
+            ));
+            let p = Platform::new(Policy::dems_a(), wl.models.clone(),
+                                  cloud, 9);
+            black_box(sim::run(p, &wl, 9));
+        });
+        bench("fig11 bandwidth-trace [DEMS-A]", 1000, || {
+            let cloud = CloudExecModel::new(Box::new(TraceBandwidth {
+                base: LognormalWan::default(),
+                samples: mobility_trace(3, 300),
+                period: secs(1),
+            }));
+            let p = Platform::new(Policy::dems_a(), wl.models.clone(),
+                                  cloud, 9);
+            black_box(sim::run(p, &wl, 9));
+        });
+    }
+
+    // Fig 13: a full 28-edge weak-scaling sweep.
+    {
+        let wl = Workload::emulation(3, false);
+        bench("fig13 28-edge sweep [DEMS]", 3000, || {
+            let mut total = 0.0;
+            for e in 0..28u64 {
+                let p = Platform::new(Policy::dems(), wl.models.clone(),
+                                      wan(), 11 ^ e);
+                total += sim::run(p, &wl, 11 ^ e).qos_utility();
+            }
+            black_box(total);
+        });
+    }
+
+    // Fig 14 / Table 2: GEMS workloads.
+    for wlk in [GemsWorkload::Wl1, GemsWorkload::Wl2] {
+        let wl = Workload::gems(wlk, 0.9);
+        let name = format!("fig14 {} [GEMS]", wl.name);
+        bench(&name, 1000, || {
+            let p = Platform::new(Policy::gems(false), wl.models.clone(),
+                                  wan(), 13);
+            black_box(sim::run(p, &wl, 13));
+        });
+    }
+
+    // Fig 17/18: field workload + navigation flight.
+    {
+        let wl = Workload::field(30, orin_field());
+        bench("fig17 field 30fps + nav [GEMS]", 1500, || {
+            let mut p = Platform::new(Policy::gems(false), wl.models.clone(),
+                                      wan(), 17);
+            p.metrics.record_completions = true;
+            let m = sim::run(p, &wl, 17);
+            let events: Vec<nav::TrackingEvent> = m
+                .completions
+                .iter()
+                .filter(|c| c.model == DnnKind::Hv)
+                .map(|c| nav::TrackingEvent {
+                    at: c.at,
+                    success: c.success && c.latency <= ms(300),
+                })
+                .collect();
+            black_box(nav::fly(&events, m.duration, 17));
+        });
+    }
+}

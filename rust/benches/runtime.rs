@@ -1,0 +1,35 @@
+//! PJRT runtime benches: per-model inference latency of the compiled
+//! L1/L2 artifacts (the real request-path cost), plus Literal packing
+//! overhead. Skips gracefully when `make artifacts` has not run.
+
+use ocularone::benchutil::{bench, black_box};
+use ocularone::runtime::Runtime;
+
+fn main() {
+    println!("== PJRT runtime benches ==");
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping: {e}");
+            return;
+        }
+    };
+    println!("platform: {}", rt.platform_name());
+    for kind in rt.kinds() {
+        let model = rt.model(kind).unwrap();
+        let frame = rt.synth_frame(kind, 3).unwrap();
+        // Warm once outside the timer.
+        let _ = model.infer(&frame).unwrap();
+        let name = format!("infer [{}]", kind.name());
+        bench(&name, 1500, || {
+            black_box(model.infer(&frame).unwrap());
+        });
+    }
+    // Frame synthesis (input packing path of the fleet emulator).
+    {
+        let kind = rt.kinds()[0];
+        bench("synth_frame 64x64x3", 300, || {
+            black_box(rt.synth_frame(kind, 5).unwrap());
+        });
+    }
+}

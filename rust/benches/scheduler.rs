@@ -1,0 +1,114 @@
+//! Scheduler hot-path microbenchmarks: the per-task decision cost of each
+//! policy, queue operations, and the DES engine throughput. These are the
+//! L3 §Perf numbers in EXPERIMENTS.md (target: decision ≪ 1 µs — far off
+//! the request path's millisecond budgets).
+
+use ocularone::benchutil::{bench, black_box};
+use ocularone::exec::CloudExecModel;
+use ocularone::fleet::Workload;
+use ocularone::model::{table1, DnnKind};
+use ocularone::net::ConstantNet;
+use ocularone::platform::Platform;
+use ocularone::policy::Policy;
+use ocularone::queues::{EdgeOrder, EdgeQueue};
+use ocularone::rng::Rng;
+use ocularone::sim::EventQueue;
+use ocularone::task::{Task, VideoSegment};
+use ocularone::time::ms;
+
+fn cloud() -> CloudExecModel {
+    CloudExecModel::new(Box::new(ConstantNet {
+        latency: ms(40),
+        bandwidth: 25.0e6,
+    }))
+}
+
+fn mktask(id: u64, model: DnnKind, at: u64) -> Task {
+    Task {
+        id,
+        model,
+        segment: VideoSegment { id, drone: 0, created_at: at, bytes: 38_000 },
+    }
+}
+
+fn main() {
+    println!("== scheduler microbenchmarks ==");
+
+    // Raw queue ops at a realistic depth (~24 queued tasks = 4D-A burst).
+    {
+        let mut q = EdgeQueue::new(EdgeOrder::Edf);
+        let mut rng = Rng::new(1);
+        let mut id = 0u64;
+        bench("edge_queue insert+pop (depth ~24)", 300, || {
+            while q.len() < 24 {
+                id += 1;
+                let dl = ms(500 + (rng.next_u64() % 500));
+                q.insert(mktask(id, DnnKind::Hv, 0), dl, ms(174), 1.0);
+            }
+            black_box(q.pop());
+        });
+    }
+    {
+        let mut q = EdgeQueue::new(EdgeOrder::Edf);
+        for i in 0..24 {
+            q.insert(mktask(i, DnnKind::Hv, 0), ms(500 + i * 20), ms(174),
+                     1.0);
+        }
+        bench("probe_insert feasibility scan (24 deep)", 300, || {
+            black_box(q.probe_insert(ms(700), ms(174), 1.0, 0));
+        });
+    }
+
+    // Per-task admission decision for each policy, steady-state 4D-A-like
+    // arrival stream against a live platform.
+    for policy in [
+        Policy::edf_ec(),
+        Policy::dem(),
+        Policy::dems(),
+        Policy::dems_a(),
+        Policy::gems(false),
+        Policy::sota1(),
+        Policy::sota2(),
+    ] {
+        let name = format!("submit_task [{}]", policy.kind.name());
+        let mut platform = Platform::new(policy, table1(), cloud(), 42);
+        let mut q = EventQueue::new();
+        let mut now = 0u64;
+        let mut id = 0u64;
+        let kinds = DnnKind::ALL;
+        bench(&name, 300, || {
+            id += 1;
+            now += 41_000; // ≈24 tasks/s
+            let task = mktask(id, kinds[(id % 6) as usize], now);
+            platform.submit_task(now, task, &mut q);
+            // Drain events so queues don't grow unboundedly.
+            while let Some((t, ev)) = q.pop() {
+                match ev {
+                    ocularone::sim::Event::EdgeDone => {
+                        platform.on_edge_done(t, &mut q)
+                    }
+                    ocularone::sim::Event::CloudTrigger => {
+                        platform.on_cloud_trigger(t, &mut q)
+                    }
+                    ocularone::sim::Event::CloudDone { key } => {
+                        platform.on_cloud_done(t, key, &mut q)
+                    }
+                    _ => {}
+                }
+                if q.len() > 256 {
+                    break;
+                }
+            }
+        });
+    }
+
+    // Full-workload simulated seconds per wall second (the DES engine).
+    {
+        let wl = Workload::emulation(4, true);
+        bench("full 300s 4D-A sim [DEMS]", 2000, || {
+            let platform =
+                Platform::new(Policy::dems(), wl.models.clone(), cloud(), 7);
+            black_box(ocularone::sim::run(platform, &wl, 7));
+        });
+    }
+}

@@ -1,0 +1,165 @@
+//! DEMS-A adaptation to cloud variability (§5.4).
+//!
+//! Per model: a circular buffer (size `w`) of observed cloud durations. When
+//! the sliding average exceeds the current expected duration by ε, the
+//! expected duration is raised to the average; a cooling period bounds how
+//! long a model can be locked out of the cloud before the expectation is
+//! reset to its static default and re-discovery begins.
+
+use crate::time::Micros;
+
+/// Adaptation state for one DNN model.
+#[derive(Clone, Debug)]
+pub struct ModelAdapt {
+    /// Static default t̂ from the profile table.
+    static_expected: Micros,
+    /// Current expected duration used for trigger/feasibility math.
+    expected: Micros,
+    /// Circular buffer of observed actual durations.
+    buf: Vec<Micros>,
+    head: usize,
+    filled: usize,
+    /// First time a task of this model was skipped for the cloud because
+    /// the *adapted* expectation made it infeasible; None when not skipping.
+    skip_since: Option<Micros>,
+}
+
+impl ModelAdapt {
+    pub fn new(static_expected: Micros, w: usize) -> Self {
+        ModelAdapt {
+            static_expected,
+            expected: static_expected,
+            buf: vec![0; w.max(1)],
+            head: 0,
+            filled: 0,
+            skip_since: None,
+        }
+    }
+
+    /// Current expected cloud duration t̂ᵢ.
+    #[inline]
+    pub fn expected(&self) -> Micros {
+        self.expected
+    }
+
+    pub fn is_adapted(&self) -> bool {
+        self.expected != self.static_expected
+    }
+
+    /// Record an observed cloud duration; update the expectation when the
+    /// sliding average exceeds it by ε (upward adaptation only — recovery
+    /// happens via the cooling reset or a lower observed average after it).
+    pub fn observe(&mut self, actual: Micros, epsilon: Micros) {
+        self.buf[self.head] = actual;
+        self.head = (self.head + 1) % self.buf.len();
+        self.filled = (self.filled + 1).min(self.buf.len());
+        let avg = self.average();
+        if avg > self.expected + epsilon {
+            self.expected = avg;
+        }
+        // A successful observation means the cloud is reachable again.
+        self.skip_since = None;
+    }
+
+    /// Sliding-window average of the observed durations.
+    pub fn average(&self) -> Micros {
+        if self.filled == 0 {
+            return self.expected;
+        }
+        let sum: u128 =
+            self.buf[..self.filled].iter().map(|&v| v as u128).sum();
+        (sum / self.filled as u128) as Micros
+    }
+
+    /// A task of this model was skipped for the cloud due to an expected
+    /// deadline miss at time `now`. If skipping has persisted for the
+    /// cooling period t_cp, reset to the static default (§5.4's "point of
+    /// no return" escape) and start re-discovery.
+    pub fn on_skip(&mut self, now: Micros, cooling: Micros) {
+        match self.skip_since {
+            None => self.skip_since = Some(now),
+            Some(t0) if now.saturating_sub(t0) >= cooling => {
+                self.expected = self.static_expected;
+                self.filled = 0;
+                self.head = 0;
+                self.skip_since = None;
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::{ms, secs};
+
+    #[test]
+    fn starts_at_static_default() {
+        let a = ModelAdapt::new(ms(400), 10);
+        assert_eq!(a.expected(), ms(400));
+        assert!(!a.is_adapted());
+    }
+
+    #[test]
+    fn adapts_upward_when_average_exceeds_epsilon() {
+        let mut a = ModelAdapt::new(ms(400), 4);
+        for _ in 0..4 {
+            a.observe(ms(800), ms(10));
+        }
+        assert_eq!(a.expected(), ms(800));
+        assert!(a.is_adapted());
+    }
+
+    #[test]
+    fn small_excursions_below_epsilon_ignored() {
+        let mut a = ModelAdapt::new(ms(400), 4);
+        for _ in 0..8 {
+            a.observe(ms(405), ms(10));
+        }
+        assert_eq!(a.expected(), ms(400));
+    }
+
+    #[test]
+    fn sliding_window_forgets_old_samples() {
+        let mut a = ModelAdapt::new(ms(400), 2);
+        a.observe(ms(1000), ms(10));
+        a.observe(ms(1000), ms(10));
+        assert_eq!(a.expected(), ms(1000));
+        // Window now slides over two fast samples; average drops but the
+        // expectation only moves up — until a cooling reset.
+        a.observe(ms(300), ms(10));
+        a.observe(ms(300), ms(10));
+        assert_eq!(a.average(), ms(300));
+        assert_eq!(a.expected(), ms(1000));
+    }
+
+    #[test]
+    fn cooling_period_resets_to_static() {
+        let mut a = ModelAdapt::new(ms(400), 4);
+        for _ in 0..4 {
+            a.observe(secs(5), ms(10)); // latency storm
+        }
+        assert!(a.is_adapted());
+        a.on_skip(secs(100), secs(10)); // first skip: start the clock
+        assert!(a.is_adapted());
+        a.on_skip(secs(105), secs(10)); // within cooling: still locked out
+        assert!(a.is_adapted());
+        a.on_skip(secs(110), secs(10)); // cooling elapsed: reset
+        assert!(!a.is_adapted());
+        assert_eq!(a.expected(), ms(400));
+    }
+
+    #[test]
+    fn successful_observation_clears_skip_clock() {
+        let mut a = ModelAdapt::new(ms(400), 4);
+        a.on_skip(secs(1), secs(10));
+        a.observe(ms(400), ms(10));
+        // Skip clock restarted: a later skip shouldn't instantly reset.
+        a.on_skip(secs(20), secs(10));
+        for _ in 0..4 {
+            a.observe(secs(2), ms(10));
+        }
+        assert!(a.is_adapted());
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny benchmarking harness for `cargo bench` targets (offline build: no
+//! criterion). Warms up, runs timed iterations, reports mean ± sd and
+//! throughput, criterion-style.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub sd_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let (v, unit) = humanize(self.mean_ns);
+        let (sd, sd_unit) = humanize(self.sd_ns);
+        println!(
+            "{:40} {:>10.3} {:<3} ± {:>8.3} {:<3}  ({} iters)",
+            self.name, v, unit, sd, sd_unit, self.iters
+        );
+    }
+}
+
+fn humanize(ns: f64) -> (f64, &'static str) {
+    if ns < 1_000.0 {
+        (ns, "ns")
+    } else if ns < 1_000_000.0 {
+        (ns / 1_000.0, "µs")
+    } else if ns < 1_000_000_000.0 {
+        (ns / 1_000_000.0, "ms")
+    } else {
+        (ns / 1_000_000_000.0, "s")
+    }
+}
+
+/// Benchmark `f`, auto-scaling iterations to fill ~`budget_ms` per sample.
+pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> BenchResult {
+    // Warm-up + calibration.
+    let t0 = Instant::now();
+    let mut calib = 0u64;
+    while t0.elapsed().as_millis() < (budget_ms / 4).max(1) as u128 {
+        f();
+        calib += 1;
+    }
+    let per_iter = t0.elapsed().as_nanos() as f64 / calib as f64;
+    let samples = 10usize;
+    let iters_per_sample =
+        ((budget_ms as f64 * 1e6 / samples as f64) / per_iter).max(1.0) as u64;
+
+    let mut means = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        means.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+    }
+    let mean = means.iter().sum::<f64>() / samples as f64;
+    let var = means.iter().map(|m| (m - mean).powi(2)).sum::<f64>()
+        / samples as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        sd_ns: var.sqrt(),
+        iters: iters_per_sample * samples as u64,
+    };
+    r.print();
+    r
+}
+
+/// `std::hint::black_box` passthrough for bench bodies.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 5, || {
+            black_box(1 + 1);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert_eq!(humanize(10.0).1, "ns");
+        assert_eq!(humanize(10_000.0).1, "µs");
+        assert_eq!(humanize(10_000_000.0).1, "ms");
+        assert_eq!(humanize(2e9).1, "s");
+    }
+}

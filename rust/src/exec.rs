@@ -1,0 +1,208 @@
+//! Service-time models for the edge accelerator and the cloud FaaS (§3.2,
+//! Fig. 1, Appendix A) — the calibrated substitute for Jetson + AWS Lambda
+//! hardware (DESIGN.md §1).
+//!
+//! Calibration contract: the Table-1 `t` is the paper's *p99* edge latency
+//! and `t̂` the *p95* cloud end-to-end latency. The samplers here are tuned
+//! so those percentiles land on the table values under the default network,
+//! keeping every JIT/feasibility decision numerically faithful.
+
+use crate::model::ModelProfile;
+use crate::net::NetworkModel;
+use crate::rng::Rng;
+use crate::time::{ms_f, Micros};
+
+/// z-scores used to back out medians from the tabulated percentiles.
+const Z99: f64 = 2.326;
+const Z95: f64 = 1.645;
+
+/// Edge accelerator service-time model: tight lognormal whose p99 equals
+/// the profile's `t_edge` (Fig. 1a shows low variance — the edge has no
+/// network in the path and runs single-threaded).
+///
+/// Two regimes:
+/// * `sigma > 0` — benchmark-calibrated lognormal (Table-1 studies).
+/// * `sigma == 0` — the §8.7 *sleep semantics*: the task takes exactly its
+///   nominal duration **plus** a uniform platform overhead in
+///   `[overhead.0, overhead.1]` (thread wakeups, queue polling, GC — slop
+///   the paper's Java platform pays but its scheduler's expected times do
+///   not include). This drift is what makes edge-queued tasks expire and
+///   gives GEMS its rescue window (Fig. 14/15).
+#[derive(Clone, Debug)]
+pub struct EdgeExecModel {
+    pub sigma: f64,
+    pub overhead: (Micros, Micros),
+}
+
+impl Default for EdgeExecModel {
+    /// σ = 0.22: Table 1's `t` is the p99 averaged over the 1- and
+    /// 3-client benchmark scenarios (Appendix A), so the typical draw sits
+    /// well below it — the slack pool that work stealing (§5.3) exploits.
+    fn default() -> Self {
+        EdgeExecModel { sigma: 0.22, overhead: (0, 0) }
+    }
+}
+
+impl EdgeExecModel {
+    /// The §8.7 sleep-function regime (see struct docs).
+    pub fn sleep_semantics() -> Self {
+        EdgeExecModel { sigma: 0.0, overhead: (ms_f(5.0), ms_f(45.0)) }
+    }
+
+    /// Sample an actual execution duration t̄ᵢʲ for this model's task.
+    pub fn sample(&self, profile: &ModelProfile, rng: &mut Rng) -> Micros {
+        if self.sigma == 0.0 {
+            let (lo, hi) = self.overhead;
+            let oh = if hi > lo {
+                lo + (rng.f64() * (hi - lo) as f64) as Micros
+            } else {
+                lo
+            };
+            return profile.t_edge + oh;
+        }
+        let median = profile.t_edge as f64 / (self.sigma * Z99).exp();
+        rng.lognormal(median, self.sigma) as Micros
+    }
+}
+
+/// Cloud FaaS service-time model: per-invocation compute sample + cold
+/// starts + network transfer via the pluggable [`NetworkModel`].
+pub struct CloudExecModel {
+    pub net: Box<dyn NetworkModel>,
+    /// Lognormal sigma of the FaaS compute time (wider than edge; Fig. 1b).
+    pub sigma: f64,
+    /// Nominal network overhead assumed *inside* the Table-1 t̂ values
+    /// (2×40 ms latency + 38 kB at 10 MB/s ≈ 84 ms). The compute median is
+    /// backed out by subtracting this.
+    pub nominal_net: Micros,
+    /// Cold-start penalty and probability (§4 cites FaaS cold starts).
+    pub cold_start: Micros,
+    pub cold_prob: f64,
+    /// Per-model warm state: first invocation is always cold.
+    warm: [bool; 6],
+    /// HTTP client timeout: the platform never waits longer than ~2.5× the
+    /// longest deadline (the paper observes WAN timeouts for several tasks
+    /// at 4D loads; timed-out requests yield no usable output).
+    pub timeout: Micros,
+    /// Edge containers sharing this host's uplink (§8.1 runs 7 per host);
+    /// concurrent transfers across them contend for the WAN bandwidth —
+    /// the mechanism behind the ≈60% CLD completion at 4D loads (§8.3) and
+    /// the weak-scaling bandwidth ceiling (§8.6).
+    pub host_edges: usize,
+}
+
+impl CloudExecModel {
+    pub fn new(net: Box<dyn NetworkModel>) -> Self {
+        CloudExecModel {
+            net,
+            sigma: 0.20,
+            nominal_net: ms_f(84.0),
+            cold_start: ms_f(900.0),
+            cold_prob: 0.002,
+            warm: [false; 6],
+            timeout: ms_f(2_500.0),
+            host_edges: 7,
+        }
+    }
+
+    /// Sample the actual end-to-end duration t̂ᵢʲ of a cloud invocation at
+    /// virtual time `now`, with `concurrent` transfers already in flight on
+    /// this edge. Returns `(duration, timed_out)`.
+    pub fn sample(&mut self, profile: &ModelProfile, now: Micros, bytes: u64,
+                  concurrent: usize, rng: &mut Rng) -> (Micros, bool) {
+        let compute_p95 =
+            profile.t_cloud.saturating_sub(self.nominal_net) as f64;
+        let median = compute_p95 / (self.sigma * Z95).exp();
+        let mut d = rng.lognormal(median.max(1.0), self.sigma) as Micros;
+        // Uplink contention: the host's WAN bandwidth is shared by all
+        // edges' in-flight transfers (this edge is representative of its
+        // host peers). Effective per-transfer share shrinks accordingly,
+        // which at CLD-style offload rates snowballs into deadline misses.
+        let sharers = (1 + concurrent * self.host_edges) as u64;
+        d += self.net.transfer_time(now, bytes * sharers, rng);
+        let idx = profile.kind.index();
+        if !self.warm[idx] || rng.chance(self.cold_prob) {
+            d += (self.cold_start as f64 * rng.range_f64(0.6, 1.4)) as Micros;
+            self.warm[idx] = true;
+        }
+        if d >= self.timeout {
+            (self.timeout, true)
+        } else {
+            (d, false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::table1;
+    use crate::net::ConstantNet;
+    use crate::time::{ms, to_ms};
+
+    fn pctile(xs: &mut [f64], p: f64) -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[((xs.len() - 1) as f64 * p) as usize]
+    }
+
+    #[test]
+    fn edge_p99_matches_table() {
+        let m = &table1()[0]; // HV: t = 174 ms
+        let em = EdgeExecModel::default();
+        let mut rng = Rng::new(1);
+        let mut xs: Vec<f64> = (0..40_000)
+            .map(|_| to_ms(em.sample(m, &mut rng)))
+            .collect();
+        let p99 = pctile(&mut xs, 0.99);
+        assert!((p99 - 174.0).abs() < 12.0, "p99 = {p99}");
+        // And the typical draw is *below* the p99 estimate — the slack the
+        // work-stealing heuristic exploits (§5.3).
+        let p50 = pctile(&mut xs, 0.50);
+        assert!(p50 < 174.0 * 0.85, "p50 = {p50}");
+    }
+
+    #[test]
+    fn cloud_p95_matches_table_warm() {
+        let m = &table1()[0]; // HV: t̂ = 398 ms
+        let mut cm = CloudExecModel::new(Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 10.0e6,
+        }));
+        cm.cold_prob = 0.0;
+        let mut rng = Rng::new(2);
+        let _ = cm.sample(m, 0, 38_000, 0, &mut rng); // warm it up (cold draw)
+        let mut xs: Vec<f64> = (0..40_000)
+            .map(|_| to_ms(cm.sample(m, 0, 38_000, 0, &mut rng).0))
+            .collect();
+        let p95 = pctile(&mut xs, 0.95);
+        assert!((p95 - 398.0).abs() < 25.0, "p95 = {p95}");
+    }
+
+    #[test]
+    fn first_invocation_is_cold() {
+        let m = &table1()[0];
+        let mut cm = CloudExecModel::new(Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 10.0e6,
+        }));
+        cm.cold_prob = 0.0;
+        let mut rng = Rng::new(3);
+        let (first, _) = cm.sample(m, 0, 38_000, 0, &mut rng);
+        let (second, _) = cm.sample(m, 0, 38_000, 0, &mut rng);
+        assert!(first > second + ms(300), "cold {first} warm {second}");
+    }
+
+    #[test]
+    fn timeout_is_flagged() {
+        let m = &table1()[0];
+        let mut cm = CloudExecModel::new(Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 10.0e6,
+        }));
+        cm.timeout = ms(100); // everything times out
+        let mut rng = Rng::new(4);
+        let (d, to) = cm.sample(m, 0, 38_000, 0, &mut rng);
+        assert!(to);
+        assert_eq!(d, ms(100));
+    }
+}

@@ -1,0 +1,52 @@
+//! # Ocularone-RS
+//!
+//! A from-scratch reproduction of *"Adaptive Heuristics for Scheduling DNN
+//! Inferencing on Edge and Cloud for Personalized UAV Fleets"* (Raj et al.)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the Ocularone
+//!   scheduling platform with the DEMS / DEMS-A / GEMS heuristics, all
+//!   baselines, the edge/cloud executors, FaaS + WAN simulation, the
+//!   drone-fleet emulator and the VIP navigation application.
+//! * **Layer 2 (`python/compile/model.py`)** — the six DNN models in JAX,
+//!   lowered once to HLO text under `artifacts/`.
+//! * **Layer 1 (`python/compile/kernels/`)** — the Pallas fused-GEMM kernel
+//!   every model funnels through.
+//!
+//! Python never runs on the request path: [`runtime`] loads the artifacts
+//! through the PJRT C API (`xla` crate) and serves inferences natively.
+//!
+//! Start with [`policy::Policy`] + [`fleet::Workload`] + [`sim::run`] for
+//! simulated studies, or [`serve`] for the real-inference serving loop.
+
+pub mod adapt;
+pub mod benchutil;
+pub mod exec;
+pub mod exp;
+pub mod fleet;
+pub mod metrics;
+pub mod model;
+pub mod nav;
+pub mod net;
+pub mod platform;
+pub mod policy;
+pub mod qoe;
+pub mod queues;
+pub mod rng;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod task;
+pub mod time;
+
+/// Convenience: run one simulated experiment with the default WAN model.
+pub fn simulate(policy: policy::Policy, workload: &fleet::Workload,
+                seed: u64) -> metrics::Metrics {
+    let cloud = exec::CloudExecModel::new(Box::new(
+        net::LognormalWan::default(),
+    ));
+    let mut platform =
+        platform::Platform::new(policy, workload.models.clone(), cloud, seed);
+    platform.edge_exec = workload.edge_exec.clone();
+    sim::run(platform, workload, seed)
+}

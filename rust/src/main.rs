@@ -1,0 +1,210 @@
+//! `ocularone` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline build):
+//!
+//! * `experiment <id>` — regenerate a paper table/figure (DESIGN.md §4).
+//! * `serve` — real-time serving on the compiled PJRT artifacts.
+//! * `bench-models` — calibrate per-model PJRT latencies.
+//! * `navigate` — run the VIP navigation simulation with one scheduler.
+//! * `simulate` — one workload × policy simulation with a summary.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use ocularone::exp::{self, summarize};
+use ocularone::fleet::Workload;
+use ocularone::model::orin_field;
+use ocularone::nav;
+use ocularone::policy::Policy;
+use ocularone::runtime::Runtime;
+use ocularone::serve::{self, ServeConfig};
+use ocularone::simulate;
+
+const USAGE: &str = "\
+ocularone — adaptive edge+cloud scheduling for UAV DNN inferencing
+
+USAGE:
+  ocularone experiment <id> [--seed N]     t1|fig1|fig2|fig8|fig10|fig11|
+                                           fig13|fig14|fig17|fig18|all
+  ocularone simulate [--workload 3D-A] [--policy dems] [--seed N]
+  ocularone serve [--rate R] [--drones D] [--secs S] [--artifacts DIR]
+  ocularone bench-models [--artifacts DIR]
+  ocularone navigate [--policy gems] [--fps 30] [--seed N]
+";
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn parse_policy(name: &str) -> Result<Policy> {
+    Ok(match name.to_lowercase().as_str() {
+        "edf" => Policy::edge_edf(),
+        "hpf" => Policy::edge_hpf(),
+        "cld" | "cloud" => Policy::cloud_only(),
+        "edf-ec" | "ec" | "e+c" => Policy::edf_ec(),
+        "sjf-ec" | "sjf" => Policy::sjf_ec(),
+        "dem" => Policy::dem(),
+        "dems" => Policy::dems(),
+        "dems-a" | "demsa" => Policy::dems_a(),
+        "gems" => Policy::gems(false),
+        "gems-a" => Policy::gems(true),
+        "sota1" => Policy::sota1(),
+        "sota2" => Policy::sota2(),
+        other => bail!("unknown policy {other}"),
+    })
+}
+
+fn parse_workload(name: &str) -> Result<Workload> {
+    let up = name.to_uppercase();
+    let (d, a) = match up.as_str() {
+        "2D-P" => (2, false),
+        "2D-A" => (2, true),
+        "3D-P" => (3, false),
+        "3D-A" => (3, true),
+        "4D-P" => (4, false),
+        "4D-A" => (4, true),
+        other => bail!("unknown workload {other} (2D/3D/4D × P/A)"),
+    };
+    Ok(Workload::emulation(d, a))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let seed: u64 = flag(&args, "--seed")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(42);
+    match args.first().map(|s| s.as_str()) {
+        Some("experiment") => {
+            let id = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+            exp::run_experiment(id, seed)
+        }
+        Some("simulate") => {
+            let wl = parse_workload(
+                &flag(&args, "--workload").unwrap_or_else(|| "3D-A".into()),
+            )?;
+            let policy = parse_policy(
+                &flag(&args, "--policy").unwrap_or_else(|| "dems".into()),
+            )?;
+            let name = policy.kind.name().to_string();
+            let m = simulate(policy, &wl, seed);
+            println!("{} on {}: {}", name, wl.name, summarize(&m));
+            Ok(())
+        }
+        Some("serve") => {
+            let dir = flag(&args, "--artifacts")
+                .unwrap_or_else(|| "artifacts".into());
+            let cfg = ServeConfig {
+                rate: flag(&args, "--rate")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(2.0),
+                drones: flag(&args, "--drones")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(2),
+                duration: Duration::from_secs(
+                    flag(&args, "--secs")
+                        .map(|s| s.parse())
+                        .transpose()?
+                        .unwrap_or(10),
+                ),
+                seed,
+                ..Default::default()
+            };
+            let probe = Runtime::load(&dir)?;
+            println!("loaded {} models on {}", probe.kinds().len(),
+                     probe.platform_name());
+            drop(probe);
+            let report = serve::serve(std::path::Path::new(&dir), &cfg)?;
+            println!(
+                "served {:.1} inferences/s over {:.1}s; completion {:.1}%",
+                report.throughput(),
+                report.wall_secs,
+                100.0 * report.completion_rate()
+            );
+            for (kind, s) in &report.per_model {
+                println!(
+                    "  {:4} done={} missed={} dropped={} cloud={} \
+                     p50={:.2}ms p95={:.2}ms",
+                    kind.name(),
+                    s.completed,
+                    s.missed,
+                    s.dropped,
+                    s.on_cloud,
+                    ocularone::metrics::percentile(&s.latency_ms, 0.5),
+                    ocularone::metrics::percentile(&s.latency_ms, 0.95),
+                );
+            }
+            Ok(())
+        }
+        Some("bench-models") => {
+            let dir = flag(&args, "--artifacts")
+                .unwrap_or_else(|| "artifacts".into());
+            let rt = Runtime::load(&dir)?;
+            println!("PJRT platform: {}", rt.platform_name());
+            for (kind, p95) in serve::calibrate(&rt, 50)? {
+                println!("  {:4}: p95 {:.3} ms", kind.name(), p95);
+            }
+            Ok(())
+        }
+        Some("navigate") => {
+            let policy = parse_policy(
+                &flag(&args, "--policy").unwrap_or_else(|| "gems".into()),
+            )?;
+            let fps: u32 = flag(&args, "--fps")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(30);
+            let wl = Workload::field(fps, orin_field());
+            let name = policy.kind.name().to_string();
+            let mut platform = ocularone::platform::Platform::new(
+                policy,
+                wl.models.clone(),
+                ocularone::exec::CloudExecModel::new(Box::new(
+                    ocularone::net::LognormalWan::default(),
+                )),
+                seed,
+            );
+            platform.edge_exec = wl.edge_exec.clone();
+            platform.metrics.record_completions = true;
+            let m = ocularone::sim::run(platform, &wl, seed);
+            let events: Vec<nav::TrackingEvent> = m
+                .completions
+                .iter()
+                .filter(|c| c.model == ocularone::model::DnnKind::Hv)
+                .map(|c| nav::TrackingEvent {
+                    at: c.at,
+                    success: c.success
+                        && c.latency <= ocularone::exp::FRESH,
+                })
+                .collect();
+            let r = nav::fly(&events, m.duration, seed);
+            println!("{name} @ {fps} FPS: {}", summarize(&m));
+            if r.dnf {
+                println!("  DNF (failsafe landing at {:.0}s)", r.dnf_at_s);
+            } else {
+                let (ym, ymed, y95) = r.yaw_stats();
+                println!(
+                    "  yaw err: mean {ym:.1}° median {ymed:.1}° p95 {y95:.1}°"
+                );
+                for (ax, label) in
+                    ["front-back", "left-right", "up-down"].iter().enumerate()
+                {
+                    let (_, med, p95) = r.jerk_stats(ax);
+                    println!(
+                        "  jerk {label}: median {med:.2} p95 {p95:.2} m/s³"
+                    );
+                }
+            }
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

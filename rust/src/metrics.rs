@@ -1,0 +1,327 @@
+//! Per-run accounting: everything the paper's figures report (§8).
+
+use crate::model::{DnnKind, Resource};
+use crate::task::{DropReason, Fate, TaskOutcome};
+use crate::time::{to_ms, Micros};
+
+/// Counters for one DNN model within a run.
+#[derive(Clone, Debug, Default)]
+pub struct ModelStats {
+    pub generated: u64,
+    pub completed_edge: u64,
+    pub completed_cloud: u64,
+    pub missed_edge: u64,
+    pub missed_cloud: u64,
+    pub dropped_infeasible: u64,
+    pub dropped_negative: u64,
+    pub dropped_jit: u64,
+    pub dropped_trigger: u64,
+    pub dropped_shed: u64,
+    pub dropped_timeout: u64,
+    pub utility_edge: f64,
+    pub utility_cloud: f64,
+    pub qoe_utility: f64,
+    pub windows_total: u64,
+    pub windows_met: u64,
+    pub stolen: u64,
+    pub gems_rescheduled: u64,
+    /// Actual e2e durations of executed tasks (ms) for percentile reports.
+    pub exec_ms: Vec<f64>,
+}
+
+impl ModelStats {
+    pub fn completed(&self) -> u64 {
+        self.completed_edge + self.completed_cloud
+    }
+
+    pub fn executed(&self) -> u64 {
+        self.completed() + self.missed_edge + self.missed_cloud
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped_infeasible
+            + self.dropped_negative
+            + self.dropped_jit
+            + self.dropped_trigger
+            + self.dropped_shed
+            + self.dropped_timeout
+    }
+
+    pub fn utility(&self) -> f64 {
+        self.utility_edge + self.utility_cloud
+    }
+}
+
+/// A point on the Fig.-12 style timeline: one cloud (or edge) execution.
+#[derive(Clone, Debug)]
+pub struct TimelinePoint {
+    pub at: Micros,
+    pub model: DnnKind,
+    pub observed_ms: f64,
+    pub expected_ms: f64,
+    pub success: bool,
+}
+
+/// One finalized task event, for per-window drilldowns (Fig. 15) and the
+/// navigation coupling (Fig. 17/18).
+#[derive(Clone, Copy, Debug)]
+pub struct CompletionRecord {
+    pub at: Micros,
+    pub model: DnnKind,
+    pub success: bool,
+    /// End-to-end latency from segment creation to finalization.
+    pub latency: Micros,
+}
+
+/// Full metrics for one platform run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub per_model: Vec<(DnnKind, ModelStats)>,
+    /// Optional per-execution timeline (enabled for the Fig. 12 harness).
+    pub timeline: Vec<TimelinePoint>,
+    pub record_timeline: bool,
+    /// Optional per-task finalization log (Fig. 15 / Fig. 17–18 harnesses).
+    pub completions: Vec<CompletionRecord>,
+    pub record_completions: bool,
+    /// Edge executor busy time (for the §8.4 utilization numbers).
+    pub edge_busy: Micros,
+    pub duration: Micros,
+}
+
+impl Metrics {
+    pub fn new(models: &[DnnKind]) -> Self {
+        Metrics {
+            per_model: models.iter().map(|k| (*k, ModelStats::default())).collect(),
+            ..Default::default()
+        }
+    }
+
+    pub fn stats_mut(&mut self, kind: DnnKind) -> &mut ModelStats {
+        &mut self
+            .per_model
+            .iter_mut()
+            .find(|(k, _)| *k == kind)
+            .expect("model registered")
+            .1
+    }
+
+    pub fn stats(&self, kind: DnnKind) -> &ModelStats {
+        &self
+            .per_model
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .expect("model registered")
+            .1
+    }
+
+    /// Record a finalized task outcome (Eqn 1 accounting).
+    pub fn record(&mut self, o: &TaskOutcome) {
+        let s = self.stats_mut(o.model);
+        match o.fate {
+            Fate::Completed(Resource::Edge) => {
+                s.completed_edge += 1;
+                s.utility_edge += o.utility;
+            }
+            Fate::Completed(Resource::Cloud) => {
+                s.completed_cloud += 1;
+                s.utility_cloud += o.utility;
+            }
+            Fate::Missed(Resource::Edge) => {
+                s.missed_edge += 1;
+                s.utility_edge += o.utility;
+            }
+            Fate::Missed(Resource::Cloud) => {
+                s.missed_cloud += 1;
+                s.utility_cloud += o.utility;
+            }
+            Fate::Dropped(r) => match r {
+                DropReason::Infeasible => s.dropped_infeasible += 1,
+                DropReason::NegativeCloudUtility => s.dropped_negative += 1,
+                DropReason::JitExpired => s.dropped_jit += 1,
+                DropReason::TriggerExpired => s.dropped_trigger += 1,
+                DropReason::Shed => s.dropped_shed += 1,
+                DropReason::Timeout => s.dropped_timeout += 1,
+            },
+        }
+        if o.stolen {
+            s.stolen += 1;
+        }
+        if o.gems_rescheduled && !matches!(o.fate, Fate::Dropped(_)) {
+            s.gems_rescheduled += 1;
+        }
+        if o.exec_duration > 0 {
+            s.exec_ms.push(to_ms(o.exec_duration));
+        }
+        if self.record_completions {
+            self.completions.push(CompletionRecord {
+                at: o.at,
+                model: o.model,
+                success: o.success(),
+                latency: o.at.saturating_sub(o.created_at),
+            });
+        }
+    }
+
+    // ---------------------------------------------------- aggregate views
+
+    pub fn generated(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.generated).sum()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.completed()).sum()
+    }
+
+    pub fn completed_on(&self, r: Resource) -> u64 {
+        self.per_model
+            .iter()
+            .map(|(_, s)| match r {
+                Resource::Edge => s.completed_edge,
+                Resource::Cloud => s.completed_cloud,
+            })
+            .sum()
+    }
+
+    /// On-time completion rate over all generated tasks.
+    pub fn completion_rate(&self) -> f64 {
+        let g = self.generated();
+        if g == 0 {
+            0.0
+        } else {
+            self.completed() as f64 / g as f64
+        }
+    }
+
+    pub fn qos_utility(&self) -> f64 {
+        self.per_model.iter().map(|(_, s)| s.utility()).sum()
+    }
+
+    pub fn qos_utility_on(&self, r: Resource) -> f64 {
+        self.per_model
+            .iter()
+            .map(|(_, s)| match r {
+                Resource::Edge => s.utility_edge,
+                Resource::Cloud => s.utility_cloud,
+            })
+            .sum()
+    }
+
+    pub fn qoe_utility(&self) -> f64 {
+        self.per_model.iter().map(|(_, s)| s.qoe_utility).sum()
+    }
+
+    /// Total utility γ = Σ QoS + Σ QoE (§4).
+    pub fn total_utility(&self) -> f64 {
+        self.qos_utility() + self.qoe_utility()
+    }
+
+    pub fn stolen(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.stolen).sum()
+    }
+
+    pub fn gems_rescheduled(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.gems_rescheduled).sum()
+    }
+
+    /// Edge utilization: busy time / run duration.
+    pub fn edge_utilization(&self) -> f64 {
+        if self.duration == 0 {
+            0.0
+        } else {
+            self.edge_busy as f64 / self.duration as f64
+        }
+    }
+}
+
+/// Percentile over a sample set (p in [0,1]); NaN-free input required.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[((v.len() - 1) as f64 * p).round() as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::ms;
+
+    fn outcome(model: DnnKind, fate: Fate, utility: f64) -> TaskOutcome {
+        TaskOutcome {
+            task_id: 0,
+            model,
+            drone: 0,
+            fate,
+            at: ms(100),
+            created_at: ms(20),
+            exec_duration: ms(50),
+            utility,
+            gems_rescheduled: false,
+            stolen: false,
+        }
+    }
+
+    #[test]
+    fn record_routes_to_buckets() {
+        let mut m = Metrics::new(&[DnnKind::Hv, DnnKind::Bp]);
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Edge), 124.0));
+        m.record(&outcome(DnnKind::Hv, Fate::Missed(Resource::Cloud), -25.0));
+        m.record(&outcome(DnnKind::Bp, Fate::Dropped(DropReason::JitExpired), 0.0));
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.completed_on(Resource::Edge), 1);
+        assert_eq!(m.stats(DnnKind::Hv).missed_cloud, 1);
+        assert_eq!(m.stats(DnnKind::Bp).dropped_jit, 1);
+        assert_eq!(m.qos_utility(), 99.0);
+        assert_eq!(m.qos_utility_on(Resource::Edge), 124.0);
+        assert_eq!(m.qos_utility_on(Resource::Cloud), -25.0);
+    }
+
+    #[test]
+    fn completion_rate_over_generated() {
+        let mut m = Metrics::new(&[DnnKind::Hv]);
+        m.stats_mut(DnnKind::Hv).generated = 4;
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Edge), 1.0));
+        assert_eq!(m.completion_rate(), 0.25);
+    }
+
+    #[test]
+    fn total_utility_includes_qoe() {
+        let mut m = Metrics::new(&[DnnKind::Hv]);
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Edge), 10.0));
+        m.stats_mut(DnnKind::Hv).qoe_utility = 5.0;
+        assert_eq!(m.total_utility(), 15.0);
+        assert_eq!(m.qoe_utility(), 5.0);
+    }
+
+    #[test]
+    fn stolen_and_rescheduled_counts() {
+        let mut m = Metrics::new(&[DnnKind::Bp]);
+        let mut o = outcome(DnnKind::Bp, Fate::Completed(Resource::Edge), 38.0);
+        o.stolen = true;
+        m.record(&o);
+        let mut o2 = outcome(DnnKind::Bp, Fate::Completed(Resource::Cloud), -3.0);
+        o2.gems_rescheduled = true;
+        m.record(&o2);
+        assert_eq!(m.stolen(), 1);
+        assert_eq!(m.gems_rescheduled(), 1);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=101).map(|v| v as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0);
+        assert_eq!(percentile(&xs, 1.0), 101.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn edge_utilization_ratio() {
+        let mut m = Metrics::new(&[DnnKind::Hv]);
+        m.edge_busy = ms(300);
+        m.duration = ms(1000);
+        assert!((m.edge_utilization() - 0.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,371 @@
+//! DNN model descriptors and the paper's utility math (Eqns 1–3, §4–5).
+//!
+//! A [`ModelProfile`] carries everything the scheduler knows about one DNN:
+//! benefit β, deadline δ, expected edge/cloud durations t and t̂, normalized
+//! costs κ and κ̂, and the GEMS QoE triple (β̄, α, ω). The workload tables of
+//! the paper (Table 1 for DEMS, Table 2 for GEMS, the Orin field config of
+//! §8.8) are provided as constructors and asserted against the paper's own
+//! γᴱ/γᶜ columns in the tests.
+
+use crate::time::{ms, Micros};
+
+/// The six vision DNNs of the Ocularone workload (§7, §8.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DnnKind {
+    /// Hazard-vest detection (YOLOv8n) — drives VIP tracking.
+    Hv,
+    /// Distance estimation to the VIP (YOLOv8n + linear regression).
+    Dev,
+    /// Face-mask detection (SSD).
+    Md,
+    /// Body-pose estimation (ResNet-18, 18 keypoints).
+    Bp,
+    /// Crowd-density estimation (YOLOv8m).
+    Cd,
+    /// Distance estimation to objects (Monodepth2 depth map).
+    Deo,
+}
+
+impl DnnKind {
+    pub const ALL: [DnnKind; 6] = [
+        DnnKind::Hv,
+        DnnKind::Dev,
+        DnnKind::Md,
+        DnnKind::Bp,
+        DnnKind::Cd,
+        DnnKind::Deo,
+    ];
+
+    /// Artifact / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DnnKind::Hv => "hv",
+            DnnKind::Dev => "dev",
+            DnnKind::Md => "md",
+            DnnKind::Bp => "bp",
+            DnnKind::Cd => "cd",
+            DnnKind::Deo => "deo",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DnnKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Stable dense index (used for per-model arrays on hot paths).
+    #[inline]
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// Where a task ran (or would run) — selects the Eqn 1 branch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resource {
+    Edge,
+    Cloud,
+}
+
+/// Scheduler-facing description of one registered DNN model.
+///
+/// Costs follow the paper's normalization (Appendix B): the per-execution
+/// cost `t·κ` / `t̂·κ̂` is folded into `cost_edge` / `cost_cloud` directly,
+/// matching Table 1 where γᴱ = β − κ and γᶜ = β − κ̂.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub kind: DnnKind,
+    /// QoS benefit β (normalized, unitless).
+    pub benefit: f64,
+    /// Deadline duration δ from segment creation.
+    pub deadline: Micros,
+    /// Expected (p99-benchmarked) execution duration on the edge, t.
+    pub t_edge: Micros,
+    /// Expected (p95-benchmarked) end-to-end duration on the cloud, t̂.
+    pub t_cloud: Micros,
+    /// Normalized per-execution cost on the edge, κ.
+    pub cost_edge: f64,
+    /// Normalized per-execution cost on the cloud FaaS, κ̂.
+    pub cost_cloud: f64,
+    /// QoE window benefit β̄ (Eqn 2); 0 disables QoE accrual.
+    pub qoe_benefit: f64,
+    /// Required completion rate α within a window (GEMS).
+    pub qoe_rate: f64,
+    /// Tumbling window duration ω.
+    pub qoe_window: Micros,
+}
+
+impl ModelProfile {
+    /// Utility of a successful edge execution: γᴱ = β − t·κ (Eqn 1).
+    #[inline]
+    pub fn util_edge(&self) -> f64 {
+        self.benefit - self.cost_edge
+    }
+
+    /// Utility of a successful cloud execution: γᶜ = β − t̂·κ̂ (Eqn 1).
+    #[inline]
+    pub fn util_cloud(&self) -> f64 {
+        self.benefit - self.cost_cloud
+    }
+
+    /// Utility for the given resource/outcome per Eqn 1.
+    pub fn utility(&self, on: Resource, met_deadline: bool) -> f64 {
+        match (on, met_deadline) {
+            (Resource::Edge, true) => self.util_edge(),
+            (Resource::Edge, false) => -self.cost_edge,
+            (Resource::Cloud, true) => self.util_cloud(),
+            (Resource::Cloud, false) => -self.cost_cloud,
+        }
+    }
+
+    /// Migration score Sᵢ (Eqn 3): what we lose by moving this task from
+    /// the edge to the cloud. If the task cannot profit on the cloud
+    /// (`!cloud_feasible` or γᶜ ≤ 0) the whole edge utility is at stake.
+    pub fn migration_score(&self, cloud_feasible: bool) -> f64 {
+        if cloud_feasible && self.util_cloud() > 0.0 {
+            self.util_edge() - self.util_cloud()
+        } else {
+            self.util_edge()
+        }
+    }
+
+    /// Work-stealing rank (§5.3): utility gain per unit edge time,
+    /// (γᴱ − γᶜ) / t.
+    pub fn steal_rank(&self) -> f64 {
+        (self.util_edge() - self.util_cloud()) / (self.t_edge as f64)
+    }
+
+    /// HPF priority (§8.2): utility per unit edge execution time.
+    pub fn hpf_priority(&self) -> f64 {
+        self.util_edge() / (self.t_edge as f64)
+    }
+}
+
+/// Builder-style convenience used by the table constructors.
+#[allow(clippy::too_many_arguments)]
+fn profile(
+    kind: DnnKind,
+    benefit: f64,
+    deadline_ms: u64,
+    t_edge_ms: u64,
+    t_cloud_ms: u64,
+    cost_edge: f64,
+    cost_cloud: f64,
+) -> ModelProfile {
+    ModelProfile {
+        kind,
+        benefit,
+        deadline: ms(deadline_ms),
+        t_edge: ms(t_edge_ms),
+        t_cloud: ms(t_cloud_ms),
+        cost_edge,
+        cost_cloud,
+        qoe_benefit: 0.0,
+        qoe_rate: 0.0,
+        qoe_window: ms(20_000),
+    }
+}
+
+/// Table 1: the Jetson-Nano + AWS-Lambda workload used for the DEMS study.
+pub fn table1() -> Vec<ModelProfile> {
+    vec![
+        profile(DnnKind::Hv, 125.0, 650, 174, 398, 1.0, 25.0),
+        profile(DnnKind::Dev, 100.0, 750, 172, 429, 1.0, 26.0),
+        profile(DnnKind::Md, 75.0, 850, 142, 589, 1.0, 15.0),
+        profile(DnnKind::Bp, 40.0, 900, 244, 542, 2.0, 43.0),
+        profile(DnnKind::Cd, 175.0, 1000, 563, 878, 4.0, 152.0),
+        profile(DnnKind::Deo, 250.0, 950, 739, 832, 6.0, 210.0),
+    ]
+}
+
+/// Table 1 restricted to the *Passive* app mix (HV, DEV, MD, BP).
+pub fn table1_passive() -> Vec<ModelProfile> {
+    table1()
+        .into_iter()
+        .filter(|m| {
+            matches!(
+                m.kind,
+                DnnKind::Hv | DnnKind::Dev | DnnKind::Md | DnnKind::Bp
+            )
+        })
+        .collect()
+}
+
+/// GEMS workload selector (Table 2): MD and CD differ between WL1 and WL2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemsWorkload {
+    Wl1,
+    Wl2,
+}
+
+/// Table 2: alternate edge/cloud durations + QoE benefits for the GEMS
+/// study (§8.7). β is retained from Table 1; β̄/δ/t/t̂ come from Table 2;
+/// κ/κ̂ are unchanged. `alpha` is the required completion rate (0.9 / 1.0).
+pub fn table2(wl: GemsWorkload, alpha: f64) -> Vec<ModelProfile> {
+    let mut hv = profile(DnnKind::Hv, 125.0, 400, 100, 200, 1.0, 25.0);
+    let mut dev = profile(DnnKind::Dev, 100.0, 600, 300, 400, 1.0, 26.0);
+    let (mut md, mut cd) = match wl {
+        GemsWorkload::Wl1 => (
+            profile(DnnKind::Md, 75.0, 1000, 200, 300, 1.0, 15.0),
+            profile(DnnKind::Cd, 175.0, 800, 650, 750, 4.0, 152.0),
+        ),
+        GemsWorkload::Wl2 => (
+            profile(DnnKind::Md, 75.0, 800, 200, 300, 1.0, 15.0),
+            profile(DnnKind::Cd, 175.0, 1000, 750, 950, 4.0, 152.0),
+        ),
+    };
+    hv.qoe_benefit = 360.0;
+    dev.qoe_benefit = 420.0;
+    md.qoe_benefit = 480.0;
+    cd.qoe_benefit = 600.0;
+    let mut out = vec![hv, dev, md, cd];
+    for m in &mut out {
+        m.qoe_rate = alpha;
+        m.qoe_window = ms(20_000);
+    }
+    out
+}
+
+/// §8.8 field configuration: HV/DEV/BP on a Jetson Orin Nano (p99 per-frame
+/// edge times 49/50/72 ms, κ = 1), cloud/deadline/β from Table 1.
+pub fn orin_field() -> Vec<ModelProfile> {
+    let mut hv = profile(DnnKind::Hv, 125.0, 650, 49, 398, 1.0, 25.0);
+    let mut dev = profile(DnnKind::Dev, 100.0, 750, 50, 429, 1.0, 26.0);
+    let mut bp = profile(DnnKind::Bp, 40.0, 900, 72, 542, 1.0, 43.0);
+    for m in [&mut hv, &mut dev, &mut bp] {
+        m.qoe_benefit = 100.0;
+        m.qoe_rate = 1.0;
+        m.qoe_window = ms(20_000);
+    }
+    vec![hv, dev, bp]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_gamma_columns() {
+        // γᴱ and γᶜ columns of Table 1.
+        let expect = [
+            (DnnKind::Hv, 124.0, 100.0),
+            (DnnKind::Dev, 99.0, 74.0),
+            (DnnKind::Md, 74.0, 60.0),
+            (DnnKind::Bp, 38.0, -3.0),
+            (DnnKind::Cd, 171.0, 23.0),
+            (DnnKind::Deo, 244.0, 40.0),
+        ];
+        for (kind, ge, gc) in expect {
+            let m = table1().into_iter().find(|m| m.kind == kind).unwrap();
+            assert_eq!(m.util_edge(), ge, "{kind:?} γᴱ");
+            assert_eq!(m.util_cloud(), gc, "{kind:?} γᶜ");
+        }
+    }
+
+    #[test]
+    fn bp_is_the_only_negative_cloud_utility() {
+        for m in table1() {
+            assert_eq!(m.util_cloud() <= 0.0, m.kind == DnnKind::Bp);
+        }
+    }
+
+    #[test]
+    fn passive_mix_is_four_models() {
+        let p = table1_passive();
+        assert_eq!(p.len(), 4);
+        assert!(p.iter().all(|m| m.kind != DnnKind::Cd
+            && m.kind != DnnKind::Deo));
+    }
+
+    #[test]
+    fn migration_score_branches() {
+        let hv = &table1()[0];
+        // Cloud-feasible + positive γᶜ: score is the edge-cloud gap.
+        assert_eq!(hv.migration_score(true), 24.0);
+        // Cloud-infeasible: the full edge utility is at stake.
+        assert_eq!(hv.migration_score(false), 124.0);
+        // BP has γᶜ < 0, so feasibility does not matter.
+        let bp = table1().into_iter().find(|m| m.kind == DnnKind::Bp).unwrap();
+        assert_eq!(bp.migration_score(true), 38.0);
+    }
+
+    #[test]
+    fn steal_rank_prefers_bp_in_passive_mix() {
+        // §8.4: BP dominates work stealing. Two mechanisms: (1) among the
+        // Passive models it has the best utility-gain-per-edge-time rank,
+        // and (2) its negative cloud utility gives it absolute priority in
+        // the steal selection (tested in queues.rs). CD/DEO out-rank BP on
+        // paper but their long edge times rarely fit the available slack.
+        let models = table1_passive();
+        let bp_rank = models
+            .iter()
+            .find(|m| m.kind == DnnKind::Bp)
+            .unwrap()
+            .steal_rank();
+        for m in &models {
+            if m.kind != DnnKind::Bp {
+                assert!(
+                    bp_rank >= m.steal_rank(),
+                    "BP rank {} vs {:?} {}",
+                    bp_rank,
+                    m.kind,
+                    m.steal_rank()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn table2_workloads_differ_only_in_md_cd() {
+        let w1 = table2(GemsWorkload::Wl1, 0.9);
+        let w2 = table2(GemsWorkload::Wl2, 0.9);
+        assert_eq!(w1.len(), 4);
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.kind, b.kind);
+            if matches!(a.kind, DnnKind::Hv | DnnKind::Dev) {
+                assert_eq!(a.deadline, b.deadline);
+                assert_eq!(a.t_edge, b.t_edge);
+            }
+        }
+        let md1 = &w1[2];
+        let md2 = &w2[2];
+        assert_eq!(md1.deadline, ms(1000));
+        assert_eq!(md2.deadline, ms(800));
+    }
+
+    #[test]
+    fn table2_qoe_benefits() {
+        let w1 = table2(GemsWorkload::Wl1, 1.0);
+        let want = [360.0, 420.0, 480.0, 600.0];
+        for (m, b) in w1.iter().zip(want) {
+            assert_eq!(m.qoe_benefit, b);
+            assert_eq!(m.qoe_rate, 1.0);
+            assert_eq!(m.qoe_window, ms(20_000));
+        }
+    }
+
+    #[test]
+    fn orin_field_times() {
+        let f = orin_field();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[0].t_edge, ms(49));
+        assert_eq!(f[1].t_edge, ms(50));
+        assert_eq!(f[2].t_edge, ms(72));
+    }
+
+    #[test]
+    fn utility_eqn1_all_branches() {
+        let hv = &table1()[0];
+        assert_eq!(hv.utility(Resource::Edge, true), 124.0);
+        assert_eq!(hv.utility(Resource::Edge, false), -1.0);
+        assert_eq!(hv.utility(Resource::Cloud, true), 100.0);
+        assert_eq!(hv.utility(Resource::Cloud, false), -25.0);
+    }
+
+    #[test]
+    fn kind_name_round_trip() {
+        for k in DnnKind::ALL {
+            assert_eq!(DnnKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(DnnKind::from_name("nope"), None);
+    }
+}

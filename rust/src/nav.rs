@@ -1,0 +1,413 @@
+//! VIP navigation application (§7, §8.8): PD control, drone kinematics,
+//! post-processing of DNN outputs, and the domain metrics of Fig. 17–18
+//! (jerk, yaw error, DNF detection).
+//!
+//! The field validation substitute (DESIGN.md §1): a kinematic Tello model
+//! follows a scripted proxy-VIP walk (straight stretches, sharp turns, a
+//! stairway) using only the HV inferences the *scheduler* managed to
+//! complete on time — so scheduling quality translates into trajectory
+//! quality exactly as in the paper's campus flights.
+
+use crate::metrics::percentile;
+use crate::rng::Rng;
+use crate::time::{to_secs, Micros};
+
+// ---------------------------------------------------------------- control
+
+/// Proportional–derivative controller (§7 cites a PD loop on the HV
+/// bounding-box offset).
+#[derive(Clone, Debug)]
+pub struct PdController {
+    pub kp: f64,
+    pub kd: f64,
+    last_err: Option<(f64, f64)>, // (error, t_secs)
+}
+
+impl PdController {
+    pub fn new(kp: f64, kd: f64) -> Self {
+        PdController { kp, kd, last_err: None }
+    }
+
+    /// Control output for `err` observed at time `t` (seconds).
+    pub fn update(&mut self, err: f64, t: f64) -> f64 {
+        let d = match self.last_err {
+            Some((e0, t0)) if t > t0 => (err - e0) / (t - t0),
+            _ => 0.0,
+        };
+        self.last_err = Some((err, t));
+        self.kp * err + self.kd * d
+    }
+
+    pub fn reset(&mut self) {
+        self.last_err = None;
+    }
+}
+
+// ------------------------------------------------------- post-processing
+
+/// Body-pose classes produced by the SVM stage (§7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pose {
+    Upright,
+    Kneel,
+    Fall,
+    StartStop,
+    Land,
+}
+
+pub const POSES: [Pose; 5] =
+    [Pose::Upright, Pose::Kneel, Pose::Fall, Pose::StartStop, Pose::Land];
+
+/// Linear multi-class scorer over the 18×2 keypoint vector — the SVM-based
+/// classifier of §7 with deterministic weights.
+pub fn classify_pose(keypoints: &[f32]) -> Pose {
+    assert_eq!(keypoints.len(), 36, "18 keypoints × (x, y)");
+    let mut best = (f64::MIN, 0usize);
+    for (c, _) in POSES.iter().enumerate() {
+        let mut rng = Rng::new(0xB0D7 + c as u64 * 97);
+        let mut score = 0.0f64;
+        for &k in keypoints {
+            score += k as f64 * (rng.f64() - 0.5);
+        }
+        if score > best.0 {
+            best = (score, c);
+        }
+    }
+    POSES[best.1]
+}
+
+/// DEV post-processing: linear regression over (height, width, area) of
+/// the detected bounding box → distance in metres (§7).
+pub fn estimate_distance(bbox: &[f32]) -> f64 {
+    assert!(bbox.len() >= 4, "x, y, w, h");
+    let (w, h) = (bbox[2] as f64, bbox[3] as f64);
+    let area = w * h;
+    // Calibrated against the paper's 3 m follow distance at h ≈ 0.55.
+    (1.65 / (h + 1e-3)).clamp(0.3, 30.0) - 0.2 * area
+}
+
+/// HV post-processing: bounding-box centre offset from the frame centre,
+/// normalized to [-1, 1] per axis.
+pub fn bbox_offset(bbox: &[f32]) -> (f64, f64) {
+    assert!(bbox.len() >= 4);
+    ((bbox[0] as f64 - 0.5) * 2.0, (bbox[1] as f64 - 0.5) * 2.0)
+}
+
+// ------------------------------------------------------------ kinematics
+
+/// Simple 4-DoF drone kinematics (x, y, z, yaw) with first-order velocity
+/// response — adequate for jerk/yaw-error comparisons between schedulers.
+#[derive(Clone, Debug, Default)]
+pub struct DroneState {
+    pub pos: [f64; 3],
+    pub vel: [f64; 3],
+    pub yaw: f64,
+    pub yaw_rate: f64,
+}
+
+/// Scripted proxy-VIP walk: straight stretches, two sharp turns and a
+/// stairway climb (the paper's route "through some sharp turns and stairs").
+pub fn vip_position(t: f64) -> [f64; 3] {
+    let speed = 1.2; // m/s walking pace
+    if t < 30.0 {
+        [speed * t, 0.0, 0.0]
+    } else if t < 35.0 {
+        // sharp 90° left turn over 5 s
+        let f = (t - 30.0) / 5.0;
+        [36.0 + 4.0 * (std::f64::consts::FRAC_PI_2 * f).sin() - 4.0 * 0.0,
+         4.0 - 4.0 * (std::f64::consts::FRAC_PI_2 * f).cos(),
+         0.0]
+    } else if t < 65.0 {
+        [40.0, 4.0 + speed * (t - 35.0), 0.0]
+    } else if t < 80.0 {
+        // stairway: climb 3 m over 15 s while moving
+        let f = (t - 65.0) / 15.0;
+        [40.0, 40.0 + 0.6 * (t - 65.0), 3.0 * f]
+    } else if t < 85.0 {
+        // sharp right turn at the top
+        let f = (t - 80.0) / 5.0;
+        [40.0 + 4.0 * (std::f64::consts::FRAC_PI_2 * f).sin(),
+         49.0 + 4.0 * (1.0 - (std::f64::consts::FRAC_PI_2 * f).cos()),
+         3.0]
+    } else {
+        [44.0 + speed * (t - 85.0), 53.0, 3.0]
+    }
+}
+
+/// One tracking observation: an on-time HV completion at `at` (plus
+/// whether it was fresh); produced by the scheduler run.
+#[derive(Clone, Copy, Debug)]
+pub struct TrackingEvent {
+    pub at: Micros,
+    pub success: bool,
+}
+
+/// Navigation-quality report (Fig. 18 metrics).
+#[derive(Clone, Debug)]
+pub struct NavReport {
+    /// Jerk samples per axis (m/s³): x = front-back, y = left-right,
+    /// z = up-down.
+    pub jerk: [Vec<f64>; 3],
+    /// Yaw error samples (degrees).
+    pub yaw_err_deg: Vec<f64>,
+    /// Did-not-finish: the drone lost tracking long enough to trigger the
+    /// §8.8 failsafe landing.
+    pub dnf: bool,
+    /// Time of failsafe landing if DNF.
+    pub dnf_at_s: f64,
+}
+
+impl NavReport {
+    pub fn jerk_stats(&self, axis: usize) -> (f64, f64, f64) {
+        let xs = &self.jerk[axis];
+        (mean(xs), percentile(xs, 0.5), percentile(xs, 0.95))
+    }
+
+    pub fn yaw_stats(&self) -> (f64, f64, f64) {
+        let xs = &self.yaw_err_deg;
+        (mean(xs), percentile(xs, 0.5), percentile(xs, 0.95))
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Drive the drone with PD control fed by the scheduler's HV completions.
+///
+/// * `events` — HV task completion timeline from a platform run.
+/// * `duration` — flight length.
+/// * Control runs at 50 Hz; commands refresh only when a *successful*
+///   tracking event arrives (stale inferences are skipped, matching the
+///   platform's deadline semantics). Tracking gaps > 3 s trigger the
+///   failsafe landing (DNF).
+pub fn fly(events: &[TrackingEvent], duration: Micros, seed: u64)
+           -> NavReport {
+    let dt = 0.02; // 50 Hz physics/control
+    let mut rng = Rng::new(seed);
+    let mut drone = DroneState {
+        pos: [-3.0, 0.0, 1.5],
+        ..Default::default()
+    };
+    let mut pd_yaw = PdController::new(2.2, 0.5);
+    let mut pd_z = PdController::new(1.4, 0.4);
+    let mut pd_fwd = PdController::new(1.1, 0.35);
+
+    let mut jerk = [Vec::new(), Vec::new(), Vec::new()];
+    let mut yaw_err_deg = Vec::new();
+    let mut prev_acc = [0.0f64; 3];
+    let mut prev_vel = [0.0f64; 3];
+    let mut cmd = [0.0f64; 3];
+    let mut cmd_f = [0.0f64; 3]; // low-passed command
+    let mut cmd_yaw_rate = 0.0f64;
+    let mut last_fix: f64 = 0.0;
+    let mut ev_idx = 0usize;
+    let (mut dnf, mut dnf_at) = (false, 0.0);
+
+    let steps = (to_secs(duration) / dt) as usize;
+    for step in 0..steps {
+        let t = step as f64 * dt;
+        let vip = vip_position(t);
+
+        // Consume tracking events up to t.
+        let mut fresh = false;
+        while ev_idx < events.len() && to_secs(events[ev_idx].at) <= t {
+            if events[ev_idx].success {
+                fresh = true;
+                last_fix = t;
+            }
+            ev_idx += 1;
+        }
+
+        // Failsafe: 3 s without a successful fix → land (DNF).
+        if t - last_fix > 3.0 && !dnf {
+            dnf = true;
+            dnf_at = t;
+        }
+        if dnf {
+            cmd = [0.0, 0.0, -0.5]; // descend
+            cmd_yaw_rate = 0.0;
+        } else if fresh {
+            // The HV bbox gives the offset of the VIP in the camera frame;
+            // reconstruct the measured errors (with pixel noise).
+            let to_vip = [vip[0] - drone.pos[0], vip[1] - drone.pos[1]];
+            let bearing = to_vip[1].atan2(to_vip[0]);
+            let yaw_err = wrap_angle(bearing - drone.yaw)
+                + rng.normal() * 0.01;
+            let dist = (to_vip[0].powi(2) + to_vip[1].powi(2)).sqrt();
+            let dist_err = dist - 3.0 + rng.normal() * 0.03;
+            let z_err = (vip[2] + 1.5) - drone.pos[2] + rng.normal() * 0.02;
+
+            cmd_yaw_rate = pd_yaw.update(yaw_err, t).clamp(-1.8, 1.8);
+            let fwd = pd_fwd.update(dist_err, t).clamp(-2.0, 2.0);
+            let up = pd_z.update(z_err, t).clamp(-1.2, 1.2);
+            cmd = [fwd * drone.yaw.cos(), fwd * drone.yaw.sin(), up];
+        }
+
+        // Jerk-limited velocity response: the flight controller low-passes
+        // the commanded velocity (τ_cmd — command smoothing every autopilot
+        // applies), tracks it through a first-order loop (τ), and the
+        // actuators slew acceleration at most `JMAX` m/s³. Control quality
+        // shows up as how much of that jerk envelope gets used: sparse or
+        // stale fixes mean larger command corrections per update.
+        const TAU_CMD: f64 = 0.25;
+        const TAU: f64 = 0.35;
+        const AMAX: f64 = 2.5; // m/s²
+        const JMAX: f64 = 25.0; // m/s³ actuator slew
+        let mut jerk_step = [0.0f64; 3];
+        for a in 0..3 {
+            cmd_f[a] += (cmd[a] - cmd_f[a]) * dt / TAU_CMD;
+            let a_des =
+                ((cmd_f[a] - drone.vel[a]) / TAU).clamp(-AMAX, AMAX);
+            let da = (a_des - prev_acc[a]).clamp(-JMAX * dt, JMAX * dt);
+            prev_acc[a] += da;
+            jerk_step[a] = da / dt;
+            drone.vel[a] += prev_acc[a] * dt;
+            prev_vel[a] = drone.vel[a];
+            drone.pos[a] += drone.vel[a] * dt;
+        }
+        drone.yaw_rate += (cmd_yaw_rate - drone.yaw_rate) * dt / TAU;
+        drone.yaw = wrap_angle(drone.yaw + drone.yaw_rate * dt);
+
+        if step > 0 {
+            // Body-frame jerk: x = front-back, y = left-right, z = up-down.
+            let (s, c) = drone.yaw.sin_cos();
+            jerk[0].push(jerk_step[0] * c + jerk_step[1] * s);
+            jerk[1].push(-jerk_step[0] * s + jerk_step[1] * c);
+            jerk[2].push(jerk_step[2]);
+        }
+
+        if !dnf {
+            let to_vip = [vip[0] - drone.pos[0], vip[1] - drone.pos[1]];
+            let bearing = to_vip[1].atan2(to_vip[0]);
+            yaw_err_deg
+                .push(wrap_angle(bearing - drone.yaw).abs().to_degrees());
+        }
+    }
+    NavReport { jerk, yaw_err_deg, dnf, dnf_at_s: dnf_at }
+}
+
+/// Wrap an angle to (-π, π].
+pub fn wrap_angle(a: f64) -> f64 {
+    let mut a = a;
+    while a > std::f64::consts::PI {
+        a -= 2.0 * std::f64::consts::PI;
+    }
+    while a <= -std::f64::consts::PI {
+        a += 2.0 * std::f64::consts::PI;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::{ms, secs};
+
+    #[test]
+    fn pd_proportional_term() {
+        let mut pd = PdController::new(2.0, 0.0);
+        assert_eq!(pd.update(0.5, 0.0), 1.0);
+        assert_eq!(pd.update(-0.5, 1.0), -1.0);
+    }
+
+    #[test]
+    fn pd_derivative_term_damps() {
+        let mut pd = PdController::new(0.0, 1.0);
+        pd.update(1.0, 0.0);
+        // Error shrinking at 0.5/s → derivative output −0.5.
+        let out = pd.update(0.5, 1.0);
+        assert!((out + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wrap_angle_bounds() {
+        use std::f64::consts::PI;
+        assert!((wrap_angle(3.0 * PI) - PI).abs() < 1e-9);
+        assert!((wrap_angle(-3.0 * PI) - PI).abs() < 1e-9);
+        assert_eq!(wrap_angle(0.3), 0.3);
+    }
+
+    #[test]
+    fn pose_classifier_is_deterministic_and_total() {
+        let kp: Vec<f32> = (0..36).map(|i| i as f32 / 36.0).collect();
+        let a = classify_pose(&kp);
+        let b = classify_pose(&kp);
+        assert_eq!(a, b);
+        // Different keypoints can change the class (non-degenerate).
+        let kp2: Vec<f32> = (0..36).map(|i| 1.0 - i as f32 / 36.0).collect();
+        let _ = classify_pose(&kp2);
+    }
+
+    #[test]
+    fn distance_estimate_monotone_in_height() {
+        let near = estimate_distance(&[0.5, 0.5, 0.4, 0.8]);
+        let far = estimate_distance(&[0.5, 0.5, 0.1, 0.2]);
+        assert!(far > near, "far {far} vs near {near}");
+        assert!(near > 0.0);
+    }
+
+    #[test]
+    fn vip_path_continuous() {
+        // No teleports: successive samples < 0.5 m apart at 10 Hz.
+        let mut prev = vip_position(0.0);
+        let mut t = 0.1;
+        while t < 120.0 {
+            let p = vip_position(t);
+            let d = ((p[0] - prev[0]).powi(2)
+                + (p[1] - prev[1]).powi(2)
+                + (p[2] - prev[2]).powi(2))
+            .sqrt();
+            assert!(d < 0.5, "jump of {d} m at t={t}");
+            prev = p;
+            t += 0.1;
+        }
+    }
+
+    #[test]
+    fn dense_tracking_flies_smoothly() {
+        // 30 Hz successful fixes for 60 s: no DNF, bounded yaw error.
+        let events: Vec<TrackingEvent> = (0..1800)
+            .map(|i| TrackingEvent { at: ms(i * 33 + 33), success: true })
+            .collect();
+        let r = fly(&events, secs(60), 7);
+        assert!(!r.dnf);
+        let (_, med, p95) = r.yaw_stats();
+        assert!(med < 10.0, "median yaw err {med}°");
+        assert!(p95 < 45.0, "p95 yaw err {p95}°");
+    }
+
+    #[test]
+    fn sparse_tracking_triggers_dnf() {
+        // Fixes stop after 5 s → failsafe landing around t ≈ 8 s.
+        let events: Vec<TrackingEvent> = (0..150)
+            .map(|i| TrackingEvent { at: ms(i * 33 + 33), success: true })
+            .collect();
+        let r = fly(&events, secs(60), 7);
+        assert!(r.dnf);
+        assert!(r.dnf_at_s > 5.0 && r.dnf_at_s < 12.0, "{}", r.dnf_at_s);
+    }
+
+    #[test]
+    fn degraded_tracking_raises_yaw_error() {
+        let dense: Vec<TrackingEvent> = (0..3000)
+            .map(|i| TrackingEvent { at: ms(i * 33 + 33), success: true })
+            .collect();
+        // 1 in 15 fixes succeed (≈2 Hz) → visibly sparser control updates.
+        let sparse: Vec<TrackingEvent> = dense
+            .iter()
+            .enumerate()
+            .map(|(i, e)| TrackingEvent { at: e.at, success: i % 15 == 0 })
+            .collect();
+        let rd = fly(&dense, secs(90), 7);
+        let rs = fly(&sparse, secs(90), 7);
+        assert!(!rs.dnf);
+        let (_, _, p95_d) = rd.yaw_stats();
+        let (_, _, p95_s) = rs.yaw_stats();
+        assert!(p95_s > p95_d, "sparse {p95_s}° vs dense {p95_d}°");
+    }
+}

@@ -1,0 +1,284 @@
+//! Network models for the edge↔cloud link (§3.2, §8.5, Fig. 2).
+//!
+//! The paper characterizes the WAN to AWS ap-south-1 (long-tail ping, high
+//! bandwidth divergence — Fig. 2a/2b) and a simulated 4G cellular network
+//! under drone mobility (SUMO + NS3 — Fig. 2c). §8.5 then *shapes* this
+//! link: a trapezium latency waveform (0→400 ms) and a replayed 7-device
+//! mobility bandwidth trace. Each of those is a [`NetworkModel`] here.
+
+use crate::rng::Rng;
+use crate::time::{ms_f, secs, Micros};
+
+/// Time-varying model of the edge→cloud network path.
+pub trait NetworkModel: Send {
+    /// One-way latency at virtual time `now` (sampled; includes jitter).
+    fn latency(&mut self, now: Micros, rng: &mut Rng) -> Micros;
+
+    /// Available bandwidth at `now`, in bytes/second.
+    fn bandwidth(&mut self, now: Micros, rng: &mut Rng) -> f64;
+
+    /// Round-trip transfer overhead for a request carrying `bytes` up and a
+    /// small response down: 2·latency + bytes/bandwidth.
+    fn transfer_time(&mut self, now: Micros, bytes: u64,
+                     rng: &mut Rng) -> Micros {
+        let lat = self.latency(now, rng);
+        let bw = self.bandwidth(now, rng).max(1.0);
+        2 * lat + ms_f(bytes as f64 / bw * 1_000.0)
+    }
+}
+
+/// Fixed latency/bandwidth (LAN/MAN private-cloud case, §3.2).
+pub struct ConstantNet {
+    pub latency: Micros,
+    pub bandwidth: f64,
+}
+
+impl NetworkModel for ConstantNet {
+    fn latency(&mut self, _now: Micros, _rng: &mut Rng) -> Micros {
+        self.latency
+    }
+    fn bandwidth(&mut self, _now: Micros, _rng: &mut Rng) -> f64 {
+        self.bandwidth
+    }
+}
+
+/// Long-tailed public-WAN model (Fig. 2a/2b): lognormal latency around a
+/// median with occasional spikes, lognormal bandwidth divergence.
+pub struct LognormalWan {
+    pub median_latency: Micros,
+    pub latency_sigma: f64,
+    pub median_bandwidth: f64,
+    pub bandwidth_sigma: f64,
+    /// Probability of a long-tail latency spike (×4 median), matching the
+    /// ping tail in Fig. 2a.
+    pub spike_prob: f64,
+}
+
+impl Default for LognormalWan {
+    /// Calibrated to the campus→ap-south-1 measurements: ~40 ms median
+    /// one-way latency with a long tail, ~25 MB/s shared host uplink with high divergence.
+    fn default() -> Self {
+        LognormalWan {
+            median_latency: ms_f(40.0),
+            latency_sigma: 0.18,
+            median_bandwidth: 25.0e6,
+            bandwidth_sigma: 0.35,
+            spike_prob: 0.01,
+        }
+    }
+}
+
+impl NetworkModel for LognormalWan {
+    fn latency(&mut self, _now: Micros, rng: &mut Rng) -> Micros {
+        let mut l = rng.lognormal(self.median_latency as f64,
+                                  self.latency_sigma);
+        if rng.chance(self.spike_prob) {
+            l *= 4.0;
+        }
+        l as Micros
+    }
+    fn bandwidth(&mut self, _now: Micros, rng: &mut Rng) -> f64 {
+        rng.lognormal(self.median_bandwidth, self.bandwidth_sigma)
+    }
+}
+
+/// §8.5 latency shaping: a trapezium waveform θ(t) added on top of a base
+/// model. Default mirrors the paper: 0 ms until 60 s, linear ramp to
+/// `peak` (400 ms) during [60, 90), hold, ramp down during [210, 240).
+pub struct TrapeziumLatency<N: NetworkModel> {
+    pub base: N,
+    pub peak: Micros,
+    pub ramp_up_start: Micros,
+    pub ramp_up_end: Micros,
+    pub ramp_down_start: Micros,
+    pub ramp_down_end: Micros,
+}
+
+impl<N: NetworkModel> TrapeziumLatency<N> {
+    pub fn paper_default(base: N) -> Self {
+        TrapeziumLatency {
+            base,
+            peak: ms_f(400.0),
+            ramp_up_start: secs(60),
+            ramp_up_end: secs(90),
+            ramp_down_start: secs(210),
+            ramp_down_end: secs(240),
+        }
+    }
+
+    /// The added latency θ at time `now`.
+    pub fn theta(&self, now: Micros) -> Micros {
+        let p = self.peak as f64;
+        if now < self.ramp_up_start || now >= self.ramp_down_end {
+            0
+        } else if now < self.ramp_up_end {
+            let f = (now - self.ramp_up_start) as f64
+                / (self.ramp_up_end - self.ramp_up_start) as f64;
+            (p * f) as Micros
+        } else if now < self.ramp_down_start {
+            self.peak
+        } else {
+            let f = (self.ramp_down_end - now) as f64
+                / (self.ramp_down_end - self.ramp_down_start) as f64;
+            (p * f) as Micros
+        }
+    }
+}
+
+impl<N: NetworkModel> NetworkModel for TrapeziumLatency<N> {
+    fn latency(&mut self, now: Micros, rng: &mut Rng) -> Micros {
+        self.base.latency(now, rng) + self.theta(now)
+    }
+    fn bandwidth(&mut self, now: Micros, rng: &mut Rng) -> f64 {
+        self.base.bandwidth(now, rng)
+    }
+}
+
+/// Bandwidth trace replay (Fig. 2c / Fig. 11b): piecewise-constant
+/// bandwidth samples at a fixed period, scaled on top of a base latency
+/// model. [`mobility_trace`] synthesizes the 7-device campus trace.
+pub struct TraceBandwidth<N: NetworkModel> {
+    pub base: N,
+    /// Bandwidth samples (bytes/s), one per `period`.
+    pub samples: Vec<f64>,
+    pub period: Micros,
+}
+
+impl<N: NetworkModel> TraceBandwidth<N> {
+    pub fn sample_at(&self, now: Micros) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        let idx = (now / self.period) as usize % self.samples.len();
+        self.samples[idx]
+    }
+}
+
+impl<N: NetworkModel> NetworkModel for TraceBandwidth<N> {
+    fn latency(&mut self, now: Micros, rng: &mut Rng) -> Micros {
+        self.base.latency(now, rng)
+    }
+    fn bandwidth(&mut self, now: Micros, rng: &mut Rng) -> f64 {
+        let jitter = rng.lognormal(1.0, 0.1);
+        self.sample_at(now) * jitter
+    }
+}
+
+/// Synthesize the Fig. 2c analogue: a 4G cellular bandwidth trace for one
+/// of 7 mobile devices moving through the campus. Smooth random walk in
+/// log-space between ~0.2 MB/s (cell edge / handover) and ~12 MB/s, with
+/// occasional deep fades; 1 s period over `duration_s` seconds.
+pub fn mobility_trace(device: u64, duration_s: u64) -> Vec<f64> {
+    let mut rng = Rng::new(0x46_u64.wrapping_add(device * 7919));
+    let mut log_bw: f64 = (4.0e6_f64).ln();
+    let (lo, hi) = ((0.2e6_f64).ln(), (12.0e6_f64).ln());
+    let mut out = Vec::with_capacity(duration_s as usize);
+    for _ in 0..duration_s {
+        log_bw += rng.normal() * 0.25;
+        if rng.chance(0.03) {
+            log_bw -= 1.2; // deep fade on handover
+        }
+        log_bw = log_bw.clamp(lo, hi);
+        out.push(log_bw.exp());
+    }
+    out
+}
+
+/// Pretty stats helper used by the Fig. 2 harness.
+pub fn trace_stats(samples: &[f64]) -> (f64, f64, f64) {
+    let mut s: Vec<f64> = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| s[((s.len() - 1) as f64 * p) as usize];
+    (pct(0.05), pct(0.50), pct(0.95))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::ms;
+
+    #[test]
+    fn constant_transfer_time() {
+        let mut n = ConstantNet { latency: ms(40), bandwidth: 10.0e6 };
+        let mut rng = Rng::new(1);
+        // 2*40ms + 38kB / 10MB/s = 80ms + 3.8ms
+        let t = n.transfer_time(0, 38_000, &mut rng);
+        assert_eq!(t, ms(80) + 3_800);
+    }
+
+    #[test]
+    fn trapezium_waveform_shape() {
+        let t = TrapeziumLatency::paper_default(ConstantNet {
+            latency: 0,
+            bandwidth: 1.0e6,
+        });
+        assert_eq!(t.theta(secs(0)), 0);
+        assert_eq!(t.theta(secs(59)), 0);
+        assert_eq!(t.theta(secs(75)), ms(200)); // mid ramp-up
+        assert_eq!(t.theta(secs(90)), ms(400));
+        assert_eq!(t.theta(secs(150)), ms(400)); // plateau
+        assert_eq!(t.theta(secs(225)), ms(200)); // mid ramp-down
+        assert_eq!(t.theta(secs(240)), 0);
+        assert_eq!(t.theta(secs(299)), 0);
+    }
+
+    #[test]
+    fn trapezium_adds_to_base_latency() {
+        let mut t = TrapeziumLatency::paper_default(ConstantNet {
+            latency: ms(40),
+            bandwidth: 1.0e6,
+        });
+        let mut rng = Rng::new(1);
+        assert_eq!(t.latency(secs(150), &mut rng), ms(440));
+        assert_eq!(t.latency(secs(0), &mut rng), ms(40));
+    }
+
+    #[test]
+    fn lognormal_wan_latency_long_tail() {
+        let mut n = LognormalWan::default();
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| n.latency(0, &mut rng) as f64)
+            .collect();
+        let (p5, p50, p95) = trace_stats(&xs);
+        assert!((p50 - 40_000.0).abs() < 2_000.0, "median {p50}");
+        assert!(p95 > p50 * 1.2);
+        assert!(p5 < p50);
+        // Tail spikes exist.
+        assert!(xs.iter().cloned().fold(0.0, f64::max) > 100_000.0);
+    }
+
+    #[test]
+    fn mobility_trace_deterministic_and_bounded() {
+        let a = mobility_trace(3, 300);
+        let b = mobility_trace(3, 300);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 300);
+        for v in &a {
+            assert!((0.19e6..12.1e6).contains(v), "bw {v}");
+        }
+        // Devices differ.
+        assert_ne!(mobility_trace(1, 300), mobility_trace(2, 300));
+    }
+
+    #[test]
+    fn trace_bandwidth_replay() {
+        let tr = TraceBandwidth {
+            base: ConstantNet { latency: ms(10), bandwidth: 0.0 },
+            samples: vec![1.0e6, 2.0e6],
+            period: secs(1),
+        };
+        assert_eq!(tr.sample_at(0), 1.0e6);
+        assert_eq!(tr.sample_at(secs(1)), 2.0e6);
+        assert_eq!(tr.sample_at(secs(2)), 1.0e6); // wraps
+    }
+
+    #[test]
+    fn trace_stats_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let (p5, p50, p95) = trace_stats(&xs);
+        assert!((p5 - 5.0).abs() <= 1.0);
+        assert!((p50 - 50.0).abs() <= 1.0);
+        assert!((p95 - 95.0).abs() <= 1.0);
+    }
+}

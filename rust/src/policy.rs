@@ -1,0 +1,251 @@
+//! Scheduling policies: DEMS and its ablations, plus the seven baselines
+//! of §8.2. A [`Policy`] is a declarative description consumed by the
+//! platform state machine in [`crate::platform`].
+
+use crate::queues::EdgeOrder;
+use crate::time::{ms, secs, Micros};
+
+/// Which named algorithm this policy encodes (for reports).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Edge-only, earliest-deadline-first.
+    EdgeEdf,
+    /// Edge-only, highest-utility-per-time-first.
+    EdgeHpf,
+    /// Cloud-only FaaS scheduling.
+    CloudOnly,
+    /// EDF on edge + FIFO cloud offload (the E+C baseline, §5.1).
+    EdfEC,
+    /// SJF on edge + FIFO cloud offload (sends even negative-utility tasks).
+    SjfEC,
+    /// E+C + migration scoring (§5.2).
+    Dem,
+    /// DEM + work stealing with deferred cloud triggers (§5.3).
+    Dems,
+    /// DEMS + adaptation to network variability (§5.4).
+    DemsA,
+    /// DEMS(-A) + the QoE window monitor of Algorithm 1 (§6).
+    Gems,
+    /// Kalmia + D3 hybrid (urgent/non-urgent split, deadline extension).
+    Sota1,
+    /// Dedas-style insertion by exec time with ACT comparison.
+    Sota2,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::EdgeEdf => "EDF",
+            PolicyKind::EdgeHpf => "HPF",
+            PolicyKind::CloudOnly => "CLD",
+            PolicyKind::EdfEC => "EDF (E+C)",
+            PolicyKind::SjfEC => "SJF (E+C)",
+            PolicyKind::Dem => "DEM",
+            PolicyKind::Dems => "DEMS",
+            PolicyKind::DemsA => "DEMS-A",
+            PolicyKind::Gems => "GEMS",
+            PolicyKind::Sota1 => "SOTA 1",
+            PolicyKind::Sota2 => "SOTA 2",
+        }
+    }
+}
+
+/// Declarative scheduler configuration.
+#[derive(Clone, Debug)]
+pub struct Policy {
+    pub kind: PolicyKind,
+    pub edge_order: EdgeOrder,
+    pub use_edge: bool,
+    pub use_cloud: bool,
+    /// DEM migration scoring on insert (Eqn 3).
+    pub migration: bool,
+    /// Work stealing from the cloud queue (§5.3).
+    pub stealing: bool,
+    /// Defer cloud dispatch to trigger times (§5.3); otherwise FIFO-now.
+    pub defer_cloud: bool,
+    /// Sliding-window adaptation of expected cloud times (§5.4).
+    pub adaptive: bool,
+    /// GEMS QoE window monitor (Alg. 1).
+    pub gems: bool,
+    /// Cloud accepts tasks with γᶜ ≤ 0 for execution (SJF E+C / SOTA do).
+    pub cloud_accepts_negative: bool,
+    /// Edge executor drops JIT-expired tasks before execution. The hybrid
+    /// schedulers do (§3.3); the edge-only baselines have nowhere to shed
+    /// load and execute in priority order regardless — the §8.8 mechanism
+    /// behind EO's collapse at 30 FPS ("HV tasks expire due to queuing
+    /// delays... the drone is unable to fly beyond a few seconds").
+    pub edge_jit_drop: bool,
+    /// Safety margin subtracted when computing cloud trigger times.
+    pub safety_margin: Micros,
+    /// §5.4 parameters: sliding window size w, threshold ε, cooling t_cp.
+    pub adapt_window: usize,
+    pub adapt_epsilon: Micros,
+    pub cooling_period: Micros,
+    /// SOTA 1: urgency threshold on δ and the per-retry deadline stretch.
+    pub sota1_urgent_below: Micros,
+    pub sota1_extension: f64,
+}
+
+impl Policy {
+    fn base(kind: PolicyKind) -> Policy {
+        Policy {
+            kind,
+            edge_order: EdgeOrder::Edf,
+            use_edge: true,
+            use_cloud: true,
+            migration: false,
+            stealing: false,
+            defer_cloud: false,
+            adaptive: false,
+            gems: false,
+            cloud_accepts_negative: false,
+            edge_jit_drop: true,
+            safety_margin: ms(100),
+            adapt_window: 10,
+            adapt_epsilon: ms(10),
+            cooling_period: secs(10),
+            sota1_urgent_below: ms(750),
+            sota1_extension: 0.10,
+        }
+    }
+
+    pub fn edge_edf() -> Policy {
+        Policy { use_cloud: false, ..Self::base(PolicyKind::EdgeEdf) }
+    }
+
+    pub fn edge_hpf() -> Policy {
+        Policy {
+            use_cloud: false,
+            edge_order: EdgeOrder::Hpf,
+            ..Self::base(PolicyKind::EdgeHpf)
+        }
+    }
+
+    /// §8.8's Edge-Only configuration: the field platform executes frames
+    /// in priority order without JIT shedding (there is no cloud to shed
+    /// to and the app consumes every output) — the configuration whose
+    /// 30 FPS overload collapse the paper reports as DNF.
+    pub fn edge_only_field() -> Policy {
+        Policy { edge_jit_drop: false, ..Self::edge_edf() }
+    }
+
+    pub fn cloud_only() -> Policy {
+        Policy { use_edge: false, ..Self::base(PolicyKind::CloudOnly) }
+    }
+
+    pub fn edf_ec() -> Policy {
+        Self::base(PolicyKind::EdfEC)
+    }
+
+    pub fn sjf_ec() -> Policy {
+        Policy {
+            edge_order: EdgeOrder::Sjf,
+            cloud_accepts_negative: true,
+            ..Self::base(PolicyKind::SjfEC)
+        }
+    }
+
+    pub fn dem() -> Policy {
+        Policy { migration: true, ..Self::base(PolicyKind::Dem) }
+    }
+
+    pub fn dems() -> Policy {
+        Policy {
+            migration: true,
+            stealing: true,
+            defer_cloud: true,
+            ..Self::base(PolicyKind::Dems)
+        }
+    }
+
+    pub fn dems_a() -> Policy {
+        Policy { adaptive: true, kind: PolicyKind::DemsA, ..Self::dems() }
+    }
+
+    /// GEMS builds on DEMS (§6); pass `adaptive=true` for the GEMS-A used
+    /// in the variability studies.
+    pub fn gems(adaptive: bool) -> Policy {
+        Policy { gems: true, adaptive, kind: PolicyKind::Gems, ..Self::dems() }
+    }
+
+    pub fn sota1() -> Policy {
+        Policy {
+            cloud_accepts_negative: true,
+            ..Self::base(PolicyKind::Sota1)
+        }
+    }
+
+    pub fn sota2() -> Policy {
+        Policy {
+            edge_order: EdgeOrder::Sjf,
+            cloud_accepts_negative: true,
+            ..Self::base(PolicyKind::Sota2)
+        }
+    }
+
+    /// The eight QoS-study schedulers of Fig. 8/9 in paper order.
+    pub fn fig8_lineup() -> Vec<Policy> {
+        vec![
+            Self::edge_hpf(),
+            Self::edge_edf(),
+            Self::cloud_only(),
+            Self::edf_ec(),
+            Self::sjf_ec(),
+            Self::sota1(),
+            Self::sota2(),
+            Self::dems(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dems_stack_is_incremental() {
+        let ec = Policy::edf_ec();
+        assert!(!ec.migration && !ec.stealing && !ec.adaptive);
+        let dem = Policy::dem();
+        assert!(dem.migration && !dem.stealing);
+        let dems = Policy::dems();
+        assert!(dems.migration && dems.stealing && dems.defer_cloud);
+        assert!(!dems.adaptive);
+        let dems_a = Policy::dems_a();
+        assert!(dems_a.adaptive);
+        let gems = Policy::gems(false);
+        assert!(gems.gems && gems.migration && gems.stealing);
+    }
+
+    #[test]
+    fn edge_only_policies_disable_cloud() {
+        assert!(!Policy::edge_edf().use_cloud);
+        assert!(!Policy::edge_hpf().use_cloud);
+        assert!(!Policy::cloud_only().use_edge);
+    }
+
+    #[test]
+    fn sjf_ec_sends_negative_tasks() {
+        assert!(Policy::sjf_ec().cloud_accepts_negative);
+        assert!(!Policy::edf_ec().cloud_accepts_negative);
+    }
+
+    #[test]
+    fn fig8_lineup_has_eight_schedulers() {
+        let names: Vec<&str> =
+            Policy::fig8_lineup().iter().map(|p| p.kind.name()).collect();
+        assert_eq!(
+            names,
+            ["HPF", "EDF", "CLD", "EDF (E+C)", "SJF (E+C)", "SOTA 1",
+             "SOTA 2", "DEMS"]
+        );
+    }
+
+    #[test]
+    fn paper_adaptation_parameters() {
+        let p = Policy::dems_a();
+        assert_eq!(p.adapt_window, 10);
+        assert_eq!(p.adapt_epsilon, ms(10));
+        assert_eq!(p.cooling_period, secs(10));
+    }
+}

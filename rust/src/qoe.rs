@@ -1,0 +1,157 @@
+//! GEMS QoE window monitoring (§6, Algorithm 1).
+//!
+//! Per model: a tumbling window of duration ω tracks λ (tasks finishing in
+//! the window) and λ̂ (those that met their deadline). After every finalized
+//! task the incremental rate α̂ = λ̂/λ is compared with the required α; when
+//! the model falls behind, the platform greedily reschedules its pending
+//! edge tasks to the cloud (handled by the caller — this module owns only
+//! the counters and window lifecycle).
+
+use crate::time::Micros;
+
+/// Window accounting state for one DNN model.
+#[derive(Clone, Debug)]
+pub struct WindowMonitor {
+    /// Required completion rate αᵢ (0 disables monitoring).
+    pub alpha: f64,
+    /// Window duration ωᵢ.
+    pub omega: Micros,
+    /// QoE benefit β̄ᵢ accrued per satisfied window.
+    pub qoe_benefit: f64,
+    /// Window start/end (w_s, w_e].
+    pub window_start: Micros,
+    pub window_end: Micros,
+    /// λ: tasks of this model finalized within the current window.
+    pub total: u64,
+    /// λ̂: of those, completed within their deadline.
+    pub succeeded: u64,
+    /// Accumulated QoE utility over closed windows.
+    pub qoe_utility: f64,
+    pub windows_total: u64,
+    pub windows_met: u64,
+}
+
+impl WindowMonitor {
+    pub fn new(alpha: f64, omega: Micros, qoe_benefit: f64) -> Self {
+        WindowMonitor {
+            alpha,
+            omega,
+            qoe_benefit,
+            window_start: 0,
+            window_end: omega,
+            total: 0,
+            succeeded: 0,
+            qoe_utility: 0.0,
+            windows_total: 0,
+            windows_met: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.alpha > 0.0
+    }
+
+    /// Record a finalized task (Alg. 1 lines 3–7). Returns the incremental
+    /// completion rate α̂ after the update.
+    pub fn record(&mut self, success: bool) -> f64 {
+        self.total += 1;
+        if success {
+            self.succeeded += 1;
+        }
+        self.rate()
+    }
+
+    /// Current incremental completion rate α̂ (1.0 while empty, so an empty
+    /// window never triggers rescheduling).
+    pub fn rate(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.succeeded as f64 / self.total as f64
+        }
+    }
+
+    /// Is the model behind its target (Alg. 1 line 8)?
+    pub fn falling_behind(&self) -> bool {
+        self.enabled() && self.rate() < self.alpha
+    }
+
+    /// Close the current window at its end time (Alg. 1 lines 16–21):
+    /// accrue β̄ when the final rate meets α, then tumble. Returns whether
+    /// the window met its target.
+    pub fn close_window(&mut self) -> bool {
+        let met = self.total > 0 && self.rate() >= self.alpha;
+        self.windows_total += 1;
+        if met {
+            self.qoe_utility += self.qoe_benefit;
+            self.windows_met += 1;
+        }
+        self.window_start = self.window_end;
+        self.window_end += self.omega;
+        self.total = 0;
+        self.succeeded = 0;
+        met
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::secs;
+
+    #[test]
+    fn rate_tracks_successes() {
+        let mut w = WindowMonitor::new(0.9, secs(20), 100.0);
+        assert_eq!(w.rate(), 1.0);
+        w.record(true);
+        w.record(true);
+        w.record(false);
+        assert!((w.rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!(w.falling_behind());
+    }
+
+    #[test]
+    fn not_behind_when_meeting_alpha() {
+        let mut w = WindowMonitor::new(0.5, secs(20), 100.0);
+        w.record(true);
+        w.record(false);
+        assert!(!w.falling_behind()); // exactly at 0.5
+        w.record(false);
+        assert!(w.falling_behind());
+    }
+
+    #[test]
+    fn close_window_accrues_and_tumbles() {
+        let mut w = WindowMonitor::new(0.9, secs(20), 100.0);
+        for _ in 0..9 {
+            w.record(true);
+        }
+        w.record(false);
+        assert!(w.close_window()); // 0.9 meets α = 0.9
+        assert_eq!(w.qoe_utility, 100.0);
+        assert_eq!((w.window_start, w.window_end), (secs(20), secs(40)));
+        assert_eq!(w.total, 0);
+        // Next window fails.
+        w.record(false);
+        assert!(!w.close_window());
+        assert_eq!(w.qoe_utility, 100.0);
+        assert_eq!(w.windows_total, 2);
+        assert_eq!(w.windows_met, 1);
+    }
+
+    #[test]
+    fn empty_window_accrues_nothing() {
+        let mut w = WindowMonitor::new(0.9, secs(20), 100.0);
+        assert!(!w.close_window());
+        assert_eq!(w.qoe_utility, 0.0);
+    }
+
+    #[test]
+    fn disabled_monitor_never_behind() {
+        let mut w = WindowMonitor::new(0.0, secs(20), 0.0);
+        w.record(false);
+        w.record(false);
+        assert!(!w.falling_behind());
+        assert!(!w.enabled());
+    }
+}

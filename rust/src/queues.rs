@@ -1,0 +1,469 @@
+//! Edge and cloud task queues (§3.3, §5).
+//!
+//! The paper implements these as custom priority queues over a doubly linked
+//! list; here they are sorted vectors (cache-friendly, O(log n) position
+//! search + O(n) insert — queues hold at most a few dozen entries at the
+//! paper's workloads, see the §Perf notes).
+//!
+//! * [`EdgeQueue`] — priority-ordered pending tasks for the single-lane edge
+//!   executor. The priority key is pluggable ([`EdgeOrder`]): EDF for
+//!   DEMS/E+C, shortest-job-first for SJF/Dedas, utility-per-time for HPF.
+//!   It exposes the *feasibility scan* that drives admission (§5.1) and the
+//!   DEM migration decision (§5.2).
+//! * [`CloudQueue`] — trigger-time ordered deferred tasks (§5.3): each entry
+//!   is sent to the FaaS only when its trigger time arrives, giving the edge
+//!   a window to steal it.
+
+use crate::model::DnnKind;
+use crate::task::{Task, TaskId};
+use crate::time::{Micros, MicrosDelta};
+
+/// Priority regime for the edge queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeOrder {
+    /// Earliest absolute deadline first (t′ⱼ + δᵢ) — DEMS and E+C.
+    Edf,
+    /// Shortest expected edge execution first — SJF (E+C) and SOTA 2.
+    Sjf,
+    /// Highest utility per unit edge time first — HPF.
+    Hpf,
+    /// Plain FIFO (arrival order).
+    Fifo,
+}
+
+/// One queued edge task with its cached scheduling attributes.
+#[derive(Clone, Debug)]
+pub struct EdgeEntry {
+    pub task: Task,
+    /// Absolute deadline t′ⱼ + δᵢ.
+    pub abs_deadline: Micros,
+    /// Expected execution duration on the edge (possibly adapted).
+    pub t_edge: Micros,
+    /// Priority key (lower = runs earlier); derived from `EdgeOrder`.
+    pub key: u64,
+    /// Monotonic tiebreaker preserving FIFO among equal keys.
+    pub seq: u64,
+    /// Set when GEMS moved the task here / marked it (§6).
+    pub gems_rescheduled: bool,
+}
+
+/// Result of probing an insertion into the edge queue (§5.2).
+#[derive(Debug)]
+pub struct InsertProbe {
+    /// Position the new task would occupy.
+    pub pos: usize,
+    /// Expected completion time of the new task if inserted.
+    pub completion: Micros,
+    /// Indices (into the current queue) of existing tasks that would miss
+    /// their deadlines as a consequence of the insertion.
+    pub victims: Vec<usize>,
+}
+
+#[derive(Default, Debug)]
+pub struct EdgeQueue {
+    entries: Vec<EdgeEntry>,
+    seq: u64,
+    order: EdgeOrder,
+}
+
+impl Default for EdgeOrder {
+    fn default() -> Self {
+        EdgeOrder::Edf
+    }
+}
+
+impl EdgeQueue {
+    pub fn new(order: EdgeOrder) -> Self {
+        EdgeQueue { entries: Vec::new(), seq: 0, order }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &EdgeEntry> {
+        self.entries.iter()
+    }
+
+    /// Compute the priority key for a prospective entry.
+    pub fn key_for(&self, abs_deadline: Micros, t_edge: Micros,
+                   hpf_priority: f64) -> u64 {
+        match self.order {
+            EdgeOrder::Edf => abs_deadline,
+            EdgeOrder::Sjf => t_edge,
+            // Higher utility/time first → invert into an ascending key.
+            EdgeOrder::Hpf => (1e12 / hpf_priority.max(1e-9)) as u64,
+            EdgeOrder::Fifo => 0,
+        }
+    }
+
+    fn position_for(&self, key: u64) -> usize {
+        // Insert after all entries with key <= new key (FIFO among equals).
+        self.entries.partition_point(|e| e.key <= key)
+    }
+
+    /// Probe the effect of inserting a task *without* mutating the queue.
+    ///
+    /// `busy_until` is when the edge executor frees up (now if idle). The
+    /// expected completion of entry k is `busy_until + Σ t_edge` over all
+    /// entries at positions ≤ k (with the new task occupying `pos`).
+    pub fn probe_insert(&self, abs_deadline: Micros, t_edge: Micros,
+                        hpf_priority: f64, busy_until: Micros) -> InsertProbe {
+        let key = self.key_for(abs_deadline, t_edge, hpf_priority);
+        let pos = self.position_for(key);
+        let mut t = busy_until;
+        for e in &self.entries[..pos] {
+            t += e.t_edge;
+        }
+        t += t_edge;
+        let completion = t;
+        let mut victims = Vec::new();
+        for (i, e) in self.entries.iter().enumerate().skip(pos) {
+            t += e.t_edge;
+            if t > e.abs_deadline {
+                victims.push(i);
+            }
+        }
+        InsertProbe { pos, completion, victims }
+    }
+
+    /// Expected completion time of the queue's last task (for slack math).
+    pub fn backlog_until(&self, busy_until: Micros) -> Micros {
+        busy_until + self.entries.iter().map(|e| e.t_edge).sum::<Micros>()
+    }
+
+    /// Would appending this task (per its priority) meet `abs_deadline`?
+    pub fn feasible(&self, abs_deadline: Micros, t_edge: Micros,
+                    hpf_priority: f64, busy_until: Micros) -> bool {
+        self.probe_insert(abs_deadline, t_edge, hpf_priority, busy_until)
+            .completion
+            <= abs_deadline
+    }
+
+    /// Insert an entry at its priority position.
+    pub fn insert(&mut self, task: Task, abs_deadline: Micros, t_edge: Micros,
+                  hpf_priority: f64) -> usize {
+        let key = self.key_for(abs_deadline, t_edge, hpf_priority);
+        let pos = self.position_for(key);
+        self.seq += 1;
+        self.entries.insert(
+            pos,
+            EdgeEntry {
+                task,
+                abs_deadline,
+                t_edge,
+                key,
+                seq: self.seq,
+                gems_rescheduled: false,
+            },
+        );
+        pos
+    }
+
+    /// Pop the highest-priority entry.
+    pub fn pop(&mut self) -> Option<EdgeEntry> {
+        if self.entries.is_empty() {
+            None
+        } else {
+            Some(self.entries.remove(0))
+        }
+    }
+
+    /// Peek the head entry.
+    pub fn peek(&self) -> Option<&EdgeEntry> {
+        self.entries.first()
+    }
+
+    /// Direct index access (perf: DEM victim scoring is O(victims), not
+    /// O(n·victims) — see EXPERIMENTS.md §Perf L3).
+    #[inline]
+    pub fn get(&self, idx: usize) -> Option<&EdgeEntry> {
+        self.entries.get(idx)
+    }
+
+    /// Remove an entry by index (used by DEM migration).
+    pub fn remove_at(&mut self, idx: usize) -> EdgeEntry {
+        self.entries.remove(idx)
+    }
+
+    /// Remove an entry by task id (used by GEMS rescheduling).
+    pub fn remove_task(&mut self, id: TaskId) -> Option<EdgeEntry> {
+        let idx = self.entries.iter().position(|e| e.task.id == id)?;
+        Some(self.entries.remove(idx))
+    }
+
+    /// Snapshot of (index, task-id, model) for tasks of one model, head
+    /// first — the GEMS edge-queue scan (§6.1, Alg. 1 lines 9–14).
+    pub fn tasks_of_model(&self, model: DnnKind) -> Vec<(usize, TaskId)> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.task.model == model)
+            .map(|(i, e)| (i, e.task.id))
+            .collect()
+    }
+}
+
+/// One deferred cloud task (§5.3).
+#[derive(Clone, Debug)]
+pub struct CloudEntry {
+    pub task: Task,
+    pub abs_deadline: Micros,
+    /// Expected end-to-end cloud duration at admission time (adaptive).
+    pub t_cloud: Micros,
+    /// Expected *edge* duration — needed for steal feasibility.
+    pub t_edge: Micros,
+    /// When the cloud executor must dispatch it (deadline − t̂ − margin),
+    /// or, for negative-utility entries, the latest edge start (§5.3).
+    pub trigger: Micros,
+    /// γᶜ ≤ 0: kept only as a steal candidate; dropped at trigger.
+    pub negative_utility: bool,
+    /// Set when GEMS moved the task here (§6).
+    pub gems_rescheduled: bool,
+}
+
+/// Trigger-time priority queue for the cloud executor.
+#[derive(Default, Debug)]
+pub struct CloudQueue {
+    entries: Vec<CloudEntry>, // sorted by trigger ascending
+}
+
+impl CloudQueue {
+    pub fn new() -> Self {
+        CloudQueue { entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &CloudEntry> {
+        self.entries.iter()
+    }
+
+    pub fn insert(&mut self, e: CloudEntry) {
+        let pos = self.entries.partition_point(|x| x.trigger <= e.trigger);
+        self.entries.insert(pos, e);
+    }
+
+    /// Earliest trigger time, if any.
+    pub fn next_trigger(&self) -> Option<Micros> {
+        self.entries.first().map(|e| e.trigger)
+    }
+
+    /// Pop the head entry if its trigger time has arrived.
+    pub fn pop_due(&mut self, now: Micros) -> Option<CloudEntry> {
+        if self.entries.first().map(|e| e.trigger <= now).unwrap_or(false) {
+            Some(self.entries.remove(0))
+        } else {
+            None
+        }
+    }
+
+    /// Work-stealing candidate selection (§5.3): among entries whose edge
+    /// execution fits `slack` and completes before their deadline, pick the
+    /// best by (negative-cloud-utility first, then steal-rank descending).
+    /// Returns the index of the chosen entry.
+    pub fn best_steal(&self, now: Micros, slack: MicrosDelta,
+                      rank: impl Fn(&CloudEntry) -> f64) -> Option<usize> {
+        if slack <= 0 {
+            return None;
+        }
+        let mut best: Option<(usize, bool, f64)> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.t_edge as i64 > slack {
+                continue;
+            }
+            if now + e.t_edge > e.abs_deadline {
+                continue; // would miss its deadline even if stolen now
+            }
+            let r = rank(e);
+            let cand = (i, e.negative_utility, r);
+            best = Some(match best {
+                None => cand,
+                Some(b) => {
+                    // Priority: negative-utility entries first, then rank.
+                    let better = (cand.1 && !b.1)
+                        || (cand.1 == b.1 && cand.2 > b.2);
+                    if better {
+                        cand
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        best.map(|(i, _, _)| i)
+    }
+
+    pub fn remove_at(&mut self, idx: usize) -> CloudEntry {
+        self.entries.remove(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DnnKind;
+    use crate::task::VideoSegment;
+    use crate::time::ms;
+
+    fn task(id: TaskId, created: Micros) -> Task {
+        Task {
+            id,
+            model: DnnKind::Hv,
+            segment: VideoSegment {
+                id,
+                drone: 0,
+                created_at: created,
+                bytes: 38_000,
+            },
+        }
+    }
+
+    #[test]
+    fn edf_orders_by_deadline() {
+        let mut q = EdgeQueue::new(EdgeOrder::Edf);
+        q.insert(task(1, 0), ms(900), ms(100), 1.0);
+        q.insert(task(2, 0), ms(500), ms(100), 1.0);
+        q.insert(task(3, 0), ms(700), ms(100), 1.0);
+        assert_eq!(q.pop().unwrap().task.id, 2);
+        assert_eq!(q.pop().unwrap().task.id, 3);
+        assert_eq!(q.pop().unwrap().task.id, 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn sjf_orders_by_exec_time() {
+        let mut q = EdgeQueue::new(EdgeOrder::Sjf);
+        q.insert(task(1, 0), ms(900), ms(300), 1.0);
+        q.insert(task(2, 0), ms(500), ms(100), 1.0);
+        assert_eq!(q.pop().unwrap().task.id, 2);
+    }
+
+    #[test]
+    fn hpf_orders_by_utility_per_time() {
+        let mut q = EdgeQueue::new(EdgeOrder::Hpf);
+        q.insert(task(1, 0), ms(900), ms(100), 0.5);
+        q.insert(task(2, 0), ms(900), ms(100), 2.0);
+        assert_eq!(q.pop().unwrap().task.id, 2);
+    }
+
+    #[test]
+    fn fifo_among_equal_keys() {
+        let mut q = EdgeQueue::new(EdgeOrder::Edf);
+        q.insert(task(1, 0), ms(500), ms(100), 1.0);
+        q.insert(task(2, 0), ms(500), ms(100), 1.0);
+        assert_eq!(q.pop().unwrap().task.id, 1);
+        assert_eq!(q.pop().unwrap().task.id, 2);
+    }
+
+    #[test]
+    fn probe_detects_victims() {
+        // Fig. 5 scenario 2: inserting an early-deadline task starves τ₃.
+        let mut q = EdgeQueue::new(EdgeOrder::Edf);
+        q.insert(task(1, 0), ms(300), ms(150), 1.0);
+        q.insert(task(3, 0), ms(500), ms(200), 1.0); // completes at 350 now
+        // New task: deadline 400, t=100 → slots between τ₁ and τ₃, pushing
+        // τ₃'s completion to 450 < 500 (fine), then tighten:
+        let p = q.probe_insert(ms(400), ms(100), 1.0, 0);
+        assert_eq!(p.pos, 1);
+        assert_eq!(p.completion, ms(250));
+        assert!(p.victims.is_empty());
+        // A heavier insert (t=200) pushes τ₃ to 550 > 500 → victim.
+        let p = q.probe_insert(ms(400), ms(200), 1.0, 0);
+        assert_eq!(p.victims, vec![1]);
+    }
+
+    #[test]
+    fn probe_accounts_for_busy_executor() {
+        let q = EdgeQueue::new(EdgeOrder::Edf);
+        let p = q.probe_insert(ms(400), ms(100), 1.0, ms(350));
+        assert_eq!(p.completion, ms(450));
+        assert!(!q.feasible(ms(400), ms(100), 1.0, ms(350)));
+        assert!(q.feasible(ms(400), ms(100), 1.0, ms(250)));
+    }
+
+    #[test]
+    fn remove_task_by_id() {
+        let mut q = EdgeQueue::new(EdgeOrder::Edf);
+        q.insert(task(1, 0), ms(500), ms(100), 1.0);
+        q.insert(task(2, 0), ms(600), ms(100), 1.0);
+        assert!(q.remove_task(2).is_some());
+        assert!(q.remove_task(2).is_none());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn tasks_of_model_orders_head_first() {
+        let mut q = EdgeQueue::new(EdgeOrder::Edf);
+        q.insert(task(1, 0), ms(500), ms(100), 1.0);
+        q.insert(task(2, 0), ms(300), ms(100), 1.0);
+        let ids: Vec<TaskId> =
+            q.tasks_of_model(DnnKind::Hv).into_iter().map(|(_, id)| id).collect();
+        assert_eq!(ids, vec![2, 1]);
+    }
+
+    fn centry(id: TaskId, trigger: Micros, t_edge: Micros,
+              abs_deadline: Micros, neg: bool) -> CloudEntry {
+        CloudEntry {
+            task: task(id, 0),
+            abs_deadline,
+            t_cloud: ms(400),
+            t_edge,
+            trigger,
+            negative_utility: neg,
+            gems_rescheduled: false,
+        }
+    }
+
+    #[test]
+    fn cloud_queue_trigger_order() {
+        let mut q = CloudQueue::new();
+        q.insert(centry(1, ms(300), ms(100), ms(900), false));
+        q.insert(centry(2, ms(100), ms(100), ms(900), false));
+        assert_eq!(q.next_trigger(), Some(ms(100)));
+        assert!(q.pop_due(ms(50)).is_none());
+        assert_eq!(q.pop_due(ms(100)).unwrap().task.id, 2);
+        assert_eq!(q.pop_due(ms(500)).unwrap().task.id, 1);
+    }
+
+    #[test]
+    fn steal_prefers_negative_utility_then_rank() {
+        // Fig. 6 instance 1: τ₅ (positive) and τ₆ (negative) both fit; the
+        // negative-utility task is stolen.
+        let mut q = CloudQueue::new();
+        q.insert(centry(5, ms(500), ms(100), ms(900), false));
+        q.insert(centry(6, ms(600), ms(100), ms(900), true));
+        let idx = q.best_steal(0, ms(150) as i64, |_| 1.0).unwrap();
+        assert_eq!(q.remove_at(idx).task.id, 6);
+        // With only positive entries, highest rank wins.
+        let mut q = CloudQueue::new();
+        q.insert(centry(7, ms(500), ms(100), ms(900), false));
+        q.insert(centry(8, ms(600), ms(100), ms(900), false));
+        let idx = q
+            .best_steal(0, ms(150) as i64, |e| if e.task.id == 8 { 2.0 } else { 1.0 })
+            .unwrap();
+        assert_eq!(q.remove_at(idx).task.id, 8);
+    }
+
+    #[test]
+    fn steal_respects_slack_and_deadline() {
+        let mut q = CloudQueue::new();
+        q.insert(centry(1, ms(500), ms(200), ms(900), false));
+        // Not enough slack for t_edge=200.
+        assert!(q.best_steal(0, ms(150) as i64, |_| 1.0).is_none());
+        // Enough slack but deadline already unreachable.
+        q.insert(centry(2, ms(500), ms(100), ms(50), false));
+        let idx = q.best_steal(ms(100), ms(250) as i64, |_| 1.0).unwrap();
+        assert_eq!(q.remove_at(idx).task.id, 1);
+    }
+}

@@ -1,0 +1,277 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and serve inferences
+//! natively from Rust — Python never runs on the request path.
+//!
+//! `make artifacts` lowers each L2 JAX model (which funnels through the L1
+//! Pallas kernel) to HLO *text* under `artifacts/`; this module compiles
+//! them once on the PJRT CPU client (`xla` crate) and executes them per
+//! request. Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::DnnKind;
+
+/// Input/output contract of one compiled model (from `manifest.json`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub kind: DnnKind,
+    /// NHWC input shape.
+    pub input_shape: [usize; 4],
+    /// Flat f32 output length.
+    pub output_len: usize,
+    pub hlo_path: PathBuf,
+}
+
+/// Minimal JSON scanner for the tiny flat manifest `aot.py` writes
+/// (offline build: no serde). Grammar: two-level object with string /
+/// integer / integer-array leaves.
+pub fn parse_manifest(text: &str, dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    let mut rest = text;
+    while let Some(start) = rest.find('"') {
+        let rest2 = &rest[start + 1..];
+        let end = rest2.find('"').ok_or_else(|| anyhow!("bad manifest"))?;
+        let name = &rest2[..end];
+        let after = &rest2[end + 1..];
+        // Only treat it as a model entry if it is followed by ": {".
+        let trimmed = after.trim_start_matches([':', ' ', '\n']);
+        if !trimmed.starts_with('{') {
+            rest = after;
+            continue;
+        }
+        let body_end =
+            trimmed.find('}').ok_or_else(|| anyhow!("bad manifest"))?;
+        let body = &trimmed[..body_end];
+        if let Some(kind) = DnnKind::from_name(name) {
+            let shape = extract_array(body, "input_shape")?;
+            if shape.len() != 4 {
+                bail!("{name}: input_shape must be rank 4");
+            }
+            let output_len = extract_int(body, "output_len")? as usize;
+            let hlo = extract_string(body, "hlo")?;
+            specs.push(ArtifactSpec {
+                kind,
+                input_shape: [
+                    shape[0] as usize,
+                    shape[1] as usize,
+                    shape[2] as usize,
+                    shape[3] as usize,
+                ],
+                output_len,
+                hlo_path: dir.join(hlo),
+            });
+        }
+        rest = &trimmed[body_end..];
+    }
+    if specs.is_empty() {
+        bail!("manifest contained no known models");
+    }
+    specs.sort_by_key(|s| s.kind);
+    Ok(specs)
+}
+
+fn extract_field<'a>(body: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("\"{key}\"");
+    let at = body
+        .find(&pat)
+        .ok_or_else(|| anyhow!("manifest missing {key}"))?;
+    let after = &body[at + pat.len()..];
+    Ok(after.trim_start_matches([':', ' ']))
+}
+
+fn extract_int(body: &str, key: &str) -> Result<i64> {
+    let v = extract_field(body, key)?;
+    let digits: String =
+        v.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().context("bad int in manifest")
+}
+
+fn extract_array(body: &str, key: &str) -> Result<Vec<i64>> {
+    let v = extract_field(body, key)?;
+    let v = v.strip_prefix('[').ok_or_else(|| anyhow!("expected ["))?;
+    let end = v.find(']').ok_or_else(|| anyhow!("expected ]"))?;
+    v[..end]
+        .split(',')
+        .map(|s| s.trim().parse::<i64>().context("bad array item"))
+        .collect()
+}
+
+fn extract_string(body: &str, key: &str) -> Result<String> {
+    let v = extract_field(body, key)?;
+    let v = v.strip_prefix('"').ok_or_else(|| anyhow!("expected string"))?;
+    let end = v.find('"').ok_or_else(|| anyhow!("unterminated string"))?;
+    Ok(v[..end].to_string())
+}
+
+/// One compiled, executable model.
+pub struct LoadedModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Run inference on a flat NHWC f32 frame; returns the flat output.
+    pub fn infer(&self, frame: &[f32]) -> Result<Vec<f32>> {
+        let n: usize = self.spec.input_shape.iter().product();
+        if frame.len() != n {
+            bail!(
+                "{}: expected {n} input floats, got {}",
+                self.spec.kind.name(),
+                frame.len()
+            );
+        }
+        let dims: Vec<i64> =
+            self.spec.input_shape.iter().map(|&d| d as i64).collect();
+        let input = xla::Literal::vec1(frame).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != self.spec.output_len {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.kind.name(),
+                self.spec.output_len,
+                values.len()
+            );
+        }
+        Ok(values)
+    }
+}
+
+/// The model registry: a PJRT client plus every compiled artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: HashMap<DnnKind, LoadedModel>,
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let manifest = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let specs = parse_manifest(&manifest, dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut models = HashMap::new();
+        for spec in specs {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            models.insert(spec.kind, LoadedModel { spec, exe });
+        }
+        Ok(Runtime { client, models })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn model(&self, kind: DnnKind) -> Option<&LoadedModel> {
+        self.models.get(&kind)
+    }
+
+    pub fn kinds(&self) -> Vec<DnnKind> {
+        let mut v: Vec<DnnKind> = self.models.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    /// Synthesize a deterministic pseudo-frame for a model (the fleet
+    /// emulator's stand-in for a real camera frame): low-amplitude noise
+    /// plus a bright Gaussian blob whose position depends on the seed —
+    /// the "VIP in the field of view" that gives detector/pose outputs
+    /// something spatial to respond to.
+    pub fn synth_frame(&self, kind: DnnKind, seed: u64) -> Result<Vec<f32>> {
+        let spec = &self
+            .models
+            .get(&kind)
+            .ok_or_else(|| anyhow!("model not loaded"))?
+            .spec;
+        let [_, h, w, c] = spec.input_shape;
+        let mut rng = crate::rng::Rng::new(seed);
+        let cx = rng.range_f64(0.2, 0.8) * w as f64;
+        let cy = rng.range_f64(0.2, 0.8) * h as f64;
+        let sigma = 0.12 * w as f64;
+        // Perf (§Perf L3/runtime): one RNG draw and one exp() per pixel
+        // (not per channel), and the row term of the Gaussian hoisted out
+        // of the inner loop — synth_frame sits on the serving hot path.
+        let inv2s2 = 1.0 / (2.0 * sigma * sigma);
+        let mut out = Vec::with_capacity(h * w * c);
+        for y in 0..h {
+            let dy2 = (y as f64 - cy).powi(2);
+            for x in 0..w {
+                let d2 = ((x as f64 - cx).powi(2) + dy2) * inv2s2;
+                let blob = if d2 < 12.0 { (-d2).exp() } else { 0.0 };
+                let noise = 0.15 * rng.f64();
+                for ch in 0..c {
+                    // Channel-tinted blob (hazard-vest orange-ish) + noise.
+                    let tint = [1.0, 0.6, 0.15][ch % 3];
+                    out.push((noise + blob * tint) as f32);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+  "bp": {
+    "hlo": "bp.hlo.txt",
+    "hlo_bytes": 67445,
+    "input_shape": [1, 64, 64, 3],
+    "output_len": 36
+  },
+  "hv": {
+    "hlo": "hv.hlo.txt",
+    "hlo_bytes": 52084,
+    "input_shape": [1, 64, 64, 3],
+    "output_len": 5
+  }
+}"#;
+
+    #[test]
+    fn parse_manifest_extracts_specs() {
+        let specs =
+            parse_manifest(MANIFEST, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(specs.len(), 2);
+        let hv = specs.iter().find(|s| s.kind == DnnKind::Hv).unwrap();
+        assert_eq!(hv.input_shape, [1, 64, 64, 3]);
+        assert_eq!(hv.output_len, 5);
+        assert_eq!(hv.hlo_path, Path::new("/tmp/artifacts/hv.hlo.txt"));
+    }
+
+    #[test]
+    fn parse_manifest_rejects_garbage() {
+        assert!(parse_manifest("{}", Path::new("/tmp")).is_err());
+        assert!(parse_manifest("not json at all", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parse_manifest_ignores_unknown_models() {
+        let text = r#"{"zz": {"hlo": "zz.hlo.txt", "input_shape": [1,2,3,4],
+            "output_len": 9}, "hv": {"hlo": "hv.hlo.txt",
+            "input_shape": [1, 64, 64, 3], "output_len": 5}}"#;
+        let specs = parse_manifest(text, Path::new("/a")).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].kind, DnnKind::Hv);
+    }
+}

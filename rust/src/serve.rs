@@ -1,0 +1,405 @@
+//! Real-time serving path: the Fig. 4 architecture as actual threads, with
+//! *real* PJRT inference on the request path.
+//!
+//! Thread-for-thread mirror of the paper's Java platform: a splitter/task
+//! creation thread per drone stream, the task-scheduler + edge-executor
+//! lane (single-threaded, synchronous — §3.3), a cloud executor thread
+//! pool (FaaS latency simulated, inference executed locally on the same
+//! compiled artifacts), and a results collector that runs the VIP app's
+//! post-processing (PD offsets, pose classes, distances).
+//!
+//! Unlike [`crate::sim`] (virtual time, sampled durations — used for the
+//! paper-figure reproductions), this path measures *wall-clock* PJRT
+//! latencies of the L1/L2 artifacts, self-calibrates deadlines from them,
+//! and reports serving latency/throughput — the end-to-end proof that all
+//! three layers compose.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::percentile;
+use crate::model::{DnnKind, ModelProfile};
+use crate::nav::{bbox_offset, classify_pose};
+use crate::queues::{EdgeOrder, EdgeQueue};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::task::{Task, VideoSegment};
+use crate::time::{ms_f, Micros};
+
+/// Serving configuration.
+pub struct ServeConfig {
+    /// Segments per second per drone.
+    pub rate: f64,
+    pub drones: u32,
+    pub duration: Duration,
+    /// Cloud FaaS simulation: extra latency added on top of local
+    /// execution of the same artifact.
+    pub cloud_extra_ms: (f64, f64), // (median, sigma) lognormal
+    pub cloud_pool: usize,
+    /// Offload to the simulated cloud when the edge lane is infeasible.
+    pub use_cloud: bool,
+    /// Deadline as a multiple of the calibrated *whole-segment* p95 work
+    /// (Σ per-model p95) — every model must fit its deadline even behind a
+    /// full segment's worth of queued work, like the paper's Table-1
+    /// deadlines (~1.3–6× the segment's total edge time).
+    pub deadline_factor: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            rate: 2.0,
+            drones: 2,
+            duration: Duration::from_secs(10),
+            cloud_extra_ms: (40.0, 0.3),
+            cloud_pool: 4,
+            use_cloud: true,
+            deadline_factor: 1.5,
+            seed: 42,
+        }
+    }
+}
+
+/// Wall-clock measurements for one model.
+#[derive(Clone, Debug, Default)]
+pub struct ModelServeStats {
+    pub completed: u64,
+    pub missed: u64,
+    pub dropped: u64,
+    pub on_cloud: u64,
+    pub latency_ms: Vec<f64>,
+    /// Post-processing wall-clock (Fig. 17b analogue), microseconds.
+    pub postproc_us: Vec<f64>,
+}
+
+/// Full serving report.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub per_model: Vec<(DnnKind, ModelServeStats)>,
+    pub wall_secs: f64,
+    pub generated: u64,
+    /// Calibrated per-model p95 edge latencies (ms).
+    pub calibrated_ms: Vec<(DnnKind, f64)>,
+}
+
+impl ServeReport {
+    pub fn completed(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.completed).sum()
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.completed() as f64 / self.wall_secs
+    }
+
+    pub fn completion_rate(&self) -> f64 {
+        if self.generated == 0 {
+            0.0
+        } else {
+            self.completed() as f64 / self.generated as f64
+        }
+    }
+}
+
+struct Shared {
+    stats: Mutex<Vec<(DnnKind, ModelServeStats)>>,
+    stop: AtomicBool,
+    generated: AtomicU64,
+}
+
+/// Calibrate each loaded model: run it `n` times, return p95 wall ms.
+pub fn calibrate(rt: &Runtime, n: usize) -> Result<Vec<(DnnKind, f64)>> {
+    let mut out = Vec::new();
+    for kind in rt.kinds() {
+        let model = rt.model(kind).unwrap();
+        let frame = rt.synth_frame(kind, 7)?;
+        let mut lat = Vec::with_capacity(n);
+        // One warm-up run (first execution touches cold code paths).
+        let _ = model.infer(&frame)?;
+        for _ in 0..n {
+            let t0 = Instant::now();
+            let _ = model.infer(&frame)?;
+            lat.push(t0.elapsed().as_secs_f64() * 1_000.0);
+        }
+        out.push((kind, percentile(&lat, 0.95)));
+    }
+    Ok(out)
+}
+
+/// Run the serving loop; returns the wall-clock report.
+///
+/// Each executor thread loads its *own* PJRT runtime from `artifacts_dir`
+/// (the `xla` crate's client is thread-local, exactly like the paper's
+/// per-process gRPC inference service and per-Lambda model loads).
+pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
+    let dir: PathBuf = artifacts_dir.to_path_buf();
+    let rt = Runtime::load(&dir)?;
+    let kinds = rt.kinds();
+    let calibrated = calibrate(&rt, 20)?;
+    // Build live profiles: deadline = factor × Σp95, edge cost 1.
+    let segment_work_ms: f64 = calibrated.iter().map(|&(_, p)| p).sum();
+    let profiles: Vec<ModelProfile> = calibrated
+        .iter()
+        .map(|&(kind, p95)| ModelProfile {
+            kind,
+            benefit: 100.0,
+            deadline: ms_f(segment_work_ms * cfg.deadline_factor),
+            t_edge: ms_f(p95),
+            t_cloud: ms_f(p95 + 2.0 * cfg.cloud_extra_ms.0),
+            cost_edge: 1.0,
+            cost_cloud: 10.0,
+            qoe_benefit: 0.0,
+            qoe_rate: 0.0,
+            qoe_window: ms_f(20_000.0),
+        })
+        .collect();
+
+    let shared = Arc::new(Shared {
+        stats: Mutex::new(
+            kinds.iter().map(|&k| (k, ModelServeStats::default())).collect(),
+        ),
+        stop: AtomicBool::new(false),
+        generated: AtomicU64::new(0),
+    });
+
+    // All executor threads compile their own PJRT runtimes (seconds of
+    // startup); the serving clock starts only once everyone is ready.
+    let barrier = Arc::new(Barrier::new(cfg.cloud_pool + 3));
+    let epoch = Instant::now();
+    let now_us = move || -> Micros { epoch.elapsed().as_micros() as Micros };
+
+    // Cloud pool: FaaS latency simulated, inference executed locally.
+    let (cloud_tx, cloud_rx) = mpsc::channel::<(Task, Micros)>();
+    let cloud_rx = Arc::new(Mutex::new(cloud_rx));
+    let mut cloud_handles = Vec::new();
+    for w in 0..cfg.cloud_pool {
+        let rx = Arc::clone(&cloud_rx);
+        let dir2 = dir.clone();
+        let shared2 = Arc::clone(&shared);
+        let profiles2 = profiles.clone();
+        let (med, sigma) = cfg.cloud_extra_ms;
+        let seed = cfg.seed ^ (w as u64) << 32;
+        let epoch2 = epoch;
+        let barrier2 = Arc::clone(&barrier);
+        cloud_handles.push(std::thread::spawn(move || {
+            let rt2 = Runtime::load(&dir2).expect("cloud worker runtime");
+            barrier2.wait();
+            let mut rng = Rng::new(seed);
+            loop {
+                let job = { rx.lock().unwrap().recv() };
+                let Ok((task, abs_deadline)) = job else { break };
+                // JIT check before spending network+compute (§3.3); also
+                // fast-drains any backlog once the run is stopping.
+                let now = epoch2.elapsed().as_micros() as Micros;
+                let p = profiles2
+                    .iter()
+                    .find(|p| p.kind == task.model)
+                    .unwrap();
+                if now + p.t_cloud > abs_deadline
+                    || shared2.stop.load(Ordering::Relaxed)
+                {
+                    let mut stats = shared2.stats.lock().unwrap();
+                    stats
+                        .iter_mut()
+                        .find(|(k, _)| *k == task.model)
+                        .unwrap()
+                        .1
+                        .dropped += 1;
+                    continue;
+                }
+                // Simulated WAN + FaaS overhead, then real inference.
+                let extra = rng.lognormal(med, sigma);
+                std::thread::sleep(Duration::from_secs_f64(extra / 1_000.0));
+                let model = rt2.model(task.model).unwrap();
+                let frame =
+                    rt2.synth_frame(task.model, task.segment.id).unwrap();
+                let out = model.infer(&frame);
+                let done = epoch2.elapsed().as_micros() as Micros;
+                let lat_ms =
+                    (done - task.segment.created_at) as f64 / 1_000.0;
+                let mut stats = shared2.stats.lock().unwrap();
+                let entry = stats
+                    .iter_mut()
+                    .find(|(k, _)| *k == task.model)
+                    .unwrap();
+                entry.1.on_cloud += 1;
+                if out.is_ok() && done <= abs_deadline {
+                    entry.1.completed += 1;
+                    entry.1.latency_ms.push(lat_ms);
+                } else {
+                    entry.1.missed += 1;
+                }
+            }
+        }));
+    }
+
+    // Generator: splitter + task-creation threads folded into one.
+    let (task_tx, task_rx) = mpsc::channel::<Task>();
+    let gen_shared = Arc::clone(&shared);
+    let gen_kinds = kinds.clone();
+    let gen_cfg_rate = cfg.rate;
+    let gen_drones = cfg.drones;
+    let gen_seed = cfg.seed;
+    let gen_epoch = epoch;
+    let gen_barrier = Arc::clone(&barrier);
+    let generator = std::thread::spawn(move || {
+        gen_barrier.wait();
+        let mut rng = Rng::new(gen_seed ^ 0xD20_4E5);
+        let period = Duration::from_secs_f64(1.0 / gen_cfg_rate);
+        let mut next_id: u64 = 0;
+        let mut tick: u64 = 0;
+        while !gen_shared.stop.load(Ordering::Relaxed) {
+            for drone in 0..gen_drones {
+                let seg = VideoSegment {
+                    id: tick * gen_drones as u64 + drone as u64,
+                    drone,
+                    created_at: gen_epoch.elapsed().as_micros() as Micros,
+                    bytes: 38_000,
+                };
+                let mut order: Vec<DnnKind> = gen_kinds.clone();
+                rng.shuffle(&mut order);
+                for kind in order {
+                    next_id += 1;
+                    gen_shared.generated.fetch_add(1, Ordering::Relaxed);
+                    let _ = task_tx.send(Task {
+                        id: next_id,
+                        model: kind,
+                        segment: seg.clone(),
+                    });
+                }
+            }
+            tick += 1;
+            std::thread::sleep(period);
+        }
+    });
+
+    // Edge lane: task scheduler + synchronous single-threaded executor.
+    let edge_dir = dir.clone();
+    let edge_shared = Arc::clone(&shared);
+    let edge_profiles = profiles.clone();
+    let edge_use_cloud = cfg.use_cloud;
+    let edge_barrier = Arc::clone(&barrier);
+    let edge = std::thread::spawn(move || {
+        let edge_rt = Runtime::load(&edge_dir).expect("edge runtime");
+        edge_barrier.wait();
+        let mut queue = EdgeQueue::new(EdgeOrder::Edf);
+        loop {
+            // Drain arrivals (non-blocking once stopped).
+            loop {
+                match task_rx.try_recv() {
+                    Ok(task) => {
+                        let p = edge_profiles
+                            .iter()
+                            .find(|p| p.kind == task.model)
+                            .unwrap();
+                        let dl = task.absolute_deadline(p.deadline);
+                        if queue.feasible(dl, p.t_edge, p.hpf_priority(),
+                                          now_us()) {
+                            queue.insert(task, dl, p.t_edge,
+                                         p.hpf_priority());
+                        } else if edge_use_cloud {
+                            let _ = cloud_tx.send((task, dl));
+                        } else {
+                            let mut stats = edge_shared.stats.lock().unwrap();
+                            stats
+                                .iter_mut()
+                                .find(|(k, _)| *k == task.model)
+                                .unwrap()
+                                .1
+                                .dropped += 1;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => break,
+                }
+            }
+            let stopping = edge_shared.stop.load(Ordering::Relaxed);
+            match queue.pop() {
+                Some(entry) => {
+                    let t = now_us();
+                    // JIT check.
+                    if t + entry.t_edge > entry.abs_deadline {
+                        let mut stats = edge_shared.stats.lock().unwrap();
+                        stats
+                            .iter_mut()
+                            .find(|(k, _)| *k == entry.task.model)
+                            .unwrap()
+                            .1
+                            .dropped += 1;
+                        continue;
+                    }
+                    let model = edge_rt.model(entry.task.model).unwrap();
+                    let frame = edge_rt
+                        .synth_frame(entry.task.model, entry.task.segment.id)
+                        .unwrap();
+                    let out = model.infer(&frame);
+                    let done = now_us();
+                    // VIP-app post-processing on the real outputs.
+                    let pp0 = Instant::now();
+                    if let Ok(v) = &out {
+                        match entry.task.model {
+                            DnnKind::Hv => {
+                                let _ = bbox_offset(v);
+                            }
+                            DnnKind::Bp => {
+                                let _ = classify_pose(v);
+                            }
+                            DnnKind::Dev => {
+                                // DEV's artifact outputs the distance
+                                // directly; sanity-clamp it like the app.
+                                let _ = (v[0] as f64).clamp(0.0, 50.0);
+                            }
+                            _ => {}
+                        }
+                    }
+                    let pp_us = pp0.elapsed().as_secs_f64() * 1e6;
+                    let lat_ms =
+                        (done - entry.task.segment.created_at) as f64
+                            / 1_000.0;
+                    let mut stats = edge_shared.stats.lock().unwrap();
+                    let e = stats
+                        .iter_mut()
+                        .find(|(k, _)| *k == entry.task.model)
+                        .unwrap();
+                    if out.is_ok() && done <= entry.abs_deadline {
+                        e.1.completed += 1;
+                        e.1.latency_ms.push(lat_ms);
+                        e.1.postproc_us.push(pp_us);
+                    } else {
+                        e.1.missed += 1;
+                    }
+                }
+                None if stopping => break,
+                None => std::thread::sleep(Duration::from_micros(200)),
+            }
+        }
+        drop(cloud_tx); // close the cloud channel → workers exit
+    });
+
+    barrier.wait(); // all runtimes compiled — start the serving clock
+    let serve_start = Instant::now();
+    std::thread::sleep(cfg.duration);
+    shared.stop.store(true, Ordering::Relaxed);
+    generator.join().expect("generator thread");
+    edge.join().expect("edge thread");
+    for h in cloud_handles {
+        h.join().expect("cloud worker");
+    }
+
+    let generated = shared.generated.load(Ordering::Relaxed);
+    let stats = Arc::try_unwrap(shared)
+        .map_err(|_| anyhow::anyhow!("dangling shared refs"))?
+        .stats
+        .into_inner()
+        .unwrap();
+    Ok(ServeReport {
+        per_model: stats,
+        wall_secs: serve_start.elapsed().as_secs_f64(),
+        generated,
+        calibrated_ms: calibrated,
+    })
+}

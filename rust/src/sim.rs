@@ -1,0 +1,186 @@
+//! Discrete-event engine driving a [`Platform`](crate::platform::Platform)
+//! over virtual time.
+//!
+//! A 300 s × 4-drone × 6-model experiment (7 200 tasks) runs in a few
+//! milliseconds here, which is what makes the full Fig. 8–18 reproduction
+//! sweep tractable. The same platform state machine is also driven by the
+//! real-time serving loop in [`crate::serve`].
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::fleet::Workload;
+use crate::metrics::Metrics;
+use crate::platform::Platform;
+use crate::rng::Rng;
+use crate::task::{Task, VideoSegment};
+use crate::time::{secs, Micros};
+
+/// Platform events, ordered by virtual time.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A video segment tick for one drone (self-rescheduling).
+    Segment { drone: u32, tick: u64 },
+    /// The edge executor finished its current task.
+    EdgeDone,
+    /// A cloud-queue trigger time arrived.
+    CloudTrigger,
+    /// An in-flight FaaS invocation completed.
+    CloudDone { key: u64 },
+    /// A model's tumbling QoE window closed.
+    WindowClose { model_idx: usize },
+}
+
+struct Item {
+    at: Micros,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Item {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Item {}
+impl PartialOrd for Item {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Item {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Time-ordered event queue (min-heap, FIFO among equal timestamps).
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Item>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at: Micros, event: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse(Item { at, seq: self.seq, event }));
+    }
+
+    pub fn pop(&mut self) -> Option<(Micros, Event)> {
+        self.heap.pop().map(|Reverse(i)| (i.at, i.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// How long past the nominal duration in-flight work may settle before the
+/// run is hard-drained (matches the paper counting late completions of the
+/// last segments).
+const SETTLE: Micros = secs(5);
+
+/// Run one platform against a workload; returns the final metrics.
+pub fn run(mut platform: Platform, workload: &Workload, seed: u64) -> Metrics {
+    let mut q = EventQueue::new();
+    let mut rng = Rng::new(seed ^ 0x5EED_F1EE7);
+    let mut segment_id: u64 = 0;
+
+    // Stagger drone streams slightly so segment arrivals don't collide on
+    // identical microsecond ticks (real streams are never phase-locked).
+    for d in 0..workload.drones {
+        let phase = (d as Micros * 37_003) % workload.segment_period;
+        q.push(phase, Event::Segment { drone: d, tick: 0 });
+    }
+    platform.schedule_windows(&mut q);
+
+    let horizon = workload.duration + SETTLE;
+    while let Some((now, ev)) = q.pop() {
+        if now > horizon {
+            break;
+        }
+        match ev {
+            Event::Segment { drone, tick } => {
+                if now < workload.duration {
+                    segment_id += 1;
+                    emit_segment(&mut platform, workload, now, drone, tick,
+                                 segment_id, &mut rng, &mut q);
+                    q.push(now + workload.segment_period,
+                           Event::Segment { drone, tick: tick + 1 });
+                }
+            }
+            Event::EdgeDone => platform.on_edge_done(now, &mut q),
+            Event::CloudTrigger => platform.on_cloud_trigger(now, &mut q),
+            Event::CloudDone { key } => {
+                platform.on_cloud_done(now, key, &mut q)
+            }
+            Event::WindowClose { model_idx } => {
+                if now <= workload.duration {
+                    platform.on_window_close(now, model_idx, &mut q);
+                }
+            }
+        }
+    }
+    platform.drain(horizon, &mut q);
+    let mut metrics = platform.metrics;
+    metrics.duration = workload.duration;
+    metrics
+}
+
+/// Create the per-model tasks for one segment tick, in randomized order
+/// (§3.3), and submit them to the platform's task scheduler.
+#[allow(clippy::too_many_arguments)]
+fn emit_segment(platform: &mut Platform, workload: &Workload, now: Micros,
+                drone: u32, tick: u64, segment_id: u64, rng: &mut Rng,
+                q: &mut EventQueue) {
+    let segment = VideoSegment {
+        id: segment_id,
+        drone,
+        created_at: now,
+        bytes: workload.segment_bytes,
+    };
+    let mut due: Vec<usize> = (0..platform.models.len())
+        .filter(|&i| {
+            let every = workload.model_every.get(i).copied().unwrap_or(1);
+            tick % every as u64 == 0
+        })
+        .collect();
+    rng.shuffle(&mut due);
+    for i in due {
+        let model = platform.models[i].kind;
+        let id = platform.fresh_task_id();
+        let task = Task { id, model, segment: segment.clone() };
+        platform.submit_task(now, task, q);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_queue_orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.push(200, Event::EdgeDone);
+        q.push(100, Event::CloudTrigger);
+        q.push(100, Event::EdgeDone);
+        let (t1, e1) = q.pop().unwrap();
+        assert_eq!(t1, 100);
+        assert!(matches!(e1, Event::CloudTrigger)); // pushed first at t=100
+        let (t2, e2) = q.pop().unwrap();
+        assert_eq!(t2, 100);
+        assert!(matches!(e2, Event::EdgeDone));
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t3, 200);
+        assert!(q.pop().is_none());
+    }
+}

@@ -1,0 +1,141 @@
+//! Tasks and video segments — the scheduler's unit of work (§3.3, §4).
+
+use crate::model::{DnnKind, Resource};
+use crate::time::Micros;
+
+/// Globally unique task id within one platform run.
+pub type TaskId = u64;
+
+/// A fixed-duration video segment received from one drone (§3.3). Only the
+/// metadata travels through the scheduler; the frame tensor lives in the
+/// video repository (or is synthesized on demand by the fleet emulator).
+#[derive(Clone, Debug)]
+pub struct VideoSegment {
+    pub id: u64,
+    pub drone: u32,
+    /// Timestamp t′ⱼ at which the segment was created at the base station.
+    pub created_at: Micros,
+    /// Encoded size (the paper's 1 s segments are ≈ 38 kB) — drives the
+    /// cloud transfer time under the network model.
+    pub bytes: u64,
+}
+
+/// One DNN inferencing task τᵢʲ = (model μᵢ, segment vⱼ).
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: TaskId,
+    pub model: DnnKind,
+    pub segment: VideoSegment,
+}
+
+impl Task {
+    /// Absolute deadline: t′ⱼ + δᵢ.
+    #[inline]
+    pub fn absolute_deadline(&self, deadline: Micros) -> Micros {
+        self.segment.created_at + deadline
+    }
+}
+
+/// Terminal state of a task (drives Eqn 1 accounting and the QoE monitor).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fate {
+    /// Executed and completed within its deadline.
+    Completed(Resource),
+    /// Executed but the output was stale (deadline expired) — still billed.
+    Missed(Resource),
+    /// Dropped without execution (zero utility).
+    Dropped(DropReason),
+}
+
+/// Why a task was dropped (observability; the paper's schedulers drop at
+/// several distinct points).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// Rejected at admission: infeasible on both edge and cloud.
+    Infeasible,
+    /// Negative expected utility on the cloud and no edge slot.
+    NegativeCloudUtility,
+    /// Just-in-time check failed at the executor.
+    JitExpired,
+    /// Deferred negative-utility task hit its trigger time un-stolen.
+    TriggerExpired,
+    /// GEMS/migration decided to shed it.
+    Shed,
+    /// Cloud request abandoned at the HTTP client timeout (§8.3's network
+    /// timeouts); no usable output, utility 0.
+    Timeout,
+}
+
+/// Completion record appended to the results queue.
+#[derive(Clone, Debug)]
+pub struct TaskOutcome {
+    pub task_id: TaskId,
+    pub model: DnnKind,
+    pub drone: u32,
+    pub fate: Fate,
+    /// When the fate was decided (completion or drop time).
+    pub at: Micros,
+    /// Segment creation time t′ⱼ (so end-to-end latency = at − created_at).
+    pub created_at: Micros,
+    /// Actual execution duration (t̄ᵢʲ or t̂ᵢʲ), zero for drops.
+    pub exec_duration: Micros,
+    /// QoS utility accrued by this task (Eqn 1).
+    pub utility: f64,
+    /// True if the task reached the executor via a GEMS reschedule.
+    pub gems_rescheduled: bool,
+    /// True if the task was stolen from the cloud queue by the edge.
+    pub stolen: bool,
+}
+
+impl TaskOutcome {
+    /// Did the task complete within its deadline?
+    #[inline]
+    pub fn success(&self) -> bool {
+        matches!(self.fate, Fate::Completed(_))
+    }
+
+    /// Was it executed (successfully or not) on the given resource?
+    pub fn ran_on(&self, r: Resource) -> bool {
+        matches!(self.fate, Fate::Completed(x) | Fate::Missed(x) if x == r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::ms;
+
+    fn seg(created: Micros) -> VideoSegment {
+        VideoSegment { id: 1, drone: 0, created_at: created, bytes: 38_000 }
+    }
+
+    #[test]
+    fn absolute_deadline_offsets_from_creation() {
+        let t = Task { id: 1, model: DnnKind::Hv, segment: seg(ms(100)) };
+        assert_eq!(t.absolute_deadline(ms(650)), ms(750));
+    }
+
+    #[test]
+    fn outcome_predicates() {
+        let mut o = TaskOutcome {
+            task_id: 1,
+            model: DnnKind::Hv,
+            drone: 0,
+            fate: Fate::Completed(Resource::Edge),
+            at: 0,
+            created_at: 0,
+            exec_duration: 0,
+            utility: 124.0,
+            gems_rescheduled: false,
+            stolen: false,
+        };
+        assert!(o.success());
+        assert!(o.ran_on(Resource::Edge));
+        assert!(!o.ran_on(Resource::Cloud));
+        o.fate = Fate::Missed(Resource::Cloud);
+        assert!(!o.success());
+        assert!(o.ran_on(Resource::Cloud));
+        o.fate = Fate::Dropped(DropReason::Infeasible);
+        assert!(!o.ran_on(Resource::Edge) && !o.ran_on(Resource::Cloud));
+    }
+}

@@ -1,0 +1,57 @@
+//! Simulation time: microsecond ticks on a virtual clock.
+//!
+//! All platform logic is written against `Micros` so the same scheduler code
+//! runs under the discrete-event engine (a 300 s × 4-drone experiment in
+//! well under a second) and under the real-time serving path (which maps
+//! `Instant` deltas onto the same axis).
+
+/// Absolute virtual time or a duration, in microseconds.
+pub type Micros = u64;
+
+/// Signed duration in microseconds (slack can be negative).
+pub type MicrosDelta = i64;
+
+/// Milliseconds → microseconds.
+#[inline]
+pub const fn ms(v: u64) -> Micros {
+    v * 1_000
+}
+
+/// Seconds → microseconds.
+#[inline]
+pub const fn secs(v: u64) -> Micros {
+    v * 1_000_000
+}
+
+/// Fractional milliseconds → microseconds (rounded).
+#[inline]
+pub fn ms_f(v: f64) -> Micros {
+    (v * 1_000.0).round().max(0.0) as Micros
+}
+
+/// Microseconds → fractional milliseconds.
+#[inline]
+pub fn to_ms(v: Micros) -> f64 {
+    v as f64 / 1_000.0
+}
+
+/// Microseconds → fractional seconds.
+#[inline]
+pub fn to_secs(v: Micros) -> f64 {
+    v as f64 / 1_000_000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        assert_eq!(ms(650), 650_000);
+        assert_eq!(secs(300), 300_000_000);
+        assert_eq!(ms_f(0.5), 500);
+        assert_eq!(ms_f(-1.0), 0); // clamped
+        assert!((to_ms(ms(123)) - 123.0).abs() < 1e-9);
+        assert!((to_secs(secs(7)) - 7.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,299 @@
+//! Integration tests asserting the paper's qualitative claims hold on the
+//! reproduced system (DESIGN.md §5 — "expected reproduction shape").
+//!
+//! These run full 300 s simulated experiments, so they exercise admission,
+//! migration, stealing, adaptation, the QoE monitor, both executors and
+//! the network models together.
+
+use ocularone::exec::CloudExecModel;
+use ocularone::fleet::Workload;
+use ocularone::model::{DnnKind, GemsWorkload, Resource};
+use ocularone::net::{mobility_trace, LognormalWan, TraceBandwidth,
+                     TrapeziumLatency};
+use ocularone::platform::Platform;
+use ocularone::policy::Policy;
+use ocularone::time::secs;
+use ocularone::{sim, simulate};
+
+fn run(policy: Policy, wl: &Workload, seed: u64)
+       -> ocularone::metrics::Metrics {
+    simulate(policy, wl, seed)
+}
+
+#[test]
+fn task_accounting_closes() {
+    // Every generated task ends in exactly one bucket.
+    for policy in Policy::fig8_lineup() {
+        let wl = Workload::emulation(3, true);
+        let m = run(policy.clone(), &wl, 11);
+        for (kind, s) in &m.per_model {
+            assert_eq!(
+                s.generated,
+                s.executed() + s.dropped(),
+                "{:?} accounting leak under {}",
+                kind,
+                policy.kind.name()
+            );
+        }
+        assert_eq!(m.generated(), wl.total_tasks());
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_metrics() {
+    let wl = Workload::emulation(3, true);
+    let a = run(Policy::dems(), &wl, 99);
+    let b = run(Policy::dems(), &wl, 99);
+    assert_eq!(a.completed(), b.completed());
+    assert_eq!(a.qos_utility(), b.qos_utility());
+    assert_eq!(a.stolen(), b.stolen());
+}
+
+#[test]
+fn cld_drops_all_bp_tasks() {
+    // §8.3: BP has negative cloud utility, so CLD never executes it.
+    let wl = Workload::emulation(3, false);
+    let m = run(Policy::cloud_only(), &wl, 3);
+    let bp = m.stats(DnnKind::Bp);
+    assert_eq!(bp.completed(), 0);
+    assert_eq!(bp.dropped_negative, bp.generated);
+    // ⇒ passive CLD completion caps at ~75%.
+    assert!(m.completion_rate() < 0.78, "{}", m.completion_rate());
+    assert!(m.completion_rate() > 0.60, "{}", m.completion_rate());
+}
+
+#[test]
+fn edge_only_completion_collapses_with_load() {
+    // §8.3: EDF ≈ 85% at 2D-P degrading steeply to ≈ 31–39% at 4D-A.
+    let light = run(Policy::edge_edf(), &Workload::emulation(2, false), 5);
+    let heavy = run(Policy::edge_edf(), &Workload::emulation(4, true), 5);
+    assert!(light.completion_rate() > 0.80, "{}", light.completion_rate());
+    assert!(heavy.completion_rate() < 0.45, "{}", heavy.completion_rate());
+}
+
+#[test]
+fn edge_only_utility_grows_with_workload() {
+    // §8.3: EDF's utility trends upward as the workload intensifies.
+    let u2 = run(Policy::edge_edf(), &Workload::emulation(2, false), 5)
+        .qos_utility();
+    let u4 = run(Policy::edge_edf(), &Workload::emulation(4, false), 5)
+        .qos_utility();
+    assert!(u4 > u2, "u2={u2} u4={u4}");
+}
+
+#[test]
+fn dems_beats_baselines_on_utility_at_stress() {
+    // §8.3: at 4D-A DEMS has the best utility (and >5% over E+C, >20% over
+    // the SOTA baselines in our calibration).
+    let wl = Workload::emulation(4, true);
+    let dems = run(Policy::dems(), &wl, 21).qos_utility();
+    for p in Policy::fig8_lineup() {
+        if p.kind.name() == "DEMS" {
+            continue;
+        }
+        let name = p.kind.name();
+        let u = run(p, &wl, 21).qos_utility();
+        assert!(
+            dems > u,
+            "DEMS {dems:.0} should beat {name} {u:.0} at 4D-A"
+        );
+    }
+}
+
+#[test]
+fn dems_completion_band() {
+    // §8.4: DEMS completes 77–88% at stress workloads and more when light.
+    let heavy = run(Policy::dems(), &Workload::emulation(4, true), 31);
+    assert!(
+        heavy.completion_rate() > 0.75 && heavy.completion_rate() < 0.97,
+        "{}",
+        heavy.completion_rate()
+    );
+    let light = run(Policy::dems(), &Workload::emulation(2, false), 31);
+    assert!(light.completion_rate() > heavy.completion_rate());
+}
+
+#[test]
+fn dem_sends_more_tasks_to_cloud_than_ec() {
+    // §8.4: "cloud-processed tasks increase markedly for DEM over E+C".
+    let wl = Workload::emulation(3, true);
+    let ec = run(Policy::edf_ec(), &wl, 17);
+    let dem = run(Policy::dem(), &wl, 17);
+    assert!(
+        dem.completed_on(Resource::Cloud) as f64
+            > 1.2 * ec.completed_on(Resource::Cloud) as f64,
+        "dem {} vs ec {}",
+        dem.completed_on(Resource::Cloud),
+        ec.completed_on(Resource::Cloud)
+    );
+}
+
+#[test]
+fn stealing_targets_bp_and_raises_edge_utilization() {
+    // §8.4: stolen tasks are (nearly) all BP on passive workloads, and
+    // DEMS's edge utilization exceeds DEM's.
+    let wl = Workload::emulation(4, false);
+    let dem = run(Policy::dem(), &wl, 23);
+    let dems = run(Policy::dems(), &wl, 23);
+    assert!(dems.stolen() > 100, "stolen {}", dems.stolen());
+    let bp_share = dems.stats(DnnKind::Bp).stolen as f64
+        / dems.stolen() as f64;
+    assert!(bp_share > 0.9, "BP share of steals {bp_share}");
+    assert!(dems.edge_utilization() > dem.edge_utilization());
+    assert_eq!(dem.stolen(), 0);
+}
+
+fn latency_shaped() -> CloudExecModel {
+    CloudExecModel::new(Box::new(TrapeziumLatency::paper_default(
+        LognormalWan::default(),
+    )))
+}
+
+fn bandwidth_shaped() -> CloudExecModel {
+    CloudExecModel::new(Box::new(TraceBandwidth {
+        base: LognormalWan::default(),
+        samples: mobility_trace(3, 300),
+        period: secs(1),
+    }))
+}
+
+#[test]
+fn dems_a_beats_dems_under_latency_variability() {
+    // §8.5: DEMS-A improves utility by ~15–27% with similar completions.
+    let wl = Workload::emulation(4, false);
+    let mut totals = (0.0, 0.0);
+    for seed in [1u64, 2, 3] {
+        let d = sim::run(
+            Platform::new(Policy::dems(), wl.models.clone(),
+                          latency_shaped(), seed),
+            &wl,
+            seed,
+        );
+        let a = sim::run(
+            Platform::new(Policy::dems_a(), wl.models.clone(),
+                          latency_shaped(), seed),
+            &wl,
+            seed,
+        );
+        totals.0 += d.qos_utility();
+        totals.1 += a.qos_utility();
+    }
+    assert!(
+        totals.1 > totals.0 * 1.05,
+        "DEMS-A {:.0} vs DEMS {:.0}",
+        totals.1,
+        totals.0
+    );
+}
+
+#[test]
+fn dems_a_beats_dems_under_bandwidth_variability() {
+    let wl = Workload::emulation(4, false);
+    let mut totals = (0.0, 0.0);
+    for seed in [4u64, 5, 6] {
+        let d = sim::run(
+            Platform::new(Policy::dems(), wl.models.clone(),
+                          bandwidth_shaped(), seed),
+            &wl,
+            seed,
+        );
+        let a = sim::run(
+            Platform::new(Policy::dems_a(), wl.models.clone(),
+                          bandwidth_shaped(), seed),
+            &wl,
+            seed,
+        );
+        totals.0 += d.qos_utility();
+        totals.1 += a.qos_utility();
+    }
+    assert!(
+        totals.1 > totals.0,
+        "DEMS-A {:.0} vs DEMS {:.0}",
+        totals.1,
+        totals.0
+    );
+}
+
+#[test]
+fn weak_scaling_holds_per_edge() {
+    // §8.6: per-edge completion stays ≈ constant from 7 to 28 edges.
+    let wl = Workload::emulation(3, false);
+    let rates: Vec<f64> = (0..2)
+        .map(|h| {
+            let edges = 7 * (h + 1) * 2 - 7 * (h + 1); // 7 then 14 per pass
+            let _ = edges;
+            let n = 7 * (1 + h * 3); // 7 and 28
+            let mut done = 0u64;
+            let mut gen = 0u64;
+            for e in 0..n {
+                let m = run(Policy::dems(), &wl, 1000 + e as u64);
+                done += m.completed();
+                gen += m.generated();
+            }
+            done as f64 / gen as f64
+        })
+        .collect();
+    let drift = (rates[0] - rates[1]).abs();
+    assert!(drift < 0.03, "per-edge completion drift {drift}");
+}
+
+#[test]
+fn gems_improves_qoe_over_dems() {
+    // §8.7: GEMS gains QoE utility on WL1/WL2 for α ∈ {0.9, 1.0} and its
+    // total utility is at least DEMS-comparable.
+    for wlk in [GemsWorkload::Wl1, GemsWorkload::Wl2] {
+        for alpha in [0.9, 1.0] {
+            let wl = Workload::gems(wlk, alpha);
+            let dems = run(Policy::dems(), &wl, 51);
+            let gems = run(Policy::gems(false), &wl, 51);
+            if alpha < 1.0 {
+                // §8.7: +24–75% QoE utility at α = 0.9.
+                assert!(
+                    gems.qoe_utility() > dems.qoe_utility() * 1.1,
+                    "{:?} α={alpha}: GEMS QoE {} vs DEMS {}",
+                    wlk,
+                    gems.qoe_utility(),
+                    dems.qoe_utility()
+                );
+            } else {
+                // α = 1.0 is near-unachievable per window (a single missed
+                // task voids it); the paper likewise reports GEMS "does not
+                // accrue the full QoE utility due to the strict 1.0 rate".
+                // QoE may tie near zero — total utility must not regress by
+                // more than one window's benefit.
+                assert!(
+                    gems.qoe_utility() + 1500.0 >= dems.qoe_utility(),
+                    "{:?}: GEMS QoE {} vs DEMS {}",
+                    wlk,
+                    gems.qoe_utility(),
+                    dems.qoe_utility()
+                );
+                assert!(gems.gems_rescheduled() > 0);
+            }
+            assert!(
+                gems.total_utility() >= dems.total_utility() * 0.97,
+                "{:?} α={alpha}: total {} vs {}",
+                wlk,
+                gems.total_utility(),
+                dems.total_utility()
+            );
+            assert!(
+                gems.completed() >= dems.completed(),
+                "{:?} α={alpha}: GEMS completes at least as many",
+                wlk
+            );
+        }
+    }
+}
+
+#[test]
+fn gems_rescheduled_tasks_complete_on_cloud() {
+    let wl = Workload::gems(GemsWorkload::Wl1, 1.0);
+    let gems = run(Policy::gems(false), &wl, 53);
+    assert!(
+        gems.gems_rescheduled() > 0,
+        "GEMS should reschedule under α=1.0"
+    );
+    // Rescheduled tasks are cloud completions by construction.
+    assert!(gems.completed_on(Resource::Cloud) >= gems.gems_rescheduled());
+}

@@ -1,0 +1,100 @@
+//! Integration tests for the PJRT runtime against the real artifacts.
+//! Skipped (with a message) when `make artifacts` has not been run.
+
+use ocularone::model::DnnKind;
+use ocularone::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn loads_all_six_models() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.kinds(), DnnKind::ALL.to_vec());
+    assert_eq!(rt.platform_name(), "cpu");
+}
+
+#[test]
+fn inference_respects_output_contracts() {
+    let Some(rt) = runtime() else { return };
+    let expect = [
+        (DnnKind::Hv, 5),
+        (DnnKind::Dev, 1),
+        (DnnKind::Md, 384),
+        (DnnKind::Bp, 36),
+        (DnnKind::Cd, 145),
+        (DnnKind::Deo, 576),
+    ];
+    for (kind, len) in expect {
+        let frame = rt.synth_frame(kind, 1).unwrap();
+        let out = rt.model(kind).unwrap().infer(&frame).unwrap();
+        assert_eq!(out.len(), len, "{kind:?} output length");
+        assert!(out.iter().all(|v| v.is_finite()), "{kind:?} finite");
+    }
+}
+
+#[test]
+fn inference_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let frame = rt.synth_frame(DnnKind::Hv, 9).unwrap();
+    let a = rt.model(DnnKind::Hv).unwrap().infer(&frame).unwrap();
+    let b = rt.model(DnnKind::Hv).unwrap().infer(&frame).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn inference_is_input_sensitive() {
+    let Some(rt) = runtime() else { return };
+    let f1 = rt.synth_frame(DnnKind::Bp, 1).unwrap();
+    let f2 = rt.synth_frame(DnnKind::Bp, 2).unwrap();
+    let a = rt.model(DnnKind::Bp).unwrap().infer(&f1).unwrap();
+    let b = rt.model(DnnKind::Bp).unwrap().infer(&f2).unwrap();
+    assert_ne!(a, b);
+}
+
+#[test]
+fn model_contract_violations_error() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.model(DnnKind::Hv).unwrap();
+    assert!(model.infer(&[0.0; 7]).is_err(), "wrong input length");
+}
+
+#[test]
+fn outputs_satisfy_app_semantics() {
+    // Same invariants the Python tests assert — but through the whole
+    // AOT + PJRT + Rust path, proving the layers agree.
+    let Some(rt) = runtime() else { return };
+    let hv = rt
+        .model(DnnKind::Hv)
+        .unwrap()
+        .infer(&rt.synth_frame(DnnKind::Hv, 3).unwrap())
+        .unwrap();
+    assert!(hv.iter().all(|&v| (0.0..=1.0).contains(&v)), "HV in [0,1]");
+    let dev = rt
+        .model(DnnKind::Dev)
+        .unwrap()
+        .infer(&rt.synth_frame(DnnKind::Dev, 3).unwrap())
+        .unwrap();
+    assert!(dev[0] > 0.0 && dev[0] < 50.0, "DEV plausible metres");
+    let cd = rt
+        .model(DnnKind::Cd)
+        .unwrap()
+        .infer(&rt.synth_frame(DnnKind::Cd, 3).unwrap())
+        .unwrap();
+    let sum: f32 = cd[1..].iter().sum();
+    assert!((cd[0] - sum).abs() < 1e-2 * sum.abs().max(1.0),
+            "CD count equals density sum");
+    let deo = rt
+        .model(DnnKind::Deo)
+        .unwrap()
+        .infer(&rt.synth_frame(DnnKind::Deo, 3).unwrap())
+        .unwrap();
+    assert!(deo.iter().all(|&v| v > 0.0), "DEO positive depths");
+}
