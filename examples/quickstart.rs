@@ -12,7 +12,7 @@ use ocularone::policy::Policy;
 use ocularone::runtime::Runtime;
 use ocularone::simulate;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ocularone::errors::Result<()> {
     // 1. Simulated study: 3 drones, Active mix (= the paper's 3D-A), DEMS.
     let wl = Workload::emulation(3, true);
     println!("workload {} ({} tasks over {} s)", wl.name, wl.total_tasks(),

@@ -16,7 +16,7 @@ use ocularone::metrics::percentile;
 use ocularone::serve::{calibrate, serve, ServeConfig};
 use ocularone::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ocularone::errors::Result<()> {
     let dir = Path::new("artifacts");
     let rt = Runtime::load(dir)?;
     println!("PJRT platform: {}", rt.platform_name());

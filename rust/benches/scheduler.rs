@@ -1,7 +1,9 @@
 //! Scheduler hot-path microbenchmarks: the per-task decision cost of each
-//! policy, queue operations, and the DES engine throughput. These are the
-//! L3 §Perf numbers in EXPERIMENTS.md (target: decision ≪ 1 µs — far off
-//! the request path's millisecond budgets).
+//! policy, queue operations, the DES engine throughput, and the dispatch
+//! cost of the pluggable-scheduler API (flag-branch static dispatch vs
+//! `Box<dyn Scheduler>`). These are the L3 §Perf numbers in EXPERIMENTS.md
+//! (target: decision ≪ 1 µs — far off the request path's millisecond
+//! budgets).
 
 use ocularone::benchutil::{bench, black_box};
 use ocularone::exec::CloudExecModel;
@@ -12,6 +14,7 @@ use ocularone::platform::Platform;
 use ocularone::policy::Policy;
 use ocularone::queues::{EdgeOrder, EdgeQueue};
 use ocularone::rng::Rng;
+use ocularone::sched::{FlagBranchScheduler, Scheduler};
 use ocularone::sim::EventQueue;
 use ocularone::task::{Task, VideoSegment};
 use ocularone::time::ms;
@@ -29,6 +32,39 @@ fn mktask(id: u64, model: DnnKind, at: u64) -> Task {
         model,
         segment: VideoSegment { id, drone: 0, created_at: at, bytes: 38_000 },
     }
+}
+
+/// Steady-state submit stream against a live platform (≈24 tasks/s, the
+/// 4D-A arrival rate), draining events so queues don't grow unboundedly.
+/// Generic over the scheduler so it measures both dispatch modes.
+fn bench_submit_stream<S: Scheduler>(name: &str, mut platform: Platform<S>) {
+    let mut q = EventQueue::new();
+    let mut now = 0u64;
+    let mut id = 0u64;
+    let kinds = DnnKind::ALL;
+    bench(name, 300, move || {
+        id += 1;
+        now += 41_000; // ≈24 tasks/s
+        let task = mktask(id, kinds[(id % 6) as usize], now);
+        platform.submit_task(now, task, &mut q);
+        while let Some((t, ev)) = q.pop() {
+            match ev {
+                ocularone::sim::Event::EdgeDone => {
+                    platform.on_edge_done(t, &mut q)
+                }
+                ocularone::sim::Event::CloudTrigger => {
+                    platform.on_cloud_trigger(t, &mut q)
+                }
+                ocularone::sim::Event::CloudDone { key } => {
+                    platform.on_cloud_done(t, key, &mut q)
+                }
+                _ => {}
+            }
+            if q.len() > 256 {
+                break;
+            }
+        }
+    });
 }
 
 fn main() {
@@ -60,7 +96,7 @@ fn main() {
     }
 
     // Per-task admission decision for each policy, steady-state 4D-A-like
-    // arrival stream against a live platform.
+    // arrival stream against a live platform (Box<dyn Scheduler> path).
     for policy in [
         Policy::edf_ec(),
         Policy::dem(),
@@ -71,35 +107,51 @@ fn main() {
         Policy::sota2(),
     ] {
         let name = format!("submit_task [{}]", policy.kind.name());
-        let mut platform = Platform::new(policy, table1(), cloud(), 42);
-        let mut q = EventQueue::new();
-        let mut now = 0u64;
-        let mut id = 0u64;
-        let kinds = DnnKind::ALL;
-        bench(&name, 300, || {
-            id += 1;
-            now += 41_000; // ≈24 tasks/s
-            let task = mktask(id, kinds[(id % 6) as usize], now);
-            platform.submit_task(now, task, &mut q);
-            // Drain events so queues don't grow unboundedly.
-            while let Some((t, ev)) = q.pop() {
-                match ev {
-                    ocularone::sim::Event::EdgeDone => {
-                        platform.on_edge_done(t, &mut q)
-                    }
-                    ocularone::sim::Event::CloudTrigger => {
-                        platform.on_cloud_trigger(t, &mut q)
-                    }
-                    ocularone::sim::Event::CloudDone { key } => {
-                        platform.on_cloud_done(t, key, &mut q)
-                    }
-                    _ => {}
-                }
-                if q.len() > 256 {
-                    break;
-                }
-            }
-        });
+        let platform = Platform::new(policy, table1(), cloud(), 42);
+        bench_submit_stream(&name, platform);
+    }
+
+    // Dispatch-overhead comparison on the hot submit/steal path: the same
+    // DEMS decisions routed through a static flag-branch match vs the
+    // boxed trait object. The redesign must not regress this path.
+    {
+        let dems = Policy::dems();
+        let flat = Platform::with_scheduler(
+            FlagBranchScheduler::new(),
+            dems.clone(),
+            table1(),
+            cloud(),
+            42,
+        );
+        bench_submit_stream("submit_task [DEMS, flag-branch dispatch]",
+                            flat);
+        let boxed = Platform::new(dems, table1(), cloud(), 42);
+        bench_submit_stream("submit_task [DEMS, Box<dyn Scheduler>]",
+                            boxed);
+    }
+
+    // Same comparison over a full 300 s 3D-A run (DES engine included).
+    {
+        let wl = Workload::emulation(3, true);
+        let wl2 = wl.clone();
+        bench("full 300s 3D-A sim [DEMS, flag-branch dispatch]", 2000,
+              move || {
+                  let p = Platform::with_scheduler(
+                      FlagBranchScheduler::new(),
+                      Policy::dems(),
+                      wl2.models.clone(),
+                      cloud(),
+                      7,
+                  );
+                  black_box(ocularone::sim::run(p, &wl2, 7));
+              });
+        let wl3 = wl.clone();
+        bench("full 300s 3D-A sim [DEMS, Box<dyn Scheduler>]", 2000,
+              move || {
+                  let p = Platform::new(Policy::dems(), wl3.models.clone(),
+                                        cloud(), 7);
+                  black_box(ocularone::sim::run(p, &wl3, 7));
+              });
     }
 
     // Full-workload simulated seconds per wall second (the DES engine).

@@ -1,0 +1,336 @@
+//! Multi-edge cluster orchestration (§8.1): N platforms, a drone→edge
+//! router and ONE discrete-event engine.
+//!
+//! The paper's emulation runs 7 edge base stations per host with 2–4 buddy
+//! drones each. Pre-refactor the harness faked this by looping independent
+//! single-edge simulations; a [`Cluster`] instead drives every platform
+//! from a single [`EventQueue`] whose entries carry an edge scope
+//! ([`EventQueue::set_scope`]), so cross-edge mechanisms added later
+//! (fleet-level work stealing, shared-uplink contention, drone handover)
+//! have a place to live.
+//!
+//! Determinism contract: per-edge event order equals the order the same
+//! platform would see in an isolated run — events of different edges are
+//! independent and the queue tie-breaks equal timestamps by push order,
+//! which is preserved per edge. `tests/paper_shape.rs` pins this with a
+//! bit-identical cluster-vs-solo comparison, which is also why the ported
+//! `exp::run_edges` reproduces the paper figures unchanged.
+
+use crate::exec::CloudExecModel;
+use crate::fleet::Workload;
+use crate::metrics::Metrics;
+use crate::platform::Platform;
+use crate::policy::Policy;
+use crate::rng::Rng;
+use crate::sched::Scheduler;
+use crate::sim::{Event, EventQueue, SETTLE};
+use crate::task::{Task, VideoSegment};
+use crate::time::Micros;
+
+/// XOR-multiplier used to derive per-edge seeds in emulation runs (the
+/// same derivation the pre-cluster harness used, kept for reproducibility
+/// of the recorded figures).
+pub const EDGE_SEED_PHI: u64 = 0x9E37_79B9;
+
+/// XOR applied to an edge's platform seed to derive its arrival-stream RNG.
+pub const ARRIVAL_SEED_XOR: u64 = 0x5EED_F1EE7;
+
+/// Maps fleet drones onto edge base stations: drone `g` reports to edge
+/// `g / drones_per_edge` (the §8.1 setup assigns each VIP's buddy drones
+/// to their personal edge).
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    pub drones_per_edge: u32,
+}
+
+impl Router {
+    /// Edge index serving a (global) drone id.
+    pub fn edge_of(&self, drone: u32) -> usize {
+        (drone / self.drones_per_edge.max(1)) as usize
+    }
+
+    /// Global drone id of edge-local drone `local` on edge `edge`.
+    pub fn global_id(&self, edge: usize, local: u32) -> u32 {
+        edge as u32 * self.drones_per_edge + local
+    }
+}
+
+/// Aggregated results of one cluster run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterMetrics {
+    pub per_edge: Vec<Metrics>,
+}
+
+impl ClusterMetrics {
+    pub fn edges(&self) -> usize {
+        self.per_edge.len()
+    }
+
+    pub fn generated(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.generated()).sum()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.completed()).sum()
+    }
+
+    pub fn completion_rate(&self) -> f64 {
+        let g = self.generated();
+        if g == 0 {
+            0.0
+        } else {
+            self.completed() as f64 / g as f64
+        }
+    }
+
+    pub fn total_qos_utility(&self) -> f64 {
+        self.per_edge.iter().map(|m| m.qos_utility()).sum()
+    }
+
+    pub fn total_utility(&self) -> f64 {
+        self.per_edge.iter().map(|m| m.total_utility()).sum()
+    }
+
+    /// Median-by-QoS-utility edge (the paper reports "a median edge base
+    /// station").
+    pub fn median_edge(&self) -> &Metrics {
+        let mut idx: Vec<usize> = (0..self.per_edge.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.per_edge[a]
+                .qos_utility()
+                .partial_cmp(&self.per_edge[b].qos_utility())
+                .unwrap()
+        });
+        &self.per_edge[idx[idx.len() / 2]]
+    }
+
+    /// (min, max) QoS utility across the edges.
+    pub fn minmax_utility(&self) -> (f64, f64) {
+        let us: Vec<f64> =
+            self.per_edge.iter().map(|m| m.qos_utility()).collect();
+        (
+            us.iter().cloned().fold(f64::INFINITY, f64::min),
+            us.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        )
+    }
+}
+
+/// N edge platforms + drone router + per-edge arrival streams, driven by
+/// one event engine.
+pub struct Cluster<S: Scheduler = Box<dyn Scheduler>> {
+    edges: Vec<Platform<S>>,
+    workload: Workload,
+    router: Router,
+    /// Per-edge arrival-stream RNG (segment fan-out order, §3.3).
+    arrivals: Vec<Rng>,
+    /// Per-edge segment-id counters.
+    segment_ids: Vec<u64>,
+}
+
+impl Cluster<Box<dyn Scheduler>> {
+    /// §8.1 emulation cluster: `n_edges` stations running the same policy
+    /// and per-edge workload, with the canonical per-edge seed derivation
+    /// `seed ^ ((e+1)·EDGE_SEED_PHI)`.
+    pub fn emulation(policy: &Policy, wl: &Workload, seed: u64,
+                     n_edges: usize,
+                     make_cloud: &dyn Fn() -> CloudExecModel) -> Self {
+        let mut platforms = Vec::with_capacity(n_edges);
+        let mut arrival_seeds = Vec::with_capacity(n_edges);
+        for e in 0..n_edges {
+            let s = seed ^ ((e as u64 + 1) * EDGE_SEED_PHI);
+            let mut p = Platform::new(policy.clone(), wl.models.clone(),
+                                      make_cloud(), s);
+            p.edge_exec = wl.edge_exec.clone();
+            platforms.push(p);
+            arrival_seeds.push(s ^ ARRIVAL_SEED_XOR);
+        }
+        Cluster::from_parts(platforms, wl.clone(), arrival_seeds)
+    }
+
+    /// Single-edge cluster seeded directly with `seed` (the `simulate`
+    /// path; bit-identical to the pre-cluster single-edge engine).
+    pub fn single(policy: &Policy, wl: &Workload, seed: u64,
+                  cloud: CloudExecModel) -> Self {
+        let mut p =
+            Platform::new(policy.clone(), wl.models.clone(), cloud, seed);
+        p.edge_exec = wl.edge_exec.clone();
+        Cluster::from_parts(vec![p], wl.clone(),
+                            vec![seed ^ ARRIVAL_SEED_XOR])
+    }
+}
+
+impl<S: Scheduler> Cluster<S> {
+    /// Assemble a cluster from pre-built platforms. `arrival_seeds[e]`
+    /// seeds edge `e`'s segment fan-out RNG.
+    pub fn from_parts(edges: Vec<Platform<S>>, workload: Workload,
+                      arrival_seeds: Vec<u64>) -> Self {
+        assert_eq!(edges.len(), arrival_seeds.len(),
+                   "one arrival seed per edge");
+        let n = edges.len();
+        let router = Router { drones_per_edge: workload.drones };
+        Cluster {
+            edges,
+            workload,
+            router,
+            arrivals: arrival_seeds.into_iter().map(Rng::new).collect(),
+            segment_ids: vec![0; n],
+        }
+    }
+
+    pub fn router(&self) -> Router {
+        self.router
+    }
+
+    /// Run the whole cluster to completion; returns per-edge metrics.
+    pub fn run(mut self) -> ClusterMetrics {
+        let wl = self.workload.clone();
+        let n = self.edges.len();
+        let mut q = EventQueue::new();
+
+        // Seed every edge's drone streams (staggered phases so segment
+        // arrivals don't collide on identical microsecond ticks — real
+        // streams are never phase-locked) and QoE windows.
+        let router = self.router;
+        for (e, edge) in self.edges.iter_mut().enumerate() {
+            q.set_scope(e as u32);
+            for d in 0..wl.drones {
+                let phase =
+                    (d as Micros * 37_003) % wl.segment_period;
+                q.push(phase, Event::Segment {
+                    drone: router.global_id(e, d),
+                    tick: 0,
+                });
+            }
+            edge.schedule_windows(&mut q);
+        }
+
+        let horizon = wl.duration + SETTLE;
+        while let Some((now, scope, ev)) = q.pop_scoped() {
+            if now > horizon {
+                break;
+            }
+            let e = scope as usize;
+            q.set_scope(scope);
+            match ev {
+                Event::Segment { drone, tick } => {
+                    if now < wl.duration {
+                        self.segment_ids[e] += 1;
+                        let sid = self.segment_ids[e];
+                        emit_segment(&mut self.edges[e], &wl, now, drone,
+                                     tick, sid, &mut self.arrivals[e],
+                                     &mut q);
+                        q.push(now + wl.segment_period,
+                               Event::Segment { drone, tick: tick + 1 });
+                    }
+                }
+                Event::EdgeDone => self.edges[e].on_edge_done(now, &mut q),
+                Event::CloudTrigger => {
+                    self.edges[e].on_cloud_trigger(now, &mut q)
+                }
+                Event::CloudDone { key } => {
+                    self.edges[e].on_cloud_done(now, key, &mut q)
+                }
+                Event::WindowClose { model_idx } => {
+                    if now <= wl.duration {
+                        self.edges[e].on_window_close(now, model_idx,
+                                                      &mut q);
+                    }
+                }
+            }
+        }
+
+        let mut per_edge = Vec::with_capacity(n);
+        for (e, mut p) in self.edges.into_iter().enumerate() {
+            q.set_scope(e as u32);
+            p.drain(horizon, &mut q);
+            let mut m = p.into_metrics();
+            m.duration = wl.duration;
+            per_edge.push(m);
+        }
+        ClusterMetrics { per_edge }
+    }
+}
+
+/// Create the per-model tasks for one segment tick, in randomized order
+/// (§3.3), and submit them to the platform's task scheduler.
+#[allow(clippy::too_many_arguments)]
+fn emit_segment<S: Scheduler>(platform: &mut Platform<S>, wl: &Workload,
+                              now: Micros, drone: u32, tick: u64,
+                              segment_id: u64, rng: &mut Rng,
+                              q: &mut EventQueue) {
+    let segment = VideoSegment {
+        id: segment_id,
+        drone,
+        created_at: now,
+        bytes: wl.segment_bytes,
+    };
+    let mut due: Vec<usize> = (0..platform.models.len())
+        .filter(|&i| {
+            let every = wl.model_every.get(i).copied().unwrap_or(1);
+            tick % every as u64 == 0
+        })
+        .collect();
+    rng.shuffle(&mut due);
+    for i in due {
+        let model = platform.models[i].kind;
+        let id = platform.fresh_task_id();
+        let task = Task { id, model, segment: segment.clone() };
+        platform.submit_task(now, task, q);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LognormalWan;
+
+    fn wan() -> CloudExecModel {
+        CloudExecModel::new(Box::new(LognormalWan::default()))
+    }
+
+    #[test]
+    fn router_partitions_drones() {
+        let r = Router { drones_per_edge: 3 };
+        assert_eq!(r.edge_of(0), 0);
+        assert_eq!(r.edge_of(2), 0);
+        assert_eq!(r.edge_of(3), 1);
+        assert_eq!(r.global_id(2, 1), 7);
+        assert_eq!(r.edge_of(r.global_id(5, 2)), 5);
+    }
+
+    #[test]
+    fn cluster_accounts_for_all_edges() {
+        let wl = Workload::emulation(2, false);
+        let policy = Policy::dems();
+        let cm = Cluster::emulation(&policy, &wl, 9, 3, &wan).run();
+        assert_eq!(cm.edges(), 3);
+        assert_eq!(cm.generated(), 3 * wl.total_tasks());
+        for m in &cm.per_edge {
+            let closed: u64 = m
+                .per_model
+                .iter()
+                .map(|(_, s)| s.executed() + s.dropped())
+                .sum();
+            assert_eq!(m.generated(), closed, "per-edge accounting closes");
+        }
+        assert!(cm.completion_rate() > 0.5);
+    }
+
+    #[test]
+    fn median_and_minmax_are_consistent() {
+        let wl = Workload::emulation(2, false);
+        let cm = Cluster::emulation(&Policy::dems(), &wl, 11, 5, &wan).run();
+        let (lo, hi) = cm.minmax_utility();
+        let med = cm.median_edge().qos_utility();
+        assert!(lo <= med && med <= hi);
+        assert!(cm.total_qos_utility() >= hi);
+    }
+
+    #[test]
+    fn cluster_is_deterministic() {
+        let wl = Workload::emulation(2, true);
+        let a = Cluster::emulation(&Policy::dems(), &wl, 4, 2, &wan).run();
+        let b = Cluster::emulation(&Policy::dems(), &wl, 4, 2, &wan).run();
+        assert_eq!(a, b);
+    }
+}

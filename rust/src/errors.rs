@@ -1,0 +1,124 @@
+//! Minimal string-backed error type for the offline, dependency-free build.
+//!
+//! The crate used to pull in `anyhow` for the CLI / runtime plumbing; the
+//! default build must compile with no registry access at all, so this module
+//! provides the small slice of the `anyhow` API the codebase actually uses:
+//! [`Error`], [`Result`], the [`bail!`](crate::bail) / [`err!`](crate::err)
+//! macros and the [`Context`] extension trait.
+
+use std::fmt;
+
+/// A boxed-free, message-only error. Like `anyhow::Error` it deliberately
+/// does *not* implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<()>` prints the Debug form on exit; keep it
+        // human-readable.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result type (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!`-style constructor: `err!("bad manifest {name}")`.
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::errors::Error::msg(format!($($t)*))
+    };
+}
+
+/// Early-return with a formatted error: `bail!("unknown policy {other}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::err!($($t)*))
+    };
+}
+
+/// Attach context to fallible values, `anyhow::Context`-style.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse()?; // std error -> Error via blanket From
+        if v == 0 {
+            bail!("zero is not allowed");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        assert_eq!(parse("0").unwrap_err().to_string(), "zero is not allowed");
+    }
+
+    #[test]
+    fn context_wraps_messages() {
+        let r: std::result::Result<u32, std::num::ParseIntError> =
+            "x".parse();
+        let e = r.context("bad int").unwrap_err();
+        assert!(e.to_string().starts_with("bad int: "));
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn err_macro_formats() {
+        let e = err!("model {} not found", "hv");
+        assert_eq!(e.to_string(), "model hv not found");
+    }
+}

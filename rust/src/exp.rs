@@ -5,8 +5,9 @@
 //! EXPERIMENTS.md records a paper-vs-measured comparison of each run.
 //! Invoke via `ocularone experiment <id>` or `run_experiment`.
 
-use anyhow::{bail, Result};
-
+use crate::bail;
+use crate::cluster::Cluster;
+use crate::errors::Result;
 use crate::exec::CloudExecModel;
 use crate::fleet::Workload;
 use crate::metrics::{percentile, Metrics};
@@ -62,21 +63,16 @@ fn default_cloud() -> CloudExecModel {
     CloudExecModel::new(Box::new(LognormalWan::default()))
 }
 
-/// Run one workload × policy on `n_edges` independent edges (distinct
-/// seeds), as the paper does with 7 edge containers per host. Returns all
-/// per-edge metrics.
+/// Run one workload × policy on an `n_edges`-station [`Cluster`] (distinct
+/// per-edge seeds), as the paper does with 7 edge containers per host.
+/// Returns all per-edge metrics. One event engine drives every edge; the
+/// per-edge results are bit-identical to the pre-cluster independent runs
+/// (pinned by `tests/paper_shape.rs`), so the recorded figures stand.
 fn run_edges(policy: &Policy, wl: &Workload, seed: u64, n_edges: usize,
              make_cloud: &dyn Fn() -> CloudExecModel) -> Vec<Metrics> {
-    (0..n_edges)
-        .map(|e| {
-            let s = seed ^ ((e as u64 + 1) * 0x9E37_79B9);
-            let mut platform =
-                Platform::new(policy.clone(), wl.models.clone(),
-                              make_cloud(), s);
-            platform.edge_exec = wl.edge_exec.clone();
-            sim::run(platform, wl, s)
-        })
-        .collect()
+    Cluster::emulation(policy, wl, seed, n_edges, make_cloud)
+        .run()
+        .per_edge
 }
 
 /// Median-by-utility edge (the paper reports "a median edge base station").

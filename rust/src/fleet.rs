@@ -50,6 +50,12 @@ impl Workload {
         n * self.drones as u64
     }
 
+    /// Total tasks generated across an `edges`-station cluster running
+    /// this per-edge workload (§8.1: 7 stations per host).
+    pub fn cluster_total_tasks(&self, edges: usize) -> u64 {
+        self.total_tasks() * edges as u64
+    }
+
     /// The §8.3 emulation workloads: `drones` ∈ {2,3,4}, passive/active,
     /// 300 s runs (e.g. "3D-A" = 3 drones, Active = 5 400 tasks).
     pub fn emulation(drones: u32, active: bool) -> Workload {
@@ -140,6 +146,14 @@ mod tests {
         assert_eq!(Workload::emulation(3, true).total_tasks(), 5_400);
         assert_eq!(Workload::emulation(4, false).total_tasks(), 4_800);
         assert_eq!(Workload::emulation(4, true).total_tasks(), 7_200);
+    }
+
+    #[test]
+    fn cluster_totals_scale_with_edges() {
+        // §8.1: 7 stations × 3D-P = 7 × 3 600 tasks per host.
+        let wl = Workload::emulation(3, false);
+        assert_eq!(wl.cluster_total_tasks(1), wl.total_tasks());
+        assert_eq!(wl.cluster_total_tasks(7), 7 * 3_600);
     }
 
     #[test]

@@ -13,14 +13,44 @@
 //! * **Layer 1 (`python/compile/kernels/`)** — the Pallas fused-GEMM kernel
 //!   every model funnels through.
 //!
-//! Python never runs on the request path: [`runtime`] loads the artifacts
-//! through the PJRT C API (`xla` crate) and serves inferences natively.
+//! ## Architecture: mechanism vs. policy vs. orchestration
 //!
-//! Start with [`policy::Policy`] + [`fleet::Workload`] + [`sim::run`] for
-//! simulated studies, or [`serve`] for the real-inference serving loop.
+//! Since the scheduler-API redesign the crate is split into three layers
+//! (see `docs/ARCHITECTURE.md` for the full tour and how to add a new
+//! heuristic):
+//!
+//! * [`platform`] — *mechanism only*: one edge base station's queues,
+//!   executors, cloud pool, metrics and QoE window accounting
+//!   ([`platform::Core`]), paired with a scheduler in a
+//!   [`platform::Platform`].
+//! * [`sched`] — *policy*: the [`sched::Scheduler`] trait with explicit
+//!   decision hooks (`admit`/`place`, `on_edge_idle` stealing,
+//!   `on_cloud_report` adaptation, `on_task_done`/`on_window_close` QoE),
+//!   implemented per heuristic family — [`sched::baselines`],
+//!   [`sched::dems`], [`sched::gems`], [`sched::sota`]. A declarative
+//!   [`policy::Policy`] resolves to a boxed scheduler via
+//!   [`policy::Policy::build`].
+//! * [`cluster`] — *orchestration*: N platforms plus a drone→edge
+//!   [`cluster::Router`] driven by ONE scope-tagged
+//!   [`sim::EventQueue`], with aggregated [`cluster::ClusterMetrics`] —
+//!   the §8.1 multi-edge emulation as a first-class API
+//!   (`ocularone simulate --edges 7`).
+//!
+//! Python never runs on the request path: with the `pjrt` feature the
+//! `runtime` module loads the artifacts through the PJRT C API and `serve`
+//! drives real inferences through the same `Scheduler` decisions. The
+//! default build is offline and dependency-free ([`errors`] replaces
+//! `anyhow`; the XLA-backed modules are feature-gated).
+//!
+//! Start with [`policy::Policy`] + [`fleet::Workload`] + [`simulate`] for
+//! single-edge studies, [`simulate_cluster`] (or [`cluster::Cluster`]
+//! directly) for fleet-scale ones, and `serve` for the real-inference
+//! serving loop.
 
 pub mod adapt;
 pub mod benchutil;
+pub mod cluster;
+pub mod errors;
 pub mod exec;
 pub mod exp;
 pub mod fleet;
@@ -33,20 +63,45 @@ pub mod policy;
 pub mod qoe;
 pub mod queues;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod sched;
+#[cfg(feature = "pjrt")]
 pub mod serve;
 pub mod sim;
 pub mod task;
 pub mod time;
 
-/// Convenience: run one simulated experiment with the default WAN model.
+use crate::cluster::{Cluster, ClusterMetrics};
+
+fn default_wan_cloud() -> exec::CloudExecModel {
+    exec::CloudExecModel::new(Box::new(net::LognormalWan::default()))
+}
+
+/// Convenience: run one simulated single-edge experiment with the default
+/// WAN model (a one-edge [`Cluster`] under the hood).
 pub fn simulate(policy: policy::Policy, workload: &fleet::Workload,
                 seed: u64) -> metrics::Metrics {
-    let cloud = exec::CloudExecModel::new(Box::new(
-        net::LognormalWan::default(),
-    ));
-    let mut platform =
-        platform::Platform::new(policy, workload.models.clone(), cloud, seed);
-    platform.edge_exec = workload.edge_exec.clone();
-    sim::run(platform, workload, seed)
+    let cluster =
+        Cluster::single(&policy, workload, seed, default_wan_cloud());
+    let mut cm = cluster.run();
+    cm.per_edge.pop().expect("one edge")
+}
+
+/// Convenience: run the §8.1 multi-edge emulation — `edges` base stations,
+/// each serving `workload.drones` drones — through one cluster event
+/// engine with the default WAN model.
+///
+/// With `edges == 1` the seed is used directly (same results as
+/// [`simulate`]); otherwise per-edge seeds follow the canonical
+/// `seed ^ ((e+1)·φ)` derivation ([`cluster::EDGE_SEED_PHI`]).
+pub fn simulate_cluster(policy: policy::Policy, workload: &fleet::Workload,
+                        seed: u64, edges: usize) -> ClusterMetrics {
+    if edges <= 1 {
+        Cluster::single(&policy, workload, seed, default_wan_cloud()).run()
+    } else {
+        Cluster::emulation(&policy, workload, seed, edges,
+                           &default_wan_cloud)
+            .run()
+    }
 }

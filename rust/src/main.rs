@@ -3,23 +3,20 @@
 //! Subcommands (hand-rolled parser; no clap in the offline build):
 //!
 //! * `experiment <id>` — regenerate a paper table/figure (DESIGN.md §4).
-//! * `serve` — real-time serving on the compiled PJRT artifacts.
-//! * `bench-models` — calibrate per-model PJRT latencies.
+//! * `simulate` — one workload × policy simulation; `--edges N` runs the
+//!   §8.1 multi-edge emulation through the `Cluster` engine.
+//! * `serve` — real-time serving on the compiled PJRT artifacts, through
+//!   any scheduler (`--policy`); requires the `pjrt` feature.
+//! * `bench-models` — calibrate per-model PJRT latencies (`pjrt` feature).
 //! * `navigate` — run the VIP navigation simulation with one scheduler.
-//! * `simulate` — one workload × policy simulation with a summary.
 
-use std::time::Duration;
-
-use anyhow::{bail, Result};
-
+use ocularone::bail;
+use ocularone::errors::Result;
 use ocularone::exp::{self, summarize};
 use ocularone::fleet::Workload;
 use ocularone::model::orin_field;
 use ocularone::nav;
 use ocularone::policy::Policy;
-use ocularone::runtime::Runtime;
-use ocularone::serve::{self, ServeConfig};
-use ocularone::simulate;
 
 const USAGE: &str = "\
 ocularone — adaptive edge+cloud scheduling for UAV DNN inferencing
@@ -27,9 +24,12 @@ ocularone — adaptive edge+cloud scheduling for UAV DNN inferencing
 USAGE:
   ocularone experiment <id> [--seed N]     t1|fig1|fig2|fig8|fig10|fig11|
                                            fig13|fig14|fig17|fig18|all
-  ocularone simulate [--workload 3D-A] [--policy dems] [--seed N]
-  ocularone serve [--rate R] [--drones D] [--secs S] [--artifacts DIR]
-  ocularone bench-models [--artifacts DIR]
+  ocularone simulate [--workload 3D-A] [--policy dems] [--edges N]
+                     [--seed N]            N>1 emulates N edge stations
+                                           through one Cluster engine (§8.1)
+  ocularone serve [--policy ec] [--rate R] [--drones D] [--secs S]
+                  [--artifacts DIR]        (requires the pjrt feature)
+  ocularone bench-models [--artifacts DIR] (requires the pjrt feature)
   ocularone navigate [--policy gems] [--fps 30] [--seed N]
 ";
 
@@ -71,6 +71,189 @@ fn parse_workload(name: &str) -> Result<Workload> {
     Ok(Workload::emulation(d, a))
 }
 
+fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
+    let wl = parse_workload(
+        &flag(args, "--workload").unwrap_or_else(|| "3D-A".into()),
+    )?;
+    let policy = parse_policy(
+        &flag(args, "--policy").unwrap_or_else(|| "dems".into()),
+    )?;
+    let edges: usize = flag(args, "--edges")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
+    if edges == 0 {
+        bail!("--edges must be at least 1");
+    }
+    let name = policy.kind.name().to_string();
+    if edges == 1 {
+        let m = ocularone::simulate(policy, &wl, seed);
+        println!("{} on {}: {}", name, wl.name, summarize(&m));
+        return Ok(());
+    }
+    let cm = ocularone::simulate_cluster(policy, &wl, seed, edges);
+    println!(
+        "{} on {} x {} edges ({} drones, {} tasks):",
+        name,
+        wl.name,
+        edges,
+        edges as u32 * wl.drones,
+        wl.cluster_total_tasks(edges),
+    );
+    for (e, m) in cm.per_edge.iter().enumerate() {
+        println!("  edge {e}: {}", summarize(m));
+    }
+    let (lo, hi) = cm.minmax_utility();
+    println!(
+        "  cluster: done {}/{} ({:.1}%), median-edge QoS {:.0}, \
+         QoS {:.0}..{:.0}, total util {:.0}",
+        cm.completed(),
+        cm.generated(),
+        100.0 * cm.completion_rate(),
+        cm.median_edge().qos_utility(),
+        lo,
+        hi,
+        cm.total_utility(),
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_serve(args: &[String], seed: u64) -> Result<()> {
+    use ocularone::runtime::Runtime;
+    use ocularone::serve::{self, ServeConfig};
+    use std::time::Duration;
+
+    let dir = flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let cfg = ServeConfig {
+        policy: parse_policy(
+            &flag(args, "--policy").unwrap_or_else(|| "ec".into()),
+        )?,
+        rate: flag(args, "--rate")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(2.0),
+        drones: flag(args, "--drones")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(2),
+        duration: Duration::from_secs(
+            flag(args, "--secs")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(10),
+        ),
+        seed,
+        ..Default::default()
+    };
+    let probe = Runtime::load(&dir)?;
+    println!(
+        "loaded {} models on {} (policy {})",
+        probe.kinds().len(),
+        probe.platform_name(),
+        cfg.policy.kind.name(),
+    );
+    drop(probe);
+    let report = serve::serve(std::path::Path::new(&dir), &cfg)?;
+    println!(
+        "served {:.1} inferences/s over {:.1}s; completion {:.1}%",
+        report.throughput(),
+        report.wall_secs,
+        100.0 * report.completion_rate()
+    );
+    for (kind, s) in &report.per_model {
+        println!(
+            "  {:4} done={} missed={} dropped={} cloud={} \
+             p50={:.2}ms p95={:.2}ms",
+            kind.name(),
+            s.completed,
+            s.missed,
+            s.dropped,
+            s.on_cloud,
+            ocularone::metrics::percentile(&s.latency_ms, 0.5),
+            ocularone::metrics::percentile(&s.latency_ms, 0.95),
+        );
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &[String], _seed: u64) -> Result<()> {
+    bail!(
+        "`serve` needs the PJRT runtime; rebuild with `--features pjrt` \
+         (see docs/ARCHITECTURE.md)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_bench_models(args: &[String]) -> Result<()> {
+    use ocularone::runtime::Runtime;
+    use ocularone::serve;
+
+    let dir = flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::load(&dir)?;
+    println!("PJRT platform: {}", rt.platform_name());
+    for (kind, p95) in serve::calibrate(&rt, 50)? {
+        println!("  {:4}: p95 {:.3} ms", kind.name(), p95);
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_bench_models(_args: &[String]) -> Result<()> {
+    bail!(
+        "`bench-models` needs the PJRT runtime; rebuild with \
+         `--features pjrt` (see docs/ARCHITECTURE.md)"
+    )
+}
+
+fn cmd_navigate(args: &[String], seed: u64) -> Result<()> {
+    let policy = parse_policy(
+        &flag(args, "--policy").unwrap_or_else(|| "gems".into()),
+    )?;
+    let fps: u32 = flag(args, "--fps")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(30);
+    let wl = Workload::field(fps, orin_field());
+    let name = policy.kind.name().to_string();
+    let mut platform = ocularone::platform::Platform::new(
+        policy,
+        wl.models.clone(),
+        ocularone::exec::CloudExecModel::new(Box::new(
+            ocularone::net::LognormalWan::default(),
+        )),
+        seed,
+    );
+    platform.edge_exec = wl.edge_exec.clone();
+    platform.metrics.record_completions = true;
+    let m = ocularone::sim::run(platform, &wl, seed);
+    let events: Vec<nav::TrackingEvent> = m
+        .completions
+        .iter()
+        .filter(|c| c.model == ocularone::model::DnnKind::Hv)
+        .map(|c| nav::TrackingEvent {
+            at: c.at,
+            success: c.success && c.latency <= ocularone::exp::FRESH,
+        })
+        .collect();
+    let r = nav::fly(&events, m.duration, seed);
+    println!("{name} @ {fps} FPS: {}", summarize(&m));
+    if r.dnf {
+        println!("  DNF (failsafe landing at {:.0}s)", r.dnf_at_s);
+    } else {
+        let (ym, ymed, y95) = r.yaw_stats();
+        println!("  yaw err: mean {ym:.1}° median {ymed:.1}° p95 {y95:.1}°");
+        for (ax, label) in
+            ["front-back", "left-right", "up-down"].iter().enumerate()
+        {
+            let (_, med, p95) = r.jerk_stats(ax);
+            println!("  jerk {label}: median {med:.2} p95 {p95:.2} m/s³");
+        }
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let seed: u64 = flag(&args, "--seed")
@@ -82,126 +265,10 @@ fn main() -> Result<()> {
             let id = args.get(1).map(|s| s.as_str()).unwrap_or("all");
             exp::run_experiment(id, seed)
         }
-        Some("simulate") => {
-            let wl = parse_workload(
-                &flag(&args, "--workload").unwrap_or_else(|| "3D-A".into()),
-            )?;
-            let policy = parse_policy(
-                &flag(&args, "--policy").unwrap_or_else(|| "dems".into()),
-            )?;
-            let name = policy.kind.name().to_string();
-            let m = simulate(policy, &wl, seed);
-            println!("{} on {}: {}", name, wl.name, summarize(&m));
-            Ok(())
-        }
-        Some("serve") => {
-            let dir = flag(&args, "--artifacts")
-                .unwrap_or_else(|| "artifacts".into());
-            let cfg = ServeConfig {
-                rate: flag(&args, "--rate")
-                    .map(|s| s.parse())
-                    .transpose()?
-                    .unwrap_or(2.0),
-                drones: flag(&args, "--drones")
-                    .map(|s| s.parse())
-                    .transpose()?
-                    .unwrap_or(2),
-                duration: Duration::from_secs(
-                    flag(&args, "--secs")
-                        .map(|s| s.parse())
-                        .transpose()?
-                        .unwrap_or(10),
-                ),
-                seed,
-                ..Default::default()
-            };
-            let probe = Runtime::load(&dir)?;
-            println!("loaded {} models on {}", probe.kinds().len(),
-                     probe.platform_name());
-            drop(probe);
-            let report = serve::serve(std::path::Path::new(&dir), &cfg)?;
-            println!(
-                "served {:.1} inferences/s over {:.1}s; completion {:.1}%",
-                report.throughput(),
-                report.wall_secs,
-                100.0 * report.completion_rate()
-            );
-            for (kind, s) in &report.per_model {
-                println!(
-                    "  {:4} done={} missed={} dropped={} cloud={} \
-                     p50={:.2}ms p95={:.2}ms",
-                    kind.name(),
-                    s.completed,
-                    s.missed,
-                    s.dropped,
-                    s.on_cloud,
-                    ocularone::metrics::percentile(&s.latency_ms, 0.5),
-                    ocularone::metrics::percentile(&s.latency_ms, 0.95),
-                );
-            }
-            Ok(())
-        }
-        Some("bench-models") => {
-            let dir = flag(&args, "--artifacts")
-                .unwrap_or_else(|| "artifacts".into());
-            let rt = Runtime::load(&dir)?;
-            println!("PJRT platform: {}", rt.platform_name());
-            for (kind, p95) in serve::calibrate(&rt, 50)? {
-                println!("  {:4}: p95 {:.3} ms", kind.name(), p95);
-            }
-            Ok(())
-        }
-        Some("navigate") => {
-            let policy = parse_policy(
-                &flag(&args, "--policy").unwrap_or_else(|| "gems".into()),
-            )?;
-            let fps: u32 = flag(&args, "--fps")
-                .map(|s| s.parse())
-                .transpose()?
-                .unwrap_or(30);
-            let wl = Workload::field(fps, orin_field());
-            let name = policy.kind.name().to_string();
-            let mut platform = ocularone::platform::Platform::new(
-                policy,
-                wl.models.clone(),
-                ocularone::exec::CloudExecModel::new(Box::new(
-                    ocularone::net::LognormalWan::default(),
-                )),
-                seed,
-            );
-            platform.edge_exec = wl.edge_exec.clone();
-            platform.metrics.record_completions = true;
-            let m = ocularone::sim::run(platform, &wl, seed);
-            let events: Vec<nav::TrackingEvent> = m
-                .completions
-                .iter()
-                .filter(|c| c.model == ocularone::model::DnnKind::Hv)
-                .map(|c| nav::TrackingEvent {
-                    at: c.at,
-                    success: c.success
-                        && c.latency <= ocularone::exp::FRESH,
-                })
-                .collect();
-            let r = nav::fly(&events, m.duration, seed);
-            println!("{name} @ {fps} FPS: {}", summarize(&m));
-            if r.dnf {
-                println!("  DNF (failsafe landing at {:.0}s)", r.dnf_at_s);
-            } else {
-                let (ym, ymed, y95) = r.yaw_stats();
-                println!(
-                    "  yaw err: mean {ym:.1}° median {ymed:.1}° p95 {y95:.1}°"
-                );
-                for (ax, label) in
-                    ["front-back", "left-right", "up-down"].iter().enumerate()
-                {
-                    let (_, med, p95) = r.jerk_stats(ax);
-                    println!(
-                        "  jerk {label}: median {med:.2} p95 {p95:.2} m/s³"
-                    );
-                }
-            }
-            Ok(())
-        }
+        Some("simulate") => cmd_simulate(&args, seed),
+        Some("serve") => cmd_serve(&args, seed),
+        Some("bench-models") => cmd_bench_models(&args),
+        Some("navigate") => cmd_navigate(&args, seed),
         _ => {
             print!("{USAGE}");
             Ok(())

@@ -5,7 +5,7 @@ use crate::task::{DropReason, Fate, TaskOutcome};
 use crate::time::{to_ms, Micros};
 
 /// Counters for one DNN model within a run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ModelStats {
     pub generated: u64,
     pub completed_edge: u64,
@@ -53,7 +53,7 @@ impl ModelStats {
 }
 
 /// A point on the Fig.-12 style timeline: one cloud (or edge) execution.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TimelinePoint {
     pub at: Micros,
     pub model: DnnKind,
@@ -64,7 +64,7 @@ pub struct TimelinePoint {
 
 /// One finalized task event, for per-window drilldowns (Fig. 15) and the
 /// navigation coupling (Fig. 17/18).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CompletionRecord {
     pub at: Micros,
     pub model: DnnKind,
@@ -74,7 +74,10 @@ pub struct CompletionRecord {
 }
 
 /// Full metrics for one platform run.
-#[derive(Clone, Debug, Default)]
+///
+/// Derives `PartialEq` so determinism and dispatch-parity tests can assert
+/// *bit-identical* runs (every counter, utility sum and record).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Metrics {
     pub per_model: Vec<(DnnKind, ModelStats)>,
     /// Optional per-execution timeline (enabled for the Fig. 12 harness).

@@ -1,84 +1,100 @@
-//! The Ocularone scheduling platform (Fig. 4): one edge base station with
-//! its task queues, the edge executor, the cloud FaaS path, and the DEMS /
-//! DEMS-A / GEMS decision logic plus all baselines of §8.2.
+//! The Ocularone platform substrate (Fig. 4): one edge base station with
+//! its task queues, the edge executor, the cloud FaaS path and the metrics
+//! plumbing — *mechanism only*.
 //!
-//! The platform is a deterministic state machine over virtual time: the
-//! discrete-event engine ([`crate::sim`]) or the real-time serving loop
-//! ([`crate::serve`]) feeds it events; it mutates queues and pushes future
-//! events. All heuristics of §5–§6 live here:
+//! Every scheduling decision (admission, migration scoring, work stealing,
+//! adaptation, the GEMS window monitor) lives behind the
+//! [`Scheduler`](crate::sched::Scheduler) trait in [`crate::sched`]; a
+//! [`Platform`] pairs one scheduler with one [`Core`]. The platform is a
+//! deterministic state machine over virtual time: the discrete-event engine
+//! ([`crate::cluster`] / [`crate::sim`]) or the real-time serving loop
+//! (`serve`, behind the `pjrt` feature) feeds it events; it mutates queues
+//! and pushes future events.
 //!
-//! * admission + EDF feasibility check (§5.1),
-//! * migration scoring, Eqn 3 (§5.2),
-//! * deferred cloud triggers + work stealing (§5.3),
-//! * sliding-window adaptation with cooling reset (§5.4),
-//! * the GEMS window monitor, Algorithm 1 (§6).
+//! Split of responsibilities:
+//!
+//! * [`Core`] — queues, executors, the cloud pool, RNG, metrics, QoE window
+//!   accounting, task-id allocation. No `PolicyKind` branching.
+//! * [`Platform`] — event handlers (`submit_task`, `on_edge_done`, …) that
+//!   interleave core mechanics with scheduler hook calls at exactly the
+//!   decision points of §5–§6.
+//!
+//! `Platform` derefs to `Core`, so observability fields (`metrics`,
+//! `edge_exec`, `cloud_pool`, …) read like the pre-split monolith.
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::adapt::ModelAdapt;
 use crate::exec::{CloudExecModel, EdgeExecModel};
 use crate::metrics::{Metrics, TimelinePoint};
 use crate::model::{DnnKind, ModelProfile, Resource};
-use crate::policy::{Policy, PolicyKind};
+use crate::policy::Policy;
 use crate::qoe::WindowMonitor;
 use crate::queues::{CloudEntry, CloudQueue, EdgeEntry, EdgeQueue};
 use crate::rng::Rng;
+use crate::sched::{CloudReport, SchedCtx, Scheduler};
 use crate::sim::{Event, EventQueue};
 use crate::task::{DropReason, Fate, Task, TaskId, TaskOutcome};
 use crate::time::Micros;
 
 /// The edge executor's currently running task.
 #[derive(Debug)]
-struct RunningEdge {
-    entry: EdgeEntry,
+pub(crate) struct RunningEdge {
+    pub(crate) entry: EdgeEntry,
     /// Expected completion (used for feasibility of later arrivals).
-    expected_end: Micros,
+    pub(crate) expected_end: Micros,
     /// Actual completion (when `EdgeDone` fires).
-    actual_end: Micros,
-    stolen: bool,
+    pub(crate) actual_end: Micros,
+    pub(crate) stolen: bool,
 }
 
 /// One in-flight FaaS invocation.
-struct CloudRunning {
-    entry: CloudEntry,
-    end: Micros,
-    duration: Micros,
-    timed_out: bool,
+pub(crate) struct CloudRunning {
+    pub(crate) entry: CloudEntry,
+    pub(crate) end: Micros,
+    pub(crate) duration: Micros,
+    pub(crate) timed_out: bool,
 }
 
-/// A single edge base station with its cloud path.
-pub struct Platform {
+/// Mechanism-only substrate of one edge base station: queues, executors,
+/// the cloud thread pool, metrics and QoE window accounting. Scheduler
+/// implementations manipulate it through [`SchedCtx`].
+pub struct Core {
+    /// Declarative scheduler configuration. The core only reads the
+    /// mechanism-ish switches (`use_edge`, `use_cloud`, `edge_jit_drop`,
+    /// `cloud_accepts_negative`); everything decision-shaped is interpreted
+    /// by the [`Scheduler`] implementations.
     pub policy: Policy,
     pub models: Vec<ModelProfile>,
     pub metrics: Metrics,
-    edge_q: EdgeQueue,
-    cloud_q: CloudQueue,
+    pub(crate) edge_q: EdgeQueue,
+    pub(crate) cloud_q: CloudQueue,
     /// Triggered cloud entries waiting for a free executor thread.
-    cloud_ready: VecDeque<CloudEntry>,
-    running_edge: Option<RunningEdge>,
-    cloud_running: HashMap<u64, CloudRunning>,
-    cloud_inflight: usize,
+    pub(crate) cloud_ready: VecDeque<CloudEntry>,
+    pub(crate) running_edge: Option<RunningEdge>,
+    pub(crate) cloud_running: HashMap<u64, CloudRunning>,
+    pub(crate) cloud_inflight: usize,
     /// Cloud executor thread-pool size (§3.3).
     pub cloud_pool: usize,
     pub edge_exec: EdgeExecModel,
-    cloud_exec: CloudExecModel,
-    adapt: Vec<ModelAdapt>,
-    qoe: Vec<WindowMonitor>,
-    rng: Rng,
+    pub(crate) cloud_exec: CloudExecModel,
+    /// Per-model QoE window monitors (Alg. 1 counters; always recorded so
+    /// any scheduler can consult them).
+    pub(crate) qoe: Vec<WindowMonitor>,
+    pub(crate) rng: Rng,
     next_task_id: TaskId,
     next_cloud_key: u64,
     /// Smallest expected edge duration across models (steal gate, §5.3).
-    min_t_edge: Micros,
+    pub(crate) min_t_edge: Micros,
+    /// Finalized (model, success) pairs not yet reported to the scheduler;
+    /// drained via [`Scheduler::drain_done`] right after each finalize so
+    /// hook ordering matches the pre-split monolith.
+    pub(crate) pending_done: VecDeque<(DnnKind, bool)>,
 }
 
-impl Platform {
+impl Core {
     pub fn new(policy: Policy, models: Vec<ModelProfile>,
                cloud_exec: CloudExecModel, seed: u64) -> Self {
         let kinds: Vec<DnnKind> = models.iter().map(|m| m.kind).collect();
-        let adapt = models
-            .iter()
-            .map(|m| ModelAdapt::new(m.t_cloud, policy.adapt_window))
-            .collect();
         let qoe = models
             .iter()
             .map(|m| WindowMonitor::new(m.qoe_rate, m.qoe_window,
@@ -86,7 +102,7 @@ impl Platform {
             .collect();
         let min_t_edge =
             models.iter().map(|m| m.t_edge).min().unwrap_or(0);
-        Platform {
+        Core {
             edge_q: EdgeQueue::new(policy.edge_order),
             policy,
             metrics: Metrics::new(&kinds),
@@ -99,39 +115,30 @@ impl Platform {
             cloud_pool: 16,
             edge_exec: EdgeExecModel::default(),
             cloud_exec,
-            adapt,
             qoe,
             rng: Rng::new(seed),
             next_task_id: 0,
             next_cloud_key: 0,
             min_t_edge,
+            pending_done: VecDeque::new(),
         }
     }
 
     // ------------------------------------------------------------ helpers
 
-    fn idx(&self, kind: DnnKind) -> usize {
+    pub(crate) fn idx(&self, kind: DnnKind) -> usize {
         self.models
             .iter()
             .position(|m| m.kind == kind)
             .expect("model registered")
     }
 
-    fn profile(&self, kind: DnnKind) -> &ModelProfile {
+    pub fn profile(&self, kind: DnnKind) -> &ModelProfile {
         &self.models[self.idx(kind)]
     }
 
-    /// Expected cloud duration for a model (adapted when DEMS-A is on).
-    fn expected_cloud(&self, kind: DnnKind) -> Micros {
-        if self.policy.adaptive {
-            self.adapt[self.idx(kind)].expected()
-        } else {
-            self.profile(kind).t_cloud
-        }
-    }
-
     /// When the edge executor is expected to free up.
-    fn edge_busy_until(&self, now: Micros) -> Micros {
+    pub fn edge_busy_until(&self, now: Micros) -> Micros {
         match &self.running_edge {
             Some(r) => r.expected_end.max(now),
             None => now,
@@ -152,157 +159,23 @@ impl Platform {
         }
     }
 
-    // --------------------------------------------------------- submission
-
-    /// Entry point: the task-scheduler thread of Fig. 4.
-    pub fn submit_task(&mut self, now: Micros, task: Task,
-                       q: &mut EventQueue) {
-        self.metrics.stats_mut(task.model).generated += 1;
-        match self.policy.kind {
-            PolicyKind::CloudOnly => {
-                self.offer_cloud(now, task, false, q);
-            }
-            PolicyKind::EdgeEdf | PolicyKind::EdgeHpf => {
-                let p = self.profile(task.model);
-                let (dl, te, hp) = (
-                    task.absolute_deadline(p.deadline),
-                    p.t_edge,
-                    p.hpf_priority(),
-                );
-                self.edge_q.insert(task, dl, te, hp);
-                self.try_start_edge(now, q);
-            }
-            PolicyKind::EdfEC | PolicyKind::SjfEC => {
-                self.admit_ec(now, task, q);
-            }
-            PolicyKind::Dem
-            | PolicyKind::Dems
-            | PolicyKind::DemsA
-            | PolicyKind::Gems => {
-                self.admit_dem(now, task, q);
-            }
-            PolicyKind::Sota1 => self.admit_sota1(now, task, q),
-            PolicyKind::Sota2 => self.admit_sota2(now, task, q),
+    /// Minimum slack across the queued edge tasks (i64::MAX when empty):
+    /// how much extra work the executor can take on *now* without pushing
+    /// any queued task past its deadline.
+    pub fn edge_min_slack(&self, now: Micros) -> i64 {
+        let mut t = now;
+        let mut min = i64::MAX;
+        for e in self.edge_q.iter() {
+            t += e.t_edge;
+            min = min.min(e.abs_deadline as i64 - t as i64);
         }
-    }
-
-    /// E+C admission (§5.1): edge if self-feasible, else offer to cloud.
-    fn admit_ec(&mut self, now: Micros, task: Task, q: &mut EventQueue) {
-        let p = self.profile(task.model);
-        let (dl, te, hp) =
-            (task.absolute_deadline(p.deadline), p.t_edge, p.hpf_priority());
-        let busy = self.edge_busy_until(now);
-        if self.edge_q.feasible(dl, te, hp, busy) {
-            self.edge_q.insert(task, dl, te, hp);
-            self.try_start_edge(now, q);
-        } else {
-            self.offer_cloud(now, task, false, q);
-        }
-    }
-
-    /// DEM/DEMS admission with migration scoring (§5.2, Fig. 5).
-    fn admit_dem(&mut self, now: Micros, task: Task, q: &mut EventQueue) {
-        let p = self.profile(task.model).clone();
-        let dl = task.absolute_deadline(p.deadline);
-        let busy = self.edge_busy_until(now);
-        let probe =
-            self.edge_q.probe_insert(dl, p.t_edge, p.hpf_priority(), busy);
-        if probe.completion > dl {
-            // Scenario "own deadline missed": redirect to cloud.
-            self.offer_cloud(now, task, false, q);
-            return;
-        }
-        if !probe.victims.is_empty() && self.policy.migration {
-            // Eqn 3 scores for the victims and the incoming task.
-            let t_hat_in = self.expected_cloud(task.model);
-            let s_in = p.migration_score(now + t_hat_in <= dl);
-            let mut s_victims = 0.0;
-            for &vi in &probe.victims {
-                let e = &self.edge_q.get(vi).unwrap().task;
-                let vp = self.profile(e.model);
-                let t_hat = self.expected_cloud(e.model);
-                let feasible = now + t_hat
-                    <= e.absolute_deadline(vp.deadline);
-                s_victims += vp.migration_score(feasible);
-            }
-            if s_victims < s_in {
-                // Migrate the victims (rear-first so indices stay valid),
-                // then insert the incoming task (Fig. 5, scenario 2).
-                for &vi in probe.victims.iter().rev() {
-                    let victim = self.edge_q.remove_at(vi);
-                    self.offer_cloud(now, victim.task, false, q);
-                }
-                self.edge_q.insert(task, dl, p.t_edge, p.hpf_priority());
-            } else {
-                // Retain existing tasks; incoming goes to the cloud
-                // (Fig. 5, scenario 3).
-                self.offer_cloud(now, task, false, q);
-            }
-        } else {
-            self.edge_q.insert(task, dl, p.t_edge, p.hpf_priority());
-        }
-        self.try_start_edge(now, q);
-    }
-
-    /// SOTA 1 (Kalmia + D3): urgent tasks never wait for a stretched
-    /// deadline; non-urgent tasks get a one-shot 10% deadline extension
-    /// before being offloaded.
-    fn admit_sota1(&mut self, now: Micros, task: Task, q: &mut EventQueue) {
-        let p = self.profile(task.model).clone();
-        let dl = task.absolute_deadline(p.deadline);
-        let busy = self.edge_busy_until(now);
-        if self.edge_q.feasible(dl, p.t_edge, p.hpf_priority(), busy) {
-            self.edge_q.insert(task, dl, p.t_edge, p.hpf_priority());
-            self.try_start_edge(now, q);
-            return;
-        }
-        let urgent = p.deadline < self.policy.sota1_urgent_below;
-        if !urgent {
-            let stretched = dl
-                + (p.deadline as f64 * self.policy.sota1_extension) as Micros;
-            if self
-                .edge_q
-                .feasible(stretched, p.t_edge, p.hpf_priority(), busy)
-            {
-                self.edge_q.insert(task, stretched, p.t_edge,
-                                   p.hpf_priority());
-                self.try_start_edge(now, q);
-                return;
-            }
-        }
-        self.offer_cloud(now, task, false, q);
-    }
-
-    /// SOTA 2 (Dedas-style): exec-time priority; reject to cloud when more
-    /// than one queued task would miss its deadline, otherwise keep the
-    /// schedule with the lower average completion time.
-    fn admit_sota2(&mut self, now: Micros, task: Task, q: &mut EventQueue) {
-        let p = self.profile(task.model).clone();
-        let dl = task.absolute_deadline(p.deadline);
-        let busy = self.edge_busy_until(now);
-        let probe =
-            self.edge_q.probe_insert(dl, p.t_edge, p.hpf_priority(), busy);
-        let accept = if probe.completion > dl || probe.victims.len() > 1 {
-            false
-        } else if probe.victims.is_empty() {
-            true
-        } else {
-            // One victim: compare ACT of the two candidate schedules.
-            let act_without = self.edge_act(busy, None);
-            let act_with = self.edge_act(busy, Some((probe.pos, p.t_edge)));
-            act_with <= act_without + p.t_edge as f64
-        };
-        if accept {
-            self.edge_q.insert(task, dl, p.t_edge, p.hpf_priority());
-            self.try_start_edge(now, q);
-        } else {
-            self.offer_cloud(now, task, false, q);
-        }
+        min
     }
 
     /// Mean expected completion time of the edge queue, optionally with a
-    /// hypothetical insertion `(pos, t_edge)`.
-    fn edge_act(&self, busy: Micros, insert: Option<(usize, Micros)>) -> f64 {
+    /// hypothetical insertion `(pos, t_edge)` — the SOTA 2 ACT comparison.
+    pub(crate) fn edge_act(&self, busy: Micros,
+                           insert: Option<(usize, Micros)>) -> f64 {
         let mut t = busy;
         let mut sum = 0.0;
         let mut n = 0u64;
@@ -323,102 +196,20 @@ impl Platform {
         }
     }
 
-    // ------------------------------------------------------------- cloud
+    // -------------------------------------------------------------- cloud
 
-    /// Offer a task to the cloud scheduler (§5.1/§5.3). Returns true if it
-    /// was queued; otherwise its drop has been finalized.
-    fn offer_cloud(&mut self, now: Micros, task: Task, gems: bool,
-                   q: &mut EventQueue) -> bool {
-        if !self.policy.use_cloud {
-            self.drop_task(now, task, DropReason::Infeasible, q);
-            return false;
-        }
-        let p = self.profile(task.model).clone();
-        let i = self.idx(task.model);
-        let dl = task.absolute_deadline(p.deadline);
-        let t_hat = self.expected_cloud(task.model);
-        if now + t_hat > dl {
-            if self.policy.adaptive {
-                self.adapt[i].on_skip(now, self.policy.cooling_period);
-            }
-            self.drop_task(now, task, DropReason::Infeasible, q);
-            return false;
-        }
-        let negative = p.util_cloud() <= 0.0;
-        if negative && !self.policy.cloud_accepts_negative {
-            if self.policy.defer_cloud && self.policy.stealing {
-                // §5.3: keep as a steal candidate until the latest time it
-                // could still start on the edge.
-                let trigger = dl.saturating_sub(p.t_edge).max(now);
-                self.cloud_q.insert(CloudEntry {
-                    task,
-                    abs_deadline: dl,
-                    t_cloud: t_hat,
-                    t_edge: p.t_edge,
-                    trigger,
-                    negative_utility: true,
-                    gems_rescheduled: gems,
-                });
-                q.push(trigger, Event::CloudTrigger);
-                return true;
-            }
-            self.drop_task(now, task, DropReason::NegativeCloudUtility, q);
-            return false;
-        }
-        // Positive-utility path: deferred trigger under DEMS, immediate
-        // dispatch otherwise (and always immediate for GEMS reschedules).
-        // The deferral headroom is 1.5·t̂ + margin: t̂ is a p95, so leaving
-        // only t̂ of runway turns every above-p95 draw (and any transfer
-        // contention from synchronized triggers) into a miss billed at κ̂.
-        // In practice this defers only long-deadline/short-t̂ tasks — the
-        // same population §5.3 observes being stolen.
-        let trigger = if self.policy.defer_cloud && !gems {
-            dl.saturating_sub(t_hat + t_hat / 2 + self.policy.safety_margin)
-                .max(now)
-        } else {
-            now
-        };
-        self.cloud_q.insert(CloudEntry {
-            task,
-            abs_deadline: dl,
-            t_cloud: t_hat,
-            t_edge: p.t_edge,
-            trigger,
-            negative_utility: negative,
-            gems_rescheduled: gems,
-        });
+    /// Queue a cloud entry and register its trigger event (mechanism half
+    /// of a cloud offload; the *decision* — deferral window, negative
+    /// utility handling — is made by the scheduler before calling this).
+    pub(crate) fn push_cloud(&mut self, entry: CloudEntry,
+                             q: &mut EventQueue) {
+        let trigger = entry.trigger;
+        self.cloud_q.insert(entry);
         q.push(trigger, Event::CloudTrigger);
-        true
     }
 
-    /// Trigger-time arrival: dispatch due entries to the FaaS pool (§5.3).
-    pub fn on_cloud_trigger(&mut self, now: Micros, q: &mut EventQueue) {
-        while let Some(e) = self.cloud_q.pop_due(now) {
-            if e.negative_utility && !self.policy.cloud_accepts_negative {
-                // Un-stolen steal candidate: drop just-in-time.
-                self.finalize_drop_entry(now, e, DropReason::TriggerExpired,
-                                         q);
-                continue;
-            }
-            let t_hat = self.expected_cloud(e.task.model);
-            if now + t_hat > e.abs_deadline {
-                if self.policy.adaptive {
-                    let i = self.idx(e.task.model);
-                    self.adapt[i].on_skip(now, self.policy.cooling_period);
-                }
-                self.finalize_drop_entry(now, e, DropReason::JitExpired, q);
-                continue;
-            }
-            if self.cloud_inflight < self.cloud_pool {
-                self.dispatch_cloud(now, e, q);
-            } else {
-                self.cloud_ready.push_back(e);
-            }
-        }
-    }
-
-    fn dispatch_cloud(&mut self, now: Micros, e: CloudEntry,
-                      q: &mut EventQueue) {
+    pub(crate) fn dispatch_cloud(&mut self, now: Micros, e: CloudEntry,
+                                 q: &mut EventQueue) {
         let p = self.profile(e.task.model).clone();
         let (dur, timed_out) = self.cloud_exec.sample(
             &p,
@@ -438,18 +229,292 @@ impl Platform {
         q.push(now + dur, Event::CloudDone { key });
     }
 
-    pub fn on_cloud_done(&mut self, now: Micros, key: u64,
-                         q: &mut EventQueue) {
-        let run = match self.cloud_running.remove(&key) {
+    // --------------------------------------------------------------- edge
+
+    pub(crate) fn start_edge(&mut self, now: Micros, entry: EdgeEntry,
+                             stolen: bool, q: &mut EventQueue) {
+        let p = self.profile(entry.task.model).clone();
+        let actual = self.edge_exec.sample(&p, &mut self.rng);
+        self.metrics.edge_busy += actual;
+        let expected_end = now + entry.t_edge;
+        let actual_end = now + actual;
+        self.running_edge =
+            Some(RunningEdge { entry, expected_end, actual_end, stolen });
+        q.push(actual_end, Event::EdgeDone);
+    }
+
+    // ------------------------------------------------------- finalization
+
+    /// Record a finalized outcome: metrics, the QoE window counters
+    /// (Alg. 1 lines 3–7 — always tracked when a model's monitor is
+    /// enabled) and the pending-done queue the scheduler hook drains.
+    pub(crate) fn finalize(&mut self, outcome: TaskOutcome) {
+        let kind = outcome.model;
+        let success = outcome.success();
+        self.metrics.record(&outcome);
+        let i = self.idx(kind);
+        if self.qoe[i].enabled() {
+            self.qoe[i].record(success);
+        }
+        self.pending_done.push_back((kind, success));
+    }
+
+    /// Finalize a drop without execution.
+    pub fn drop_task(&mut self, now: Micros, task: Task,
+                     reason: DropReason) {
+        let outcome = TaskOutcome {
+            task_id: task.id,
+            model: task.model,
+            drone: task.segment.drone,
+            fate: Fate::Dropped(reason),
+            at: now,
+            created_at: task.segment.created_at,
+            exec_duration: 0,
+            utility: 0.0,
+            gems_rescheduled: false,
+            stolen: false,
+        };
+        self.finalize(outcome);
+    }
+
+    /// Next finalized (model, success) pair awaiting the scheduler's
+    /// `on_task_done` hook (see [`Scheduler::drain_done`]).
+    pub(crate) fn pop_done(&mut self) -> Option<(DnnKind, bool)> {
+        self.pending_done.pop_front()
+    }
+
+    // ---------------------------------------------------------------- QoE
+
+    /// Tumbling window boundary (Alg. 1 lines 16–21).
+    pub(crate) fn window_close(&mut self, model_idx: usize,
+                               q: &mut EventQueue) {
+        let kind = self.models[model_idx].kind;
+        let mon = &mut self.qoe[model_idx];
+        let met = mon.close_window();
+        let s = self.metrics.stats_mut(kind);
+        s.windows_total += 1;
+        if met {
+            s.windows_met += 1;
+            s.qoe_utility += self.qoe[model_idx].qoe_benefit;
+        }
+        q.push(self.qoe[model_idx].window_end,
+               Event::WindowClose { model_idx });
+    }
+
+    // ------------------------------------------------------ observability
+
+    pub fn edge_queue_len(&self) -> usize {
+        self.edge_q.len()
+    }
+
+    pub fn cloud_queue_len(&self) -> usize {
+        self.cloud_q.len()
+    }
+
+    pub fn cloud_inflight(&self) -> usize {
+        self.cloud_inflight
+    }
+}
+
+/// One edge base station = mechanism [`Core`] + pluggable [`Scheduler`].
+///
+/// `S` defaults to `Box<dyn Scheduler>` (what [`Policy::build`] returns);
+/// benches compare that against a statically dispatched scheduler by
+/// instantiating `Platform<FlagBranchScheduler>` via [`with_scheduler`].
+///
+/// [`with_scheduler`]: Platform::with_scheduler
+pub struct Platform<S: Scheduler = Box<dyn Scheduler>> {
+    pub(crate) core: Core,
+    sched: S,
+}
+
+impl<S: Scheduler> std::ops::Deref for Platform<S> {
+    type Target = Core;
+
+    fn deref(&self) -> &Core {
+        &self.core
+    }
+}
+
+impl<S: Scheduler> std::ops::DerefMut for Platform<S> {
+    fn deref_mut(&mut self) -> &mut Core {
+        &mut self.core
+    }
+}
+
+impl Platform<Box<dyn Scheduler>> {
+    /// Build a platform whose scheduler is resolved from the policy via
+    /// [`Policy::build`] (dynamic dispatch).
+    pub fn new(policy: Policy, models: Vec<ModelProfile>,
+               cloud_exec: CloudExecModel, seed: u64) -> Self {
+        let sched = policy.build();
+        Self::with_scheduler(sched, policy, models, cloud_exec, seed)
+    }
+}
+
+impl<S: Scheduler> Platform<S> {
+    /// Pair an explicit scheduler instance with a fresh core. The policy is
+    /// still required: it carries the declarative configuration both the
+    /// core mechanisms and the scheduler interpret.
+    pub fn with_scheduler(mut sched: S, policy: Policy,
+                          models: Vec<ModelProfile>,
+                          cloud_exec: CloudExecModel, seed: u64) -> Self {
+        let core = Core::new(policy, models, cloud_exec, seed);
+        sched.bind(&core);
+        Platform { core, sched }
+    }
+
+    /// Consume the platform, returning its metrics (end of a run).
+    pub fn into_metrics(self) -> Metrics {
+        self.core.metrics
+    }
+
+    /// The scheduler driving this platform.
+    pub fn scheduler(&self) -> &S {
+        &self.sched
+    }
+
+    /// Expected cloud duration for a model in ms (adapted under DEMS-A).
+    pub fn expected_cloud_ms(&self, kind: DnnKind) -> f64 {
+        self.sched.expected_cloud(&self.core, kind) as f64 / 1_000.0
+    }
+
+    /// Deliver buffered task-done reports to the scheduler (GEMS hook).
+    fn drain_done(&mut self, now: Micros, q: &mut EventQueue) {
+        let mut ctx = SchedCtx { now, core: &mut self.core, q: &mut *q };
+        self.sched.drain_done(&mut ctx);
+    }
+
+    // --------------------------------------------------------- submission
+
+    /// Entry point: the task-scheduler thread of Fig. 4. Admission is fully
+    /// delegated to the scheduler; the platform only does the generation
+    /// accounting and kicks the edge executor afterwards.
+    pub fn submit_task(&mut self, now: Micros, task: Task,
+                       q: &mut EventQueue) {
+        self.core.metrics.stats_mut(task.model).generated += 1;
+        {
+            let mut ctx = SchedCtx { now, core: &mut self.core, q: &mut *q };
+            self.sched.admit(&mut ctx, task);
+        }
+        self.drain_done(now, q);
+        self.try_start_edge(now, q);
+    }
+
+    // --------------------------------------------------------------- edge
+
+    /// The edge executor's pick-next loop, with the §5.3 steal hook.
+    pub fn try_start_edge(&mut self, now: Micros, q: &mut EventQueue) {
+        if self.core.running_edge.is_some() || !self.core.policy.use_edge {
+            return;
+        }
+        loop {
+            let steal = {
+                let mut ctx = SchedCtx { now, core: &mut self.core, q: &mut *q };
+                self.sched.on_edge_idle(&mut ctx)
+            };
+            if let Some(idx) = steal {
+                let entry =
+                    self.core.cloud_q.remove_at(idx).into_edge_entry();
+                self.core.start_edge(now, entry, true, q);
+                return;
+            }
+            let head = match self.core.edge_q.pop() {
+                Some(h) => h,
+                None => return,
+            };
+            // JIT check (§3.3): expected completion must meet the deadline.
+            // Edge-only baselines execute regardless (Policy::edge_jit_drop).
+            if self.core.policy.edge_jit_drop
+                && now + head.t_edge > head.abs_deadline
+            {
+                self.core.drop_task(now, head.task, DropReason::JitExpired);
+                self.drain_done(now, q);
+                continue;
+            }
+            self.core.start_edge(now, head, false, q);
+            return;
+        }
+    }
+
+    pub fn on_edge_done(&mut self, now: Micros, q: &mut EventQueue) {
+        let run = match self.core.running_edge.take() {
             Some(r) => r,
             None => return,
         };
-        self.cloud_inflight -= 1;
-        let p = self.profile(run.entry.task.model).clone();
+        let p = self.core.profile(run.entry.task.model).clone();
+        let success = run.actual_end <= run.entry.abs_deadline;
+        let fate = if success {
+            Fate::Completed(Resource::Edge)
+        } else {
+            Fate::Missed(Resource::Edge)
+        };
+        let outcome = TaskOutcome {
+            task_id: run.entry.task.id,
+            model: run.entry.task.model,
+            drone: run.entry.task.segment.drone,
+            fate,
+            at: now,
+            created_at: run.entry.task.segment.created_at,
+            exec_duration: run.actual_end
+                - (run.expected_end - run.entry.t_edge),
+            utility: p.utility(Resource::Edge, success),
+            gems_rescheduled: run.entry.gems_rescheduled,
+            stolen: run.stolen,
+        };
+        self.core.finalize(outcome);
+        self.drain_done(now, q);
+        self.try_start_edge(now, q);
+    }
+
+    // -------------------------------------------------------------- cloud
+
+    /// Trigger-time arrival: dispatch due entries to the FaaS pool (§5.3).
+    pub fn on_cloud_trigger(&mut self, now: Micros, q: &mut EventQueue) {
+        while let Some(e) = self.core.cloud_q.pop_due(now) {
+            if e.negative_utility && !self.core.policy.cloud_accepts_negative
+            {
+                // Un-stolen steal candidate: drop just-in-time.
+                self.core.drop_task(now, e.task, DropReason::TriggerExpired);
+                self.drain_done(now, q);
+                continue;
+            }
+            let t_hat =
+                self.sched.expected_cloud(&self.core, e.task.model);
+            if now + t_hat > e.abs_deadline {
+                self.sched.on_cloud_skip(&self.core, now, e.task.model);
+                self.core.drop_task(now, e.task, DropReason::JitExpired);
+                self.drain_done(now, q);
+                continue;
+            }
+            if self.core.cloud_inflight < self.core.cloud_pool {
+                self.core.dispatch_cloud(now, e, q);
+            } else {
+                self.core.cloud_ready.push_back(e);
+            }
+        }
+    }
+
+    pub fn on_cloud_done(&mut self, now: Micros, key: u64,
+                         q: &mut EventQueue) {
+        let run = match self.core.cloud_running.remove(&key) {
+            Some(r) => r,
+            None => return,
+        };
+        self.core.cloud_inflight -= 1;
+        let p = self.core.profile(run.entry.task.model).clone();
         let success = !run.timed_out && run.end <= run.entry.abs_deadline;
-        if self.policy.adaptive {
-            let i = self.idx(run.entry.task.model);
-            self.adapt[i].observe(run.duration, self.policy.adapt_epsilon);
+        // §5.4 observation hook fires before verdicting so adapted
+        // expectations (and the timeline's expected_ms) include this sample.
+        let report = CloudReport {
+            kind: run.entry.task.model,
+            duration: run.duration,
+            timed_out: run.timed_out,
+            success,
+        };
+        {
+            let mut ctx = SchedCtx { now, core: &mut self.core, q: &mut *q };
+            self.sched.on_cloud_report(&mut ctx, &report);
         }
         if run.timed_out {
             // Abandoned request: no usable output, not billed as a miss.
@@ -465,17 +530,22 @@ impl Platform {
                 gems_rescheduled: run.entry.gems_rescheduled,
                 stolen: false,
             };
-            self.finalize(now, outcome, q);
+            self.core.finalize(outcome);
+            self.drain_done(now, q);
             self.pull_cloud_ready(now, q);
             return;
         }
-        if self.metrics.record_timeline {
-            self.metrics.timeline.push(TimelinePoint {
+        if self.core.metrics.record_timeline {
+            let expected_ms = self
+                .sched
+                .expected_cloud(&self.core, run.entry.task.model)
+                as f64
+                / 1_000.0;
+            self.core.metrics.timeline.push(TimelinePoint {
                 at: now,
                 model: run.entry.task.model,
                 observed_ms: run.duration as f64 / 1_000.0,
-                expected_ms: self.expected_cloud(run.entry.task.model) as f64
-                    / 1_000.0,
+                expected_ms,
                 success,
             });
         }
@@ -496,266 +566,66 @@ impl Platform {
             gems_rescheduled: run.entry.gems_rescheduled,
             stolen: false,
         };
-        self.finalize(now, outcome, q);
+        self.core.finalize(outcome);
+        self.drain_done(now, q);
         self.pull_cloud_ready(now, q);
     }
 
     /// A pool slot freed: pull the next ready entry (re-JIT-checked).
     fn pull_cloud_ready(&mut self, now: Micros, q: &mut EventQueue) {
-        while let Some(e) = self.cloud_ready.pop_front() {
-            let t_hat = self.expected_cloud(e.task.model);
+        while let Some(e) = self.core.cloud_ready.pop_front() {
+            let t_hat =
+                self.sched.expected_cloud(&self.core, e.task.model);
             if now + t_hat > e.abs_deadline {
-                self.finalize_drop_entry(now, e, DropReason::JitExpired, q);
+                self.core.drop_task(now, e.task, DropReason::JitExpired);
+                self.drain_done(now, q);
                 continue;
             }
-            self.dispatch_cloud(now, e, q);
+            self.core.dispatch_cloud(now, e, q);
             break;
         }
     }
 
-    // -------------------------------------------------------------- edge
-
-    /// The edge executor's pick-next loop, with the §5.3 steal hook.
-    pub fn try_start_edge(&mut self, now: Micros, q: &mut EventQueue) {
-        if self.running_edge.is_some() || !self.policy.use_edge {
-            return;
-        }
-        loop {
-            if self.policy.stealing {
-                let slack = self.edge_min_slack(now);
-                if slack > self.min_t_edge as i64 {
-                    let models = &self.models;
-                    let steal = self.cloud_q.best_steal(now, slack, |e| {
-                        models
-                            .iter()
-                            .find(|m| m.kind == e.task.model)
-                            .map(|m| m.steal_rank())
-                            .unwrap_or(f64::MIN)
-                    });
-                    if let Some(idx) = steal {
-                        let ce = self.cloud_q.remove_at(idx);
-                        let entry = EdgeEntry {
-                            abs_deadline: ce.abs_deadline,
-                            t_edge: ce.t_edge,
-                            key: 0,
-                            seq: 0,
-                            gems_rescheduled: ce.gems_rescheduled,
-                            task: ce.task,
-                        };
-                        self.start_edge(now, entry, true, q);
-                        return;
-                    }
-                }
-            }
-            let head = match self.edge_q.pop() {
-                Some(h) => h,
-                None => return,
-            };
-            // JIT check (§3.3): expected completion must meet the deadline.
-            // Edge-only baselines execute regardless (Policy::edge_jit_drop).
-            if self.policy.edge_jit_drop
-                && now + head.t_edge > head.abs_deadline
-            {
-                self.finalize_drop_edge(now, head, DropReason::JitExpired, q);
-                continue;
-            }
-            self.start_edge(now, head, false, q);
-            return;
-        }
-    }
-
-    /// Minimum slack across the queued edge tasks (i64::MAX when empty):
-    /// how much extra work the executor can take on *now* without pushing
-    /// any queued task past its deadline.
-    fn edge_min_slack(&self, now: Micros) -> i64 {
-        let mut t = now;
-        let mut min = i64::MAX;
-        for e in self.edge_q.iter() {
-            t += e.t_edge;
-            min = min.min(e.abs_deadline as i64 - t as i64);
-        }
-        min
-    }
-
-    fn start_edge(&mut self, now: Micros, entry: EdgeEntry, stolen: bool,
-                  q: &mut EventQueue) {
-        let p = self.profile(entry.task.model).clone();
-        let actual = self.edge_exec.sample(&p, &mut self.rng);
-        self.metrics.edge_busy += actual;
-        let expected_end = now + entry.t_edge;
-        let actual_end = now + actual;
-        self.running_edge =
-            Some(RunningEdge { entry, expected_end, actual_end, stolen });
-        q.push(actual_end, Event::EdgeDone);
-    }
-
-    pub fn on_edge_done(&mut self, now: Micros, q: &mut EventQueue) {
-        let run = match self.running_edge.take() {
-            Some(r) => r,
-            None => return,
-        };
-        let p = self.profile(run.entry.task.model).clone();
-        let success = run.actual_end <= run.entry.abs_deadline;
-        let fate = if success {
-            Fate::Completed(Resource::Edge)
-        } else {
-            Fate::Missed(Resource::Edge)
-        };
-        let outcome = TaskOutcome {
-            task_id: run.entry.task.id,
-            model: run.entry.task.model,
-            drone: run.entry.task.segment.drone,
-            fate,
-            at: now,
-            created_at: run.entry.task.segment.created_at,
-            exec_duration: run.actual_end
-                - (run.expected_end - run.entry.t_edge),
-            utility: p.utility(Resource::Edge, success),
-            gems_rescheduled: run.entry.gems_rescheduled,
-            stolen: run.stolen,
-        };
-        self.finalize(now, outcome, q);
-        self.try_start_edge(now, q);
-    }
-
     // --------------------------------------------------------------- QoE
 
-    /// Tumbling window boundary (Alg. 1 lines 16–21).
-    pub fn on_window_close(&mut self, _now: Micros, model_idx: usize,
+    /// Tumbling window boundary (Alg. 1 lines 16–21), then the scheduler's
+    /// window hook.
+    pub fn on_window_close(&mut self, now: Micros, model_idx: usize,
                            q: &mut EventQueue) {
-        let kind = self.models[model_idx].kind;
-        let mon = &mut self.qoe[model_idx];
-        let met = mon.close_window();
-        let s = self.metrics.stats_mut(kind);
-        s.windows_total += 1;
-        if met {
-            s.windows_met += 1;
-            s.qoe_utility += self.qoe[model_idx].qoe_benefit;
-        }
-        q.push(self.qoe[model_idx].window_end,
-               Event::WindowClose { model_idx });
+        self.core.window_close(model_idx, q);
+        let mut ctx = SchedCtx { now, core: &mut self.core, q: &mut *q };
+        self.sched.on_window_close(&mut ctx, model_idx);
     }
 
-    /// Algorithm 1, per-completion trigger: update α̂ and, when falling
-    /// behind, greedily reschedule this model's pending edge tasks to the
-    /// cloud (lines 8–14).
-    fn gems_hook(&mut self, now: Micros, kind: DnnKind, success: bool,
-                 q: &mut EventQueue) {
-        let i = self.idx(kind);
-        if !self.qoe[i].enabled() {
-            return;
-        }
-        self.qoe[i].record(success);
-        if !(self.policy.gems && self.qoe[i].falling_behind()) {
-            return;
-        }
-        let p = self.profile(kind).clone();
-        if p.util_cloud() <= 0.0 {
-            return; // GEMS only helps via positive-utility cloud runs (§6)
-        }
-        let t_hat = self.expected_cloud(kind);
-        let pending = self.edge_q.tasks_of_model(kind);
-        for (_, tid) in pending {
-            // Re-find by id: earlier removals shift indices.
-            let Some(entry) = self.peek_entry(tid) else { continue };
-            if now + t_hat <= entry.abs_deadline {
-                let e = self.edge_q.remove_task(tid).unwrap();
-                self.cloud_q.insert(CloudEntry {
-                    task: e.task,
-                    abs_deadline: e.abs_deadline,
-                    t_cloud: t_hat,
-                    t_edge: e.t_edge,
-                    trigger: now,
-                    negative_utility: false,
-                    gems_rescheduled: true,
-                });
-                q.push(now, Event::CloudTrigger);
-            }
-        }
-    }
-
-    fn peek_entry(&self, tid: TaskId) -> Option<&EdgeEntry> {
-        self.edge_q.iter().find(|e| e.task.id == tid)
-    }
-
-    // ------------------------------------------------------- finalization
-
-    fn finalize(&mut self, now: Micros, outcome: TaskOutcome,
-                q: &mut EventQueue) {
-        let kind = outcome.model;
-        let success = outcome.success();
-        self.metrics.record(&outcome);
-        self.gems_hook(now, kind, success, q);
-    }
-
-    fn drop_task(&mut self, now: Micros, task: Task, reason: DropReason,
-                 q: &mut EventQueue) {
-        let outcome = TaskOutcome {
-            task_id: task.id,
-            model: task.model,
-            drone: task.segment.drone,
-            fate: Fate::Dropped(reason),
-            at: now,
-            created_at: task.segment.created_at,
-            exec_duration: 0,
-            utility: 0.0,
-            gems_rescheduled: false,
-            stolen: false,
-        };
-        self.finalize(now, outcome, q);
-    }
-
-    fn finalize_drop_entry(&mut self, now: Micros, e: CloudEntry,
-                           reason: DropReason, q: &mut EventQueue) {
-        self.drop_task(now, e.task, reason, q);
-    }
-
-    fn finalize_drop_edge(&mut self, now: Micros, e: EdgeEntry,
-                          reason: DropReason, q: &mut EventQueue) {
-        self.drop_task(now, e.task, reason, q);
-    }
-
-    // ------------------------------------------------------ observability
-
-    pub fn edge_queue_len(&self) -> usize {
-        self.edge_q.len()
-    }
-
-    pub fn cloud_queue_len(&self) -> usize {
-        self.cloud_q.len()
-    }
-
-    pub fn cloud_inflight(&self) -> usize {
-        self.cloud_inflight
-    }
-
-    pub fn expected_cloud_ms(&self, kind: DnnKind) -> f64 {
-        self.expected_cloud(kind) as f64 / 1_000.0
-    }
+    // --------------------------------------------------------------- end
 
     /// Drain bookkeeping at end of run (drops queued tasks as infeasible so
     /// task accounting closes; the paper's runs likewise count unfinished
     /// tasks as not completed).
     pub fn drain(&mut self, now: Micros, q: &mut EventQueue) {
-        if let Some(run) = self.running_edge.take() {
-            self.finalize_drop_edge(now, run.entry, DropReason::JitExpired,
-                                    q);
+        if let Some(run) = self.core.running_edge.take() {
+            self.core.drop_task(now, run.entry.task, DropReason::JitExpired);
+            self.drain_done(now, q);
         }
-        let keys: Vec<u64> = self.cloud_running.keys().copied().collect();
+        let keys: Vec<u64> = self.core.cloud_running.keys().copied().collect();
         for k in keys {
-            if let Some(run) = self.cloud_running.remove(&k) {
-                self.drop_task(now, run.entry.task, DropReason::Timeout, q);
+            if let Some(run) = self.core.cloud_running.remove(&k) {
+                self.core.drop_task(now, run.entry.task, DropReason::Timeout);
+                self.drain_done(now, q);
             }
         }
-        while let Some(e) = self.edge_q.pop() {
-            self.finalize_drop_edge(now, e, DropReason::JitExpired, q);
+        while let Some(e) = self.core.edge_q.pop() {
+            self.core.drop_task(now, e.task, DropReason::JitExpired);
+            self.drain_done(now, q);
         }
-        while let Some(idx) = (!self.cloud_q.is_empty()).then_some(0) {
-            let e = self.cloud_q.remove_at(idx);
-            self.finalize_drop_entry(now, e, DropReason::TriggerExpired, q);
+        while !self.core.cloud_q.is_empty() {
+            let e = self.core.cloud_q.remove_at(0);
+            self.core.drop_task(now, e.task, DropReason::TriggerExpired);
+            self.drain_done(now, q);
         }
-        while let Some(e) = self.cloud_ready.pop_front() {
-            self.finalize_drop_entry(now, e, DropReason::JitExpired, q);
+        while let Some(e) = self.core.cloud_ready.pop_front() {
+            self.core.drop_task(now, e.task, DropReason::JitExpired);
+            self.drain_done(now, q);
         }
     }
 }
@@ -995,10 +865,34 @@ mod tests {
 
     #[test]
     fn expected_cloud_uses_adaptation_only_when_enabled() {
-        let mut p = mkplatform(Policy::dems());
+        let p = mkplatform(Policy::dems());
         assert_eq!(p.expected_cloud_ms(DnnKind::Hv), 398.0);
-        let mut pa = mkplatform(Policy::dems_a());
+        let pa = mkplatform(Policy::dems_a());
         assert_eq!(pa.expected_cloud_ms(DnnKind::Hv), 398.0);
-        let _ = &mut pa;
+    }
+
+    #[test]
+    fn scheduler_families_resolve_from_policy() {
+        for (policy, family) in [
+            (Policy::edge_edf(), "edge-only"),
+            (Policy::edge_hpf(), "edge-only"),
+            (Policy::cloud_only(), "cloud-only"),
+            (Policy::edf_ec(), "e+c"),
+            (Policy::sjf_ec(), "e+c"),
+            (Policy::dem(), "dems"),
+            (Policy::dems(), "dems"),
+            (Policy::dems_a(), "dems"),
+            (Policy::gems(false), "gems"),
+            (Policy::sota1(), "sota1"),
+            (Policy::sota2(), "sota2"),
+        ] {
+            let p = mkplatform(policy.clone());
+            assert_eq!(
+                p.scheduler().family(),
+                family,
+                "family for {}",
+                policy.kind.name()
+            );
+        }
     }
 }

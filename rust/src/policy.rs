@@ -1,8 +1,15 @@
 //! Scheduling policies: DEMS and its ablations, plus the seven baselines
-//! of §8.2. A [`Policy`] is a declarative description consumed by the
-//! platform state machine in [`crate::platform`].
+//! of §8.2. A [`Policy`] is a declarative description — which heuristic
+//! family runs and with which knobs — that resolves into an executable
+//! [`Scheduler`](crate::sched::Scheduler) via [`Policy::build`]. The
+//! platform substrate ([`crate::platform`]) reads only the mechanism-ish
+//! switches (`use_edge`, `use_cloud`, `edge_jit_drop`,
+//! `cloud_accepts_negative`); everything else is interpreted by the
+//! scheduler implementations in [`crate::sched`].
 
 use crate::queues::EdgeOrder;
+use crate::sched::{CloudOnly, Dems, EcBaseline, EdgeOnly, Gems, Scheduler,
+                   Sota1, Sota2};
 use crate::time::{ms, secs, Micros};
 
 /// Which named algorithm this policy encodes (for reports).
@@ -183,6 +190,26 @@ impl Policy {
         }
     }
 
+    /// Resolve this declarative policy into an executable scheduler.
+    ///
+    /// Every one of the eleven [`PolicyKind`]s maps onto one of the five
+    /// heuristic families in [`crate::sched`]; the family then interprets
+    /// the policy's flags (queue order, migration, stealing, deferral,
+    /// adaptation, GEMS) at its decision hooks.
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self.kind {
+            PolicyKind::EdgeEdf | PolicyKind::EdgeHpf => Box::new(EdgeOnly),
+            PolicyKind::CloudOnly => Box::new(CloudOnly),
+            PolicyKind::EdfEC | PolicyKind::SjfEC => Box::new(EcBaseline),
+            PolicyKind::Dem | PolicyKind::Dems | PolicyKind::DemsA => {
+                Box::new(Dems::new())
+            }
+            PolicyKind::Gems => Box::new(Gems::new()),
+            PolicyKind::Sota1 => Box::new(Sota1),
+            PolicyKind::Sota2 => Box::new(Sota2),
+        }
+    }
+
     /// The eight QoS-study schedulers of Fig. 8/9 in paper order.
     pub fn fig8_lineup() -> Vec<Policy> {
         vec![
@@ -239,6 +266,28 @@ mod tests {
             ["HPF", "EDF", "CLD", "EDF (E+C)", "SJF (E+C)", "SOTA 1",
              "SOTA 2", "DEMS"]
         );
+    }
+
+    #[test]
+    fn every_kind_builds_a_scheduler() {
+        let all = [
+            Policy::edge_edf(),
+            Policy::edge_hpf(),
+            Policy::cloud_only(),
+            Policy::edf_ec(),
+            Policy::sjf_ec(),
+            Policy::dem(),
+            Policy::dems(),
+            Policy::dems_a(),
+            Policy::gems(false),
+            Policy::gems(true),
+            Policy::sota1(),
+            Policy::sota2(),
+        ];
+        for p in all {
+            let s = p.build();
+            assert!(!s.family().is_empty(), "{:?}", p.kind);
+        }
     }
 
     #[test]

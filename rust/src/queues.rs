@@ -309,6 +309,22 @@ impl CloudQueue {
     }
 }
 
+impl CloudEntry {
+    /// Convert a stolen cloud entry into an edge-queue entry (§5.3). The
+    /// priority key/seq are zeroed: the entry bypasses the queue and goes
+    /// straight to the executor.
+    pub fn into_edge_entry(self) -> EdgeEntry {
+        EdgeEntry {
+            abs_deadline: self.abs_deadline,
+            t_edge: self.t_edge,
+            key: 0,
+            seq: 0,
+            gems_rescheduled: self.gems_rescheduled,
+            task: self.task,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

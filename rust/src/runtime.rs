@@ -11,7 +11,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::errors::{Context, Result};
+use crate::{bail, err};
 
 use crate::model::DnnKind;
 
@@ -34,7 +35,7 @@ pub fn parse_manifest(text: &str, dir: &Path) -> Result<Vec<ArtifactSpec>> {
     let mut rest = text;
     while let Some(start) = rest.find('"') {
         let rest2 = &rest[start + 1..];
-        let end = rest2.find('"').ok_or_else(|| anyhow!("bad manifest"))?;
+        let end = rest2.find('"').ok_or_else(|| err!("bad manifest"))?;
         let name = &rest2[..end];
         let after = &rest2[end + 1..];
         // Only treat it as a model entry if it is followed by ": {".
@@ -44,7 +45,7 @@ pub fn parse_manifest(text: &str, dir: &Path) -> Result<Vec<ArtifactSpec>> {
             continue;
         }
         let body_end =
-            trimmed.find('}').ok_or_else(|| anyhow!("bad manifest"))?;
+            trimmed.find('}').ok_or_else(|| err!("bad manifest"))?;
         let body = &trimmed[..body_end];
         if let Some(kind) = DnnKind::from_name(name) {
             let shape = extract_array(body, "input_shape")?;
@@ -78,7 +79,7 @@ fn extract_field<'a>(body: &'a str, key: &str) -> Result<&'a str> {
     let pat = format!("\"{key}\"");
     let at = body
         .find(&pat)
-        .ok_or_else(|| anyhow!("manifest missing {key}"))?;
+        .ok_or_else(|| err!("manifest missing {key}"))?;
     let after = &body[at + pat.len()..];
     Ok(after.trim_start_matches([':', ' ']))
 }
@@ -92,8 +93,8 @@ fn extract_int(body: &str, key: &str) -> Result<i64> {
 
 fn extract_array(body: &str, key: &str) -> Result<Vec<i64>> {
     let v = extract_field(body, key)?;
-    let v = v.strip_prefix('[').ok_or_else(|| anyhow!("expected ["))?;
-    let end = v.find(']').ok_or_else(|| anyhow!("expected ]"))?;
+    let v = v.strip_prefix('[').ok_or_else(|| err!("expected ["))?;
+    let end = v.find(']').ok_or_else(|| err!("expected ]"))?;
     v[..end]
         .split(',')
         .map(|s| s.trim().parse::<i64>().context("bad array item"))
@@ -102,8 +103,8 @@ fn extract_array(body: &str, key: &str) -> Result<Vec<i64>> {
 
 fn extract_string(body: &str, key: &str) -> Result<String> {
     let v = extract_field(body, key)?;
-    let v = v.strip_prefix('"').ok_or_else(|| anyhow!("expected string"))?;
-    let end = v.find('"').ok_or_else(|| anyhow!("unterminated string"))?;
+    let v = v.strip_prefix('"').ok_or_else(|| err!("expected string"))?;
+    let end = v.find('"').ok_or_else(|| err!("unterminated string"))?;
     Ok(v[..end].to_string())
 }
 
@@ -168,7 +169,7 @@ impl Runtime {
             let proto = xla::HloModuleProto::from_text_file(
                 spec.hlo_path
                     .to_str()
-                    .ok_or_else(|| anyhow!("non-utf8 path"))?,
+                    .ok_or_else(|| err!("non-utf8 path"))?,
             )?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client.compile(&comp)?;
@@ -200,7 +201,7 @@ impl Runtime {
         let spec = &self
             .models
             .get(&kind)
-            .ok_or_else(|| anyhow!("model not loaded"))?
+            .ok_or_else(|| err!("model not loaded"))?
             .spec;
         let [_, h, w, c] = spec.input_shape;
         let mut rng = crate::rng::Rng::new(seed);

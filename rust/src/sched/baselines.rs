@@ -1,0 +1,129 @@
+//! The simple baselines of §8.2: edge-only (EDF/HPF), cloud-only and the
+//! two E+C hybrids (EDF/SJF). The queue *ordering* differences live in
+//! [`Policy::edge_order`](crate::policy::Policy); these schedulers only
+//! decide placement.
+
+use crate::sched::{Placement, SchedCtx, Scheduler};
+use crate::task::Task;
+
+/// Edge-only execution (EO-EDF / EO-HPF): every task joins the edge queue
+/// unconditionally — there is no cloud to shed to. Whether stale tasks are
+/// JIT-dropped at the executor is the platform's `edge_jit_drop` switch
+/// (§8.8's field configuration runs them regardless).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeOnly;
+
+impl Scheduler for EdgeOnly {
+    fn family(&self) -> &'static str {
+        "edge-only"
+    }
+
+    fn place(&mut self, _ctx: &mut SchedCtx<'_>, _task: &Task) -> Placement {
+        Placement::Edge
+    }
+}
+
+/// Cloud-only FaaS scheduling (CLD): every task is offered to the cloud;
+/// negative-utility models are dropped there (§8.3's BP behaviour).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CloudOnly;
+
+impl Scheduler for CloudOnly {
+    fn family(&self) -> &'static str {
+        "cloud-only"
+    }
+
+    fn place(&mut self, _ctx: &mut SchedCtx<'_>, _task: &Task) -> Placement {
+        Placement::Cloud
+    }
+}
+
+/// E+C admission (§5.1): edge if self-feasible, else offer to cloud.
+/// Covers both EDF (E+C) and SJF (E+C) — the queue order and whether the
+/// cloud accepts negative-utility tasks come from the policy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EcBaseline;
+
+impl Scheduler for EcBaseline {
+    fn family(&self) -> &'static str {
+        "e+c"
+    }
+
+    fn place(&mut self, ctx: &mut SchedCtx<'_>, task: &Task) -> Placement {
+        let p = ctx.core.profile(task.model);
+        let dl = task.absolute_deadline(p.deadline);
+        let (te, hp) = (p.t_edge, p.hpf_priority());
+        let busy = ctx.core.edge_busy_until(ctx.now);
+        if ctx.core.edge_q.feasible(dl, te, hp, busy) {
+            Placement::Edge
+        } else {
+            Placement::Cloud
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::CloudExecModel;
+    use crate::model::{table1, DnnKind};
+    use crate::net::ConstantNet;
+    use crate::platform::Platform;
+    use crate::policy::Policy;
+    use crate::sim::EventQueue;
+    use crate::task::VideoSegment;
+    use crate::time::ms;
+
+    fn cloud() -> CloudExecModel {
+        CloudExecModel::new(Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 25.0e6,
+        }))
+    }
+
+    fn task(p: &mut Platform, kind: DnnKind) -> Task {
+        let id = p.fresh_task_id();
+        Task {
+            id,
+            model: kind,
+            segment: VideoSegment { id, drone: 0, created_at: 0,
+                                    bytes: 38_000 },
+        }
+    }
+
+    #[test]
+    fn cloud_only_never_touches_the_edge_queue() {
+        let mut p = Platform::new(Policy::cloud_only(), table1(), cloud(), 1);
+        let mut q = EventQueue::new();
+        let t = task(&mut p, DnnKind::Hv);
+        p.submit_task(0, t, &mut q);
+        assert_eq!(p.edge_queue_len(), 0);
+        assert_eq!(p.cloud_queue_len(), 1);
+    }
+
+    #[test]
+    fn edge_only_queues_unconditionally() {
+        let mut p = Platform::new(Policy::edge_edf(), table1(), cloud(), 1);
+        let mut q = EventQueue::new();
+        for _ in 0..5 {
+            let t = task(&mut p, DnnKind::Deo);
+            p.submit_task(0, t, &mut q);
+        }
+        // One executing + four queued; nothing offloaded or dropped yet.
+        assert_eq!(p.edge_queue_len(), 4);
+        assert_eq!(p.cloud_queue_len(), 0);
+        assert_eq!(p.metrics.generated(), 5);
+    }
+
+    #[test]
+    fn ec_offloads_when_infeasible() {
+        let mut p = Platform::new(Policy::edf_ec(), table1(), cloud(), 1);
+        let mut q = EventQueue::new();
+        let deo = task(&mut p, DnnKind::Deo);
+        p.submit_task(0, deo, &mut q); // occupies the executor for ~739 ms
+        let hv = task(&mut p, DnnKind::Hv);
+        p.submit_task(0, hv, &mut q); // 650 ms deadline behind the DEO
+        assert_eq!(p.edge_queue_len(), 0);
+        assert_eq!(p.cloud_queue_len(), 1, "HV must offload");
+    }
+}

@@ -1,0 +1,147 @@
+//! The DEM / DEMS / DEMS-A family (§5): migration scoring on admission,
+//! deferred cloud triggers with work stealing, and sliding-window
+//! adaptation of the expected cloud durations. Which rungs of the ladder
+//! are active comes from the declarative [`Policy`](crate::policy::Policy)
+//! flags (`migration`, `stealing`, `defer_cloud`, `adaptive`).
+
+use crate::adapt::ModelAdapt;
+use crate::model::DnnKind;
+use crate::platform::Core;
+use crate::sched::{dem_admit, steal_candidate, CloudReport, SchedCtx,
+                   Scheduler};
+use crate::task::Task;
+use crate::time::Micros;
+
+/// §5.4 per-model expected-cloud-duration estimator, shared by DEMS-A and
+/// GEMS-A. Inactive (static Table-1 t̂) unless the policy is adaptive.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct CloudEstimator {
+    kinds: Vec<DnnKind>,
+    adapt: Vec<ModelAdapt>,
+}
+
+impl CloudEstimator {
+    pub(crate) fn bind(&mut self, core: &Core) {
+        self.kinds = core.models.iter().map(|m| m.kind).collect();
+        self.adapt = core
+            .models
+            .iter()
+            .map(|m| ModelAdapt::new(m.t_cloud, core.policy.adapt_window))
+            .collect();
+    }
+
+    fn idx(&self, kind: DnnKind) -> Option<usize> {
+        self.kinds.iter().position(|&k| k == kind)
+    }
+
+    pub(crate) fn expected(&self, core: &Core, kind: DnnKind) -> Micros {
+        if core.policy.adaptive {
+            if let Some(i) = self.idx(kind) {
+                return self.adapt[i].expected();
+            }
+        }
+        core.profile(kind).t_cloud
+    }
+
+    pub(crate) fn observe(&mut self, core: &Core, kind: DnnKind,
+                          duration: Micros) {
+        if core.policy.adaptive {
+            if let Some(i) = self.idx(kind) {
+                self.adapt[i].observe(duration, core.policy.adapt_epsilon);
+            }
+        }
+    }
+
+    pub(crate) fn on_skip(&mut self, core: &Core, now: Micros,
+                          kind: DnnKind) {
+        if core.policy.adaptive {
+            if let Some(i) = self.idx(kind) {
+                self.adapt[i].on_skip(now, core.policy.cooling_period);
+            }
+        }
+    }
+}
+
+/// DEM, DEMS and DEMS-A (§5.2–§5.4).
+#[derive(Clone, Debug, Default)]
+pub struct Dems {
+    pub(crate) est: CloudEstimator,
+}
+
+impl Dems {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for Dems {
+    fn family(&self) -> &'static str {
+        "dems"
+    }
+
+    fn bind(&mut self, core: &Core) {
+        self.est.bind(core);
+    }
+
+    fn admit(&mut self, ctx: &mut SchedCtx<'_>, task: Task) {
+        dem_admit(self, ctx, task);
+    }
+
+    fn on_edge_idle(&mut self, ctx: &mut SchedCtx<'_>) -> Option<usize> {
+        steal_candidate(ctx.core, ctx.now)
+    }
+
+    fn expected_cloud(&self, core: &Core, kind: DnnKind) -> Micros {
+        self.est.expected(core, kind)
+    }
+
+    fn on_cloud_skip(&mut self, core: &Core, now: Micros, kind: DnnKind) {
+        self.est.on_skip(core, now, kind);
+    }
+
+    fn on_cloud_report(&mut self, ctx: &mut SchedCtx<'_>,
+                       report: &CloudReport) {
+        self.est.observe(ctx.core, report.kind, report.duration);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::CloudExecModel;
+    use crate::model::table1;
+    use crate::net::ConstantNet;
+    use crate::policy::Policy;
+    use crate::time::ms;
+
+    fn core(policy: Policy) -> Core {
+        let cloud = CloudExecModel::new(Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 25.0e6,
+        }));
+        Core::new(policy, table1(), cloud, 1)
+    }
+
+    #[test]
+    fn estimator_static_unless_adaptive() {
+        let c = core(Policy::dems());
+        let mut est = CloudEstimator::default();
+        est.bind(&c);
+        // Observations are ignored while the policy is non-adaptive.
+        est.observe(&c, DnnKind::Hv, ms(2_000));
+        assert_eq!(est.expected(&c, DnnKind::Hv), ms(398));
+    }
+
+    #[test]
+    fn estimator_adapts_upward_under_dems_a() {
+        let c = core(Policy::dems_a());
+        let mut est = CloudEstimator::default();
+        est.bind(&c);
+        for _ in 0..c.policy.adapt_window {
+            est.observe(&c, DnnKind::Hv, ms(1_000));
+        }
+        assert_eq!(est.expected(&c, DnnKind::Hv), ms(1_000));
+        // And the other models stay at their static defaults.
+        assert_eq!(est.expected(&c, DnnKind::Deo), ms(832));
+    }
+}

@@ -1,0 +1,106 @@
+//! GEMS(-A) — DEMS plus the QoE window monitor of Algorithm 1 (§6).
+//!
+//! Admission, stealing and adaptation are exactly the DEMS family's
+//! (shared via [`dem_admit`] / [`steal_candidate`] / the estimator); the
+//! addition is the per-completion hook: when a model's incremental window
+//! completion rate α̂ falls behind its target α, the scheduler greedily
+//! reschedules that model's pending edge tasks to the cloud (lines 8–14).
+
+use crate::model::DnnKind;
+use crate::platform::Core;
+use crate::queues::CloudEntry;
+use crate::sched::dems::CloudEstimator;
+use crate::sched::{dem_admit, steal_candidate, CloudReport, SchedCtx,
+                   Scheduler};
+use crate::sim::Event;
+use crate::task::Task;
+use crate::time::Micros;
+
+/// GEMS (and GEMS-A when the policy is adaptive).
+#[derive(Clone, Debug, Default)]
+pub struct Gems {
+    est: CloudEstimator,
+}
+
+impl Gems {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for Gems {
+    fn family(&self) -> &'static str {
+        "gems"
+    }
+
+    fn bind(&mut self, core: &Core) {
+        self.est.bind(core);
+    }
+
+    fn admit(&mut self, ctx: &mut SchedCtx<'_>, task: Task) {
+        dem_admit(self, ctx, task);
+    }
+
+    fn on_edge_idle(&mut self, ctx: &mut SchedCtx<'_>) -> Option<usize> {
+        steal_candidate(ctx.core, ctx.now)
+    }
+
+    fn expected_cloud(&self, core: &Core, kind: DnnKind) -> Micros {
+        self.est.expected(core, kind)
+    }
+
+    fn on_cloud_skip(&mut self, core: &Core, now: Micros, kind: DnnKind) {
+        self.est.on_skip(core, now, kind);
+    }
+
+    fn on_cloud_report(&mut self, ctx: &mut SchedCtx<'_>,
+                       report: &CloudReport) {
+        self.est.observe(ctx.core, report.kind, report.duration);
+    }
+
+    /// Algorithm 1, per-completion trigger: the core has already updated
+    /// α̂; when the model falls behind, greedily reschedule its pending
+    /// edge tasks to the cloud (lines 8–14).
+    fn on_task_done(&mut self, ctx: &mut SchedCtx<'_>, kind: DnnKind,
+                    _success: bool) {
+        let now = ctx.now;
+        let i = ctx.core.idx(kind);
+        if !ctx.core.qoe[i].enabled() {
+            return;
+        }
+        if !(ctx.core.policy.gems && ctx.core.qoe[i].falling_behind()) {
+            return;
+        }
+        let p = ctx.core.profile(kind).clone();
+        if p.util_cloud() <= 0.0 {
+            return; // GEMS only helps via positive-utility cloud runs (§6)
+        }
+        let t_hat = self.est.expected(ctx.core, kind);
+        let pending = ctx.core.edge_q.tasks_of_model(kind);
+        for (_, tid) in pending {
+            // Re-find by id: earlier removals shift indices.
+            let Some(abs_deadline) = ctx
+                .core
+                .edge_q
+                .iter()
+                .find(|e| e.task.id == tid)
+                .map(|e| e.abs_deadline)
+            else {
+                continue;
+            };
+            if now + t_hat <= abs_deadline {
+                let e = ctx.core.edge_q.remove_task(tid).unwrap();
+                ctx.core.cloud_q.insert(CloudEntry {
+                    task: e.task,
+                    abs_deadline: e.abs_deadline,
+                    t_cloud: t_hat,
+                    t_edge: e.t_edge,
+                    trigger: now,
+                    negative_utility: false,
+                    gems_rescheduled: true,
+                });
+                ctx.q.push(now, Event::CloudTrigger);
+            }
+        }
+    }
+}

@@ -1,0 +1,382 @@
+//! Pluggable scheduling heuristics — the paper's *policy* layer, split out
+//! of the platform mechanism.
+//!
+//! The paper contributes a family of heuristics (DEMS → DEMS-A → GEMS plus
+//! seven baselines, §5–§6). Each family implements the [`Scheduler`] trait
+//! against the mechanism substrate ([`Core`]): queues, executors and
+//! metrics stay in [`crate::platform`], while every decision — admission,
+//! migration scoring, deferral, stealing, adaptation, the QoE monitor —
+//! lives here. [`Policy::build`](crate::policy::Policy::build) resolves a
+//! declarative [`Policy`](crate::policy::Policy) into a boxed scheduler.
+//!
+//! Decision hooks and the paper sections they implement:
+//!
+//! | hook               | fires when                          | paper |
+//! |--------------------|-------------------------------------|-------|
+//! | [`Scheduler::admit`] / [`Scheduler::place`] | a task arrives | §5.1–§5.2 |
+//! | [`Scheduler::on_edge_idle`] | the edge executor picks next work | §5.3 |
+//! | [`Scheduler::on_cloud_report`] | a FaaS invocation finished | §5.4 |
+//! | [`Scheduler::on_cloud_skip`] | a task was skipped for the cloud | §5.4 |
+//! | [`Scheduler::on_task_done`] | any task finalized | §6 Alg. 1 l. 3–14 |
+//! | [`Scheduler::on_window_close`] | a QoE window tumbled | §6 Alg. 1 l. 16–21 |
+//!
+//! Families:
+//!
+//! * [`baselines`] — EO(EDF/HPF), CLD, E+C (EDF/SJF): [`EdgeOnly`],
+//!   [`CloudOnly`], [`EcBaseline`].
+//! * [`dems`] — DEM / DEMS / DEMS-A: [`Dems`].
+//! * [`gems`] — GEMS(-A): [`Gems`].
+//! * [`sota`] — the two SOTA baselines: [`Sota1`], [`Sota2`].
+//! * [`monolith`] — [`FlagBranchScheduler`], a statically dispatched
+//!   flag-branch router over all families; the dispatch-parity reference
+//!   and benchmark baseline for `Box<dyn Scheduler>`.
+
+pub mod baselines;
+pub mod dems;
+pub mod gems;
+pub mod monolith;
+pub mod sota;
+
+pub use baselines::{CloudOnly, EcBaseline, EdgeOnly};
+pub use dems::Dems;
+pub use gems::Gems;
+pub use monolith::FlagBranchScheduler;
+pub use sota::{Sota1, Sota2};
+
+use crate::model::DnnKind;
+use crate::platform::Core;
+use crate::queues::CloudEntry;
+use crate::sim::EventQueue;
+use crate::task::{DropReason, Task};
+use crate::time::Micros;
+
+/// Everything a scheduler may touch while making a decision: the mechanism
+/// core, the event queue (for trigger events) and the current virtual time.
+pub struct SchedCtx<'a> {
+    pub now: Micros,
+    pub core: &'a mut Core,
+    pub q: &'a mut EventQueue,
+}
+
+/// A completed FaaS invocation, reported to the scheduler before the
+/// outcome is finalized (so §5.4 adaptation sees the sample first).
+#[derive(Clone, Copy, Debug)]
+pub struct CloudReport {
+    pub kind: DnnKind,
+    /// Actual end-to-end duration (includes the timeout value when
+    /// `timed_out`).
+    pub duration: Micros,
+    pub timed_out: bool,
+    pub success: bool,
+}
+
+/// Where a simple (non-mutating) admission decision sends a task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Insert into the edge queue under the profile deadline.
+    Edge,
+    /// Insert into the edge queue under an explicit absolute deadline
+    /// (SOTA 1's stretched deadlines).
+    EdgeWithDeadline(Micros),
+    /// Offer to the cloud path (deferral and utility rules apply).
+    Cloud,
+    /// Refuse outright.
+    Drop(DropReason),
+}
+
+/// A scheduling heuristic. Implementations are deterministic and
+/// side-effect-free outside the [`SchedCtx`] they are handed.
+///
+/// Simple heuristics implement [`place`](Scheduler::place) and inherit the
+/// default [`admit`](Scheduler::admit); heuristics that mutate the queues
+/// during admission (DEM's migration) override `admit` wholesale.
+///
+/// `Send` is a supertrait so the real-time serving lane can own a boxed
+/// scheduler on its executor thread.
+pub trait Scheduler: Send {
+    /// Short family tag for reports and logs ("dems", "e+c", …).
+    fn family(&self) -> &'static str;
+
+    /// One-time hookup to a freshly built core (e.g. sizing per-model
+    /// adaptation state). Default: nothing.
+    fn bind(&mut self, _core: &Core) {}
+
+    /// Pure placement decision for one arriving task (§5.1). Only consulted
+    /// by the default [`admit`](Scheduler::admit).
+    fn place(&mut self, _ctx: &mut SchedCtx<'_>, _task: &Task) -> Placement {
+        Placement::Edge
+    }
+
+    /// Admission (§5.1–§5.2): route the task to the edge queue, the cloud
+    /// path or a drop. The platform calls `try_start_edge` afterwards.
+    fn admit(&mut self, ctx: &mut SchedCtx<'_>, task: Task) {
+        match self.place(ctx, &task) {
+            Placement::Edge => {
+                let (dl, te, hp) = {
+                    let p = ctx.core.profile(task.model);
+                    (task.absolute_deadline(p.deadline), p.t_edge,
+                     p.hpf_priority())
+                };
+                ctx.core.edge_q.insert(task, dl, te, hp);
+            }
+            Placement::EdgeWithDeadline(dl) => {
+                let (te, hp) = {
+                    let p = ctx.core.profile(task.model);
+                    (p.t_edge, p.hpf_priority())
+                };
+                ctx.core.edge_q.insert(task, dl, te, hp);
+            }
+            Placement::Cloud => {
+                self.offer_cloud(ctx, task, false);
+            }
+            Placement::Drop(reason) => {
+                ctx.core.drop_task(ctx.now, task, reason);
+                self.drain_done(ctx);
+            }
+        }
+    }
+
+    /// The edge executor is idle and about to pick work: return the index
+    /// of a cloud-queue entry to steal (§5.3), or `None` to run the edge
+    /// queue head.
+    fn on_edge_idle(&mut self, _ctx: &mut SchedCtx<'_>) -> Option<usize> {
+        None
+    }
+
+    /// Expected cloud duration t̂ᵢ used for admission/JIT/trigger math —
+    /// the static Table-1 value unless the heuristic adapts it (§5.4).
+    fn expected_cloud(&self, core: &Core, kind: DnnKind) -> Micros {
+        core.profile(kind).t_cloud
+    }
+
+    /// A task of `kind` was skipped for the cloud because the expected
+    /// duration made it infeasible (the §5.4 cooling-reset signal).
+    fn on_cloud_skip(&mut self, _core: &Core, _now: Micros,
+                     _kind: DnnKind) {
+    }
+
+    /// A FaaS invocation finished (fires before the outcome is finalized).
+    fn on_cloud_report(&mut self, _ctx: &mut SchedCtx<'_>,
+                       _report: &CloudReport) {
+    }
+
+    /// A task of `kind` was finalized with `success` (Alg. 1 lines 3–14;
+    /// the window counters have already been updated by the core).
+    fn on_task_done(&mut self, _ctx: &mut SchedCtx<'_>, _kind: DnnKind,
+                    _success: bool) {
+    }
+
+    /// A model's tumbling QoE window closed (after the core accrued the
+    /// window's QoE utility).
+    fn on_window_close(&mut self, _ctx: &mut SchedCtx<'_>,
+                       _model_idx: usize) {
+    }
+
+    // ------------------------------------------------- provided machinery
+
+    /// Deliver buffered task-done reports (from finalizes performed inside
+    /// core or scheduler code) to [`on_task_done`](Scheduler::on_task_done).
+    /// Called by the platform right after every finalize point, and by the
+    /// provided helpers below, so hook ordering matches the pre-split
+    /// monolith exactly.
+    fn drain_done(&mut self, ctx: &mut SchedCtx<'_>) {
+        while let Some((kind, success)) = ctx.core.pop_done() {
+            self.on_task_done(ctx, kind, success);
+        }
+    }
+
+    /// Offer a task to the cloud scheduler (§5.1/§5.3). Returns true if it
+    /// was queued; otherwise its drop has been finalized.
+    ///
+    /// Shared across every hybrid family: JIT-infeasible tasks are dropped
+    /// (with the §5.4 skip signal), negative-utility tasks are either kept
+    /// as steal candidates until their latest edge start (§5.3, when the
+    /// policy defers and steals) or dropped, and positive-utility tasks get
+    /// a deferred trigger under DEMS. The deferral headroom is
+    /// 1.5·t̂ + margin: t̂ is a p95, so leaving only t̂ of runway turns every
+    /// above-p95 draw (and any transfer contention from synchronized
+    /// triggers) into a miss billed at κ̂. In practice this defers only
+    /// long-deadline/short-t̂ tasks — the same population §5.3 observes
+    /// being stolen.
+    fn offer_cloud(&mut self, ctx: &mut SchedCtx<'_>, task: Task,
+                   gems: bool) -> bool {
+        if !ctx.core.policy.use_cloud {
+            ctx.core.drop_task(ctx.now, task, DropReason::Infeasible);
+            self.drain_done(ctx);
+            return false;
+        }
+        let p = ctx.core.profile(task.model).clone();
+        let dl = task.absolute_deadline(p.deadline);
+        let t_hat = self.expected_cloud(ctx.core, task.model);
+        if ctx.now + t_hat > dl {
+            self.on_cloud_skip(ctx.core, ctx.now, task.model);
+            ctx.core.drop_task(ctx.now, task, DropReason::Infeasible);
+            self.drain_done(ctx);
+            return false;
+        }
+        let negative = p.util_cloud() <= 0.0;
+        if negative && !ctx.core.policy.cloud_accepts_negative {
+            if ctx.core.policy.defer_cloud && ctx.core.policy.stealing {
+                // §5.3: keep as a steal candidate until the latest time it
+                // could still start on the edge.
+                let trigger = dl.saturating_sub(p.t_edge).max(ctx.now);
+                let entry = CloudEntry {
+                    task,
+                    abs_deadline: dl,
+                    t_cloud: t_hat,
+                    t_edge: p.t_edge,
+                    trigger,
+                    negative_utility: true,
+                    gems_rescheduled: gems,
+                };
+                ctx.core.push_cloud(entry, ctx.q);
+                return true;
+            }
+            ctx.core.drop_task(ctx.now, task,
+                               DropReason::NegativeCloudUtility);
+            self.drain_done(ctx);
+            return false;
+        }
+        // Positive-utility path: deferred trigger under DEMS, immediate
+        // dispatch otherwise (and always immediate for GEMS reschedules).
+        let trigger = if ctx.core.policy.defer_cloud && !gems {
+            dl.saturating_sub(
+                t_hat + t_hat / 2 + ctx.core.policy.safety_margin,
+            )
+            .max(ctx.now)
+        } else {
+            ctx.now
+        };
+        let entry = CloudEntry {
+            task,
+            abs_deadline: dl,
+            t_cloud: t_hat,
+            t_edge: p.t_edge,
+            trigger,
+            negative_utility: negative,
+            gems_rescheduled: gems,
+        };
+        ctx.core.push_cloud(entry, ctx.q);
+        true
+    }
+}
+
+/// Forward the trait through a box so `Platform<Box<dyn Scheduler>>` (the
+/// default) works. Only the required/overridable hooks are forwarded; the
+/// provided machinery (`offer_cloud`, `drain_done`) composes through the
+/// forwarded primitives.
+impl Scheduler for Box<dyn Scheduler> {
+    fn family(&self) -> &'static str {
+        (**self).family()
+    }
+
+    fn bind(&mut self, core: &Core) {
+        (**self).bind(core)
+    }
+
+    fn place(&mut self, ctx: &mut SchedCtx<'_>, task: &Task) -> Placement {
+        (**self).place(ctx, task)
+    }
+
+    fn admit(&mut self, ctx: &mut SchedCtx<'_>, task: Task) {
+        (**self).admit(ctx, task)
+    }
+
+    fn on_edge_idle(&mut self, ctx: &mut SchedCtx<'_>) -> Option<usize> {
+        (**self).on_edge_idle(ctx)
+    }
+
+    fn expected_cloud(&self, core: &Core, kind: DnnKind) -> Micros {
+        (**self).expected_cloud(core, kind)
+    }
+
+    fn on_cloud_skip(&mut self, core: &Core, now: Micros, kind: DnnKind) {
+        (**self).on_cloud_skip(core, now, kind)
+    }
+
+    fn on_cloud_report(&mut self, ctx: &mut SchedCtx<'_>,
+                       report: &CloudReport) {
+        (**self).on_cloud_report(ctx, report)
+    }
+
+    fn on_task_done(&mut self, ctx: &mut SchedCtx<'_>, kind: DnnKind,
+                    success: bool) {
+        (**self).on_task_done(ctx, kind, success)
+    }
+
+    fn on_window_close(&mut self, ctx: &mut SchedCtx<'_>,
+                       model_idx: usize) {
+        (**self).on_window_close(ctx, model_idx)
+    }
+}
+
+/// §5.3 steal-candidate selection shared by DEMS and GEMS: only when the
+/// policy steals, only when the queued tasks leave more slack than the
+/// smallest model's edge time, best candidate by (negative-utility first,
+/// then steal rank).
+pub(crate) fn steal_candidate(core: &Core, now: Micros) -> Option<usize> {
+    if !core.policy.stealing {
+        return None;
+    }
+    let slack = core.edge_min_slack(now);
+    if slack <= core.min_t_edge as i64 {
+        return None;
+    }
+    let models = &core.models;
+    core.cloud_q.best_steal(now, slack, |e| {
+        models
+            .iter()
+            .find(|m| m.kind == e.task.model)
+            .map(|m| m.steal_rank())
+            .unwrap_or(f64::MIN)
+    })
+}
+
+/// DEM/DEMS admission with migration scoring (§5.2, Fig. 5), shared by the
+/// DEMS and GEMS families. Generic over the scheduler so the cloud offers
+/// run through the caller's own `expected_cloud` / skip hooks.
+pub(crate) fn dem_admit<S: Scheduler + ?Sized>(s: &mut S,
+                                               ctx: &mut SchedCtx<'_>,
+                                               task: Task) {
+    let p = ctx.core.profile(task.model).clone();
+    let dl = task.absolute_deadline(p.deadline);
+    let busy = ctx.core.edge_busy_until(ctx.now);
+    let probe =
+        ctx.core.edge_q.probe_insert(dl, p.t_edge, p.hpf_priority(), busy);
+    if probe.completion > dl {
+        // Scenario "own deadline missed": redirect to cloud.
+        s.offer_cloud(ctx, task, false);
+        return;
+    }
+    if !probe.victims.is_empty() && ctx.core.policy.migration {
+        // Eqn 3 scores for the victims and the incoming task.
+        let t_hat_in = s.expected_cloud(ctx.core, task.model);
+        let s_in = p.migration_score(ctx.now + t_hat_in <= dl);
+        let mut s_victims = 0.0;
+        for &vi in &probe.victims {
+            let (vmodel, vcreated) = {
+                let e = &ctx.core.edge_q.get(vi).unwrap().task;
+                (e.model, e.segment.created_at)
+            };
+            let vp_deadline = ctx.core.profile(vmodel).deadline;
+            let t_hat = s.expected_cloud(ctx.core, vmodel);
+            let feasible = ctx.now + t_hat <= vcreated + vp_deadline;
+            s_victims += ctx.core.profile(vmodel).migration_score(feasible);
+        }
+        if s_victims < s_in {
+            // Migrate the victims (rear-first so indices stay valid),
+            // then insert the incoming task (Fig. 5, scenario 2).
+            for &vi in probe.victims.iter().rev() {
+                let victim = ctx.core.edge_q.remove_at(vi);
+                s.offer_cloud(ctx, victim.task, false);
+            }
+            ctx.core.edge_q.insert(task, dl, p.t_edge, p.hpf_priority());
+        } else {
+            // Retain existing tasks; incoming goes to the cloud
+            // (Fig. 5, scenario 3).
+            s.offer_cloud(ctx, task, false);
+        }
+    } else {
+        ctx.core.edge_q.insert(task, dl, p.t_edge, p.hpf_priority());
+    }
+}

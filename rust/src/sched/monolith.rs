@@ -1,0 +1,115 @@
+//! Statically dispatched flag-branch scheduler — the shape of the
+//! pre-split `platform.rs` monolith, kept as (a) the dispatch-parity
+//! reference (`tests/paper_shape.rs` asserts it produces bit-identical
+//! metrics to the `Box<dyn Scheduler>` path for every `PolicyKind`) and
+//! (b) the benchmark baseline that bounds the cost of dynamic dispatch on
+//! the submit/steal hot path (`benches/scheduler.rs`).
+//!
+//! Every hook routes on `core.policy.kind` with a plain `match` — no
+//! vtable — into the same family implementations `Policy::build` boxes.
+
+use crate::model::DnnKind;
+use crate::platform::Core;
+use crate::policy::PolicyKind;
+use crate::sched::{CloudOnly, CloudReport, Dems, EcBaseline, EdgeOnly,
+                   Gems, Placement, SchedCtx, Scheduler, Sota1, Sota2};
+use crate::task::Task;
+use crate::time::Micros;
+
+/// One instance of every heuristic family, routed per call by the policy
+/// kind (the pre-refactor `if policy.flag` shape, minus the spaghetti).
+#[derive(Default)]
+pub struct FlagBranchScheduler {
+    edge_only: EdgeOnly,
+    cloud_only: CloudOnly,
+    ec: EcBaseline,
+    dems: Dems,
+    gems: Gems,
+    sota1: Sota1,
+    sota2: Sota2,
+}
+
+impl FlagBranchScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Route one hook invocation by policy kind. `$kind` must be read out of
+/// the core *before* the mutable contexts are built.
+macro_rules! route {
+    ($self:ident, $kind:expr, $m:ident ( $($a:expr),* )) => {
+        match $kind {
+            PolicyKind::EdgeEdf | PolicyKind::EdgeHpf => {
+                $self.edge_only.$m($($a),*)
+            }
+            PolicyKind::CloudOnly => $self.cloud_only.$m($($a),*),
+            PolicyKind::EdfEC | PolicyKind::SjfEC => $self.ec.$m($($a),*),
+            PolicyKind::Dem | PolicyKind::Dems | PolicyKind::DemsA => {
+                $self.dems.$m($($a),*)
+            }
+            PolicyKind::Gems => $self.gems.$m($($a),*),
+            PolicyKind::Sota1 => $self.sota1.$m($($a),*),
+            PolicyKind::Sota2 => $self.sota2.$m($($a),*),
+        }
+    };
+}
+
+impl Scheduler for FlagBranchScheduler {
+    fn family(&self) -> &'static str {
+        "flag-branch"
+    }
+
+    fn bind(&mut self, core: &Core) {
+        // Bind every family: only the active one is routed to afterwards,
+        // and binding is cheap.
+        self.edge_only.bind(core);
+        self.cloud_only.bind(core);
+        self.ec.bind(core);
+        self.dems.bind(core);
+        self.gems.bind(core);
+        self.sota1.bind(core);
+        self.sota2.bind(core);
+    }
+
+    fn place(&mut self, ctx: &mut SchedCtx<'_>, task: &Task) -> Placement {
+        let kind = ctx.core.policy.kind;
+        route!(self, kind, place(ctx, task))
+    }
+
+    fn admit(&mut self, ctx: &mut SchedCtx<'_>, task: Task) {
+        let kind = ctx.core.policy.kind;
+        route!(self, kind, admit(ctx, task))
+    }
+
+    fn on_edge_idle(&mut self, ctx: &mut SchedCtx<'_>) -> Option<usize> {
+        let kind = ctx.core.policy.kind;
+        route!(self, kind, on_edge_idle(ctx))
+    }
+
+    fn expected_cloud(&self, core: &Core, model: DnnKind) -> Micros {
+        route!(self, core.policy.kind, expected_cloud(core, model))
+    }
+
+    fn on_cloud_skip(&mut self, core: &Core, now: Micros, model: DnnKind) {
+        route!(self, core.policy.kind, on_cloud_skip(core, now, model))
+    }
+
+    fn on_cloud_report(&mut self, ctx: &mut SchedCtx<'_>,
+                       report: &CloudReport) {
+        let kind = ctx.core.policy.kind;
+        route!(self, kind, on_cloud_report(ctx, report))
+    }
+
+    fn on_task_done(&mut self, ctx: &mut SchedCtx<'_>, model: DnnKind,
+                    success: bool) {
+        let kind = ctx.core.policy.kind;
+        route!(self, kind, on_task_done(ctx, model, success))
+    }
+
+    fn on_window_close(&mut self, ctx: &mut SchedCtx<'_>,
+                       model_idx: usize) {
+        let kind = ctx.core.policy.kind;
+        route!(self, kind, on_window_close(ctx, model_idx))
+    }
+}

@@ -1,0 +1,78 @@
+//! The two state-of-the-art baselines of §8.2.
+
+use crate::sched::{Placement, SchedCtx, Scheduler};
+use crate::task::Task;
+use crate::time::Micros;
+
+/// SOTA 1 (Kalmia + D3 hybrid): urgent tasks never wait for a stretched
+/// deadline; non-urgent tasks get a one-shot 10% deadline extension before
+/// being offloaded.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sota1;
+
+impl Scheduler for Sota1 {
+    fn family(&self) -> &'static str {
+        "sota1"
+    }
+
+    fn place(&mut self, ctx: &mut SchedCtx<'_>, task: &Task) -> Placement {
+        let p = ctx.core.profile(task.model).clone();
+        let dl = task.absolute_deadline(p.deadline);
+        let busy = ctx.core.edge_busy_until(ctx.now);
+        if ctx.core.edge_q.feasible(dl, p.t_edge, p.hpf_priority(), busy) {
+            return Placement::Edge;
+        }
+        let urgent = p.deadline < ctx.core.policy.sota1_urgent_below;
+        if !urgent {
+            let stretched = dl
+                + (p.deadline as f64 * ctx.core.policy.sota1_extension)
+                    as Micros;
+            if ctx
+                .core
+                .edge_q
+                .feasible(stretched, p.t_edge, p.hpf_priority(), busy)
+            {
+                return Placement::EdgeWithDeadline(stretched);
+            }
+        }
+        Placement::Cloud
+    }
+}
+
+/// SOTA 2 (Dedas-style): exec-time priority; reject to cloud when more
+/// than one queued task would miss its deadline, otherwise keep the
+/// schedule with the lower average completion time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sota2;
+
+impl Scheduler for Sota2 {
+    fn family(&self) -> &'static str {
+        "sota2"
+    }
+
+    fn place(&mut self, ctx: &mut SchedCtx<'_>, task: &Task) -> Placement {
+        let p = ctx.core.profile(task.model).clone();
+        let dl = task.absolute_deadline(p.deadline);
+        let busy = ctx.core.edge_busy_until(ctx.now);
+        let probe = ctx
+            .core
+            .edge_q
+            .probe_insert(dl, p.t_edge, p.hpf_priority(), busy);
+        let accept = if probe.completion > dl || probe.victims.len() > 1 {
+            false
+        } else if probe.victims.is_empty() {
+            true
+        } else {
+            // One victim: compare ACT of the two candidate schedules.
+            let act_without = ctx.core.edge_act(busy, None);
+            let act_with =
+                ctx.core.edge_act(busy, Some((probe.pos, p.t_edge)));
+            act_with <= act_without + p.t_edge as f64
+        };
+        if accept {
+            Placement::Edge
+        } else {
+            Placement::Cloud
+        }
+    }
+}

@@ -8,7 +8,20 @@
 //! compiled artifacts), and a results collector that runs the VIP app's
 //! post-processing (PD offsets, pose classes, distances).
 //!
-//! Unlike [`crate::sim`] (virtual time, sampled durations — used for the
+//! Since the scheduler-API redesign the edge lane makes *every* decision
+//! through the same [`Scheduler`](crate::sched::Scheduler) hooks the
+//! simulation uses: arrivals go through `admit` against a live
+//! [`Core`](crate::platform::Core) (whose wall-clock profiles are
+//! calibrated at startup), deferred cloud entries are forwarded to the
+//! FaaS pool when their trigger time arrives, an idle executor asks
+//! `on_edge_idle` for a steal before popping its queue, and FaaS workers
+//! report completed durations back to `on_cloud_report`, so `--policy
+//! dems-a` genuinely adapts its expected cloud times to observed wall
+//! clock. One caveat: the self-calibrated live profiles carry no QoE
+//! targets (`qoe_rate = 0`), so GEMS' window monitor is inert here and
+//! `--policy gems` behaves as DEMS plus the shared hooks.
+//!
+//! Unlike the DES engine (virtual time, sampled durations — used for the
 //! paper-figure reproductions), this path measures *wall-clock* PJRT
 //! latencies of the L1/L2 artifacts, self-calibrates deadlines from them,
 //! and reports serving latency/throughput — the end-to-end proof that all
@@ -19,19 +32,27 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
-use crate::metrics::percentile;
+use crate::errors::Result;
+use crate::exec::CloudExecModel;
+use crate::metrics::{percentile, Metrics};
 use crate::model::{DnnKind, ModelProfile};
 use crate::nav::{bbox_offset, classify_pose};
-use crate::queues::{EdgeOrder, EdgeQueue};
+use crate::net::ConstantNet;
+use crate::platform::Core;
+use crate::policy::Policy;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
+use crate::sched::{CloudReport, SchedCtx, Scheduler};
+use crate::sim::EventQueue;
 use crate::task::{Task, VideoSegment};
-use crate::time::{ms_f, Micros};
+use crate::time::{ms, ms_f, Micros};
 
 /// Serving configuration.
 pub struct ServeConfig {
+    /// Scheduling policy driving the edge lane (resolved via
+    /// [`Policy::build`]); defaults to the EDF E+C hybrid the original
+    /// serving loop hard-coded.
+    pub policy: Policy,
     /// Segments per second per drone.
     pub rate: f64,
     pub drones: u32,
@@ -53,6 +74,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
+            policy: Policy::edf_ec(),
             rate: 2.0,
             drones: 2,
             duration: Duration::from_secs(10),
@@ -72,6 +94,9 @@ pub struct ModelServeStats {
     pub missed: u64,
     pub dropped: u64,
     pub on_cloud: u64,
+    /// Completions executed on the edge after being stolen back from the
+    /// deferred cloud queue (§5.3; only under stealing policies).
+    pub stolen: u64,
     pub latency_ms: Vec<f64>,
     /// Post-processing wall-clock (Fig. 17b analogue), microseconds.
     pub postproc_us: Vec<f64>,
@@ -109,6 +134,12 @@ struct Shared {
     stats: Mutex<Vec<(DnnKind, ModelServeStats)>>,
     stop: AtomicBool,
     generated: AtomicU64,
+}
+
+fn bump(shared: &Shared, kind: DnnKind,
+        f: impl FnOnce(&mut ModelServeStats)) {
+    let mut stats = shared.stats.lock().unwrap();
+    f(&mut stats.iter_mut().find(|(k, _)| *k == kind).unwrap().1)
 }
 
 /// Calibrate each loaded model: run it `n` times, return p95 wall ms.
@@ -158,6 +189,23 @@ pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
         })
         .collect();
 
+    // The edge lane's decision substrate: a live core + the configured
+    // scheduler. The core's own cloud-exec model is inert (the worker pool
+    // below simulates FaaS latency); it only backs the queue mechanics.
+    let mut policy = cfg.policy.clone();
+    policy.use_cloud = policy.use_cloud && cfg.use_cloud;
+    let mut sched = policy.build();
+    let mut core = Core::new(
+        policy,
+        profiles.clone(),
+        CloudExecModel::new(Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 25.0e6,
+        })),
+        cfg.seed,
+    );
+    sched.bind(&core);
+
     let shared = Arc::new(Shared {
         stats: Mutex::new(
             kinds.iter().map(|&k| (k, ModelServeStats::default())).collect(),
@@ -175,9 +223,13 @@ pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
     // Cloud pool: FaaS latency simulated, inference executed locally.
     let (cloud_tx, cloud_rx) = mpsc::channel::<(Task, Micros)>();
     let cloud_rx = Arc::new(Mutex::new(cloud_rx));
+    // Completed FaaS durations flow back to the edge lane so the
+    // scheduler's §5.4 adaptation observes real samples.
+    let (report_tx, report_rx) = mpsc::channel::<CloudReport>();
     let mut cloud_handles = Vec::new();
     for w in 0..cfg.cloud_pool {
         let rx = Arc::clone(&cloud_rx);
+        let report_tx2 = report_tx.clone();
         let dir2 = dir.clone();
         let shared2 = Arc::clone(&shared);
         let profiles2 = profiles.clone();
@@ -195,6 +247,7 @@ pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
                 // JIT check before spending network+compute (§3.3); also
                 // fast-drains any backlog once the run is stopping.
                 let now = epoch2.elapsed().as_micros() as Micros;
+                let dispatched_at = now;
                 let p = profiles2
                     .iter()
                     .find(|p| p.kind == task.model)
@@ -202,13 +255,7 @@ pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
                 if now + p.t_cloud > abs_deadline
                     || shared2.stop.load(Ordering::Relaxed)
                 {
-                    let mut stats = shared2.stats.lock().unwrap();
-                    stats
-                        .iter_mut()
-                        .find(|(k, _)| *k == task.model)
-                        .unwrap()
-                        .1
-                        .dropped += 1;
+                    bump(&shared2, task.model, |s| s.dropped += 1);
                     continue;
                 }
                 // Simulated WAN + FaaS overhead, then real inference.
@@ -219,23 +266,32 @@ pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
                     rt2.synth_frame(task.model, task.segment.id).unwrap();
                 let out = model.infer(&frame);
                 let done = epoch2.elapsed().as_micros() as Micros;
+                let success = out.is_ok() && done <= abs_deadline;
+                // Observed dispatch→completion duration: the wall-clock
+                // analogue of the DES engine's t̂ᵢʲ sample.
+                let _ = report_tx2.send(CloudReport {
+                    kind: task.model,
+                    duration: done - dispatched_at,
+                    timed_out: false,
+                    success,
+                });
                 let lat_ms =
                     (done - task.segment.created_at) as f64 / 1_000.0;
-                let mut stats = shared2.stats.lock().unwrap();
-                let entry = stats
-                    .iter_mut()
-                    .find(|(k, _)| *k == task.model)
-                    .unwrap();
-                entry.1.on_cloud += 1;
-                if out.is_ok() && done <= abs_deadline {
-                    entry.1.completed += 1;
-                    entry.1.latency_ms.push(lat_ms);
-                } else {
-                    entry.1.missed += 1;
-                }
+                bump(&shared2, task.model, |s| {
+                    s.on_cloud += 1;
+                    if success {
+                        s.completed += 1;
+                        s.latency_ms.push(lat_ms);
+                    } else {
+                        s.missed += 1;
+                    }
+                });
             }
         }));
     }
+    // Workers hold the only live senders; the edge lane's receiver sees
+    // Disconnected once they all exit.
+    drop(report_tx);
 
     // Generator: splitter + task-creation threads folded into one.
     let (task_tx, task_rx) = mpsc::channel::<Task>();
@@ -278,58 +334,84 @@ pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
     });
 
     // Edge lane: task scheduler + synchronous single-threaded executor.
+    // Admission, deferral and stealing all run through the Scheduler trait
+    // against the live core; the executor pops (or steals) and runs real
+    // PJRT inference inline.
     let edge_dir = dir.clone();
     let edge_shared = Arc::clone(&shared);
-    let edge_profiles = profiles.clone();
-    let edge_use_cloud = cfg.use_cloud;
     let edge_barrier = Arc::clone(&barrier);
-    let edge = std::thread::spawn(move || {
+    let edge = std::thread::spawn(move || -> Metrics {
         let edge_rt = Runtime::load(&edge_dir).expect("edge runtime");
         edge_barrier.wait();
-        let mut queue = EdgeQueue::new(EdgeOrder::Edf);
+        // Sink for virtual trigger events: the lane polls the cloud queue
+        // by wall clock instead of replaying the event heap.
+        let mut evq = EventQueue::new();
         loop {
-            // Drain arrivals (non-blocking once stopped).
+            // Discard accumulated sink events so the heap stays bounded
+            // over long serving runs (they are never replayed).
+            if !evq.is_empty() {
+                evq = EventQueue::new();
+            }
+            // Deliver FaaS observations to the scheduler before admitting
+            // new work (§5.4: adaptation sees the sample first).
+            while let Ok(report) = report_rx.try_recv() {
+                let now = now_us();
+                let mut ctx =
+                    SchedCtx { now, core: &mut core, q: &mut evq };
+                sched.on_cloud_report(&mut ctx, &report);
+            }
+            // Drain arrivals (non-blocking once stopped) through `admit`.
             loop {
                 match task_rx.try_recv() {
                     Ok(task) => {
-                        let p = edge_profiles
-                            .iter()
-                            .find(|p| p.kind == task.model)
-                            .unwrap();
-                        let dl = task.absolute_deadline(p.deadline);
-                        if queue.feasible(dl, p.t_edge, p.hpf_priority(),
-                                          now_us()) {
-                            queue.insert(task, dl, p.t_edge,
-                                         p.hpf_priority());
-                        } else if edge_use_cloud {
-                            let _ = cloud_tx.send((task, dl));
-                        } else {
-                            let mut stats = edge_shared.stats.lock().unwrap();
-                            stats
-                                .iter_mut()
-                                .find(|(k, _)| *k == task.model)
-                                .unwrap()
-                                .1
-                                .dropped += 1;
-                        }
+                        let now = now_us();
+                        let mut ctx =
+                            SchedCtx { now, core: &mut core, q: &mut evq };
+                        sched.admit(&mut ctx, task);
+                        sched.drain_done(&mut ctx);
                     }
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => break,
                 }
             }
+            // Forward due (triggered) cloud entries to the FaaS pool.
+            {
+                let now = now_us();
+                while let Some(e) = core.cloud_q.pop_due(now) {
+                    if e.negative_utility
+                        && !core.policy.cloud_accepts_negative
+                    {
+                        // Un-stolen steal candidate: just-in-time drop.
+                        bump(&edge_shared, e.task.model,
+                             |s| s.dropped += 1);
+                        continue;
+                    }
+                    let _ = cloud_tx.send((e.task, e.abs_deadline));
+                }
+            }
             let stopping = edge_shared.stop.load(Ordering::Relaxed);
-            match queue.pop() {
-                Some(entry) => {
+            // Executor pick-next: steal hook first, then the queue head.
+            let now = now_us();
+            let steal = {
+                let mut ctx = SchedCtx { now, core: &mut core, q: &mut evq };
+                sched.on_edge_idle(&mut ctx)
+            };
+            let next = match steal {
+                Some(idx) => {
+                    Some((core.cloud_q.remove_at(idx).into_edge_entry(),
+                          true))
+                }
+                None => core.edge_q.pop().map(|e| (e, false)),
+            };
+            match next {
+                Some((entry, stolen)) => {
                     let t = now_us();
-                    // JIT check.
-                    if t + entry.t_edge > entry.abs_deadline {
-                        let mut stats = edge_shared.stats.lock().unwrap();
-                        stats
-                            .iter_mut()
-                            .find(|(k, _)| *k == entry.task.model)
-                            .unwrap()
-                            .1
-                            .dropped += 1;
+                    // JIT check (§3.3).
+                    if core.policy.edge_jit_drop
+                        && t + entry.t_edge > entry.abs_deadline
+                    {
+                        bump(&edge_shared, entry.task.model,
+                             |s| s.dropped += 1);
                         continue;
                     }
                     let model = edge_rt.model(entry.task.model).unwrap();
@@ -360,24 +442,31 @@ pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
                     let lat_ms =
                         (done - entry.task.segment.created_at) as f64
                             / 1_000.0;
-                    let mut stats = edge_shared.stats.lock().unwrap();
-                    let e = stats
-                        .iter_mut()
-                        .find(|(k, _)| *k == entry.task.model)
-                        .unwrap();
-                    if out.is_ok() && done <= entry.abs_deadline {
-                        e.1.completed += 1;
-                        e.1.latency_ms.push(lat_ms);
-                        e.1.postproc_us.push(pp_us);
-                    } else {
-                        e.1.missed += 1;
-                    }
+                    bump(&edge_shared, entry.task.model, |s| {
+                        if out.is_ok() && done <= entry.abs_deadline {
+                            s.completed += 1;
+                            if stolen {
+                                s.stolen += 1;
+                            }
+                            s.latency_ms.push(lat_ms);
+                            s.postproc_us.push(pp_us);
+                        } else {
+                            s.missed += 1;
+                        }
+                    });
                 }
                 None if stopping => break,
                 None => std::thread::sleep(Duration::from_micros(200)),
             }
         }
+        // Shutdown: deferred entries whose trigger never arrived count as
+        // dropped, so the report's accounting closes.
+        while !core.cloud_q.is_empty() {
+            let e = core.cloud_q.remove_at(0);
+            bump(&edge_shared, e.task.model, |s| s.dropped += 1);
+        }
         drop(cloud_tx); // close the cloud channel → workers exit
+        core.metrics
     });
 
     barrier.wait(); // all runtimes compiled — start the serving clock
@@ -385,17 +474,22 @@ pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
     std::thread::sleep(cfg.duration);
     shared.stop.store(true, Ordering::Relaxed);
     generator.join().expect("generator thread");
-    edge.join().expect("edge thread");
+    let core_metrics = edge.join().expect("edge thread");
     for h in cloud_handles {
         h.join().expect("cloud worker");
     }
 
     let generated = shared.generated.load(Ordering::Relaxed);
-    let stats = Arc::try_unwrap(shared)
-        .map_err(|_| anyhow::anyhow!("dangling shared refs"))?
+    let mut stats = Arc::try_unwrap(shared)
+        .map_err(|_| crate::err!("dangling shared refs"))?
         .stats
         .into_inner()
         .unwrap();
+    // Fold in admission-time drops the scheduler finalized inside the core
+    // (infeasible / negative-utility rejections).
+    for (kind, s) in stats.iter_mut() {
+        s.dropped += core_metrics.stats(*kind).dropped();
+    }
     Ok(ServeReport {
         per_model: stats,
         wall_secs: serve_start.elapsed().as_secs_f64(),

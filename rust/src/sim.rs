@@ -1,19 +1,24 @@
-//! Discrete-event engine driving a [`Platform`](crate::platform::Platform)
-//! over virtual time.
+//! Discrete-event primitives and the single-edge simulation entry point.
+//!
+//! The event engine itself lives in [`crate::cluster`]: a [`Cluster`] of N
+//! [`Platform`](crate::platform::Platform)s is driven by one [`EventQueue`]
+//! whose entries carry an *edge scope* tag, so a 7-edge §8.1 emulation and a
+//! single-edge study run through the same deterministic loop. [`run`] here
+//! is the convenience wrapper for the 1-edge case every unit study uses.
 //!
 //! A 300 s × 4-drone × 6-model experiment (7 200 tasks) runs in a few
-//! milliseconds here, which is what makes the full Fig. 8–18 reproduction
-//! sweep tractable. The same platform state machine is also driven by the
-//! real-time serving loop in [`crate::serve`].
+//! milliseconds, which is what makes the full Fig. 8–18 reproduction sweep
+//! tractable. The same platform state machine is also driven by the
+//! real-time serving loop in `serve` (behind the `pjrt` feature).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::cluster::{Cluster, ARRIVAL_SEED_XOR};
 use crate::fleet::Workload;
 use crate::metrics::Metrics;
 use crate::platform::Platform;
-use crate::rng::Rng;
-use crate::task::{Task, VideoSegment};
+use crate::sched::Scheduler;
 use crate::time::{secs, Micros};
 
 /// Platform events, ordered by virtual time.
@@ -34,6 +39,8 @@ pub enum Event {
 struct Item {
     at: Micros,
     seq: u64,
+    /// Edge scope: which platform of a cluster this event belongs to.
+    scope: u32,
     event: Event,
 }
 
@@ -55,10 +62,17 @@ impl Ord for Item {
 }
 
 /// Time-ordered event queue (min-heap, FIFO among equal timestamps).
+///
+/// Every pushed event is stamped with the queue's *current scope* (an edge
+/// index, set by the cluster driver before dispatching into a platform), so
+/// one queue can interleave N independent platforms deterministically. The
+/// scope is ignored in single-edge runs; relative ordering is always
+/// `(time, push order)`, never scope.
 #[derive(Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Reverse<Item>>,
     seq: u64,
+    scope: u32,
 }
 
 impl EventQueue {
@@ -66,13 +80,28 @@ impl EventQueue {
         Self::default()
     }
 
+    /// Set the edge scope stamped onto subsequently pushed events.
+    pub fn set_scope(&mut self, scope: u32) {
+        self.scope = scope;
+    }
+
     pub fn push(&mut self, at: Micros, event: Event) {
         self.seq += 1;
-        self.heap.push(Reverse(Item { at, seq: self.seq, event }));
+        self.heap.push(Reverse(Item {
+            at,
+            seq: self.seq,
+            scope: self.scope,
+            event,
+        }));
     }
 
     pub fn pop(&mut self) -> Option<(Micros, Event)> {
         self.heap.pop().map(|Reverse(i)| (i.at, i.event))
+    }
+
+    /// Pop with the edge scope the event was pushed under.
+    pub fn pop_scoped(&mut self) -> Option<(Micros, u32, Event)> {
+        self.heap.pop().map(|Reverse(i)| (i.at, i.scope, i.event))
     }
 
     pub fn len(&self) -> usize {
@@ -87,80 +116,19 @@ impl EventQueue {
 /// How long past the nominal duration in-flight work may settle before the
 /// run is hard-drained (matches the paper counting late completions of the
 /// last segments).
-const SETTLE: Micros = secs(5);
+pub const SETTLE: Micros = secs(5);
 
 /// Run one platform against a workload; returns the final metrics.
-pub fn run(mut platform: Platform, workload: &Workload, seed: u64) -> Metrics {
-    let mut q = EventQueue::new();
-    let mut rng = Rng::new(seed ^ 0x5EED_F1EE7);
-    let mut segment_id: u64 = 0;
-
-    // Stagger drone streams slightly so segment arrivals don't collide on
-    // identical microsecond ticks (real streams are never phase-locked).
-    for d in 0..workload.drones {
-        let phase = (d as Micros * 37_003) % workload.segment_period;
-        q.push(phase, Event::Segment { drone: d, tick: 0 });
-    }
-    platform.schedule_windows(&mut q);
-
-    let horizon = workload.duration + SETTLE;
-    while let Some((now, ev)) = q.pop() {
-        if now > horizon {
-            break;
-        }
-        match ev {
-            Event::Segment { drone, tick } => {
-                if now < workload.duration {
-                    segment_id += 1;
-                    emit_segment(&mut platform, workload, now, drone, tick,
-                                 segment_id, &mut rng, &mut q);
-                    q.push(now + workload.segment_period,
-                           Event::Segment { drone, tick: tick + 1 });
-                }
-            }
-            Event::EdgeDone => platform.on_edge_done(now, &mut q),
-            Event::CloudTrigger => platform.on_cloud_trigger(now, &mut q),
-            Event::CloudDone { key } => {
-                platform.on_cloud_done(now, key, &mut q)
-            }
-            Event::WindowClose { model_idx } => {
-                if now <= workload.duration {
-                    platform.on_window_close(now, model_idx, &mut q);
-                }
-            }
-        }
-    }
-    platform.drain(horizon, &mut q);
-    let mut metrics = platform.metrics;
-    metrics.duration = workload.duration;
-    metrics
-}
-
-/// Create the per-model tasks for one segment tick, in randomized order
-/// (§3.3), and submit them to the platform's task scheduler.
-#[allow(clippy::too_many_arguments)]
-fn emit_segment(platform: &mut Platform, workload: &Workload, now: Micros,
-                drone: u32, tick: u64, segment_id: u64, rng: &mut Rng,
-                q: &mut EventQueue) {
-    let segment = VideoSegment {
-        id: segment_id,
-        drone,
-        created_at: now,
-        bytes: workload.segment_bytes,
-    };
-    let mut due: Vec<usize> = (0..platform.models.len())
-        .filter(|&i| {
-            let every = workload.model_every.get(i).copied().unwrap_or(1);
-            tick % every as u64 == 0
-        })
-        .collect();
-    rng.shuffle(&mut due);
-    for i in due {
-        let model = platform.models[i].kind;
-        let id = platform.fresh_task_id();
-        let task = Task { id, model, segment: segment.clone() };
-        platform.submit_task(now, task, q);
-    }
+///
+/// This is the single-edge convenience wrapper over the cluster engine: it
+/// seeds the arrival stream with `seed ^ 0x5EED_F1EE7` (as every study in
+/// the repo always has) and drives a one-edge [`Cluster`].
+pub fn run<S: Scheduler>(platform: Platform<S>, workload: &Workload,
+                         seed: u64) -> Metrics {
+    let cluster = Cluster::from_parts(vec![platform], workload.clone(),
+                                      vec![seed ^ ARRIVAL_SEED_XOR]);
+    let mut cm = cluster.run();
+    cm.per_edge.pop().expect("one edge")
 }
 
 #[cfg(test)]
@@ -182,5 +150,32 @@ mod tests {
         let (t3, _) = q.pop().unwrap();
         assert_eq!(t3, 200);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn scope_is_stamped_and_recovered() {
+        let mut q = EventQueue::new();
+        q.set_scope(3);
+        q.push(100, Event::EdgeDone);
+        q.set_scope(1);
+        q.push(100, Event::CloudTrigger);
+        let (_, s1, e1) = q.pop_scoped().unwrap();
+        assert_eq!(s1, 3);
+        assert!(matches!(e1, Event::EdgeDone));
+        let (_, s2, _) = q.pop_scoped().unwrap();
+        assert_eq!(s2, 1);
+    }
+
+    #[test]
+    fn scope_does_not_affect_ordering() {
+        let mut q = EventQueue::new();
+        q.set_scope(9);
+        q.push(200, Event::EdgeDone);
+        q.set_scope(0);
+        q.push(100, Event::EdgeDone);
+        let (t, s, _) = q.pop_scoped().unwrap();
+        assert_eq!((t, s), (100, 0));
+        let (t, s, _) = q.pop_scoped().unwrap();
+        assert_eq!((t, s), (200, 9));
     }
 }

@@ -5,6 +5,7 @@
 //! migration, stealing, adaptation, the QoE monitor, both executors and
 //! the network models together.
 
+use ocularone::cluster::{Cluster, EDGE_SEED_PHI};
 use ocularone::exec::CloudExecModel;
 use ocularone::fleet::Workload;
 use ocularone::model::{DnnKind, GemsWorkload, Resource};
@@ -12,6 +13,7 @@ use ocularone::net::{mobility_trace, LognormalWan, TraceBandwidth,
                      TrapeziumLatency};
 use ocularone::platform::Platform;
 use ocularone::policy::Policy;
+use ocularone::sched::FlagBranchScheduler;
 use ocularone::time::secs;
 use ocularone::{sim, simulate};
 
@@ -47,6 +49,145 @@ fn determinism_same_seed_same_metrics() {
     assert_eq!(a.completed(), b.completed());
     assert_eq!(a.qos_utility(), b.qos_utility());
     assert_eq!(a.stolen(), b.stolen());
+}
+
+#[test]
+fn determinism_same_seed_bit_identical_metrics() {
+    // Stronger than the spot checks above: the FULL metrics struct (every
+    // counter, utility sum, exec-time sample) must be bit-identical across
+    // two runs with the same seed, for a simple and a stateful policy.
+    for policy in [Policy::edf_ec(), Policy::dems_a()] {
+        let wl = Workload::emulation(3, true);
+        let a = run(policy.clone(), &wl, 123);
+        let b = run(policy.clone(), &wl, 123);
+        assert_eq!(a, b, "non-determinism under {}", policy.kind.name());
+    }
+}
+
+#[test]
+fn dispatch_parity_flag_branch_vs_boxed_trait() {
+    // The redesign's core claim: routing decisions through
+    // `Policy::build() -> Box<dyn Scheduler>` produces bit-identical
+    // metrics to the statically dispatched flag-branch reference, for
+    // every fig8 policy plus the stateful DEM/DEMS-A lineage.
+    let wl = Workload::emulation(3, true);
+    let mut policies = Policy::fig8_lineup();
+    policies.push(Policy::dem());
+    policies.push(Policy::dems_a());
+    for policy in policies {
+        let seed = 77;
+        let boxed =
+            Platform::new(policy.clone(), wl.models.clone(),
+                          default_wan(), seed);
+        let a = sim::run(boxed, &wl, seed);
+        let flat = Platform::with_scheduler(
+            FlagBranchScheduler::new(),
+            policy.clone(),
+            wl.models.clone(),
+            default_wan(),
+            seed,
+        );
+        let b = sim::run(flat, &wl, seed);
+        assert_eq!(a, b, "dispatch divergence under {}",
+                   policy.kind.name());
+    }
+    // And the GEMS family on its own (Table 2) workload.
+    let wl = Workload::gems(GemsWorkload::Wl1, 0.9);
+    let policy = Policy::gems(false);
+    let mut boxed = Platform::new(policy.clone(), wl.models.clone(),
+                                  default_wan(), 5);
+    boxed.edge_exec = wl.edge_exec.clone();
+    let a = sim::run(boxed, &wl, 5);
+    let mut flat = Platform::with_scheduler(
+        FlagBranchScheduler::new(),
+        policy.clone(),
+        wl.models.clone(),
+        default_wan(),
+        5,
+    );
+    flat.edge_exec = wl.edge_exec.clone();
+    let b = sim::run(flat, &wl, 5);
+    assert_eq!(a, b, "dispatch divergence under GEMS");
+}
+
+fn default_wan() -> CloudExecModel {
+    CloudExecModel::new(Box::new(LognormalWan::default()))
+}
+
+#[test]
+fn cluster_engine_matches_independent_edge_runs() {
+    // The multi-edge Cluster drives all platforms from ONE event queue;
+    // per-edge results must still be bit-identical to the pre-cluster
+    // independent single-edge runs with the canonical seed derivation —
+    // which is what keeps fig8/fig10/fig13 outputs unchanged.
+    let wl = Workload::emulation(3, false);
+    let seed = 13;
+    for policy in [Policy::dems(), Policy::edf_ec(), Policy::gems(false)] {
+        let cm =
+            Cluster::emulation(&policy, &wl, seed, 4, &default_wan).run();
+        assert_eq!(cm.edges(), 4);
+        for e in 0..4 {
+            let s = seed ^ ((e as u64 + 1) * EDGE_SEED_PHI);
+            let mut p = Platform::new(policy.clone(), wl.models.clone(),
+                                      default_wan(), s);
+            p.edge_exec = wl.edge_exec.clone();
+            let solo = sim::run(p, &wl, s);
+            assert_eq!(cm.per_edge[e], solo,
+                       "cluster/solo divergence on edge {e} under {}",
+                       policy.kind.name());
+        }
+    }
+}
+
+#[test]
+fn simulate_cluster_single_edge_matches_simulate() {
+    let wl = Workload::emulation(3, true);
+    let solo = simulate(Policy::dems(), &wl, 42);
+    let mut cm =
+        ocularone::simulate_cluster(Policy::dems(), &wl, 42, 1);
+    assert_eq!(cm.per_edge.pop().unwrap(), solo);
+}
+
+/// Fig-8 lineup golden summaries. On first local run (no golden file) the
+/// test records `tests/golden_fig8.txt` — commit the recorded file;
+/// afterwards any drift in the summary numbers — completion counts or QoS
+/// utility under a fixed seed — fails. Regenerate deliberately by deleting
+/// the file. Under `CI=...` a missing golden is a hard failure, so the
+/// check can never pass vacuously on a fresh checkout.
+#[test]
+fn fig8_lineup_summaries_match_golden() {
+    let wl = Workload::emulation(3, true);
+    let mut lines = String::new();
+    for policy in Policy::fig8_lineup() {
+        let m = simulate(policy.clone(), &wl, 42);
+        lines.push_str(&format!(
+            "{}|{}|{}|{:.3}|{:.3}\n",
+            policy.kind.name(),
+            m.completed(),
+            m.generated(),
+            m.qos_utility(),
+            m.completion_rate(),
+        ));
+    }
+    let path =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_fig8.txt");
+    match std::fs::read_to_string(path) {
+        Ok(golden) => assert_eq!(
+            lines, golden,
+            "fig8 summary numbers drifted from the recorded golden \
+             ({path}); if the change is intentional, delete the file to \
+             re-record"
+        ),
+        Err(_) => {
+            assert!(
+                std::env::var_os("CI").is_none(),
+                "no fig8 golden at {path}: record it locally (run this \
+                 test once and commit the file) before relying on CI"
+            );
+            std::fs::write(path, &lines).expect("record fig8 golden");
+            eprintln!("recorded new fig8 golden at {path}; commit it");
+        }
+    }
 }
 
 #[test]
