@@ -17,8 +17,8 @@
 //! `exp::run_edges` reproduces the paper figures unchanged.
 
 use crate::exec::CloudExecModel;
-use crate::fleet::Workload;
-use crate::metrics::Metrics;
+use crate::fleet::{Arrival, Workload};
+use crate::metrics::{self, Metrics};
 use crate::platform::Platform;
 use crate::policy::Policy;
 use crate::rng::Rng;
@@ -92,42 +92,57 @@ impl ClusterMetrics {
     }
 
     /// Median-by-QoS-utility edge (the paper reports "a median edge base
-    /// station").
+    /// station"). Panics on an empty cluster.
     pub fn median_edge(&self) -> &Metrics {
-        let mut idx: Vec<usize> = (0..self.per_edge.len()).collect();
-        idx.sort_by(|&a, &b| {
-            self.per_edge[a]
-                .qos_utility()
-                .partial_cmp(&self.per_edge[b].qos_utility())
-                .unwrap()
-        });
-        &self.per_edge[idx[idx.len() / 2]]
+        metrics::median_by_qos_utility(&self.per_edge)
+            .expect("cluster has at least one edge")
     }
 
     /// (min, max) QoS utility across the edges.
     pub fn minmax_utility(&self) -> (f64, f64) {
-        let us: Vec<f64> =
-            self.per_edge.iter().map(|m| m.qos_utility()).collect();
-        (
-            us.iter().cloned().fold(f64::INFINITY, f64::min),
-            us.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
-        )
+        metrics::minmax_qos_utility(&self.per_edge)
     }
 }
 
 /// N edge platforms + drone router + per-edge arrival streams, driven by
 /// one event engine.
+///
+/// Every edge carries its *own* [`Workload`]: the uniform §8.1 emulation
+/// clones one spec per station ([`Cluster::from_parts`]), while
+/// heterogeneous studies mix fleet sizes, app mixes, durations and arrival
+/// processes per edge ([`Cluster::from_parts_hetero`] — the
+/// `hetero-edges` scenario).
 pub struct Cluster<S: Scheduler = Box<dyn Scheduler>> {
     edges: Vec<Platform<S>>,
-    workload: Workload,
+    /// Per-edge workload specification.
+    workloads: Vec<Workload>,
     router: Router,
-    /// Per-edge arrival-stream RNG (segment fan-out order, §3.3).
+    /// First global drone id of each edge (prefix sums of per-edge fleet
+    /// sizes; equals `Router::global_id(e, 0)` for uniform clusters).
+    drone_base: Vec<u32>,
+    /// Per-edge arrival-stream RNG (segment fan-out order §3.3, Poisson
+    /// inter-arrival draws).
     arrivals: Vec<Rng>,
     /// Per-edge segment-id counters.
     segment_ids: Vec<u64>,
 }
 
 impl Cluster<Box<dyn Scheduler>> {
+    /// Canonical §8.1 per-edge platform for station `e`: platform seed
+    /// `base_seed ^ ((e+1)·EDGE_SEED_PHI)`, the workload's edge-exec
+    /// regime, and the paired arrival-stream seed (`^ ARRIVAL_SEED_XOR`).
+    /// Shared by [`Cluster::emulation`] and the hetero scenario builder so
+    /// the derivation can never drift between them.
+    pub fn edge_parts(policy: &Policy, wl: &Workload, base_seed: u64,
+                      e: usize, cloud: CloudExecModel)
+                      -> (Platform, u64) {
+        let s = base_seed ^ ((e as u64 + 1) * EDGE_SEED_PHI);
+        let mut p =
+            Platform::new(policy.clone(), wl.models.clone(), cloud, s);
+        p.edge_exec = wl.edge_exec.clone();
+        (p, s ^ ARRIVAL_SEED_XOR)
+    }
+
     /// §8.1 emulation cluster: `n_edges` stations running the same policy
     /// and per-edge workload, with the canonical per-edge seed derivation
     /// `seed ^ ((e+1)·EDGE_SEED_PHI)`.
@@ -137,12 +152,10 @@ impl Cluster<Box<dyn Scheduler>> {
         let mut platforms = Vec::with_capacity(n_edges);
         let mut arrival_seeds = Vec::with_capacity(n_edges);
         for e in 0..n_edges {
-            let s = seed ^ ((e as u64 + 1) * EDGE_SEED_PHI);
-            let mut p = Platform::new(policy.clone(), wl.models.clone(),
-                                      make_cloud(), s);
-            p.edge_exec = wl.edge_exec.clone();
+            let (p, aseed) =
+                Self::edge_parts(policy, wl, seed, e, make_cloud());
             platforms.push(p);
-            arrival_seeds.push(s ^ ARRIVAL_SEED_XOR);
+            arrival_seeds.push(aseed);
         }
         Cluster::from_parts(platforms, wl.clone(), arrival_seeds)
     }
@@ -160,51 +173,105 @@ impl Cluster<Box<dyn Scheduler>> {
 }
 
 impl<S: Scheduler> Cluster<S> {
-    /// Assemble a cluster from pre-built platforms. `arrival_seeds[e]`
-    /// seeds edge `e`'s segment fan-out RNG.
+    /// Assemble a uniform cluster from pre-built platforms: every edge
+    /// runs the same `workload`. `arrival_seeds[e]` seeds edge `e`'s
+    /// segment fan-out RNG.
     pub fn from_parts(edges: Vec<Platform<S>>, workload: Workload,
                       arrival_seeds: Vec<u64>) -> Self {
+        let n = edges.len();
+        Self::from_parts_hetero(edges, vec![workload; n], arrival_seeds)
+    }
+
+    /// Assemble a heterogeneous cluster: `workloads[e]` drives edge `e`
+    /// (its own fleet size, app mix, duration, arrival process and churn
+    /// windows). For uniform inputs this is bit-identical to
+    /// [`Cluster::from_parts`].
+    pub fn from_parts_hetero(edges: Vec<Platform<S>>,
+                             workloads: Vec<Workload>,
+                             arrival_seeds: Vec<u64>) -> Self {
         assert_eq!(edges.len(), arrival_seeds.len(),
                    "one arrival seed per edge");
+        assert_eq!(edges.len(), workloads.len(), "one workload per edge");
         let n = edges.len();
-        let router = Router { drones_per_edge: workload.drones };
+        let router = Router {
+            drones_per_edge: workloads.first().map_or(0, |w| w.drones),
+        };
+        let mut drone_base = Vec::with_capacity(n);
+        let mut base = 0u32;
+        for w in &workloads {
+            drone_base.push(base);
+            base += w.drones;
+        }
         Cluster {
             edges,
-            workload,
+            workloads,
             router,
+            drone_base,
             arrivals: arrival_seeds.into_iter().map(Rng::new).collect(),
             segment_ids: vec![0; n],
         }
     }
 
+    /// Uniform drone→edge router. Only defined when every edge serves the
+    /// same fleet size — on a mixed-fleet cluster the flat
+    /// `drones_per_edge` mapping would mis-route drones, so this panics;
+    /// use [`Cluster::first_drone`] (the prefix-sum base the event loop
+    /// itself uses) instead.
     pub fn router(&self) -> Router {
+        assert!(
+            self.workloads
+                .iter()
+                .all(|w| w.drones == self.router.drones_per_edge),
+            "router() is undefined for mixed-fleet clusters; \
+             use first_drone(edge)"
+        );
         self.router
     }
 
+    /// First global drone id served by edge `e` (prefix sums of the
+    /// per-edge fleet sizes; correct for hetero clusters too).
+    pub fn first_drone(&self, e: usize) -> u32 {
+        self.drone_base[e]
+    }
+
+    /// The workload driving edge `e`.
+    pub fn workload(&self, e: usize) -> &Workload {
+        &self.workloads[e]
+    }
+
     /// Run the whole cluster to completion; returns per-edge metrics.
-    pub fn run(mut self) -> ClusterMetrics {
-        let wl = self.workload.clone();
-        let n = self.edges.len();
+    pub fn run(self) -> ClusterMetrics {
+        let Cluster {
+            mut edges,
+            workloads,
+            router: _,
+            drone_base,
+            mut arrivals,
+            mut segment_ids,
+        } = self;
+        let n = edges.len();
         let mut q = EventQueue::new();
 
         // Seed every edge's drone streams (staggered phases so segment
         // arrivals don't collide on identical microsecond ticks — real
         // streams are never phase-locked) and QoE windows.
-        let router = self.router;
-        for (e, edge) in self.edges.iter_mut().enumerate() {
+        for (e, edge) in edges.iter_mut().enumerate() {
+            let wl = &workloads[e];
             q.set_scope(e as u32);
             for d in 0..wl.drones {
                 let phase =
                     (d as Micros * 37_003) % wl.segment_period;
                 q.push(phase, Event::Segment {
-                    drone: router.global_id(e, d),
+                    drone: drone_base[e] + d,
                     tick: 0,
                 });
             }
             edge.schedule_windows(&mut q);
         }
 
-        let horizon = wl.duration + SETTLE;
+        let horizon =
+            workloads.iter().map(|w| w.duration).max().unwrap_or(0)
+                + SETTLE;
         while let Some((now, scope, ev)) = q.pop_scoped() {
             if now > horizon {
                 break;
@@ -213,38 +280,61 @@ impl<S: Scheduler> Cluster<S> {
             q.set_scope(scope);
             match ev {
                 Event::Segment { drone, tick } => {
+                    let wl = &workloads[e];
                     if now < wl.duration {
-                        self.segment_ids[e] += 1;
-                        let sid = self.segment_ids[e];
-                        emit_segment(&mut self.edges[e], &wl, now, drone,
-                                     tick, sid, &mut self.arrivals[e],
-                                     &mut q);
-                        q.push(now + wl.segment_period,
+                        // Churn windows and bursty duty cycles suppress
+                        // the emission but keep the tick chain alive (a
+                        // rejoining drone resumes on its own phase).
+                        let local = drone - drone_base[e];
+                        if wl.drone_active(local, now)
+                            && wl.arrival_on(now)
+                        {
+                            segment_ids[e] += 1;
+                            let sid = segment_ids[e];
+                            emit_segment(&mut edges[e], wl, now, drone,
+                                         tick, sid, &mut arrivals[e],
+                                         &mut q);
+                        }
+                        // Periodic ticks draw nothing from the RNG, so
+                        // the paper's workloads stay bit-identical to the
+                        // pre-arrival-process engine.
+                        let next = match wl.arrival {
+                            Arrival::Periodic
+                            | Arrival::Bursty { .. } => {
+                                now + wl.segment_period
+                            }
+                            Arrival::Poisson => {
+                                let gap = arrivals[e].exponential(
+                                    wl.segment_period as f64,
+                                );
+                                now + (gap as Micros).max(1)
+                            }
+                        };
+                        q.push(next,
                                Event::Segment { drone, tick: tick + 1 });
                     }
                 }
-                Event::EdgeDone => self.edges[e].on_edge_done(now, &mut q),
+                Event::EdgeDone => edges[e].on_edge_done(now, &mut q),
                 Event::CloudTrigger => {
-                    self.edges[e].on_cloud_trigger(now, &mut q)
+                    edges[e].on_cloud_trigger(now, &mut q)
                 }
                 Event::CloudDone { key } => {
-                    self.edges[e].on_cloud_done(now, key, &mut q)
+                    edges[e].on_cloud_done(now, key, &mut q)
                 }
                 Event::WindowClose { model_idx } => {
-                    if now <= wl.duration {
-                        self.edges[e].on_window_close(now, model_idx,
-                                                      &mut q);
+                    if now <= workloads[e].duration {
+                        edges[e].on_window_close(now, model_idx, &mut q);
                     }
                 }
             }
         }
 
         let mut per_edge = Vec::with_capacity(n);
-        for (e, mut p) in self.edges.into_iter().enumerate() {
+        for (e, mut p) in edges.into_iter().enumerate() {
             q.set_scope(e as u32);
             p.drain(horizon, &mut q);
             let mut m = p.into_metrics();
-            m.duration = wl.duration;
+            m.duration = workloads[e].duration;
             per_edge.push(m);
         }
         ClusterMetrics { per_edge }
@@ -332,5 +422,164 @@ mod tests {
         let a = Cluster::emulation(&Policy::dems(), &wl, 4, 2, &wan).run();
         let b = Cluster::emulation(&Policy::dems(), &wl, 4, 2, &wan).run();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn churn_suppresses_inactive_drone_tasks() {
+        use crate::fleet::DroneChurn;
+        use crate::time::secs;
+        let full = Workload::emulation(2, false).with_duration(secs(60));
+        // Drone 1 leaves halfway through.
+        let churned = full.clone().with_churn(DroneChurn {
+            drone: 1,
+            active_from: 0,
+            active_until: secs(30),
+        });
+        let a = Cluster::emulation(&Policy::dems(), &full, 5, 1, &wan)
+            .run();
+        let b = Cluster::emulation(&Policy::dems(), &churned, 5, 1, &wan)
+            .run();
+        assert!(b.generated() < a.generated(),
+                "churn must shed load: {} vs {}",
+                b.generated(), a.generated());
+        // Roughly one quarter of the stream is gone (one of two drones,
+        // half the run).
+        let ratio = b.generated() as f64 / a.generated() as f64;
+        assert!((0.70..0.80).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn bursty_duty_cycle_halves_load() {
+        use crate::fleet::Arrival;
+        use crate::time::secs;
+        let base = Workload::emulation(2, false).with_duration(secs(60));
+        let bursty = base.clone().with_arrival(Arrival::Bursty {
+            on: secs(5),
+            off: secs(5),
+        });
+        let a = Cluster::emulation(&Policy::dems(), &base, 6, 1, &wan)
+            .run();
+        let b = Cluster::emulation(&Policy::dems(), &bursty, 6, 1, &wan)
+            .run();
+        let ratio = b.generated() as f64 / a.generated() as f64;
+        assert!((0.40..0.60).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn poisson_arrivals_match_mean_rate_and_are_deterministic() {
+        use crate::fleet::Arrival;
+        use crate::time::secs;
+        let base = Workload::emulation(3, false).with_duration(secs(120));
+        let poisson =
+            base.clone().with_arrival(Arrival::Poisson);
+        let p1 = Cluster::emulation(&Policy::dems(), &poisson, 8, 1, &wan)
+            .run();
+        let p2 = Cluster::emulation(&Policy::dems(), &poisson, 8, 1, &wan)
+            .run();
+        assert_eq!(p1, p2, "Poisson streams must be seed-deterministic");
+        // Same mean rate as periodic: 3 drones × 4 models ⇒ 1 440 nominal
+        // tasks over 120 s; Poisson fluctuates around it.
+        let nominal = base.total_tasks() as f64;
+        let got = p1.generated() as f64;
+        assert!((got / nominal - 1.0).abs() < 0.2,
+                "poisson {got} vs nominal {nominal}");
+    }
+
+    #[test]
+    fn hetero_cluster_mixes_fleet_sizes() {
+        use crate::platform::Platform;
+        let policy = Policy::dems();
+        let wls = vec![
+            Workload::emulation(2, false),
+            Workload::emulation(4, true),
+            Workload::emulation(3, false),
+        ];
+        let mut platforms = Vec::new();
+        let mut seeds = Vec::new();
+        for (e, wl) in wls.iter().enumerate() {
+            let s = 9 ^ ((e as u64 + 1) * EDGE_SEED_PHI);
+            let mut p = Platform::new(policy.clone(), wl.models.clone(),
+                                      wan(), s);
+            p.edge_exec = wl.edge_exec.clone();
+            platforms.push(p);
+            seeds.push(s ^ ARRIVAL_SEED_XOR);
+        }
+        let cm =
+            Cluster::from_parts_hetero(platforms, wls.clone(), seeds)
+                .run();
+        assert_eq!(cm.edges(), 3);
+        // Every edge generated exactly its own workload's task count.
+        for (e, wl) in wls.iter().enumerate() {
+            assert_eq!(cm.per_edge[e].generated(), wl.total_tasks(),
+                       "edge {e}");
+        }
+        // And each edge's accounting closes independently.
+        for m in &cm.per_edge {
+            let closed: u64 = m
+                .per_model
+                .iter()
+                .map(|(_, s)| s.executed() + s.dropped())
+                .sum();
+            assert_eq!(m.generated(), closed);
+        }
+    }
+
+    #[test]
+    fn hetero_drone_bases_and_router_guard() {
+        use crate::platform::Platform;
+        let wls = vec![
+            Workload::emulation(2, false),
+            Workload::emulation(4, false),
+            Workload::emulation(3, false),
+        ];
+        let platforms: Vec<Platform> = wls
+            .iter()
+            .map(|wl| {
+                let mut p = Platform::new(Policy::dems(),
+                                          wl.models.clone(), wan(), 1);
+                p.edge_exec = wl.edge_exec.clone();
+                p
+            })
+            .collect();
+        let c = Cluster::from_parts_hetero(platforms, wls,
+                                           vec![1, 2, 3]);
+        assert_eq!(c.first_drone(0), 0);
+        assert_eq!(c.first_drone(1), 2);
+        assert_eq!(c.first_drone(2), 6);
+        // The flat router is undefined on mixed fleets.
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| c.router()),
+        );
+        assert!(r.is_err(), "router() must reject mixed fleets");
+    }
+
+    #[test]
+    fn hetero_uniform_matches_from_parts() {
+        use crate::platform::Platform;
+        let wl = Workload::emulation(2, true);
+        let policy = Policy::dems();
+        let build = |n: usize| -> Vec<Platform> {
+            (0..n)
+                .map(|e| {
+                    let s = 3 ^ ((e as u64 + 1) * EDGE_SEED_PHI);
+                    let mut p = Platform::new(policy.clone(),
+                                              wl.models.clone(), wan(), s);
+                    p.edge_exec = wl.edge_exec.clone();
+                    p
+                })
+                .collect()
+        };
+        let seeds: Vec<u64> = (0..2u64)
+            .map(|e| (3 ^ ((e + 1) * EDGE_SEED_PHI)) ^ ARRIVAL_SEED_XOR)
+            .collect();
+        let a = Cluster::from_parts(build(2), wl.clone(), seeds.clone())
+            .run();
+        let b = Cluster::from_parts_hetero(
+            build(2),
+            vec![wl.clone(), wl.clone()],
+            seeds,
+        )
+        .run();
+        assert_eq!(a, b, "uniform hetero must be bit-identical");
     }
 }

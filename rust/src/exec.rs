@@ -141,7 +141,7 @@ mod tests {
     use crate::time::{ms, to_ms};
 
     fn pctile(xs: &mut [f64], p: f64) -> f64 {
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         xs[((xs.len() - 1) as f64 * p) as usize]
     }
 

@@ -1,125 +1,106 @@
-//! Experiment harness: regenerates every table and figure of the paper's
-//! evaluation (§8) — see the per-experiment index in DESIGN.md §4.
+//! Paper experiments: every table and figure of the evaluation (§8) as a
+//! [`Report`]-returning function — see the per-experiment index in
+//! DESIGN.md §4 and the registry in [`crate::scenario`].
 //!
-//! Each `figNN` function prints the same rows/series the paper reports;
-//! EXPERIMENTS.md records a paper-vs-measured comparison of each run.
-//! Invoke via `ocularone experiment <id>` or `run_experiment`.
+//! Each `figNN_report` builds the same rows/series the paper reports;
+//! the markdown rendering of the tables matches the pre-redesign
+//! `println!` harness (headers and data rows byte-for-byte, pinned by
+//! `tests/report_api.rs`), while `--format json` exposes the same numbers
+//! machine-readably. Invoke via `ocularone experiment <id>` or
+//! [`run_experiment`].
 
 use crate::bail;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ClusterMetrics};
 use crate::errors::Result;
 use crate::exec::CloudExecModel;
 use crate::fleet::Workload;
 use crate::metrics::{percentile, Metrics};
 use crate::model::{orin_field, table1, DnnKind, GemsWorkload, Resource};
 use crate::nav::{self, TrackingEvent};
-use crate::net::{mobility_trace, trace_stats, ConstantNet, LognormalWan,
-                 NetworkModel, TraceBandwidth, TrapeziumLatency};
+use crate::net::{mobility_trace, trace_stats, LognormalWan, NetworkModel};
 use crate::platform::Platform;
 use crate::policy::Policy;
+use crate::report::{Cell, Report, Table, Value};
 use crate::rng::Rng;
+use crate::scenario::CloudSpec;
 use crate::sim;
-use crate::time::{ms, ms_f, secs, to_secs, Micros};
+use crate::time::{ms, secs, Micros};
 
 /// Number of emulated edge base stations per host (§8.1 runs 7).
 pub const EDGES_PER_HOST: usize = 7;
 
-/// All experiment ids, in paper order.
-pub const ALL_EXPERIMENTS: &[&str] = &[
-    "t1", "fig1", "fig2", "fig8", "fig10", "fig11", "fig13", "fig14",
-    "fig17", "fig18",
-];
-
-/// Dispatch an experiment by id ("all" runs everything).
+/// Dispatch an experiment by id and print its markdown ("all" runs every
+/// registry entry) — the CLI's default path. The structured path is
+/// [`crate::scenario::run_scenario`].
 pub fn run_experiment(id: &str, seed: u64) -> Result<()> {
-    match id {
-        "all" => {
-            for e in ALL_EXPERIMENTS {
-                run_experiment(e, seed)?;
+    if id == "all" {
+        for (i, entry) in crate::scenario::registry().iter().enumerate() {
+            if i > 0 {
                 println!();
             }
-            Ok(())
+            let rep = crate::scenario::run_scenario(entry.id, seed)?;
+            print!("{}", rep.to_markdown());
         }
-        "t1" => t1(),
-        "fig1" => fig1(seed),
-        "fig2" => fig2(),
-        "fig8" | "fig9" | "fig23" => fig8(seed),
-        "fig10" | "fig24" => fig10(seed),
-        "fig11" | "fig12" | "fig25" => fig11(seed, "4D-P"),
-        "fig21" | "fig22" | "fig26" => fig11(seed, "3D-P"),
-        "fig13" | "fig27" => fig13(seed),
-        "fig14" | "fig15" => fig14(seed),
-        "fig17" => fig17(seed),
-        "fig18" => fig18(seed),
-        other => bail!(
-            "unknown experiment {other:?}; known: {ALL_EXPERIMENTS:?} or all"
-        ),
+        return Ok(());
     }
+    let rep = crate::scenario::run_scenario(id, seed)?;
+    print!("{}", rep.to_markdown());
+    Ok(())
 }
 
 // ------------------------------------------------------------------ utils
 
 fn default_cloud() -> CloudExecModel {
-    CloudExecModel::new(Box::new(LognormalWan::default()))
+    CloudSpec::NominalWan.build()
 }
 
 /// Run one workload × policy on an `n_edges`-station [`Cluster`] (distinct
 /// per-edge seeds), as the paper does with 7 edge containers per host.
-/// Returns all per-edge metrics. One event engine drives every edge; the
-/// per-edge results are bit-identical to the pre-cluster independent runs
-/// (pinned by `tests/paper_shape.rs`), so the recorded figures stand.
+/// One event engine drives every edge; the per-edge results are
+/// bit-identical to independent single-edge runs (pinned by
+/// `tests/paper_shape.rs`), so the recorded figures stand.
 fn run_edges(policy: &Policy, wl: &Workload, seed: u64, n_edges: usize,
-             make_cloud: &dyn Fn() -> CloudExecModel) -> Vec<Metrics> {
-    Cluster::emulation(policy, wl, seed, n_edges, make_cloud)
-        .run()
-        .per_edge
+             make_cloud: &dyn Fn() -> CloudExecModel) -> ClusterMetrics {
+    Cluster::emulation(policy, wl, seed, n_edges, make_cloud).run()
 }
 
-/// Median-by-utility edge (the paper reports "a median edge base station").
-fn median_edge(runs: &[Metrics]) -> &Metrics {
-    let mut idx: Vec<usize> = (0..runs.len()).collect();
-    idx.sort_by(|&a, &b| {
-        runs[a]
-            .qos_utility()
-            .partial_cmp(&runs[b].qos_utility())
-            .unwrap()
-    });
-    &runs[idx[idx.len() / 2]]
-}
-
-fn minmax_utility(runs: &[Metrics]) -> (f64, f64) {
-    let us: Vec<f64> = runs.iter().map(|m| m.qos_utility()).collect();
-    (
-        us.iter().cloned().fold(f64::INFINITY, f64::min),
-        us.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
-    )
+/// `{:.1}%` completion-rate cell over the raw percentage value.
+fn pct_cell(frac: f64) -> Cell {
+    Cell::percent(100.0 * frac, 1)
 }
 
 // ------------------------------------------------------------------- T1
 
 /// Table 1: model configs and derived per-task utilities.
-fn t1() -> Result<()> {
-    println!("## Table 1 — workload configuration (Jetson Nano / AWS)");
-    println!("| DNN | β | δ(ms) | t(ms) | t̂(ms) | κ | κ̂ | γᴱ | γᶜ |");
-    println!("|-----|---|------|-------|-------|---|----|----|----|");
+pub(crate) fn t1_report(seed: u64) -> Result<Report> {
+    let mut rep = Report::new(
+        "t1",
+        "Table 1 — workload configuration (Jetson Nano / AWS)",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "DNN", "β", "δ(ms)", "t(ms)", "t̂(ms)", "κ", "κ̂", "γᴱ", "γᶜ",
+    ]);
     for m in table1() {
-        println!(
-            "| {} | {} | {} | {} | {} | {} | {} | {} | {} |",
-            m.kind.name().to_uppercase(),
-            m.benefit,
-            m.deadline / 1000,
-            m.t_edge / 1000,
-            m.t_cloud / 1000,
-            m.cost_edge,
-            m.cost_cloud,
-            m.util_edge(),
-            m.util_cloud(),
-        );
+        t.push_row(vec![
+            Cell::str(m.kind.name().to_uppercase()),
+            Cell::float(m.benefit, 0),
+            Cell::uint(m.deadline / 1000),
+            Cell::uint(m.t_edge / 1000),
+            Cell::uint(m.t_cloud / 1000),
+            Cell::float(m.cost_edge, 0),
+            Cell::float(m.cost_cloud, 0),
+            Cell::float(m.util_edge(), 0),
+            Cell::float(m.util_cloud(), 0),
+        ]);
     }
-    println!("(γᶜ for MD is 60 = β−κ̂; the paper's table prints 50, \
-              inconsistent with its own κ̂=15 — we keep the column \
-              self-consistent.)");
-    Ok(())
+    rep.table(t);
+    rep.text(
+        "(γᶜ for MD is 60 = β−κ̂; the paper's table prints 50, \
+         inconsistent with its own κ̂=15 — we keep the column \
+         self-consistent.)",
+    );
+    Ok(rep)
 }
 
 // ------------------------------------------------------------------ Fig 1
@@ -127,207 +108,223 @@ fn t1() -> Result<()> {
 /// Fig. 1: inferencing time distributions, edge container vs FaaS. The
 /// edge numbers come from the *real* PJRT artifacts when available (scaled
 /// model), the cloud numbers from the calibrated FaaS model.
-fn fig1(seed: u64) -> Result<()> {
-    println!("## Fig 1 — model inferencing time distributions (ms)");
+pub(crate) fn fig1_report(seed: u64) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig1",
+        "Fig 1 — model inferencing time distributions (ms)",
+        seed,
+    );
     let mut rng = Rng::new(seed);
     let edge = crate::exec::EdgeExecModel::default();
     let mut cloud = default_cloud();
-    println!("| DNN | edge p50 | edge p95 | edge p99 | cloud p50 | cloud p95 |");
-    println!("|-----|---------|----------|----------|-----------|-----------|");
+    let mut t = Table::new(&[
+        "DNN", "edge p50", "edge p95", "edge p99", "cloud p50",
+        "cloud p95",
+    ]);
     for m in table1() {
         let e: Vec<f64> = (0..2000)
             .map(|_| edge.sample(&m, &mut rng) as f64 / 1000.0)
             .collect();
         let c: Vec<f64> = (0..2000)
-            .map(|_| cloud.sample(&m, 0, 38_000, 0, &mut rng).0 as f64 / 1000.0)
+            .map(|_| cloud.sample(&m, 0, 38_000, 0, &mut rng).0 as f64
+                / 1000.0)
             .collect();
-        println!(
-            "| {} | {:.0} | {:.0} | {:.0} | {:.0} | {:.0} |",
-            m.kind.name().to_uppercase(),
-            percentile(&e, 0.5),
-            percentile(&e, 0.95),
-            percentile(&e, 0.99),
-            percentile(&c, 0.5),
-            percentile(&c, 0.95),
-        );
+        t.push_row(vec![
+            Cell::str(m.kind.name().to_uppercase()),
+            Cell::float(percentile(&e, 0.5), 0),
+            Cell::float(percentile(&e, 0.95), 0),
+            Cell::float(percentile(&e, 0.99), 0),
+            Cell::float(percentile(&c, 0.5), 0),
+            Cell::float(percentile(&c, 0.95), 0),
+        ]);
     }
-    println!("(edge distributions tight, cloud long-tailed — Fig 1a/1b)");
-    Ok(())
+    rep.table(t);
+    rep.text("(edge distributions tight, cloud long-tailed — Fig 1a/1b)");
+    Ok(rep)
 }
 
 // ------------------------------------------------------------------ Fig 2
 
 /// Fig. 2: network characteristics of the WAN and mobility models.
-fn fig2() -> Result<()> {
-    println!("## Fig 2 — network characteristics");
+pub(crate) fn fig2_report(seed: u64) -> Result<Report> {
+    let mut rep =
+        Report::new("fig2", "Fig 2 — network characteristics", seed);
     let mut rng = Rng::new(2);
     let mut wan = LognormalWan::default();
     let lat: Vec<f64> = (0..5000)
         .map(|_| wan.latency(0, &mut rng) as f64 / 1000.0)
         .collect();
     let (l5, l50, l95) = trace_stats(&lat);
-    println!("WAN ping (one-way, ms): p5 {l5:.1}  p50 {l50:.1}  p95 {l95:.1}  \
-              max {:.1}", lat.iter().cloned().fold(0.0, f64::max));
+    rep.text(format!(
+        "WAN ping (one-way, ms): p5 {l5:.1}  p50 {l50:.1}  p95 {l95:.1}  \
+         max {:.1}",
+        lat.iter().cloned().fold(0.0, f64::max)
+    ));
     let bw: Vec<f64> = (0..5000)
         .map(|_| wan.bandwidth(0, &mut rng) / 1e6)
         .collect();
     let (b5, b50, b95) = trace_stats(&bw);
-    println!("WAN bandwidth (MB/s): p5 {b5:.1}  p50 {b50:.1}  p95 {b95:.1}");
-    println!("4G mobility traces (7 devices, 300 s, MB/s):");
+    rep.text(format!(
+        "WAN bandwidth (MB/s): p5 {b5:.1}  p50 {b50:.1}  p95 {b95:.1}"
+    ));
+    rep.text("4G mobility traces (7 devices, 300 s, MB/s):");
     for d in 0..7 {
         let tr = mobility_trace(d, 300);
         let mbs: Vec<f64> = tr.iter().map(|v| v / 1e6).collect();
         let (p5, p50, p95) = trace_stats(&mbs);
-        println!("  device {d}: p5 {p5:.2}  p50 {p50:.2}  p95 {p95:.2}");
+        rep.text(format!(
+            "  device {d}: p5 {p5:.2}  p50 {p50:.2}  p95 {p95:.2}"
+        ));
     }
-    Ok(())
+    Ok(rep)
 }
 
 // ------------------------------------------------------------------ Fig 8
 
 /// Fig. 8/9/23: DEMS vs the seven baselines across the six workloads.
-fn fig8(seed: u64) -> Result<()> {
-    println!("## Fig 8/9 — DEMS vs baselines (median edge of {EDGES_PER_HOST}; \
-              utility ×10⁵)");
-    println!("| WL | algo | tasks done | done % | QoS util | util edge | \
-              util cloud | min..max util |");
-    println!("|----|------|-----------|--------|----------|-----------|\
-              -----------|---------------|");
+pub(crate) fn fig8_report(seed: u64) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig8",
+        format!(
+            "Fig 8/9 — DEMS vs baselines (median edge of \
+             {EDGES_PER_HOST}; utility ×10⁵)"
+        ),
+        seed,
+    );
+    let mut t = Table::new(&[
+        "WL", "algo", "tasks done", "done %", "QoS util", "util edge",
+        "util cloud", "min..max util",
+    ]);
     for wl in Workload::fig8_all() {
         for policy in Policy::fig8_lineup() {
-            let runs = run_edges(&policy, &wl, seed, EDGES_PER_HOST,
-                                 &default_cloud);
-            let m = median_edge(&runs);
-            let (lo, hi) = minmax_utility(&runs);
-            println!(
-                "| {} | {} | {} | {:.1}% | {:.2} | {:.2} | {:.2} | \
-                 {:.2}..{:.2} |",
-                wl.name,
-                policy.kind.name(),
-                m.completed(),
-                100.0 * m.completion_rate(),
-                m.qos_utility() / 1e5,
-                m.qos_utility_on(Resource::Edge) / 1e5,
-                m.qos_utility_on(Resource::Cloud) / 1e5,
-                lo / 1e5,
-                hi / 1e5,
-            );
+            let cm = run_edges(&policy, &wl, seed, EDGES_PER_HOST,
+                               &default_cloud);
+            let m = cm.median_edge();
+            let (lo, hi) = cm.minmax_utility();
+            t.push_row(vec![
+                Cell::str(wl.name.as_str()),
+                Cell::str(policy.kind.name()),
+                Cell::uint(m.completed()),
+                pct_cell(m.completion_rate()),
+                Cell::float(m.qos_utility() / 1e5, 2),
+                Cell::float(m.qos_utility_on(Resource::Edge) / 1e5, 2),
+                Cell::float(m.qos_utility_on(Resource::Cloud) / 1e5, 2),
+                Cell::str(format!("{:.2}..{:.2}", lo / 1e5, hi / 1e5)),
+            ]);
         }
     }
-    Ok(())
+    rep.table(t);
+    Ok(rep)
 }
 
 // ----------------------------------------------------------------- Fig 10
 
 /// Fig. 10/24: incremental benefits of DEM and DEMS over E+C.
-fn fig10(seed: u64) -> Result<()> {
-    println!("## Fig 10 — incremental benefits of migration (DEM) and \
-              stealing (DEMS) over E+C");
-    println!("| WL | algo | done | done % | QoS util | cloud done | \
-              stolen | stolen BP% | edge util |");
-    println!("|----|------|------|--------|----------|-----------|\
-              --------|-----------|-----------|");
+pub(crate) fn fig10_report(seed: u64) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig10",
+        "Fig 10 — incremental benefits of migration (DEM) and stealing \
+         (DEMS) over E+C",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "WL", "algo", "done", "done %", "QoS util", "cloud done",
+        "stolen", "stolen BP%", "edge util",
+    ]);
     for wl in Workload::fig8_all() {
         for policy in [Policy::edf_ec(), Policy::dem(), Policy::dems()] {
-            let runs =
-                run_edges(&policy, &wl, seed, EDGES_PER_HOST, &default_cloud);
-            let m = median_edge(&runs);
+            let cm = run_edges(&policy, &wl, seed, EDGES_PER_HOST,
+                               &default_cloud);
+            let m = cm.median_edge();
             let stolen = m.stolen();
             let stolen_bp = m.stats(DnnKind::Bp).stolen;
-            println!(
-                "| {} | {} | {} | {:.1}% | {:.2} | {} | {} | {:.0}% | {:.0}% |",
-                wl.name,
-                policy.kind.name(),
-                m.completed(),
-                100.0 * m.completion_rate(),
-                m.qos_utility() / 1e5,
-                m.completed_on(Resource::Cloud),
-                stolen,
-                if stolen > 0 {
-                    100.0 * stolen_bp as f64 / stolen as f64
-                } else {
-                    0.0
-                },
-                100.0 * m.edge_utilization(),
-            );
+            let bp_pct = if stolen > 0 {
+                100.0 * stolen_bp as f64 / stolen as f64
+            } else {
+                0.0
+            };
+            t.push_row(vec![
+                Cell::str(wl.name.as_str()),
+                Cell::str(policy.kind.name()),
+                Cell::uint(m.completed()),
+                pct_cell(m.completion_rate()),
+                Cell::float(m.qos_utility() / 1e5, 2),
+                Cell::uint(m.completed_on(Resource::Cloud)),
+                Cell::uint(stolen),
+                Cell::percent(bp_pct, 0),
+                Cell::percent(100.0 * m.edge_utilization(), 0),
+            ]);
         }
     }
-    Ok(())
+    rep.table(t);
+    Ok(rep)
 }
 
 // ----------------------------------------------------------------- Fig 11
 
-fn latency_shaped_cloud() -> CloudExecModel {
-    CloudExecModel::new(Box::new(TrapeziumLatency::paper_default(
-        LognormalWan::default(),
-    )))
-}
-
-fn bandwidth_shaped_cloud(device: u64) -> CloudExecModel {
-    CloudExecModel::new(Box::new(TraceBandwidth {
-        base: LognormalWan {
-            // Mobility case: latency stays nominal, bandwidth is replayed
-            // from the 4G trace.
-            median_bandwidth: f64::INFINITY,
-            ..LognormalWan::default()
-        },
-        samples: mobility_trace(device, 300),
-        period: secs(1),
-    }))
-}
-
-/// Fig. 11/12/25 (and App. C Figs 21/22/26 with `--workload 3D-P`):
+/// Fig. 11/12/25 (and App. C Figs 21/22/26 with the 3D-P workload):
 /// DEMS-A vs DEMS under latency and bandwidth variability.
-fn fig11(seed: u64, wl_name: &str) -> Result<()> {
-    let wl = match wl_name {
-        "4D-P" => Workload::emulation(4, false),
-        "3D-P" => Workload::emulation(3, false),
+pub(crate) fn fig11_report(seed: u64, wl_name: &str) -> Result<Report> {
+    // The 3D-P variant is the App. C re-run (Figs 21/22/26) — give it
+    // its own report id so JSON consumers can tell the two apart.
+    let (wl, id) = match wl_name {
+        "4D-P" => (Workload::emulation(4, false), "fig11"),
+        "3D-P" => (Workload::emulation(3, false), "fig21"),
         other => bail!("fig11 supports 4D-P / 3D-P, not {other}"),
     };
-    println!("## Fig 11 — adaptation to network variability ({wl_name})");
+    let mut rep = Report::new(
+        id,
+        format!("Fig 11 — adaptation to network variability ({wl_name})"),
+        seed,
+    );
     for (label, shaped) in [("latency (trapezium 0→400ms)", true),
                             ("bandwidth (4G mobility trace)", false)] {
-        println!("### {label}");
-        println!("| algo | done | done % | QoS util | cloud done | \
-                  cloud missed |");
-        println!("|------|------|--------|----------|-----------|-------------|");
+        let spec = if shaped {
+            CloudSpec::TrapeziumLatency
+        } else {
+            CloudSpec::MobilityBandwidth { device: 3 }
+        };
+        rep.text(format!("### {label}"));
+        let mut t = Table::new(&[
+            "algo", "done", "done %", "QoS util", "cloud done",
+            "cloud missed",
+        ]);
         for policy in [Policy::dems(), Policy::dems_a()] {
-            let make: Box<dyn Fn() -> CloudExecModel> = if shaped {
-                Box::new(latency_shaped_cloud)
-            } else {
-                Box::new(move || bandwidth_shaped_cloud(3))
+            let make: Box<dyn Fn() -> CloudExecModel> = {
+                let spec = spec.clone();
+                Box::new(move || spec.build())
             };
-            let runs = run_edges(&policy, &wl, seed, EDGES_PER_HOST, &make);
-            let m = median_edge(&runs);
+            let cm = run_edges(&policy, &wl, seed, EDGES_PER_HOST, &make);
+            let m = cm.median_edge();
             let missed_cloud: u64 =
                 m.per_model.iter().map(|(_, s)| s.missed_cloud).sum();
-            println!(
-                "| {} | {} | {:.1}% | {:.2} | {} | {} |",
-                policy.kind.name(),
-                m.completed(),
-                100.0 * m.completion_rate(),
-                m.qos_utility() / 1e5,
-                m.completed_on(Resource::Cloud),
-                missed_cloud,
-            );
+            t.push_row(vec![
+                Cell::str(policy.kind.name()),
+                Cell::uint(m.completed()),
+                pct_cell(m.completion_rate()),
+                Cell::float(m.qos_utility() / 1e5, 2),
+                Cell::uint(m.completed_on(Resource::Cloud)),
+                Cell::uint(missed_cloud),
+            ]);
         }
+        rep.table(t);
         // Fig 12 timeline: one DEV-task series on a representative edge.
-        println!("#### Fig 12 timeline (DEV on a representative edge; \
-                  10 s buckets, ms)");
+        rep.text(
+            "#### Fig 12 timeline (DEV on a representative edge; \
+             10 s buckets, ms)",
+        );
         for policy in [Policy::dems(), Policy::dems_a()] {
-            let mut cloud = if shaped {
-                latency_shaped_cloud()
-            } else {
-                bandwidth_shaped_cloud(3)
-            };
+            let mut cloud = spec.build();
             cloud.cold_prob = 0.0;
             let mut platform = Platform::new(policy.clone(),
-                                             wl.models.clone(), cloud, seed);
+                                             wl.models.clone(), cloud,
+                                             seed);
             platform.metrics.record_timeline = true;
             let m = sim::run(platform, &wl, seed);
-            print!("{:8}", policy.kind.name());
+            let mut line = format!("{:8}", policy.kind.name());
             let mut bucket = 0u64;
-            let (mut n, mut obs, mut exp, mut fail) = (0u64, 0.0, 0.0, 0u64);
+            let (mut n, mut obs, mut exp, mut fail) =
+                (0u64, 0.0, 0.0, 0u64);
             for p in m
                 .timeline
                 .iter()
@@ -336,13 +333,13 @@ fn fig11(seed: u64, wl_name: &str) -> Result<()> {
                 let b = p.at / secs(10);
                 if b != bucket {
                     if n > 0 {
-                        print!(
+                        line.push_str(&format!(
                             " | t={:>3}s obs={:>4.0} exp={:>4.0} miss={}",
                             bucket * 10,
                             obs / n as f64,
                             exp / n as f64,
                             fail
-                        );
+                        ));
                     }
                     bucket = b;
                     n = 0;
@@ -355,52 +352,59 @@ fn fig11(seed: u64, wl_name: &str) -> Result<()> {
                 exp += p.expected_ms;
                 fail += u64::from(!p.success);
             }
-            println!();
+            rep.text(line);
         }
     }
-    Ok(())
+    Ok(rep)
 }
 
 // ----------------------------------------------------------------- Fig 13
 
 /// Fig. 13/27: weak scaling — 7 edges on 1 host → 28 edges on 4 hosts.
-fn fig13(seed: u64) -> Result<()> {
-    println!("## Fig 13 — weak scaling (3D-P, DEMS)");
-    println!("| setup | edges | drones | per-edge done % | per-edge QoS \
-              util | total util |");
-    println!("|-------|-------|--------|-----------------|--------------|------------|");
+pub(crate) fn fig13_report(seed: u64) -> Result<Report> {
+    let mut rep =
+        Report::new("fig13", "Fig 13 — weak scaling (3D-P, DEMS)", seed);
+    let mut t = Table::new(&[
+        "setup", "edges", "drones", "per-edge done %",
+        "per-edge QoS util", "total util",
+    ]);
     let wl = Workload::emulation(3, false);
     for hosts in [1usize, 2, 3, 4] {
         let edges = hosts * EDGES_PER_HOST;
-        let runs =
-            run_edges(&Policy::dems(), &wl, seed ^ hosts as u64, edges,
-                      &default_cloud);
-        let m = median_edge(&runs);
-        let total: f64 = runs.iter().map(|r| r.qos_utility()).sum();
-        println!(
-            "| {}HM | {} | {} | {:.1}% | {:.2} | {:.2} |",
-            hosts,
-            edges,
-            edges * 3,
-            100.0 * m.completion_rate(),
-            m.qos_utility() / 1e5,
-            total / 1e5,
-        );
+        let cm = run_edges(&Policy::dems(), &wl, seed ^ hosts as u64,
+                           edges, &default_cloud);
+        let m = cm.median_edge();
+        let total = cm.total_qos_utility();
+        t.push_row(vec![
+            Cell::str(format!("{hosts}HM")),
+            Cell::uint(edges as u64),
+            Cell::uint(edges as u64 * 3),
+            pct_cell(m.completion_rate()),
+            Cell::float(m.qos_utility() / 1e5, 2),
+            Cell::float(total / 1e5, 2),
+        ]);
     }
-    println!("(per-edge figures ≈ constant: the FaaS and the per-host \
-              uplink scale with the hosts)");
-    Ok(())
+    rep.table(t);
+    rep.text(
+        "(per-edge figures ≈ constant: the FaaS and the per-host uplink \
+         scale with the hosts)",
+    );
+    Ok(rep)
 }
 
 // ----------------------------------------------------------------- Fig 14
 
 /// Fig. 14/15 + Table 2: GEMS vs DEMS on WL1/WL2 with α ∈ {0.9, 1.0}.
-fn fig14(seed: u64) -> Result<()> {
-    println!("## Fig 14 — GEMS vs DEMS (Table 2 workloads, ω = 20 s)");
-    println!("| WL | α | algo | done | done % | cloud done | GEMS resched | \
-              QoE util | total util |");
-    println!("|----|---|------|------|--------|-----------|--------------|\
-              ----------|------------|");
+pub(crate) fn fig14_report(seed: u64) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig14",
+        "Fig 14 — GEMS vs DEMS (Table 2 workloads, ω = 20 s)",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "WL", "α", "algo", "done", "done %", "cloud done",
+        "GEMS resched", "QoE util", "total util",
+    ]);
     let mut fig15_data: Option<(Metrics, Metrics)> = None;
     for wlk in [GemsWorkload::Wl1, GemsWorkload::Wl2] {
         for alpha in [0.9, 1.0] {
@@ -416,18 +420,17 @@ fn fig14(seed: u64) -> Result<()> {
                 platform.edge_exec = wl.edge_exec.clone();
                 platform.metrics.record_completions = true;
                 let m = sim::run(platform, &wl, seed);
-                println!(
-                    "| {} | {} | {} | {} | {:.1}% | {} | {} | {:.2} | {:.2} |",
-                    wl.name,
-                    alpha,
-                    policy.kind.name(),
-                    m.completed(),
-                    100.0 * m.completion_rate(),
-                    m.completed_on(Resource::Cloud),
-                    m.gems_rescheduled(),
-                    m.qoe_utility() / 1e4,
-                    m.total_utility() / 1e4,
-                );
+                t.push_row(vec![
+                    Cell::str(wl.name.as_str()),
+                    Cell::fmt(Value::Float(alpha), format!("{alpha}")),
+                    Cell::str(policy.kind.name()),
+                    Cell::uint(m.completed()),
+                    pct_cell(m.completion_rate()),
+                    Cell::uint(m.completed_on(Resource::Cloud)),
+                    Cell::uint(m.gems_rescheduled()),
+                    Cell::float(m.qoe_utility() / 1e4, 2),
+                    Cell::float(m.total_utility() / 1e4, 2),
+                ]);
                 pair.push(m);
             }
             if wlk == GemsWorkload::Wl1 && alpha == 0.9 {
@@ -437,11 +440,16 @@ fn fig14(seed: u64) -> Result<()> {
             }
         }
     }
+    rep.table(t);
     // Fig 15: per-window drilldown for WL1, α = 0.9.
     if let Some((dems, gems)) = fig15_data {
-        println!("\n### Fig 15 — tasks completed per 20 s window \
-                  (WL1, α = 0.9)");
-        for kind in [DnnKind::Hv, DnnKind::Dev, DnnKind::Md, DnnKind::Cd] {
+        rep.text(
+            "\n### Fig 15 — tasks completed per 20 s window \
+             (WL1, α = 0.9)",
+        );
+        let mut lines = Vec::new();
+        for kind in [DnnKind::Hv, DnnKind::Dev, DnnKind::Md, DnnKind::Cd]
+        {
             for (name, m) in [("DEMS", &dems), ("GEMS", &gems)] {
                 let mut counts = vec![0u64; 15];
                 for c in m
@@ -454,16 +462,17 @@ fn fig14(seed: u64) -> Result<()> {
                         counts[w] += 1;
                     }
                 }
-                println!(
+                lines.push(format!(
                     "{:4} {:5}: {:?}",
                     kind.name().to_uppercase(),
                     name,
                     counts
-                );
+                ));
             }
         }
+        rep.text(lines.join("\n"));
     }
-    Ok(())
+    Ok(rep)
 }
 
 // ----------------------------------------------------------------- Fig 17
@@ -511,38 +520,43 @@ fn tracking_events(m: &Metrics) -> Vec<TrackingEvent> {
 
 /// Fig. 17a/17b: field validation — completion/utility per scheduler and
 /// FPS, with DNF detection; plus post-processing latencies.
-fn fig17(seed: u64) -> Result<()> {
-    println!("## Fig 17a — field validation (Tello + Orin Nano sim)");
-    println!("| algo | fps | done | done % | edge done | cloud done | \
-              total util | DNF |");
-    println!("|------|-----|------|--------|-----------|-----------|\
-              -----------|-----|");
+pub(crate) fn fig17_report(seed: u64) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig17",
+        "Fig 17a — field validation (Tello + Orin Nano sim)",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "algo", "fps", "done", "done %", "edge done", "cloud done",
+        "total util", "DNF",
+    ]);
     for fps in [15u32, 30] {
         for policy in field_policies() {
             let m = field_run(&policy, fps, seed);
             let events = tracking_events(&m);
-            let nav =
-                nav::fly(&events, m.duration, seed ^ fps as u64);
-            println!(
-                "| {} | {} | {} | {:.1}% | {} | {} | {:.2} | {} |",
-                policy.kind.name(),
-                fps,
-                m.completed(),
-                100.0 * m.completion_rate(),
-                m.completed_on(Resource::Edge),
-                m.completed_on(Resource::Cloud),
-                m.total_utility() / 1e5,
+            let nav = nav::fly(&events, m.duration, seed ^ fps as u64);
+            t.push_row(vec![
+                Cell::str(policy.kind.name()),
+                Cell::uint(fps as u64),
+                Cell::uint(m.completed()),
+                pct_cell(m.completion_rate()),
+                Cell::uint(m.completed_on(Resource::Edge)),
+                Cell::uint(m.completed_on(Resource::Cloud)),
+                Cell::float(m.total_utility() / 1e5, 2),
                 if nav.dnf {
-                    format!("DNF@{:.0}s", nav.dnf_at_s)
+                    Cell::str(format!("DNF@{:.0}s", nav.dnf_at_s))
                 } else {
-                    "-".into()
+                    Cell::fmt(Value::Null, "-")
                 },
-            );
+            ]);
         }
     }
+    rep.table(t);
     // Fig 17b: post-processing latencies on real artifact outputs when
     // available, else synthetic vectors.
-    println!("\n## Fig 17b — post-processing latencies (µs median of 1000)");
+    rep.text(
+        "\n## Fig 17b — post-processing latencies (µs median of 1000)",
+    );
     let mut rng = Rng::new(seed);
     let hv_out: Vec<f32> = (0..5).map(|_| rng.f64() as f32).collect();
     let bp_out: Vec<f32> = (0..36).map(|_| rng.f64() as f32).collect();
@@ -564,53 +578,63 @@ fn fig17(seed: u64) -> Result<()> {
     let bp_us = time_us(&mut || {
         let _ = nav::classify_pose(&bp_out);
     });
-    println!("HV {hv_us:.2} µs | DEV {dev_us:.2} µs | BP {bp_us:.2} µs \
-              (paper: 4 ms / 2 ms / 10 ms in Python — Rust removes the \
-              interpreter overhead; ordering preserved)");
-    Ok(())
+    rep.text(format!(
+        "HV {hv_us:.2} µs | DEV {dev_us:.2} µs | BP {bp_us:.2} µs \
+         (paper: 4 ms / 2 ms / 10 ms in Python — Rust removes the \
+         interpreter overhead; ordering preserved)"
+    ));
+    Ok(rep)
 }
 
 // ----------------------------------------------------------------- Fig 18
 
 /// Fig. 18: jerk and yaw-error distributions per scheduler.
-fn fig18(seed: u64) -> Result<()> {
-    println!("## Fig 18 — drone mobility error metrics");
-    println!("| algo | fps | jerk FB p95 | jerk LR p95 | jerk UD p95 | \
-              yaw mean° | yaw med° | yaw p95° |");
-    println!("|------|-----|------------|------------|------------|\
-              ----------|----------|----------|");
+pub(crate) fn fig18_report(seed: u64) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig18",
+        "Fig 18 — drone mobility error metrics",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "algo", "fps", "jerk FB p95", "jerk LR p95", "jerk UD p95",
+        "yaw mean°", "yaw med°", "yaw p95°",
+    ]);
     for fps in [15u32, 30] {
         for policy in field_policies() {
             let m = field_run(&policy, fps, seed);
             let events = tracking_events(&m);
             let nav = nav::fly(&events, m.duration, seed ^ fps as u64);
             if nav.dnf {
-                println!(
-                    "| {} | {} | DNF@{:.0}s | | | | | |",
-                    policy.kind.name(),
-                    fps,
-                    nav.dnf_at_s
-                );
+                t.push_row(vec![
+                    Cell::str(policy.kind.name()),
+                    Cell::uint(fps as u64),
+                    Cell::str(format!("DNF@{:.0}s", nav.dnf_at_s)),
+                    Cell::fmt(Value::Null, ""),
+                    Cell::fmt(Value::Null, ""),
+                    Cell::fmt(Value::Null, ""),
+                    Cell::fmt(Value::Null, ""),
+                    Cell::fmt(Value::Null, ""),
+                ]);
                 continue;
             }
             let fb = nav.jerk_stats(0);
             let lr = nav.jerk_stats(1);
             let ud = nav.jerk_stats(2);
             let yaw = nav.yaw_stats();
-            println!(
-                "| {} | {} | {:.2} | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
-                policy.kind.name(),
-                fps,
-                fb.2,
-                lr.2,
-                ud.2,
-                yaw.0,
-                yaw.1,
-                yaw.2,
-            );
+            t.push_row(vec![
+                Cell::str(policy.kind.name()),
+                Cell::uint(fps as u64),
+                Cell::float(fb.2, 2),
+                Cell::float(lr.2, 2),
+                Cell::float(ud.2, 2),
+                Cell::float(yaw.0, 1),
+                Cell::float(yaw.1, 1),
+                Cell::float(yaw.2, 1),
+            ]);
         }
     }
-    Ok(())
+    rep.table(t);
+    Ok(rep)
 }
 
 // ---------------------------------------------------------------- helpers
@@ -627,17 +651,4 @@ pub fn summarize(m: &Metrics) -> String {
         m.stolen(),
         m.gems_rescheduled()
     )
-}
-
-#[allow(unused)]
-fn unused_imports_guard(_: &dyn NetworkModel, _: ConstantNet) {}
-
-#[allow(unused)]
-fn _to_secs_used(x: Micros) -> f64 {
-    to_secs(x)
-}
-
-#[allow(unused)]
-fn _ms_f_used(x: f64) -> Micros {
-    ms_f(x)
 }

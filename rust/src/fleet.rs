@@ -11,6 +11,32 @@ use crate::model::{table1, table1_passive, table2, GemsWorkload,
                    ModelProfile};
 use crate::time::{ms_f, secs, Micros};
 
+/// Per-drone segment arrival process (beyond-paper axis; the paper's
+/// emulation is strictly periodic).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Arrival {
+    /// One segment every `segment_period` (the paper's §8.1 setup).
+    Periodic,
+    /// Poisson process with mean inter-arrival `segment_period` — same
+    /// average rate as [`Arrival::Periodic`], memoryless spacing.
+    Poisson,
+    /// Deterministic duty cycle: segments flow for `on`, pause for `off`,
+    /// repeating — a stand-in for video streams that gate on motion.
+    Bursty { on: Micros, off: Micros },
+}
+
+/// One drone's mid-run churn window: the (edge-local) drone produces
+/// segments only while `active_from ≤ now < active_until`. A drone may
+/// carry several windows (leave and rejoin); drones without any window are
+/// always active.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DroneChurn {
+    /// Edge-local drone index in `0..drones`.
+    pub drone: u32,
+    pub active_from: Micros,
+    pub active_until: Micros,
+}
+
 /// A complete workload specification for one edge base station.
 #[derive(Clone, Debug)]
 pub struct Workload {
@@ -25,10 +51,76 @@ pub struct Workload {
     pub model_every: Vec<u32>,
     /// Edge service-time regime (the hardware substitute for this study).
     pub edge_exec: EdgeExecModel,
+    /// Segment arrival process (default: the paper's periodic ticks).
+    pub arrival: Arrival,
+    /// Mid-run drone join/leave windows (default: none — all drones
+    /// stream for the whole run).
+    pub churn: Vec<DroneChurn>,
 }
 
 impl Workload {
-    /// Expected task generation rate (tasks/second) across the fleet.
+    // ----------------------------------------------------- builder methods
+
+    /// Rename the workload (scenario grids disambiguate variants, e.g.
+    /// `3D-A-poi`).
+    pub fn with_name(mut self, name: impl Into<String>) -> Workload {
+        self.name = name.into();
+        self
+    }
+
+    /// Replace the arrival process (see [`Arrival`]).
+    pub fn with_arrival(mut self, arrival: Arrival) -> Workload {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Add one churn window (see [`DroneChurn`]). May be called repeatedly
+    /// to model several joins/leaves.
+    pub fn with_churn(mut self, churn: DroneChurn) -> Workload {
+        self.churn.push(churn);
+        self
+    }
+
+    /// Override the run duration.
+    pub fn with_duration(mut self, duration: Micros) -> Workload {
+        self.duration = duration;
+        self
+    }
+
+    /// Whether the (edge-local) drone streams at virtual time `now` under
+    /// the churn windows: unlisted drones always do; listed drones only
+    /// inside one of their windows.
+    pub fn drone_active(&self, drone: u32, now: Micros) -> bool {
+        let mut listed = false;
+        for c in &self.churn {
+            if c.drone == drone {
+                if now >= c.active_from && now < c.active_until {
+                    return true;
+                }
+                listed = true;
+            }
+        }
+        !listed
+    }
+
+    /// Whether the arrival process emits at `now` (the bursty duty-cycle
+    /// gate; periodic and Poisson always emit at their tick times).
+    pub fn arrival_on(&self, now: Micros) -> bool {
+        match self.arrival {
+            Arrival::Bursty { on, off } => {
+                let cycle = on + off;
+                cycle == 0 || now % cycle < on
+            }
+            _ => true,
+        }
+    }
+
+    // ------------------------------------------------------ derived rates
+
+    /// Expected task generation rate (tasks/second) across the fleet,
+    /// assuming every drone streams for the whole run (nominal for
+    /// [`Arrival::Poisson`], which matches the mean rate; churn and duty
+    /// cycles reduce it).
     pub fn tasks_per_second(&self) -> f64 {
         let per_tick: f64 = self
             .model_every
@@ -70,6 +162,8 @@ impl Workload {
             segment_bytes: 38_000,
             model_every: vec![1; n],
             edge_exec: EdgeExecModel::default(),
+            arrival: Arrival::Periodic,
+            churn: Vec::new(),
         }
     }
 
@@ -105,6 +199,8 @@ impl Workload {
             model_every: vec![1; n],
             // §8.7 replaces DNN execution with sleep functions.
             edge_exec: EdgeExecModel::sleep_semantics(),
+            arrival: Arrival::Periodic,
+            churn: Vec::new(),
         }
     }
 
@@ -128,6 +224,8 @@ impl Workload {
             // 49/50/72 ms): typical draws sit close to the p99, so even
             // 15 FPS edge-only is overloaded, as the paper observes.
             edge_exec: EdgeExecModel { sigma: 0.14, overhead: (0, 0) },
+            arrival: Arrival::Periodic,
+            churn: Vec::new(),
         }
     }
 }
@@ -185,5 +283,79 @@ mod tests {
     fn gems_workload_names() {
         assert_eq!(Workload::gems(GemsWorkload::Wl1, 0.9).name, "WL1-a0.9");
         assert_eq!(Workload::gems(GemsWorkload::Wl2, 1.0).name, "WL2-a1");
+    }
+
+    #[test]
+    fn presets_default_to_periodic_no_churn() {
+        for wl in [
+            Workload::emulation(3, true),
+            Workload::gems(GemsWorkload::Wl1, 0.9),
+            Workload::field(30, orin_field()),
+        ] {
+            assert_eq!(wl.arrival, Arrival::Periodic);
+            assert!(wl.churn.is_empty());
+            assert!(wl.drone_active(0, 0));
+            assert!(wl.arrival_on(secs(123)));
+        }
+    }
+
+    #[test]
+    fn churn_windows_gate_drones() {
+        let wl = Workload::emulation(4, false)
+            .with_churn(DroneChurn {
+                drone: 2,
+                active_from: 0,
+                active_until: secs(150),
+            })
+            .with_churn(DroneChurn {
+                drone: 3,
+                active_from: secs(120),
+                active_until: secs(300),
+            })
+            .with_churn(DroneChurn {
+                drone: 2,
+                active_from: secs(250),
+                active_until: secs(300),
+            });
+        // Unlisted drones are always active.
+        assert!(wl.drone_active(0, 0));
+        assert!(wl.drone_active(1, secs(299)));
+        // Drone 2 leaves at 150 s and rejoins at 250 s.
+        assert!(wl.drone_active(2, secs(149)));
+        assert!(!wl.drone_active(2, secs(150)));
+        assert!(!wl.drone_active(2, secs(200)));
+        assert!(wl.drone_active(2, secs(250)));
+        // Drone 3 joins at 120 s.
+        assert!(!wl.drone_active(3, 0));
+        assert!(wl.drone_active(3, secs(120)));
+    }
+
+    #[test]
+    fn bursty_duty_cycle_gates_arrivals() {
+        let wl = Workload::emulation(2, false).with_arrival(
+            Arrival::Bursty { on: secs(10), off: secs(10) },
+        );
+        assert!(wl.arrival_on(0));
+        assert!(wl.arrival_on(secs(10) - 1));
+        assert!(!wl.arrival_on(secs(10)));
+        assert!(!wl.arrival_on(secs(20) - 1));
+        assert!(wl.arrival_on(secs(20)));
+        // Degenerate zero cycle never blocks.
+        let z = Workload::emulation(2, false)
+            .with_arrival(Arrival::Bursty { on: 0, off: 0 });
+        assert!(z.arrival_on(secs(5)));
+    }
+
+    #[test]
+    fn builder_methods_compose() {
+        let wl = Workload::emulation(3, true)
+            .with_name("3D-A-poi")
+            .with_arrival(Arrival::Poisson)
+            .with_duration(secs(60));
+        assert_eq!(wl.name, "3D-A-poi");
+        assert_eq!(wl.arrival, Arrival::Poisson);
+        assert_eq!(wl.duration, secs(60));
+        // The nominal rate is unchanged: Poisson matches the mean.
+        assert_eq!(wl.tasks_per_second(), 18.0);
     }
 }

@@ -36,6 +36,16 @@
 //!   the §8.1 multi-edge emulation as a first-class API
 //!   (`ocularone simulate --edges 7`).
 //!
+//! On top of the engine sits the **scenario & report layer**:
+//! [`scenario::Scenario`] declaratively composes workload × policy ×
+//! network × edge-count × seed grids — including beyond-paper axes
+//! (Poisson/bursty arrivals, mid-run drone churn, heterogeneous per-edge
+//! fleets and hardware) — and every experiment returns a structured
+//! [`report::Report`] that renders to markdown or JSON
+//! (`ocularone experiment all --format json --out reports/`). The
+//! paper's tables/figures are named entries in
+//! [`scenario::registry`].
+//!
 //! Python never runs on the request path: with the `pjrt` feature the
 //! `runtime` module loads the artifacts through the PJRT C API and `serve`
 //! drives real inferences through the same `Scheduler` decisions. The
@@ -44,8 +54,8 @@
 //!
 //! Start with [`policy::Policy`] + [`fleet::Workload`] + [`simulate`] for
 //! single-edge studies, [`simulate_cluster`] (or [`cluster::Cluster`]
-//! directly) for fleet-scale ones, and `serve` for the real-inference
-//! serving loop.
+//! directly) for fleet-scale ones, [`scenario::run_scenario`] for named
+//! experiments, and `serve` for the real-inference serving loop.
 
 pub mod adapt;
 pub mod benchutil;
@@ -62,9 +72,11 @@ pub mod platform;
 pub mod policy;
 pub mod qoe;
 pub mod queues;
+pub mod report;
 pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 #[cfg(feature = "pjrt")]
 pub mod serve;

@@ -12,18 +12,23 @@
 
 use ocularone::bail;
 use ocularone::errors::Result;
-use ocularone::exp::{self, summarize};
+use ocularone::exp::summarize;
 use ocularone::fleet::Workload;
 use ocularone::model::orin_field;
 use ocularone::nav;
 use ocularone::policy::Policy;
+use ocularone::scenario;
 
 const USAGE: &str = "\
 ocularone — adaptive edge+cloud scheduling for UAV DNN inferencing
 
 USAGE:
-  ocularone experiment <id> [--seed N]     t1|fig1|fig2|fig8|fig10|fig11|
-                                           fig13|fig14|fig17|fig18|all
+  ocularone experiment <id|all|list> [--seed N] [--format md|json]
+                       [--out DIR]          paper figs (t1, fig1..fig18)
+                                           plus beyond-paper scenarios
+                                           (poisson, churn, hetero-edges);
+                                           `list` prints the registry,
+                                           --out writes one file per id
   ocularone simulate [--workload 3D-A] [--policy dems] [--edges N]
                      [--seed N]            N>1 emulates N edge stations
                                            through one Cluster engine (§8.1)
@@ -69,6 +74,76 @@ fn parse_workload(name: &str) -> Result<Workload> {
         other => bail!("unknown workload {other} (2D/3D/4D × P/A)"),
     };
     Ok(Workload::emulation(d, a))
+}
+
+/// Output format of `experiment` reports.
+enum ReportFormat {
+    Markdown,
+    Json,
+}
+
+fn parse_format(name: &str) -> Result<ReportFormat> {
+    Ok(match name.to_lowercase().as_str() {
+        "md" | "markdown" => ReportFormat::Markdown,
+        "json" => ReportFormat::Json,
+        other => bail!("unknown format {other} (md|json)"),
+    })
+}
+
+fn cmd_experiment(args: &[String], seed: u64) -> Result<()> {
+    let id = match args.get(1).map(|s| s.as_str()) {
+        None => "all",
+        Some(s) if s.starts_with("--") => bail!(
+            "experiment id must come before flags (got {s}); usage: \
+             ocularone experiment <id|all|list> [--seed N] \
+             [--format md|json] [--out DIR]"
+        ),
+        Some(s) => s,
+    };
+    let format = parse_format(
+        &flag(args, "--format").unwrap_or_else(|| "md".into()),
+    )?;
+    let out = flag(args, "--out");
+    if id == "list" {
+        for e in scenario::registry() {
+            println!(
+                "{:14} {} {}",
+                e.id,
+                if e.paper { "[paper] " } else { "[beyond]" },
+                e.about
+            );
+        }
+        return Ok(());
+    }
+    if out.is_none() && matches!(format, ReportFormat::Markdown) {
+        // Markdown to stdout is the library's canonical print path.
+        return ocularone::exp::run_experiment(id, seed);
+    }
+    let ids: Vec<String> = if id == "all" {
+        scenario::registry().iter().map(|e| e.id.to_string()).collect()
+    } else {
+        vec![id.to_string()]
+    };
+    if let Some(dir) = out {
+        let dir = std::path::Path::new(&dir);
+        std::fs::create_dir_all(dir)?;
+        for id in &ids {
+            let rep = scenario::run_scenario(id, seed)?;
+            let (ext, body) = match format {
+                ReportFormat::Markdown => ("md", rep.to_markdown()),
+                ReportFormat::Json => ("json", rep.to_json()),
+            };
+            std::fs::write(dir.join(format!("{id}.{ext}")), body)?;
+        }
+        println!("wrote {} report(s) to {}", ids.len(), dir.display());
+        return Ok(());
+    }
+    // JSON to stdout: one object per line (NDJSON when streaming "all").
+    for id in &ids {
+        let rep = scenario::run_scenario(id, seed)?;
+        println!("{}", rep.to_json());
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
@@ -261,10 +336,7 @@ fn main() -> Result<()> {
         .transpose()?
         .unwrap_or(42);
     match args.first().map(|s| s.as_str()) {
-        Some("experiment") => {
-            let id = args.get(1).map(|s| s.as_str()).unwrap_or("all");
-            exp::run_experiment(id, seed)
-        }
+        Some("experiment") => cmd_experiment(&args, seed),
         Some("simulate") => cmd_simulate(&args, seed),
         Some("serve") => cmd_serve(&args, seed),
         Some("bench-models") => cmd_bench_models(&args),

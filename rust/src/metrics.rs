@@ -236,14 +236,43 @@ impl Metrics {
     }
 }
 
-/// Percentile over a sample set (p in [0,1]); NaN-free input required.
+/// Percentile over a sample set (p in [0,1]). Uses IEEE total ordering,
+/// so NaN samples sort to the top instead of panicking mid-experiment.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     v[((v.len() - 1) as f64 * p).round() as usize]
+}
+
+/// Median-by-QoS-utility element of a slice of per-edge runs — "a median
+/// edge base station" as the paper reports (upper median for even counts).
+/// `None` on an empty slice; NaN utilities order via `total_cmp` instead
+/// of panicking.
+pub fn median_by_qos_utility(runs: &[Metrics]) -> Option<&Metrics> {
+    if runs.is_empty() {
+        return None;
+    }
+    let mut idx: Vec<usize> = (0..runs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        runs[a].qos_utility().total_cmp(&runs[b].qos_utility())
+    });
+    Some(&runs[idx[idx.len() / 2]])
+}
+
+/// (min, max) QoS utility across per-edge runs; `(+inf, -inf)` on an
+/// empty slice (the fold identities, as the pre-redesign harness used).
+pub fn minmax_qos_utility(runs: &[Metrics]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for m in runs {
+        let u = m.qos_utility();
+        lo = lo.min(u);
+        hi = hi.max(u);
+    }
+    (lo, hi)
 }
 
 #[cfg(test)]
@@ -318,6 +347,61 @@ mod tests {
         assert_eq!(percentile(&xs, 0.5), 51.0);
         assert_eq!(percentile(&xs, 1.0), 101.0);
         assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    /// A Metrics whose QoS utility is exactly `u` (one edge completion).
+    fn with_utility(u: f64) -> Metrics {
+        let mut m = Metrics::new(&[DnnKind::Hv]);
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Edge), u));
+        m
+    }
+
+    #[test]
+    fn median_by_qos_utility_picks_upper_median() {
+        let runs: Vec<Metrics> =
+            [30.0, 10.0, 20.0].into_iter().map(with_utility).collect();
+        let med = median_by_qos_utility(&runs).unwrap();
+        assert_eq!(med.qos_utility(), 20.0);
+        // Even count: the upper of the two middles (index len/2 of the
+        // sorted order), matching the pre-redesign helper.
+        let runs4: Vec<Metrics> = [40.0, 10.0, 30.0, 20.0]
+            .into_iter()
+            .map(with_utility)
+            .collect();
+        assert_eq!(median_by_qos_utility(&runs4).unwrap().qos_utility(),
+                   30.0);
+        assert!(median_by_qos_utility(&[]).is_none());
+    }
+
+    #[test]
+    fn median_tolerates_nan_utilities() {
+        // A NaN utility (e.g. a degenerate 0-task edge elsewhere summing
+        // with inf) must not panic the sort; total_cmp puts NaN last.
+        let runs: Vec<Metrics> = [f64::NAN, 10.0, 20.0]
+            .into_iter()
+            .map(with_utility)
+            .collect();
+        let med = median_by_qos_utility(&runs).unwrap();
+        assert_eq!(med.qos_utility(), 20.0);
+    }
+
+    #[test]
+    fn minmax_qos_utility_bounds() {
+        let runs: Vec<Metrics> =
+            [15.0, -5.0, 40.0].into_iter().map(with_utility).collect();
+        assert_eq!(minmax_qos_utility(&runs), (-5.0, 40.0));
+        let (lo, hi) = minmax_qos_utility(&[]);
+        assert!(lo.is_infinite() && lo > 0.0);
+        assert!(hi.is_infinite() && hi < 0.0);
+    }
+
+    #[test]
+    fn percentile_handles_nan_samples() {
+        let xs = [1.0, f64::NAN, 3.0];
+        // NaN sorts last under total_cmp; lower percentiles stay finite.
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert!(percentile(&xs, 1.0).is_nan());
     }
 
     #[test]

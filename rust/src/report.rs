@@ -1,0 +1,699 @@
+//! Structured experiment results: tables, text blocks and renderers.
+//!
+//! Every experiment in the registry (`crate::scenario`) *returns* a
+//! [`Report`] instead of printing; the report renders to the same markdown
+//! the pre-redesign `println!` harness emitted (pinned by
+//! `tests/report_api.rs`) and, dependency-free, to machine-readable JSON
+//! (`ocularone experiment all --format json --out reports/`).
+//!
+//! A table cell carries **both** a typed [`Value`] (what JSON consumers
+//! read) and a display string (what the markdown table shows), so a column
+//! like `done %` can render as `83.1%` while serializing as `83.1`.
+
+use crate::bail;
+use crate::errors::Result;
+
+// ------------------------------------------------------------------ values
+
+/// Machine-readable cell payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+/// One table cell: a typed value plus its human rendering.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    pub value: Value,
+    pub text: String,
+}
+
+impl Cell {
+    pub fn str(s: impl Into<String>) -> Cell {
+        let text = s.into();
+        Cell { value: Value::Str(text.clone()), text }
+    }
+
+    pub fn int(v: i64) -> Cell {
+        Cell { value: Value::Int(v), text: v.to_string() }
+    }
+
+    pub fn uint(v: u64) -> Cell {
+        Cell { value: Value::Int(v as i64), text: v.to_string() }
+    }
+
+    /// Float rendered with a fixed number of decimals.
+    pub fn float(v: f64, decimals: usize) -> Cell {
+        Cell { value: Value::Float(v), text: format!("{v:.decimals$}") }
+    }
+
+    /// Percentage cell: `pct` rendered as `{pct:.d}%` over
+    /// `Value::Float(pct)` (the `%` lives only in the display text).
+    pub fn percent(pct: f64, decimals: usize) -> Cell {
+        Cell {
+            value: Value::Float(pct),
+            text: format!("{pct:.decimals$}%"),
+        }
+    }
+
+    /// Custom display text over an explicit machine value (e.g. `83.1%`
+    /// over `Float(83.1)`, or `DNF@112s` over a string).
+    pub fn fmt(value: Value, text: impl Into<String>) -> Cell {
+        Cell { value, text: text.into() }
+    }
+}
+
+// ------------------------------------------------------------------ tables
+
+/// A column-labelled table of [`Cell`] rows.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Table {
+        Table {
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the arity disagrees with the header (an
+    /// experiment-authoring bug, not a runtime condition).
+    pub fn push_row(&mut self, row: Vec<Cell>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "table row arity mismatch"
+        );
+        self.rows.push(row);
+    }
+}
+
+/// One block of a report, in document order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Section {
+    /// A markdown table (machine-readable rows).
+    Table(Table),
+    /// Free text: notes, sub-headings (`### …`), preformatted series.
+    Text(String),
+}
+
+// ------------------------------------------------------------------ report
+
+/// Structured result of one experiment/scenario run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Report {
+    /// Registry id (`fig8`, `churn`, …).
+    pub id: String,
+    /// Human title, rendered as the `## …` heading.
+    pub title: String,
+    /// Base seed the run used (recorded for reproducibility).
+    pub seed: u64,
+    pub sections: Vec<Section>,
+}
+
+impl Report {
+    pub fn new(id: impl Into<String>, title: impl Into<String>,
+               seed: u64) -> Report {
+        Report {
+            id: id.into(),
+            title: title.into(),
+            seed,
+            sections: Vec::new(),
+        }
+    }
+
+    pub fn table(&mut self, t: Table) {
+        self.sections.push(Section::Table(t));
+    }
+
+    pub fn text(&mut self, s: impl Into<String>) {
+        self.sections.push(Section::Text(s.into()));
+    }
+
+    /// All tables of the report, in order.
+    pub fn tables(&self) -> Vec<&Table> {
+        self.sections
+            .iter()
+            .filter_map(|s| match s {
+                Section::Table(t) => Some(t),
+                Section::Text(_) => None,
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------ markdown
+
+    /// Render to markdown: `## title`, then each section (tables as pipe
+    /// tables, text verbatim). Data rows and headers match the pre-redesign
+    /// `println!` harness byte-for-byte; separator rows are derived from
+    /// the header widths.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("## ");
+        out.push_str(&self.title);
+        out.push('\n');
+        for s in &self.sections {
+            match s {
+                Section::Table(t) => render_table(t, &mut out),
+                Section::Text(txt) => {
+                    out.push_str(txt);
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+
+    // ---------------------------------------------------------------- json
+
+    /// Render to a compact JSON object (see [`JsonValue`] for the dialect).
+    pub fn to_json(&self) -> String {
+        self.to_json_value().dump()
+    }
+
+    /// The report as a JSON tree (what [`Report::to_json`] serializes).
+    pub fn to_json_value(&self) -> JsonValue {
+        let sections: Vec<JsonValue> = self
+            .sections
+            .iter()
+            .map(|s| match s {
+                Section::Table(t) => JsonValue::Obj(vec![
+                    ("type".into(), JsonValue::Str("table".into())),
+                    (
+                        "columns".into(),
+                        JsonValue::Arr(
+                            t.columns
+                                .iter()
+                                .map(|c| JsonValue::Str(c.clone()))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "rows".into(),
+                        JsonValue::Arr(
+                            t.rows
+                                .iter()
+                                .map(|r| {
+                                    JsonValue::Arr(
+                                        r.iter()
+                                            .map(|c| value_json(&c.value))
+                                            .collect(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+                Section::Text(txt) => JsonValue::Obj(vec![
+                    ("type".into(), JsonValue::Str("text".into())),
+                    ("text".into(), JsonValue::Str(txt.clone())),
+                ]),
+            })
+            .collect();
+        // Seeds are recorded for reproducibility: u64 values beyond f64's
+        // 2⁵³ integer range would silently round through Num, so those
+        // serialize as a decimal string instead.
+        let seed_json = if self.seed <= (1u64 << 53) {
+            JsonValue::Num(self.seed as f64)
+        } else {
+            JsonValue::Str(self.seed.to_string())
+        };
+        JsonValue::Obj(vec![
+            ("id".into(), JsonValue::Str(self.id.clone())),
+            ("title".into(), JsonValue::Str(self.title.clone())),
+            ("seed".into(), seed_json),
+            ("sections".into(), JsonValue::Arr(sections)),
+        ])
+    }
+}
+
+fn value_json(v: &Value) -> JsonValue {
+    match v {
+        Value::Null => JsonValue::Null,
+        Value::Bool(b) => JsonValue::Bool(*b),
+        Value::Int(i) => JsonValue::Num(*i as f64),
+        Value::Float(f) => {
+            if f.is_finite() {
+                JsonValue::Num(*f)
+            } else {
+                JsonValue::Null
+            }
+        }
+        Value::Str(s) => JsonValue::Str(s.clone()),
+    }
+}
+
+fn render_table(t: &Table, out: &mut String) {
+    out.push('|');
+    for c in &t.columns {
+        out.push(' ');
+        out.push_str(c);
+        out.push_str(" |");
+    }
+    out.push('\n');
+    out.push('|');
+    for c in &t.columns {
+        out.push_str(&"-".repeat(c.chars().count() + 2));
+        out.push('|');
+    }
+    out.push('\n');
+    for row in &t.rows {
+        out.push('|');
+        for cell in row {
+            if cell.text.is_empty() {
+                // `| |`, as the pre-redesign harness printed empty cells
+                // (e.g. the fig18 DNF rows) — not `|  |`.
+                out.push_str(" |");
+            } else {
+                out.push(' ');
+                out.push_str(&cell.text);
+                out.push_str(" |");
+            }
+        }
+        out.push('\n');
+    }
+}
+
+// -------------------------------------------------------------------- json
+
+/// Minimal JSON tree, the dialect of [`Report::to_json`]: numbers are f64
+/// (i64 cells fit losslessly for every counter this repo produces),
+/// objects preserve key order, non-finite floats serialize as `null`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Compact serialization (no whitespace outside strings).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => {
+                out.push_str(if *b { "true" } else { "false" })
+            }
+            JsonValue::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if *n == n.trunc()
+                    && n.abs() < 9_007_199_254_740_992.0
+                {
+                    // Integral values print without the trailing ".0" so
+                    // counters read as JSON integers.
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            JsonValue::Str(s) => write_json_string(s, out),
+            JsonValue::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a JSON document (the subset [`JsonValue::dump`] emits plus
+/// insignificant whitespace). Used by the round-trip tests and available
+/// to downstream tooling; not a general-purpose validator.
+pub fn parse_json(s: &str) -> Result<JsonValue> {
+    let bytes = s.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing bytes after JSON value at offset {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len()
+        && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r')
+    {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, ch: u8) -> Result<()> {
+    if *pos < b.len() && b[*pos] == ch {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!(
+            "expected {:?} at offset {} in JSON",
+            ch as char,
+            *pos
+        )
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of JSON input");
+    }
+    match b[*pos] {
+        b'n' => parse_lit(b, pos, "null", JsonValue::Null),
+        b't' => parse_lit(b, pos, "true", JsonValue::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", JsonValue::Bool(false)),
+        b'"' => Ok(JsonValue::Str(parse_string(b, pos)?)),
+        b'[' => {
+            *pos += 1;
+            let mut xs = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b']' {
+                *pos += 1;
+                return Ok(JsonValue::Arr(xs));
+            }
+            loop {
+                xs.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                if *pos < b.len() && b[*pos] == b',' {
+                    *pos += 1;
+                } else {
+                    expect(b, pos, b']')?;
+                    return Ok(JsonValue::Arr(xs));
+                }
+            }
+        }
+        b'{' => {
+            *pos += 1;
+            let mut kvs = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b'}' {
+                *pos += 1;
+                return Ok(JsonValue::Obj(kvs));
+            }
+            loop {
+                skip_ws(b, pos);
+                let k = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, b':')?;
+                let v = parse_value(b, pos)?;
+                kvs.push((k, v));
+                skip_ws(b, pos);
+                if *pos < b.len() && b[*pos] == b',' {
+                    *pos += 1;
+                } else {
+                    expect(b, pos, b'}')?;
+                    return Ok(JsonValue::Obj(kvs));
+                }
+            }
+        }
+        _ => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str,
+             v: JsonValue) -> Result<JsonValue> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        bail!("invalid JSON literal at offset {}", *pos)
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        if *pos >= b.len() {
+            bail!("unterminated JSON string");
+        }
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    bail!("unterminated JSON escape");
+                }
+                let c = b[*pos];
+                *pos += 1;
+                match c {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if *pos + 4 > b.len() {
+                            bail!("truncated \\u escape");
+                        }
+                        let hex =
+                            std::str::from_utf8(&b[*pos..*pos + 4])
+                                .map_err(|_| {
+                                    crate::errors::Error::msg(
+                                        "non-utf8 \\u escape",
+                                    )
+                                })?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| {
+                                crate::errors::Error::msg(
+                                    "invalid \\u escape",
+                                )
+                            })?;
+                        *pos += 4;
+                        match char::from_u32(code) {
+                            Some(ch) => out.push(ch),
+                            // Surrogates (never emitted by dump()).
+                            None => bail!(
+                                "unsupported \\u{hex} escape"
+                            ),
+                        }
+                    }
+                    other => bail!(
+                        "unknown JSON escape \\{}",
+                        other as char
+                    ),
+                }
+            }
+            _ => {
+                // Consume one UTF-8 scalar starting here.
+                let rest = std::str::from_utf8(&b[*pos..]).map_err(
+                    |_| crate::errors::Error::msg("non-utf8 JSON"),
+                )?;
+                let ch = rest.chars().next().expect("non-empty");
+                out.push(ch);
+                *pos += ch.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    let start = *pos;
+    if *pos < b.len() && b[*pos] == b'-' {
+        *pos += 1;
+    }
+    while *pos < b.len()
+        && matches!(b[*pos],
+                    b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    let txt = std::str::from_utf8(&b[start..*pos])
+        .map_err(|_| crate::errors::Error::msg("non-utf8 number"))?;
+    match txt.parse::<f64>() {
+        Ok(n) => Ok(JsonValue::Num(n)),
+        Err(_) => bail!("invalid JSON number {txt:?} at offset {start}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> Report {
+        let mut r = Report::new("demo", "Demo — sanity", 42);
+        let mut t = Table::new(&["WL", "done %", "QoS util"]);
+        t.push_row(vec![
+            Cell::str("3D-A"),
+            Cell::percent(83.1, 1),
+            Cell::float(12.34567, 2),
+        ]);
+        t.push_row(vec![
+            Cell::str("4D-P"),
+            Cell::percent(71.0, 1),
+            Cell::float(-3.5, 2),
+        ]);
+        r.table(t);
+        r.text("(a note with \"quotes\" and a \\ backslash)");
+        r
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample_report().to_markdown();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines[0], "## Demo — sanity");
+        assert_eq!(lines[1], "| WL | done % | QoS util |");
+        assert_eq!(lines[2], "|----|--------|----------|");
+        assert_eq!(lines[3], "| 3D-A | 83.1% | 12.35 |");
+        assert_eq!(lines[4], "| 4D-P | 71.0% | -3.50 |");
+        assert_eq!(
+            lines[5],
+            "(a note with \"quotes\" and a \\ backslash)"
+        );
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = sample_report();
+        let json = r.to_json();
+        let parsed = parse_json(&json).expect("valid JSON");
+        assert_eq!(parsed.dump(), json, "parse∘dump is the identity");
+        // And the tree carries the machine values, not the display text.
+        match &parsed {
+            JsonValue::Obj(kvs) => {
+                assert_eq!(kvs[0].0, "id");
+                assert_eq!(kvs[0].1, JsonValue::Str("demo".into()));
+                assert_eq!(kvs[2].1, JsonValue::Num(42.0));
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_escapes_and_unicode() {
+        let v = JsonValue::Str("×10⁵ \"q\" \\ \n\t\u{1}".into());
+        let s = v.dump();
+        let back = parse_json(&s).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn json_numbers() {
+        for v in
+            [0.0, 1.0, -1.0, 123456.0, 0.5, -2.25, 83.1, 1e-3, 7200.0]
+        {
+            let s = JsonValue::Num(v).dump();
+            let back = parse_json(&s).unwrap();
+            match back {
+                JsonValue::Num(n) => {
+                    assert_eq!(n, v, "round-trip of {v}")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(JsonValue::Num(f64::NAN).dump(), "null");
+        assert_eq!(JsonValue::Num(7200.0).dump(), "7200");
+    }
+
+    #[test]
+    fn empty_cells_render_like_the_old_harness() {
+        let mut t = Table::new(&["a", "b", "c"]);
+        t.push_row(vec![
+            Cell::str("DNF@112s"),
+            Cell::fmt(Value::Null, ""),
+            Cell::fmt(Value::Null, ""),
+        ]);
+        let mut r = Report::new("d", "D", 0);
+        r.table(t);
+        let md = r.to_markdown();
+        assert!(md.contains("| DNF@112s | | |"), "{md}");
+    }
+
+    #[test]
+    fn huge_seeds_survive_serialization() {
+        let seed = u64::MAX - 1;
+        let r = Report::new("s", "S", seed);
+        let json = r.to_json();
+        assert!(json.contains(&format!("\"seed\":\"{seed}\"")), "{json}");
+        let back = parse_json(&json).unwrap();
+        assert_eq!(back.dump(), json);
+        // Ordinary seeds stay plain JSON numbers.
+        let small = Report::new("s", "S", 42).to_json();
+        assert!(small.contains("\"seed\":42"), "{small}");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_json("").is_err());
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("12 34").is_err());
+        assert!(parse_json("nul").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_is_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push_row(vec![Cell::int(1)]);
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        let mut t = Table::new(&["x"]);
+        t.push_row(vec![Cell::fmt(Value::Float(f64::NAN), "NaN")]);
+        let mut r = Report::new("n", "n", 0);
+        r.table(t);
+        let json = r.to_json();
+        assert!(json.contains("null"));
+        assert!(parse_json(&json).is_ok());
+    }
+}

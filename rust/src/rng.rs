@@ -102,6 +102,16 @@ impl Rng {
         self.f64() < p
     }
 
+    /// Exponential deviate with the given mean — inter-arrival times of a
+    /// Poisson process (the beyond-paper arrival model in
+    /// [`crate::fleet::Arrival`]).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        // 1 − U ∈ (0, 1], so ln() is finite; clamp guards the pathological
+        // all-zero draw anyway.
+        let u = (1.0 - self.f64()).max(1e-300);
+        -mean * u.ln()
+    }
+
     /// Fisher–Yates shuffle (the paper inserts each segment's tasks in
     /// randomized order to avoid favouring any model — §3.3).
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
@@ -168,7 +178,7 @@ mod tests {
         let mut r = Rng::new(13);
         let mut xs: Vec<f64> =
             (0..50_001).map(|_| r.lognormal(100.0, 0.2)).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let med = xs[25_000];
         assert!((med - 100.0).abs() < 3.0, "median={med}");
     }
@@ -182,6 +192,21 @@ mod tests {
         s.sort_unstable();
         assert_eq!(s, (0..50).collect::<Vec<_>>());
         assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn exponential_mean_and_positivity() {
+        let mut r = Rng::new(21);
+        let n = 100_000;
+        let mean = 250_000.0; // 250 ms in µs
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.exponential(mean);
+            assert!(x >= 0.0);
+            sum += x;
+        }
+        let m = sum / n as f64;
+        assert!((m / mean - 1.0).abs() < 0.02, "mean={m}");
     }
 
     #[test]
