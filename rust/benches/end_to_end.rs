@@ -8,8 +8,12 @@
 //! * Fig 13   — weak scaling to 28 edges.
 //! * Fig 14/15 + Table 2 — GEMS on WL1/WL2.
 //! * Fig 17/18 — the field workload + navigation coupling.
+//!
+//! CLI (see `benchutil`): `--quick` for the CI smoke mode, `--json
+//! [--out DIR]` to write `BENCH_end_to_end.json` — the file the
+//! `bench-smoke` CI job uploads and gates regressions on (docs/PERF.md).
 
-use ocularone::benchutil::{bench, black_box};
+use ocularone::benchutil::{black_box, BenchSuite};
 use ocularone::exec::CloudExecModel;
 use ocularone::fleet::Workload;
 use ocularone::model::{orin_field, DnnKind, GemsWorkload};
@@ -26,6 +30,7 @@ fn wan() -> CloudExecModel {
 }
 
 fn main() {
+    let mut suite = BenchSuite::new("end_to_end");
     println!("== end-to-end experiment benches (wall time per full run) ==");
 
     // Fig 8: one 300 s run per workload, DEMS vs the strongest baseline.
@@ -34,7 +39,7 @@ fn main() {
             let name =
                 format!("fig8 {} [{}] 300s run", wl.name, policy.kind.name());
             let wl2 = wl.clone();
-            bench(&name, 1200, || {
+            suite.bench(&name, 1200, || {
                 let p = Platform::new(policy.clone(), wl2.models.clone(),
                                       wan(), 3);
                 black_box(sim::run(p, &wl2, 3));
@@ -47,7 +52,7 @@ fn main() {
         let wl = Workload::emulation(4, true);
         for policy in [Policy::edf_ec(), Policy::dem(), Policy::dems()] {
             let name = format!("fig10 4D-A [{}]", policy.kind.name());
-            bench(&name, 1000, || {
+            suite.bench(&name, 1000, || {
                 let p = Platform::new(policy.clone(), wl.models.clone(),
                                       wan(), 5);
                 black_box(sim::run(p, &wl, 5));
@@ -58,7 +63,7 @@ fn main() {
     // Fig 11: variability studies.
     {
         let wl = Workload::emulation(4, false);
-        bench("fig11 latency-shaped [DEMS-A]", 1000, || {
+        suite.bench("fig11 latency-shaped [DEMS-A]", 1000, || {
             let cloud = CloudExecModel::new(Box::new(
                 TrapeziumLatency::paper_default(LognormalWan::default()),
             ));
@@ -66,7 +71,7 @@ fn main() {
                                   cloud, 9);
             black_box(sim::run(p, &wl, 9));
         });
-        bench("fig11 bandwidth-trace [DEMS-A]", 1000, || {
+        suite.bench("fig11 bandwidth-trace [DEMS-A]", 1000, || {
             let cloud = CloudExecModel::new(Box::new(TraceBandwidth {
                 base: LognormalWan::default(),
                 samples: mobility_trace(3, 300),
@@ -81,7 +86,7 @@ fn main() {
     // Fig 13: a full 28-edge weak-scaling sweep.
     {
         let wl = Workload::emulation(3, false);
-        bench("fig13 28-edge sweep [DEMS]", 3000, || {
+        suite.bench("fig13 28-edge sweep [DEMS]", 3000, || {
             let mut total = 0.0;
             for e in 0..28u64 {
                 let p = Platform::new(Policy::dems(), wl.models.clone(),
@@ -96,7 +101,7 @@ fn main() {
     for wlk in [GemsWorkload::Wl1, GemsWorkload::Wl2] {
         let wl = Workload::gems(wlk, 0.9);
         let name = format!("fig14 {} [GEMS]", wl.name);
-        bench(&name, 1000, || {
+        suite.bench(&name, 1000, || {
             let p = Platform::new(Policy::gems(false), wl.models.clone(),
                                   wan(), 13);
             black_box(sim::run(p, &wl, 13));
@@ -106,7 +111,7 @@ fn main() {
     // Fig 17/18: field workload + navigation flight.
     {
         let wl = Workload::field(30, orin_field());
-        bench("fig17 field 30fps + nav [GEMS]", 1500, || {
+        suite.bench("fig17 field 30fps + nav [GEMS]", 1500, || {
             let mut p = Platform::new(Policy::gems(false), wl.models.clone(),
                                       wan(), 17);
             p.metrics.record_completions = true;
@@ -123,4 +128,6 @@ fn main() {
             black_box(nav::fly(&events, m.duration, 17));
         });
     }
+
+    suite.finish().expect("write BENCH_end_to_end.json");
 }

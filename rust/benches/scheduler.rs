@@ -4,8 +4,11 @@
 //! `Box<dyn Scheduler>`). These are the L3 §Perf numbers in EXPERIMENTS.md
 //! (target: decision ≪ 1 µs — far off the request path's millisecond
 //! budgets).
+//!
+//! CLI (see `benchutil`): `--quick` for the CI smoke mode, `--json
+//! [--out DIR]` to write `BENCH_scheduler.json`.
 
-use ocularone::benchutil::{bench, black_box};
+use ocularone::benchutil::{black_box, BenchSuite};
 use ocularone::exec::CloudExecModel;
 use ocularone::fleet::Workload;
 use ocularone::model::{table1, DnnKind};
@@ -37,12 +40,13 @@ fn mktask(id: u64, model: DnnKind, at: u64) -> Task {
 /// Steady-state submit stream against a live platform (≈24 tasks/s, the
 /// 4D-A arrival rate), draining events so queues don't grow unboundedly.
 /// Generic over the scheduler so it measures both dispatch modes.
-fn bench_submit_stream<S: Scheduler>(name: &str, mut platform: Platform<S>) {
+fn bench_submit_stream<S: Scheduler>(suite: &mut BenchSuite, name: &str,
+                                     mut platform: Platform<S>) {
     let mut q = EventQueue::new();
     let mut now = 0u64;
     let mut id = 0u64;
     let kinds = DnnKind::ALL;
-    bench(name, 300, move || {
+    suite.bench(name, 300, move || {
         id += 1;
         now += 41_000; // ≈24 tasks/s
         let task = mktask(id, kinds[(id % 6) as usize], now);
@@ -68,6 +72,7 @@ fn bench_submit_stream<S: Scheduler>(name: &str, mut platform: Platform<S>) {
 }
 
 fn main() {
+    let mut suite = BenchSuite::new("scheduler");
     println!("== scheduler microbenchmarks ==");
 
     // Raw queue ops at a realistic depth (~24 queued tasks = 4D-A burst).
@@ -75,7 +80,7 @@ fn main() {
         let mut q = EdgeQueue::new(EdgeOrder::Edf);
         let mut rng = Rng::new(1);
         let mut id = 0u64;
-        bench("edge_queue insert+pop (depth ~24)", 300, || {
+        suite.bench("edge_queue insert+pop (depth ~24)", 300, || {
             while q.len() < 24 {
                 id += 1;
                 let dl = ms(500 + (rng.next_u64() % 500));
@@ -90,7 +95,7 @@ fn main() {
             q.insert(mktask(i, DnnKind::Hv, 0), ms(500 + i * 20), ms(174),
                      1.0);
         }
-        bench("probe_insert feasibility scan (24 deep)", 300, || {
+        suite.bench("probe_insert feasibility scan (24 deep)", 300, || {
             black_box(q.probe_insert(ms(700), ms(174), 1.0, 0));
         });
     }
@@ -108,7 +113,7 @@ fn main() {
     ] {
         let name = format!("submit_task [{}]", policy.kind.name());
         let platform = Platform::new(policy, table1(), cloud(), 42);
-        bench_submit_stream(&name, platform);
+        bench_submit_stream(&mut suite, &name, platform);
     }
 
     // Dispatch-overhead comparison on the hot submit/steal path: the same
@@ -123,10 +128,12 @@ fn main() {
             cloud(),
             42,
         );
-        bench_submit_stream("submit_task [DEMS, flag-branch dispatch]",
+        bench_submit_stream(&mut suite,
+                            "submit_task [DEMS, flag-branch dispatch]",
                             flat);
         let boxed = Platform::new(dems, table1(), cloud(), 42);
-        bench_submit_stream("submit_task [DEMS, Box<dyn Scheduler>]",
+        bench_submit_stream(&mut suite,
+                            "submit_task [DEMS, Box<dyn Scheduler>]",
                             boxed);
     }
 
@@ -134,33 +141,65 @@ fn main() {
     {
         let wl = Workload::emulation(3, true);
         let wl2 = wl.clone();
-        bench("full 300s 3D-A sim [DEMS, flag-branch dispatch]", 2000,
-              move || {
-                  let p = Platform::with_scheduler(
-                      FlagBranchScheduler::new(),
-                      Policy::dems(),
-                      wl2.models.clone(),
-                      cloud(),
-                      7,
-                  );
-                  black_box(ocularone::sim::run(p, &wl2, 7));
-              });
+        suite.bench("full 300s 3D-A sim [DEMS, flag-branch dispatch]", 2000,
+                    move || {
+                        let p = Platform::with_scheduler(
+                            FlagBranchScheduler::new(),
+                            Policy::dems(),
+                            wl2.models.clone(),
+                            cloud(),
+                            7,
+                        );
+                        black_box(ocularone::sim::run(p, &wl2, 7));
+                    });
         let wl3 = wl.clone();
-        bench("full 300s 3D-A sim [DEMS, Box<dyn Scheduler>]", 2000,
-              move || {
-                  let p = Platform::new(Policy::dems(), wl3.models.clone(),
-                                        cloud(), 7);
-                  black_box(ocularone::sim::run(p, &wl3, 7));
-              });
+        suite.bench("full 300s 3D-A sim [DEMS, Box<dyn Scheduler>]", 2000,
+                    move || {
+                        let p = Platform::new(Policy::dems(),
+                                              wl3.models.clone(),
+                                              cloud(), 7);
+                        black_box(ocularone::sim::run(p, &wl3, 7));
+                    });
     }
 
     // Full-workload simulated seconds per wall second (the DES engine).
     {
         let wl = Workload::emulation(4, true);
-        bench("full 300s 4D-A sim [DEMS]", 2000, || {
+        suite.bench("full 300s 4D-A sim [DEMS]", 2000, || {
             let platform =
                 Platform::new(Policy::dems(), wl.models.clone(), cloud(), 7);
             black_box(ocularone::sim::run(platform, &wl, 7));
         });
     }
+
+    // The parallel sweep engine itself: a 12-cell grid (3 workloads × 2
+    // policies × 2 seeds) on 1 worker vs all cores — the `--jobs`
+    // speedup knob in one number.
+    {
+        use ocularone::scenario::Scenario;
+        use ocularone::time::secs;
+        let grid = || {
+            Scenario::new("bench-grid", "bench grid")
+                .workload(Workload::emulation(2, false)
+                    .with_duration(secs(60)))
+                .workload(Workload::emulation(3, false)
+                    .with_duration(secs(60)))
+                .workload(Workload::emulation(2, true)
+                    .with_duration(secs(60)))
+                .policies(vec![Policy::edf_ec(), Policy::dems()])
+                .edges(2)
+                .seeds(2)
+        };
+        let g1 = grid();
+        suite.bench("sweep 12-cell grid [--jobs 1]", 2000, move || {
+            black_box(g1.run_jobs(7, 1).expect("grid runs"));
+        });
+        let gn = grid();
+        suite.bench("sweep 12-cell grid [--jobs 0 = all cores]", 2000,
+                    move || {
+                        black_box(gn.run_jobs(7, 0).expect("grid runs"));
+                    });
+    }
+
+    suite.finish().expect("write BENCH_scheduler.json");
 }

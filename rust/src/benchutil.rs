@@ -1,8 +1,25 @@
 //! Tiny benchmarking harness for `cargo bench` targets (offline build: no
-//! criterion). Warms up, runs timed iterations, reports mean ± sd and
-//! throughput, criterion-style.
+//! criterion). Warms up, runs timed iterations, reports mean ± sd, p50 and
+//! min, criterion-style — and serializes machine-readable
+//! `BENCH_<target>.json` so CI can track the perf trajectory
+//! (docs/PERF.md).
+//!
+//! Bench binaries (`harness = false`) drive it through [`BenchSuite`]:
+//!
+//! ```text
+//! cargo bench --bench end_to_end -- --quick --json --out bench-out
+//! ```
+//!
+//! * `--quick` divides every budget by 10 — the CI smoke mode.
+//! * `--json` writes `BENCH_<target>.json` on [`BenchSuite::finish`].
+//! * `--out DIR` picks the output directory (default `.`).
+//!
+//! Unrecognized flags (cargo's own `--bench`, libtest filters) are
+//! ignored, so the targets stay runnable under plain `cargo bench`.
 
 use std::time::Instant;
+
+use crate::report::JsonValue;
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
@@ -10,6 +27,11 @@ pub struct BenchResult {
     pub name: String,
     pub mean_ns: f64,
     pub sd_ns: f64,
+    /// Median of the per-sample means — the robust center CI thresholds
+    /// compare (a single descheduled sample skews the mean, not the p50).
+    pub p50_ns: f64,
+    /// Fastest sample — the contention-free floor.
+    pub min_ns: f64,
     pub iters: u64,
 }
 
@@ -17,10 +39,24 @@ impl BenchResult {
     pub fn print(&self) {
         let (v, unit) = humanize(self.mean_ns);
         let (sd, sd_unit) = humanize(self.sd_ns);
+        let (p50, p50_unit) = humanize(self.p50_ns);
         println!(
-            "{:40} {:>10.3} {:<3} ± {:>8.3} {:<3}  ({} iters)",
-            self.name, v, unit, sd, sd_unit, self.iters
+            "{:40} {:>10.3} {:<3} ± {:>8.3} {:<3} p50 {:>10.3} {:<3} \
+             ({} iters)",
+            self.name, v, unit, sd, sd_unit, p50, p50_unit, self.iters
         );
+    }
+
+    /// The `BENCH_<target>.json` row schema.
+    pub fn to_json_value(&self) -> JsonValue {
+        JsonValue::Obj(vec![
+            ("name".into(), JsonValue::Str(self.name.clone())),
+            ("mean_ns".into(), JsonValue::Num(self.mean_ns)),
+            ("sd_ns".into(), JsonValue::Num(self.sd_ns)),
+            ("p50_ns".into(), JsonValue::Num(self.p50_ns)),
+            ("min_ns".into(), JsonValue::Num(self.min_ns)),
+            ("iters".into(), JsonValue::Num(self.iters as f64)),
+        ])
     }
 }
 
@@ -61,10 +97,14 @@ pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> BenchResult {
     let mean = means.iter().sum::<f64>() / samples as f64;
     let var = means.iter().map(|m| (m - mean).powi(2)).sum::<f64>()
         / samples as f64;
+    let mut sorted = means.clone();
+    sorted.sort_by(f64::total_cmp);
     let r = BenchResult {
         name: name.to_string(),
         mean_ns: mean,
         sd_ns: var.sqrt(),
+        p50_ns: sorted[sorted.len() / 2],
+        min_ns: sorted[0],
         iters: iters_per_sample * samples as u64,
     };
     r.print();
@@ -77,9 +117,134 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ------------------------------------------------------------------ suite
+
+/// CLI configuration of one bench target (see the module docs for the
+/// flag set). Unknown arguments are ignored.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub quick: bool,
+    pub json: bool,
+    pub out_dir: String,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { quick: false, json: false, out_dir: ".".into() }
+    }
+}
+
+impl BenchConfig {
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_args() -> BenchConfig {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&args)
+    }
+
+    pub fn parse(args: &[String]) -> BenchConfig {
+        let mut cfg = BenchConfig::default();
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--quick" => cfg.quick = true,
+                "--json" => cfg.json = true,
+                "--out" => {
+                    if let Some(d) = args.get(i + 1) {
+                        cfg.out_dir = d.clone();
+                        i += 1;
+                    }
+                }
+                _ => {} // cargo's --bench, libtest filters, …
+            }
+            i += 1;
+        }
+        cfg
+    }
+}
+
+/// One bench target's run: applies quick-mode budget scaling, records
+/// every [`BenchResult`] and serializes `BENCH_<target>.json` on
+/// [`finish`](BenchSuite::finish).
+pub struct BenchSuite {
+    target: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    /// Suite configured from the process arguments.
+    pub fn new(target: &str) -> BenchSuite {
+        Self::with_config(target, BenchConfig::from_args())
+    }
+
+    pub fn with_config(target: &str, cfg: BenchConfig) -> BenchSuite {
+        BenchSuite { target: target.into(), cfg, results: Vec::new() }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.cfg.quick
+    }
+
+    /// Budget actually used for a nominal per-bench budget: quick mode
+    /// divides by 10 (floor 20 ms keeps the calibration phase sane).
+    fn budget(&self, budget_ms: u64) -> u64 {
+        if self.cfg.quick {
+            (budget_ms / 10).max(20)
+        } else {
+            budget_ms
+        }
+    }
+
+    /// Run and record one benchmark.
+    pub fn bench(&mut self, name: &str, budget_ms: u64,
+                 f: impl FnMut()) -> &BenchResult {
+        let r = bench(name, self.budget(budget_ms), f);
+        self.results.push(r);
+        self.results.last().expect("just pushed")
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// The whole suite as the `BENCH_<target>.json` document.
+    pub fn to_json_value(&self) -> JsonValue {
+        JsonValue::Obj(vec![
+            ("target".into(), JsonValue::Str(self.target.clone())),
+            ("quick".into(), JsonValue::Bool(self.cfg.quick)),
+            (
+                "results".into(),
+                JsonValue::Arr(
+                    self.results
+                        .iter()
+                        .map(BenchResult::to_json_value)
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<target>.json` into the configured directory when
+    /// `--json` was requested. Returns the path the file lives (or would
+    /// live) at.
+    pub fn finish(self) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::Path::new(&self.cfg.out_dir)
+            .join(format!("BENCH_{}.json", self.target));
+        if self.cfg.json {
+            if let Some(dir) = path.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(&path, self.to_json_value().dump())?;
+            println!("wrote {}", path.display());
+        }
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::report::parse_json;
 
     #[test]
     fn bench_reports_sane_numbers() {
@@ -88,6 +253,10 @@ mod tests {
         });
         assert!(r.mean_ns > 0.0);
         assert!(r.iters > 0);
+        assert!(r.min_ns > 0.0);
+        assert!(r.min_ns <= r.p50_ns, "min {} p50 {}", r.min_ns, r.p50_ns);
+        // p50 sits inside the sample envelope around the mean.
+        assert!(r.p50_ns <= r.mean_ns + 6.0 * r.sd_ns + 1.0);
     }
 
     #[test]
@@ -96,5 +265,70 @@ mod tests {
         assert_eq!(humanize(10_000.0).1, "µs");
         assert_eq!(humanize(10_000_000.0).1, "ms");
         assert_eq!(humanize(2e9).1, "s");
+    }
+
+    #[test]
+    fn result_json_round_trips() {
+        let r = BenchResult {
+            name: "fig8 demo".into(),
+            mean_ns: 123.5,
+            sd_ns: 4.25,
+            p50_ns: 120.0,
+            min_ns: 117.0,
+            iters: 1000,
+        };
+        let json = r.to_json_value().dump();
+        let parsed = parse_json(&json).expect("valid JSON");
+        assert_eq!(parsed.dump(), json, "parse∘dump identity");
+        assert!(json.contains("\"name\":\"fig8 demo\""));
+        assert!(json.contains("\"p50_ns\":120"));
+        assert!(json.contains("\"min_ns\":117"));
+    }
+
+    #[test]
+    fn suite_records_and_serializes() {
+        let cfg = BenchConfig { quick: true, json: false, out_dir: ".".into() };
+        let mut suite = BenchSuite::with_config("unit", cfg);
+        suite.bench("a", 5, || {
+            black_box(2 * 2);
+        });
+        suite.bench("b", 5, || {
+            black_box(3 * 3);
+        });
+        assert_eq!(suite.results().len(), 2);
+        let json = suite.to_json_value().dump();
+        assert!(parse_json(&json).is_ok());
+        assert!(json.contains("\"target\":\"unit\""));
+        assert!(json.contains("\"quick\":true"));
+        // Not --json: finish writes nothing but still names the path.
+        let path = suite.finish().expect("finish");
+        assert!(path.ends_with("BENCH_unit.json"));
+        assert!(!path.exists(), "no file without --json");
+    }
+
+    #[test]
+    fn config_parses_known_flags_and_ignores_the_rest() {
+        let args: Vec<String> =
+            ["--bench", "--quick", "--out", "somewhere", "--json", "junk"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let cfg = BenchConfig::parse(&args);
+        assert!(cfg.quick);
+        assert!(cfg.json);
+        assert_eq!(cfg.out_dir, "somewhere");
+        let none = BenchConfig::parse(&[]);
+        assert!(!none.quick && !none.json);
+        assert_eq!(none.out_dir, ".");
+    }
+
+    #[test]
+    fn quick_mode_scales_budgets() {
+        let cfg = BenchConfig { quick: true, ..BenchConfig::default() };
+        let s = BenchSuite::with_config("q", cfg);
+        assert_eq!(s.budget(1200), 120);
+        assert_eq!(s.budget(50), 20, "floor keeps calibration sane");
+        let s2 = BenchSuite::with_config("nq", BenchConfig::default());
+        assert_eq!(s2.budget(1200), 1200);
     }
 }

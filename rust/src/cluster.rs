@@ -16,6 +16,8 @@
 //! bit-identical cluster-vs-solo comparison, which is also why the ported
 //! `exp::run_edges` reproduces the paper figures unchanged.
 
+use std::cell::RefCell;
+
 use crate::exec::CloudExecModel;
 use crate::fleet::{Arrival, Workload};
 use crate::metrics::{self, Metrics};
@@ -34,6 +36,13 @@ pub const EDGE_SEED_PHI: u64 = 0x9E37_79B9;
 
 /// XOR applied to an edge's platform seed to derive its arrival-stream RNG.
 pub const ARRIVAL_SEED_XOR: u64 = 0x5EED_F1EE7;
+
+thread_local! {
+    /// Per-thread reusable event-queue allocation for [`Cluster::run`]:
+    /// cleared before every run, so reuse is invisible to results.
+    static SHARED_QUEUE: RefCell<EventQueue> =
+        RefCell::new(EventQueue::new());
+}
 
 /// Maps fleet drones onto edge base stations: drone `g` reports to edge
 /// `g / drones_per_edge` (the §8.1 setup assigns each VIP's buddy drones
@@ -240,7 +249,25 @@ impl<S: Scheduler> Cluster<S> {
     }
 
     /// Run the whole cluster to completion; returns per-edge metrics.
+    ///
+    /// Reuses a per-thread [`EventQueue`] allocation: a sweep runs
+    /// thousands of clusters per worker thread and the event heap is the
+    /// biggest buffer each run would otherwise re-grow from cold (see
+    /// docs/PERF.md).
     pub fn run(self) -> ClusterMetrics {
+        SHARED_QUEUE.with(|q| match q.try_borrow_mut() {
+            Ok(mut q) => self.run_with(&mut q),
+            // Re-entrant cluster run on this thread (no engine path does
+            // this, but staying correct is one allocation).
+            Err(_) => self.run_with(&mut EventQueue::new()),
+        })
+    }
+
+    /// [`Cluster::run`] against an explicit event-queue allocation. The
+    /// queue is cleared first (seq/scope included), so results are
+    /// bit-identical to a fresh queue no matter what ran on it before.
+    pub fn run_with(self, q: &mut EventQueue) -> ClusterMetrics {
+        q.clear();
         let Cluster {
             mut edges,
             workloads,
@@ -250,7 +277,6 @@ impl<S: Scheduler> Cluster<S> {
             mut segment_ids,
         } = self;
         let n = edges.len();
-        let mut q = EventQueue::new();
 
         // Seed every edge's drone streams (staggered phases so segment
         // arrivals don't collide on identical microsecond ticks — real

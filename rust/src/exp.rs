@@ -20,6 +20,7 @@ use crate::nav::{self, TrackingEvent};
 use crate::net::{mobility_trace, trace_stats, LognormalWan, NetworkModel};
 use crate::platform::Platform;
 use crate::policy::Policy;
+use crate::pool::Pool;
 use crate::report::{Cell, Report, Table, Value};
 use crate::rng::Rng;
 use crate::scenario::CloudSpec;
@@ -32,18 +33,39 @@ pub const EDGES_PER_HOST: usize = 7;
 /// Dispatch an experiment by id and print its markdown ("all" runs every
 /// registry entry) — the CLI's default path. The structured path is
 /// [`crate::scenario::run_scenario`].
-pub fn run_experiment(id: &str, seed: u64) -> Result<()> {
+///
+/// `jobs` (`0` = auto): "all" fans the registry entries out over one
+/// [`Pool`] (each experiment is an independent job; output stays in
+/// registry order); a single grid-shaped id parallelizes its own cells
+/// instead via [`crate::scenario::run_scenario_jobs`].
+pub fn run_experiment(id: &str, seed: u64, jobs: usize) -> Result<()> {
     if id == "all" {
-        for (i, entry) in crate::scenario::registry().iter().enumerate() {
+        let ids: Vec<&'static str> =
+            crate::scenario::registry().iter().map(|e| e.id).collect();
+        let pool = Pool::new(jobs);
+        if pool.workers() <= 1 {
+            // Sequential: stream each report as it finishes and stop at
+            // the first error instead of buffering the whole registry.
+            for (i, id) in ids.iter().enumerate() {
+                if i > 0 {
+                    println!();
+                }
+                let rep = crate::scenario::run_scenario(id, seed)?;
+                print!("{}", rep.to_markdown());
+            }
+            return Ok(());
+        }
+        let reports = pool
+            .run(ids.len(), |i| crate::scenario::run_scenario(ids[i], seed));
+        for (i, rep) in reports.into_iter().enumerate() {
             if i > 0 {
                 println!();
             }
-            let rep = crate::scenario::run_scenario(entry.id, seed)?;
-            print!("{}", rep.to_markdown());
+            print!("{}", rep?.to_markdown());
         }
         return Ok(());
     }
-    let rep = crate::scenario::run_scenario(id, seed)?;
+    let rep = crate::scenario::run_scenario_jobs(id, seed, jobs)?;
     print!("{}", rep.to_markdown());
     Ok(())
 }
@@ -182,7 +204,10 @@ pub(crate) fn fig2_report(seed: u64) -> Result<Report> {
 // ------------------------------------------------------------------ Fig 8
 
 /// Fig. 8/9/23: DEMS vs the seven baselines across the six workloads.
-pub(crate) fn fig8_report(seed: u64) -> Result<Report> {
+/// The 6 × 8 grid is enumerated flat and fanned out over the pool (48
+/// independent 7-edge clusters); rows assemble in enumeration order, so
+/// the report is byte-identical to the sequential run.
+pub(crate) fn fig8_report(seed: u64, pool: &Pool) -> Result<Report> {
     let mut rep = Report::new(
         "fig8",
         format!(
@@ -195,23 +220,29 @@ pub(crate) fn fig8_report(seed: u64) -> Result<Report> {
         "WL", "algo", "tasks done", "done %", "QoS util", "util edge",
         "util cloud", "min..max util",
     ]);
+    let mut cells: Vec<(Workload, Policy)> = Vec::new();
     for wl in Workload::fig8_all() {
         for policy in Policy::fig8_lineup() {
-            let cm = run_edges(&policy, &wl, seed, EDGES_PER_HOST,
-                               &default_cloud);
-            let m = cm.median_edge();
-            let (lo, hi) = cm.minmax_utility();
-            t.push_row(vec![
-                Cell::str(wl.name.as_str()),
-                Cell::str(policy.kind.name()),
-                Cell::uint(m.completed()),
-                pct_cell(m.completion_rate()),
-                Cell::float(m.qos_utility() / 1e5, 2),
-                Cell::float(m.qos_utility_on(Resource::Edge) / 1e5, 2),
-                Cell::float(m.qos_utility_on(Resource::Cloud) / 1e5, 2),
-                Cell::str(format!("{:.2}..{:.2}", lo / 1e5, hi / 1e5)),
-            ]);
+            cells.push((wl.clone(), policy));
         }
+    }
+    let results = pool.run(cells.len(), |i| {
+        let (wl, policy) = &cells[i];
+        run_edges(policy, wl, seed, EDGES_PER_HOST, &default_cloud)
+    });
+    for ((wl, policy), cm) in cells.iter().zip(&results) {
+        let m = cm.median_edge();
+        let (lo, hi) = cm.minmax_utility();
+        t.push_row(vec![
+            Cell::str(wl.name.as_str()),
+            Cell::str(policy.kind.name()),
+            Cell::uint(m.completed()),
+            pct_cell(m.completion_rate()),
+            Cell::float(m.qos_utility() / 1e5, 2),
+            Cell::float(m.qos_utility_on(Resource::Edge) / 1e5, 2),
+            Cell::float(m.qos_utility_on(Resource::Cloud) / 1e5, 2),
+            Cell::str(format!("{:.2}..{:.2}", lo / 1e5, hi / 1e5)),
+        ]);
     }
     rep.table(t);
     Ok(rep)
@@ -220,7 +251,7 @@ pub(crate) fn fig8_report(seed: u64) -> Result<Report> {
 // ----------------------------------------------------------------- Fig 10
 
 /// Fig. 10/24: incremental benefits of DEM and DEMS over E+C.
-pub(crate) fn fig10_report(seed: u64) -> Result<Report> {
+pub(crate) fn fig10_report(seed: u64, pool: &Pool) -> Result<Report> {
     let mut rep = Report::new(
         "fig10",
         "Fig 10 — incremental benefits of migration (DEM) and stealing \
@@ -231,30 +262,36 @@ pub(crate) fn fig10_report(seed: u64) -> Result<Report> {
         "WL", "algo", "done", "done %", "QoS util", "cloud done",
         "stolen", "stolen BP%", "edge util",
     ]);
+    let mut cells: Vec<(Workload, Policy)> = Vec::new();
     for wl in Workload::fig8_all() {
         for policy in [Policy::edf_ec(), Policy::dem(), Policy::dems()] {
-            let cm = run_edges(&policy, &wl, seed, EDGES_PER_HOST,
-                               &default_cloud);
-            let m = cm.median_edge();
-            let stolen = m.stolen();
-            let stolen_bp = m.stats(DnnKind::Bp).stolen;
-            let bp_pct = if stolen > 0 {
-                100.0 * stolen_bp as f64 / stolen as f64
-            } else {
-                0.0
-            };
-            t.push_row(vec![
-                Cell::str(wl.name.as_str()),
-                Cell::str(policy.kind.name()),
-                Cell::uint(m.completed()),
-                pct_cell(m.completion_rate()),
-                Cell::float(m.qos_utility() / 1e5, 2),
-                Cell::uint(m.completed_on(Resource::Cloud)),
-                Cell::uint(stolen),
-                Cell::percent(bp_pct, 0),
-                Cell::percent(100.0 * m.edge_utilization(), 0),
-            ]);
+            cells.push((wl.clone(), policy));
         }
+    }
+    let results = pool.run(cells.len(), |i| {
+        let (wl, policy) = &cells[i];
+        run_edges(policy, wl, seed, EDGES_PER_HOST, &default_cloud)
+    });
+    for ((wl, policy), cm) in cells.iter().zip(&results) {
+        let m = cm.median_edge();
+        let stolen = m.stolen();
+        let stolen_bp = m.stats(DnnKind::Bp).stolen;
+        let bp_pct = if stolen > 0 {
+            100.0 * stolen_bp as f64 / stolen as f64
+        } else {
+            0.0
+        };
+        t.push_row(vec![
+            Cell::str(wl.name.as_str()),
+            Cell::str(policy.kind.name()),
+            Cell::uint(m.completed()),
+            pct_cell(m.completion_rate()),
+            Cell::float(m.qos_utility() / 1e5, 2),
+            Cell::uint(m.completed_on(Resource::Cloud)),
+            Cell::uint(stolen),
+            Cell::percent(bp_pct, 0),
+            Cell::percent(100.0 * m.edge_utilization(), 0),
+        ]);
     }
     rep.table(t);
     Ok(rep)
@@ -361,7 +398,9 @@ pub(crate) fn fig11_report(seed: u64, wl_name: &str) -> Result<Report> {
 // ----------------------------------------------------------------- Fig 13
 
 /// Fig. 13/27: weak scaling — 7 edges on 1 host → 28 edges on 4 hosts.
-pub(crate) fn fig13_report(seed: u64) -> Result<Report> {
+/// The four host counts run as independent pool jobs (the 28-edge cell
+/// dominates; work stealing keeps the small cells from idling a worker).
+pub(crate) fn fig13_report(seed: u64, pool: &Pool) -> Result<Report> {
     let mut rep =
         Report::new("fig13", "Fig 13 — weak scaling (3D-P, DEMS)", seed);
     let mut t = Table::new(&[
@@ -369,10 +408,14 @@ pub(crate) fn fig13_report(seed: u64) -> Result<Report> {
         "per-edge QoS util", "total util",
     ]);
     let wl = Workload::emulation(3, false);
-    for hosts in [1usize, 2, 3, 4] {
+    let hosts_axis = [1usize, 2, 3, 4];
+    let results = pool.run(hosts_axis.len(), |i| {
+        let hosts = hosts_axis[i];
+        run_edges(&Policy::dems(), &wl, seed ^ hosts as u64,
+                  hosts * EDGES_PER_HOST, &default_cloud)
+    });
+    for (hosts, cm) in hosts_axis.iter().zip(&results) {
         let edges = hosts * EDGES_PER_HOST;
-        let cm = run_edges(&Policy::dems(), &wl, seed ^ hosts as u64,
-                           edges, &default_cloud);
         let m = cm.median_edge();
         let total = cm.total_qos_utility();
         t.push_row(vec![

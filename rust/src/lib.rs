@@ -44,7 +44,11 @@
 //! [`report::Report`] that renders to markdown or JSON
 //! (`ocularone experiment all --format json --out reports/`). The
 //! paper's tables/figures are named entries in
-//! [`scenario::registry`].
+//! [`scenario::registry`]. Sweeps execute on the dependency-free
+//! [`pool`] worker engine (`--jobs N`): grids are enumerated into flat
+//! job lists, fanned out over work-stealing `std::thread` workers and
+//! re-assembled in enumeration order, so parallel reports are
+//! byte-identical to sequential ones (see docs/PERF.md).
 //!
 //! Python never runs on the request path: with the `pjrt` feature the
 //! `runtime` module loads the artifacts through the PJRT C API and `serve`
@@ -70,6 +74,7 @@ pub mod nav;
 pub mod net;
 pub mod platform;
 pub mod policy;
+pub mod pool;
 pub mod qoe;
 pub mod queues;
 pub mod report;

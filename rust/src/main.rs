@@ -24,14 +24,21 @@ ocularone — adaptive edge+cloud scheduling for UAV DNN inferencing
 
 USAGE:
   ocularone experiment <id|all|list> [--seed N] [--format md|json]
-                       [--out DIR]          paper figs (t1, fig1..fig18)
+                       [--out DIR] [--jobs N]
+                                           paper figs (t1, fig1..fig18)
                                            plus beyond-paper scenarios
                                            (poisson, churn, hetero-edges);
                                            `list` prints the registry,
-                                           --out writes one file per id
+                                           --out writes one file per id,
+                                           --jobs N sweeps on N workers
+                                           (0 = all cores; reports are
+                                           byte-identical to --jobs 1)
   ocularone simulate [--workload 3D-A] [--policy dems] [--edges N]
-                     [--seed N]            N>1 emulates N edge stations
-                                           through one Cluster engine (§8.1)
+                     [--seed N] [--seeds K] [--jobs N]
+                                           N>1 emulates N edge stations
+                                           through one Cluster engine (§8.1);
+                                           --seeds K sweeps K derived seeds
+                                           (in parallel with --jobs)
   ocularone serve [--policy ec] [--rate R] [--drones D] [--secs S]
                   [--artifacts DIR]        (requires the pjrt feature)
   ocularone bench-models [--artifacts DIR] (requires the pjrt feature)
@@ -90,13 +97,20 @@ fn parse_format(name: &str) -> Result<ReportFormat> {
     })
 }
 
+fn parse_jobs(args: &[String]) -> Result<usize> {
+    Ok(flag(args, "--jobs")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1))
+}
+
 fn cmd_experiment(args: &[String], seed: u64) -> Result<()> {
     let id = match args.get(1).map(|s| s.as_str()) {
         None => "all",
         Some(s) if s.starts_with("--") => bail!(
             "experiment id must come before flags (got {s}); usage: \
              ocularone experiment <id|all|list> [--seed N] \
-             [--format md|json] [--out DIR]"
+             [--format md|json] [--out DIR] [--jobs N]"
         ),
         Some(s) => s,
     };
@@ -104,6 +118,7 @@ fn cmd_experiment(args: &[String], seed: u64) -> Result<()> {
         &flag(args, "--format").unwrap_or_else(|| "md".into()),
     )?;
     let out = flag(args, "--out");
+    let jobs = parse_jobs(args)?;
     if id == "list" {
         for e in scenario::registry() {
             println!(
@@ -117,31 +132,56 @@ fn cmd_experiment(args: &[String], seed: u64) -> Result<()> {
     }
     if out.is_none() && matches!(format, ReportFormat::Markdown) {
         // Markdown to stdout is the library's canonical print path.
-        return ocularone::exp::run_experiment(id, seed);
+        return ocularone::exp::run_experiment(id, seed, jobs);
     }
     let ids: Vec<String> = if id == "all" {
         scenario::registry().iter().map(|e| e.id.to_string()).collect()
     } else {
         vec![id.to_string()]
     };
-    if let Some(dir) = out {
-        let dir = std::path::Path::new(&dir);
-        std::fs::create_dir_all(dir)?;
-        for id in &ids {
-            let rep = scenario::run_scenario(id, seed)?;
-            let (ext, body) = match format {
-                ReportFormat::Markdown => ("md", rep.to_markdown()),
-                ReportFormat::Json => ("json", rep.to_json()),
-            };
-            std::fs::write(dir.join(format!("{id}.{ext}")), body)?;
+    let dir = match &out {
+        Some(d) => {
+            let p = std::path::PathBuf::from(d);
+            std::fs::create_dir_all(&p)?;
+            Some(p)
         }
-        println!("wrote {} report(s) to {}", ids.len(), dir.display());
-        return Ok(());
+        None => None,
+    };
+    // Emit one finished report: a file under --out, else one JSON object
+    // per line on stdout (NDJSON when streaming "all").
+    let emit = |id: &str, rep: &ocularone::report::Report| -> Result<()> {
+        match &dir {
+            Some(dir) => {
+                let (ext, body) = match format {
+                    ReportFormat::Markdown => ("md", rep.to_markdown()),
+                    ReportFormat::Json => ("json", rep.to_json()),
+                };
+                std::fs::write(dir.join(format!("{id}.{ext}")), body)?;
+            }
+            None => println!("{}", rep.to_json()),
+        }
+        Ok(())
+    };
+    let pool = ocularone::pool::Pool::new(jobs);
+    if ids.len() > 1 && pool.workers() > 1 {
+        // "all" parallelizes across experiments (one pool job each);
+        // output stays in registry order, independent of the schedule.
+        let reports =
+            pool.run(ids.len(), |i| scenario::run_scenario(&ids[i], seed));
+        for (id, rep) in ids.iter().zip(reports) {
+            emit(id, &rep?)?;
+        }
+    } else {
+        // Sequential (or single id): stream each report as it finishes
+        // and stop at the first error. A single id spends the jobs
+        // budget on its own grid cells instead.
+        for id in &ids {
+            let rep = scenario::run_scenario_jobs(id, seed, jobs)?;
+            emit(id, &rep)?;
+        }
     }
-    // JSON to stdout: one object per line (NDJSON when streaming "all").
-    for id in &ids {
-        let rep = scenario::run_scenario(id, seed)?;
-        println!("{}", rep.to_json());
+    if let Some(dir) = &dir {
+        println!("wrote {} report(s) to {}", ids.len(), dir.display());
     }
     Ok(())
 }
@@ -160,7 +200,16 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
     if edges == 0 {
         bail!("--edges must be at least 1");
     }
+    let sweeps: u64 = flag(args, "--seeds")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
+    let jobs = parse_jobs(args)?;
     let name = policy.kind.name().to_string();
+    if sweeps > 1 {
+        return simulate_sweep(&name, policy, &wl, seed, edges, sweeps,
+                              jobs);
+    }
     if edges == 1 {
         let m = ocularone::simulate(policy, &wl, seed);
         println!("{} on {}: {}", name, wl.name, summarize(&m));
@@ -189,6 +238,55 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
         lo,
         hi,
         cm.total_utility(),
+    );
+    Ok(())
+}
+
+/// `simulate --seeds K`: run the same workload × policy × edges cell over
+/// K derived seeds (`seed + i·SEED_STRIDE`, the scenario sweep
+/// derivation), in parallel on `--jobs` workers, and summarize the
+/// spread. Per-seed results are independent pool jobs, so the printed
+/// order and every number are identical for any `--jobs` value.
+fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
+                  edges: usize, sweeps: u64, jobs: usize) -> Result<()> {
+    use ocularone::metrics::percentile;
+
+    let runs = ocularone::pool::Pool::new(jobs).run(
+        sweeps as usize,
+        |i| {
+            let s = seed
+                .wrapping_add((i as u64).wrapping_mul(scenario::SEED_STRIDE));
+            ocularone::simulate_cluster(policy.clone(), wl, s, edges)
+        },
+    );
+    println!(
+        "{} on {} x {} edge(s), {} seeds:",
+        name, wl.name, edges, sweeps
+    );
+    for (i, cm) in runs.iter().enumerate() {
+        println!(
+            "  seed#{i}: done {}/{} ({:.1}%), median-edge QoS {:.0}, \
+             total util {:.0}",
+            cm.completed(),
+            cm.generated(),
+            100.0 * cm.completion_rate(),
+            cm.median_edge().qos_utility(),
+            cm.total_utility(),
+        );
+    }
+    let rates: Vec<f64> =
+        runs.iter().map(|cm| 100.0 * cm.completion_rate()).collect();
+    let qos: Vec<f64> =
+        runs.iter().map(|cm| cm.median_edge().qos_utility()).collect();
+    println!(
+        "  sweep: done% p0/p50/p100 {:.1}/{:.1}/{:.1}, \
+         median-edge QoS p0/p50/p100 {:.0}/{:.0}/{:.0}",
+        percentile(&rates, 0.0),
+        percentile(&rates, 0.5),
+        percentile(&rates, 1.0),
+        percentile(&qos, 0.0),
+        percentile(&qos, 0.5),
+        percentile(&qos, 1.0),
     );
     Ok(())
 }

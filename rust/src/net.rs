@@ -187,7 +187,9 @@ pub fn mobility_trace(device: u64, duration_s: u64) -> Vec<f64> {
 /// Pretty stats helper used by the Fig. 2 harness.
 pub fn trace_stats(samples: &[f64]) -> (f64, f64, f64) {
     let mut s: Vec<f64> = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample must not panic the whole stats pass (same
+    // cleanup as metrics::percentile / the exec.rs tests).
+    s.sort_by(f64::total_cmp);
     let pct = |p: f64| s[((s.len() - 1) as f64 * p) as usize];
     (pct(0.05), pct(0.50), pct(0.95))
 }

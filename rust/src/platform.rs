@@ -210,9 +210,11 @@ impl Core {
 
     pub(crate) fn dispatch_cloud(&mut self, now: Micros, e: CloudEntry,
                                  q: &mut EventQueue) {
-        let p = self.profile(e.task.model).clone();
+        // Split field borrows (exec model / profile table / RNG are
+        // disjoint) instead of cloning the profile per dispatch.
+        let i = self.idx(e.task.model);
         let (dur, timed_out) = self.cloud_exec.sample(
-            &p,
+            &self.models[i],
             now,
             e.task.segment.bytes,
             self.cloud_inflight,
@@ -233,8 +235,8 @@ impl Core {
 
     pub(crate) fn start_edge(&mut self, now: Micros, entry: EdgeEntry,
                              stolen: bool, q: &mut EventQueue) {
-        let p = self.profile(entry.task.model).clone();
-        let actual = self.edge_exec.sample(&p, &mut self.rng);
+        let i = self.idx(entry.task.model);
+        let actual = self.edge_exec.sample(&self.models[i], &mut self.rng);
         self.metrics.edge_busy += actual;
         let expected_end = now + entry.t_edge;
         let actual_end = now + actual;
@@ -442,8 +444,11 @@ impl<S: Scheduler> Platform<S> {
             Some(r) => r,
             None => return,
         };
-        let p = self.core.profile(run.entry.task.model).clone();
         let success = run.actual_end <= run.entry.abs_deadline;
+        let utility = self
+            .core
+            .profile(run.entry.task.model)
+            .utility(Resource::Edge, success);
         let fate = if success {
             Fate::Completed(Resource::Edge)
         } else {
@@ -458,7 +463,7 @@ impl<S: Scheduler> Platform<S> {
             created_at: run.entry.task.segment.created_at,
             exec_duration: run.actual_end
                 - (run.expected_end - run.entry.t_edge),
-            utility: p.utility(Resource::Edge, success),
+            utility,
             gems_rescheduled: run.entry.gems_rescheduled,
             stolen: run.stolen,
         };
@@ -502,7 +507,6 @@ impl<S: Scheduler> Platform<S> {
             None => return,
         };
         self.core.cloud_inflight -= 1;
-        let p = self.core.profile(run.entry.task.model).clone();
         let success = !run.timed_out && run.end <= run.entry.abs_deadline;
         // §5.4 observation hook fires before verdicting so adapted
         // expectations (and the timeline's expected_ms) include this sample.
@@ -554,6 +558,10 @@ impl<S: Scheduler> Platform<S> {
         } else {
             Fate::Missed(Resource::Cloud)
         };
+        let utility = self
+            .core
+            .profile(run.entry.task.model)
+            .utility(Resource::Cloud, success);
         let outcome = TaskOutcome {
             task_id: run.entry.task.id,
             model: run.entry.task.model,
@@ -562,7 +570,7 @@ impl<S: Scheduler> Platform<S> {
             at: now,
             created_at: run.entry.task.segment.created_at,
             exec_duration: run.duration,
-            utility: p.utility(Resource::Cloud, success),
+            utility,
             gems_rescheduled: run.entry.gems_rescheduled,
             stolen: false,
         };

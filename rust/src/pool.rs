@@ -1,0 +1,227 @@
+//! Dependency-free scoped worker pool — the execution engine behind the
+//! parallel experiment sweeps (`--jobs N`).
+//!
+//! The evaluation grids of §8 are embarrassingly parallel: every cell
+//! (workload × policy × seed × edge spec) builds its own cluster from its
+//! own seed and shares nothing with its neighbours. [`Pool::run`] exploits
+//! that with plain `std::thread::scope` workers (the offline default build
+//! stays zero-dependency — no rayon):
+//!
+//! * Jobs are sharded round-robin into per-worker deques; a worker drains
+//!   its own deque front-first and, when empty, **steals from the back**
+//!   of its peers', so a straggler cell (a 28-edge fig13 run next to a
+//!   2-edge smoke cell) cannot leave the rest of the machine idle.
+//! * Results land in per-job slots indexed by submission order, so the
+//!   output `Vec` is always in enumeration order — schedule-independent,
+//!   which is what keeps parallel reports **byte-identical** to the
+//!   sequential path (`tests/sweep_parity.rs`).
+//! * A panicking job aborts the sweep: remaining workers stop picking up
+//!   jobs and the first panic payload is re-thrown to the caller after
+//!   the scope joins (`worker_panics_propagate_to_the_caller`).
+//!
+//! `Pool::new(1)` (and single-job runs) bypass the threads entirely and
+//! execute inline, so `--jobs 1` *is* the sequential engine, not an
+//! emulation of it.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Worker count `Pool::new(0)` resolves to: the machine's available
+/// parallelism (1 when undetectable, e.g. under exotic cgroup configs).
+pub fn auto_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Lock helper that shrugs off poisoning: the shared state is plain data
+/// (job indices / result slots) and the panic that poisoned it is
+/// re-thrown to the caller anyway after the scope joins.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Per-worker deque of job indices (submission order).
+type JobDeque = Mutex<VecDeque<usize>>;
+
+/// First panic payload raised by any job, kept for re-throw.
+type Failure = Mutex<Option<Box<dyn Any + Send>>>;
+
+/// A fixed-width scoped worker pool. Cheap to construct (no threads are
+/// kept alive between [`Pool::run`] calls — each run is one
+/// `thread::scope`), so sweeps build one wherever a `jobs` knob surfaces.
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// `workers == 0` means "auto" ([`auto_workers`]); `1` runs inline.
+    pub fn new(workers: usize) -> Pool {
+        Pool {
+            workers: if workers == 0 { auto_workers() } else { workers },
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute jobs `0..n` through `f`, returning the results **in job
+    /// order** regardless of the execution schedule.
+    ///
+    /// Panics from any job are propagated (first payload wins) after all
+    /// workers have stopped.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.workers <= 1 || n <= 1 {
+            // The sequential engine itself, not an emulation: same call
+            // order, same thread, no synchronization.
+            return (0..n).map(f).collect();
+        }
+        let w = self.workers.min(n);
+        // Shard jobs round-robin, then wrap for sharing.
+        let mut shards: Vec<VecDeque<usize>> = vec![VecDeque::new(); w];
+        for i in 0..n {
+            shards[i % w].push_back(i);
+        }
+        let deques: Vec<JobDeque> =
+            shards.into_iter().map(Mutex::new).collect();
+        let slots: Vec<Mutex<Option<T>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let failure: Failure = Mutex::new(None);
+        let abort = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for me in 0..w {
+                let (deques, slots, failure, abort, f) =
+                    (&deques, &slots, &failure, &abort, &f);
+                s.spawn(move || {
+                    while let Some(i) = next_job(me, deques) {
+                        if abort.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        match panic::catch_unwind(AssertUnwindSafe(|| f(i)))
+                        {
+                            Ok(v) => *lock(&slots[i]) = Some(v),
+                            Err(payload) => {
+                                abort.store(true, Ordering::Relaxed);
+                                let mut first = lock(failure);
+                                if first.is_none() {
+                                    *first = Some(payload);
+                                }
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(payload) = lock(&failure).take() {
+            panic::resume_unwind(payload);
+        }
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .expect("every job produced a result")
+            })
+            .collect()
+    }
+}
+
+/// Next job for worker `me`: own deque front first (submission order,
+/// cache-warm), then steal from the *back* of the peers' deques so two
+/// hungry workers contend for opposite ends.
+fn next_job(me: usize, deques: &[JobDeque]) -> Option<usize> {
+    if let Some(i) = lock(&deques[me]).pop_front() {
+        return Some(i);
+    }
+    let w = deques.len();
+    for k in 1..w {
+        if let Some(i) = lock(&deques[(me + k) % w]).pop_back() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn one_worker_equals_sequential() {
+        let order = Mutex::new(Vec::new());
+        let out = Pool::new(1).run(10, |i| {
+            lock(&order).push(i);
+            i * i
+        });
+        assert_eq!(out, (0..10).map(|i| i * i).collect::<Vec<_>>());
+        // Inline path: jobs execute in submission order on this thread.
+        assert_eq!(*lock(&order), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn results_are_ordered_under_contention() {
+        // Stagger runtimes so completion order differs from submission
+        // order; results must still land by job index.
+        let out = Pool::new(8).run(64, |i| {
+            std::thread::sleep(Duration::from_millis(((i * 13) % 7) as u64));
+            i
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let hits = AtomicUsize::new(0);
+        let out = Pool::new(4).run(100, |i| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn worker_panics_propagate_to_the_caller() {
+        let pool = Pool::new(4);
+        let r = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, |i| {
+                if i == 7 {
+                    panic!("job 7 exploded");
+                }
+                i
+            })
+        }));
+        let payload = r.expect_err("the job panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("job 7 exploded"), "payload: {msg:?}");
+    }
+
+    #[test]
+    fn zero_workers_resolves_to_auto() {
+        assert!(Pool::new(0).workers() >= 1);
+        assert_eq!(Pool::new(3).workers(), 3);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let out: Vec<usize> = Pool::new(4).run(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs_is_fine() {
+        let out = Pool::new(32).run(3, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

@@ -1,9 +1,12 @@
 //! Edge and cloud task queues (§3.3, §5).
 //!
 //! The paper implements these as custom priority queues over a doubly linked
-//! list; here they are sorted vectors (cache-friendly, O(log n) position
-//! search + O(n) insert — queues hold at most a few dozen entries at the
-//! paper's workloads, see the §Perf notes).
+//! list; here they are sorted ring buffers (`VecDeque`: cache-friendly,
+//! O(log n) position search + O(n) insert — queues hold at most a few dozen
+//! entries at the paper's workloads — and, unlike the earlier sorted `Vec`,
+//! **O(1) head pops**: `pop`/`pop_due` fire on every executor/trigger event,
+//! and `Vec::remove(0)` shifted the whole queue each time; see
+//! docs/PERF.md).
 //!
 //! * [`EdgeQueue`] — priority-ordered pending tasks for the single-lane edge
 //!   executor. The priority key is pluggable ([`EdgeOrder`]): EDF for
@@ -13,6 +16,8 @@
 //! * [`CloudQueue`] — trigger-time ordered deferred tasks (§5.3): each entry
 //!   is sent to the FaaS only when its trigger time arrives, giving the edge
 //!   a window to steal it.
+
+use std::collections::VecDeque;
 
 use crate::model::DnnKind;
 use crate::task::{Task, TaskId};
@@ -61,7 +66,7 @@ pub struct InsertProbe {
 
 #[derive(Default, Debug)]
 pub struct EdgeQueue {
-    entries: Vec<EdgeEntry>,
+    entries: VecDeque<EdgeEntry>,
     seq: u64,
     order: EdgeOrder,
 }
@@ -74,7 +79,7 @@ impl Default for EdgeOrder {
 
 impl EdgeQueue {
     pub fn new(order: EdgeOrder) -> Self {
-        EdgeQueue { entries: Vec::new(), seq: 0, order }
+        EdgeQueue { entries: VecDeque::new(), seq: 0, order }
     }
 
     pub fn len(&self) -> usize {
@@ -116,7 +121,7 @@ impl EdgeQueue {
         let key = self.key_for(abs_deadline, t_edge, hpf_priority);
         let pos = self.position_for(key);
         let mut t = busy_until;
-        for e in &self.entries[..pos] {
+        for e in self.entries.iter().take(pos) {
             t += e.t_edge;
         }
         t += t_edge;
@@ -164,18 +169,15 @@ impl EdgeQueue {
         pos
     }
 
-    /// Pop the highest-priority entry.
+    /// Pop the highest-priority entry — O(1) on the ring buffer (this
+    /// fires once per edge execution).
     pub fn pop(&mut self) -> Option<EdgeEntry> {
-        if self.entries.is_empty() {
-            None
-        } else {
-            Some(self.entries.remove(0))
-        }
+        self.entries.pop_front()
     }
 
     /// Peek the head entry.
     pub fn peek(&self) -> Option<&EdgeEntry> {
-        self.entries.first()
+        self.entries.front()
     }
 
     /// Direct index access (perf: DEM victim scoring is O(victims), not
@@ -187,13 +189,13 @@ impl EdgeQueue {
 
     /// Remove an entry by index (used by DEM migration).
     pub fn remove_at(&mut self, idx: usize) -> EdgeEntry {
-        self.entries.remove(idx)
+        self.entries.remove(idx).expect("edge-queue index in range")
     }
 
     /// Remove an entry by task id (used by GEMS rescheduling).
     pub fn remove_task(&mut self, id: TaskId) -> Option<EdgeEntry> {
         let idx = self.entries.iter().position(|e| e.task.id == id)?;
-        Some(self.entries.remove(idx))
+        self.entries.remove(idx)
     }
 
     /// Snapshot of (index, task-id, model) for tasks of one model, head
@@ -229,12 +231,12 @@ pub struct CloudEntry {
 /// Trigger-time priority queue for the cloud executor.
 #[derive(Default, Debug)]
 pub struct CloudQueue {
-    entries: Vec<CloudEntry>, // sorted by trigger ascending
+    entries: VecDeque<CloudEntry>, // sorted by trigger ascending
 }
 
 impl CloudQueue {
     pub fn new() -> Self {
-        CloudQueue { entries: Vec::new() }
+        CloudQueue { entries: VecDeque::new() }
     }
 
     pub fn len(&self) -> usize {
@@ -256,13 +258,15 @@ impl CloudQueue {
 
     /// Earliest trigger time, if any.
     pub fn next_trigger(&self) -> Option<Micros> {
-        self.entries.first().map(|e| e.trigger)
+        self.entries.front().map(|e| e.trigger)
     }
 
-    /// Pop the head entry if its trigger time has arrived.
+    /// Pop the head entry if its trigger time has arrived — O(1) on the
+    /// ring buffer (this fires once per trigger event *and* once more to
+    /// detect "nothing due", so it is the hottest cloud-queue op).
     pub fn pop_due(&mut self, now: Micros) -> Option<CloudEntry> {
-        if self.entries.first().map(|e| e.trigger <= now).unwrap_or(false) {
-            Some(self.entries.remove(0))
+        if self.entries.front().map(|e| e.trigger <= now).unwrap_or(false) {
+            self.entries.pop_front()
         } else {
             None
         }
@@ -282,8 +286,14 @@ impl CloudQueue {
             if e.t_edge as i64 > slack {
                 continue;
             }
+            // Would miss its deadline even if stolen now. For
+            // negative-utility entries this is also the steal-vs-drop
+            // boundary: their trigger is clamped to ≥ deadline − t_edge
+            // (§5.3), so past the trigger instant this check always
+            // skips them and the just-in-time drop at the pending
+            // trigger event wins (pinned by the trigger-boundary tests).
             if now + e.t_edge > e.abs_deadline {
-                continue; // would miss its deadline even if stolen now
+                continue;
             }
             let r = rank(e);
             let cand = (i, e.negative_utility, r);
@@ -305,7 +315,7 @@ impl CloudQueue {
     }
 
     pub fn remove_at(&mut self, idx: usize) -> CloudEntry {
-        self.entries.remove(idx)
+        self.entries.remove(idx).expect("cloud-queue index in range")
     }
 }
 
@@ -469,6 +479,36 @@ mod tests {
             .best_steal(0, ms(150) as i64, |e| if e.task.id == 8 { 2.0 } else { 1.0 })
             .unwrap();
         assert_eq!(q.remove_at(idx).task.id, 8);
+    }
+
+    #[test]
+    fn steal_vs_drop_at_the_trigger_boundary() {
+        // A negative-utility entry's trigger is its latest edge start
+        // (deadline − t_edge, §5.3): stealing must be legal up to and at
+        // exactly the trigger instant, and lost one microsecond later —
+        // from there the just-in-time drop at the trigger event wins.
+        let (t_edge, dl) = (ms(100), ms(900));
+        let trigger = dl - t_edge;
+        let mut q = CloudQueue::new();
+        q.insert(centry(1, trigger, t_edge, dl, true));
+        let slack = ms(500) as i64;
+        assert_eq!(q.best_steal(trigger - 1, slack, |_| 1.0), Some(0));
+        assert_eq!(q.best_steal(trigger, slack, |_| 1.0), Some(0),
+                   "the boundary instant still steals");
+        assert_eq!(q.best_steal(trigger + 1, slack, |_| 1.0), None,
+                   "past the boundary the drop wins");
+    }
+
+    #[test]
+    fn expired_negative_candidates_do_not_shadow_stealable_entries() {
+        let mut q = CloudQueue::new();
+        // A negative-utility entry past its latest edge start (awaiting
+        // its trigger-time drop)...
+        q.insert(centry(1, ms(100), ms(300), ms(350), true));
+        // ...must not shadow a live positive-utility candidate.
+        q.insert(centry(2, ms(700), ms(100), ms(900), false));
+        let idx = q.best_steal(ms(400), ms(500) as i64, |_| 1.0).unwrap();
+        assert_eq!(q.remove_at(idx).task.id, 2);
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::model::{ModelProfile, Resource};
 use crate::net::{mobility_trace, LognormalWan, TraceBandwidth,
                  TrapeziumLatency};
 use crate::policy::Policy;
+use crate::pool::Pool;
 use crate::report::{Cell, Report, Table, Value};
 use crate::time::{secs, Micros};
 
@@ -177,11 +178,26 @@ impl Scenario {
 
     // ------------------------------------------------------------ running
 
-    /// Execute the whole grid; returns the structured report.
+    /// Execute the whole grid sequentially; returns the structured
+    /// report. Equivalent to `run_jobs(seed, 1)`.
     pub fn run(&self, seed: u64) -> Result<Report> {
+        self.run_jobs(seed, 1)
+    }
+
+    /// Execute the whole grid on `jobs` worker threads (`0` = auto, `1` =
+    /// inline sequential).
+    ///
+    /// The sweep engine: the grid is first *enumerated* into a flat job
+    /// list in report order, the cells are executed on a work-stealing
+    /// [`Pool`] (each cell builds its own cluster from its own derived
+    /// seed, so cells share nothing), and the results are re-assembled in
+    /// enumeration order — reports are **byte-identical** to the
+    /// sequential path for every `jobs` value (`tests/sweep_parity.rs`).
+    pub fn run_jobs(&self, seed: u64, jobs: usize) -> Result<Report> {
         if self.policies.is_empty() {
             bail!("scenario {:?} has no policies", self.id);
         }
+        let pool = Pool::new(jobs);
         let mut rep =
             Report::new(self.id.as_str(), self.title.as_str(), seed);
         if self.per_edge.is_empty() {
@@ -191,9 +207,9 @@ impl Scenario {
             if self.edges == 0 {
                 bail!("scenario {:?} needs at least one edge", self.id);
             }
-            self.run_uniform(seed, &mut rep);
+            self.run_uniform(seed, &mut rep, &pool);
         } else {
-            self.run_hetero(seed, &mut rep);
+            self.run_hetero(seed, &mut rep, &pool);
         }
         for n in &self.notes {
             rep.text(n.clone());
@@ -205,47 +221,59 @@ impl Scenario {
         base.wrapping_add(i.wrapping_mul(SEED_STRIDE))
     }
 
-    fn run_uniform(&self, seed: u64, rep: &mut Report) {
+    fn run_uniform(&self, seed: u64, rep: &mut Report, pool: &Pool) {
         let mut t = Table::new(&[
             "WL", "algo", "seed#", "edges", "tasks", "done", "done %",
             "QoS util (med)", "min..max util", "cloud done", "stolen",
         ]);
+        // Enumerate workload × policy × seed into a flat job list (report
+        // row order), fan out, re-assemble in enumeration order.
+        let mut cells: Vec<(&Workload, &Policy, u64)> = Vec::new();
         for wl in &self.workloads {
             for policy in &self.policies {
                 for i in 0..self.seeds.max(1) {
-                    let s = self.sweep_seed(seed, i);
-                    let cm = run_cluster(policy, wl, s, self.edges,
-                                         &self.cloud);
-                    t.push_row(summary_row(wl, policy, i, &cm));
+                    cells.push((wl, policy, i));
                 }
             }
+        }
+        let metrics = pool.run(cells.len(), |j| {
+            let (wl, policy, i) = cells[j];
+            run_cluster(policy, wl, self.sweep_seed(seed, i), self.edges,
+                        &self.cloud)
+        });
+        for ((wl, policy, i), cm) in cells.iter().zip(&metrics) {
+            t.push_row(summary_row(wl, policy, *i, cm));
         }
         rep.table(t);
     }
 
-    fn run_hetero(&self, seed: u64, rep: &mut Report) {
+    fn run_hetero(&self, seed: u64, rep: &mut Report, pool: &Pool) {
         let mut summary = Table::new(&[
             "algo", "seed#", "edges", "tasks", "done", "done %",
             "QoS util (med)", "min..max util", "cloud done", "stolen",
         ]);
-        let mut details: Vec<(String, Table)> = Vec::new();
+        let mut cells: Vec<(&Policy, u64)> = Vec::new();
         for policy in &self.policies {
             for i in 0..self.seeds.max(1) {
-                let s = self.sweep_seed(seed, i);
-                let cm = self.run_hetero_cluster(policy, s);
-                let mut row = summary_row(
-                    &self.per_edge[0].workload, policy, i, &cm,
-                );
-                // The WL column does not apply to a mixed cluster.
-                row.remove(0);
-                summary.push_row(row);
-                if i == 0 {
-                    details.push((
-                        format!("### per-edge — {}",
-                                policy.kind.name()),
-                        per_edge_table(&self.per_edge, &cm),
-                    ));
-                }
+                cells.push((policy, i));
+            }
+        }
+        let metrics = pool.run(cells.len(), |j| {
+            let (policy, i) = cells[j];
+            self.run_hetero_cluster(policy, self.sweep_seed(seed, i))
+        });
+        let mut details: Vec<(String, Table)> = Vec::new();
+        for ((policy, i), cm) in cells.iter().zip(&metrics) {
+            let mut row =
+                summary_row(&self.per_edge[0].workload, policy, *i, cm);
+            // The WL column does not apply to a mixed cluster.
+            row.remove(0);
+            summary.push_row(row);
+            if *i == 0 {
+                details.push((
+                    format!("### per-edge — {}", policy.kind.name()),
+                    per_edge_table(&self.per_edge, cm),
+                ));
             }
         }
         rep.table(summary);
@@ -458,22 +486,34 @@ pub fn registry() -> Vec<ScenarioEntry> {
 
 /// Run one registered experiment by id (paper aliases like `fig9`,
 /// `fig23` resolve to their canonical entry, as the CLI always has).
+/// Sequential; the CLI's `--jobs` surface is [`run_scenario_jobs`].
 pub fn run_scenario(id: &str, seed: u64) -> Result<Report> {
+    run_scenario_jobs(id, seed, 1)
+}
+
+/// [`run_scenario`] with an explicit worker count (`0` = auto).
+///
+/// Grid-shaped experiments (fig8/fig10/fig13 and every [`Scenario`]) fan
+/// their cells out over a [`Pool`]; the rest are single runs or
+/// interleaved timelines where parallelism has nothing to grab, and run
+/// unchanged. Reports are byte-identical for every `jobs` value.
+pub fn run_scenario_jobs(id: &str, seed: u64, jobs: usize) -> Result<Report> {
+    let pool = Pool::new(jobs);
     match id {
         "t1" => exp::t1_report(seed),
         "fig1" => exp::fig1_report(seed),
         "fig2" => exp::fig2_report(seed),
-        "fig8" | "fig9" | "fig23" => exp::fig8_report(seed),
-        "fig10" | "fig24" => exp::fig10_report(seed),
+        "fig8" | "fig9" | "fig23" => exp::fig8_report(seed, &pool),
+        "fig10" | "fig24" => exp::fig10_report(seed, &pool),
         "fig11" | "fig12" | "fig25" => exp::fig11_report(seed, "4D-P"),
         "fig21" | "fig22" | "fig26" => exp::fig11_report(seed, "3D-P"),
-        "fig13" | "fig27" => exp::fig13_report(seed),
+        "fig13" | "fig27" => exp::fig13_report(seed, &pool),
         "fig14" | "fig15" => exp::fig14_report(seed),
         "fig17" => exp::fig17_report(seed),
         "fig18" => exp::fig18_report(seed),
-        "poisson" => poisson_scenario().run(seed),
-        "churn" => churn_scenario().run(seed),
-        "hetero-edges" => hetero_scenario().run(seed),
+        "poisson" => poisson_scenario().run_jobs(seed, jobs),
+        "churn" => churn_scenario().run_jobs(seed, jobs),
+        "hetero-edges" => hetero_scenario().run_jobs(seed, jobs),
         other => {
             let known: Vec<&str> =
                 registry().iter().map(|e| e.id).collect();

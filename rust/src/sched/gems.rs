@@ -71,8 +71,7 @@ impl Scheduler for Gems {
         if !(ctx.core.policy.gems && ctx.core.qoe[i].falling_behind()) {
             return;
         }
-        let p = ctx.core.profile(kind).clone();
-        if p.util_cloud() <= 0.0 {
+        if ctx.core.profile(kind).util_cloud() <= 0.0 {
             return; // GEMS only helps via positive-utility cloud runs (§6)
         }
         let t_hat = self.est.expected(ctx.core, kind);

@@ -205,8 +205,12 @@ pub trait Scheduler: Send {
             self.drain_done(ctx);
             return false;
         }
-        let p = ctx.core.profile(task.model).clone();
-        let dl = task.absolute_deadline(p.deadline);
+        // Read the profile scalars the decision needs up front (no
+        // per-offer profile clone on this hot path).
+        let (dl, t_edge, util_cloud) = {
+            let p = ctx.core.profile(task.model);
+            (task.absolute_deadline(p.deadline), p.t_edge, p.util_cloud())
+        };
         let t_hat = self.expected_cloud(ctx.core, task.model);
         if ctx.now + t_hat > dl {
             self.on_cloud_skip(ctx.core, ctx.now, task.model);
@@ -214,17 +218,17 @@ pub trait Scheduler: Send {
             self.drain_done(ctx);
             return false;
         }
-        let negative = p.util_cloud() <= 0.0;
+        let negative = util_cloud <= 0.0;
         if negative && !ctx.core.policy.cloud_accepts_negative {
             if ctx.core.policy.defer_cloud && ctx.core.policy.stealing {
                 // §5.3: keep as a steal candidate until the latest time it
                 // could still start on the edge.
-                let trigger = dl.saturating_sub(p.t_edge).max(ctx.now);
+                let trigger = dl.saturating_sub(t_edge).max(ctx.now);
                 let entry = CloudEntry {
                     task,
                     abs_deadline: dl,
                     t_cloud: t_hat,
-                    t_edge: p.t_edge,
+                    t_edge,
                     trigger,
                     negative_utility: true,
                     gems_rescheduled: gems,
@@ -251,7 +255,7 @@ pub trait Scheduler: Send {
             task,
             abs_deadline: dl,
             t_cloud: t_hat,
-            t_edge: p.t_edge,
+            t_edge,
             trigger,
             negative_utility: negative,
             gems_rescheduled: gems,
@@ -338,11 +342,14 @@ pub(crate) fn steal_candidate(core: &Core, now: Micros) -> Option<usize> {
 pub(crate) fn dem_admit<S: Scheduler + ?Sized>(s: &mut S,
                                                ctx: &mut SchedCtx<'_>,
                                                task: Task) {
-    let p = ctx.core.profile(task.model).clone();
-    let dl = task.absolute_deadline(p.deadline);
+    // Profile scalars via a short borrow — admission runs per task, and
+    // the old per-admission profile clone showed up in the benches.
+    let (dl, t_edge, hpf) = {
+        let p = ctx.core.profile(task.model);
+        (task.absolute_deadline(p.deadline), p.t_edge, p.hpf_priority())
+    };
     let busy = ctx.core.edge_busy_until(ctx.now);
-    let probe =
-        ctx.core.edge_q.probe_insert(dl, p.t_edge, p.hpf_priority(), busy);
+    let probe = ctx.core.edge_q.probe_insert(dl, t_edge, hpf, busy);
     if probe.completion > dl {
         // Scenario "own deadline missed": redirect to cloud.
         s.offer_cloud(ctx, task, false);
@@ -351,7 +358,10 @@ pub(crate) fn dem_admit<S: Scheduler + ?Sized>(s: &mut S,
     if !probe.victims.is_empty() && ctx.core.policy.migration {
         // Eqn 3 scores for the victims and the incoming task.
         let t_hat_in = s.expected_cloud(ctx.core, task.model);
-        let s_in = p.migration_score(ctx.now + t_hat_in <= dl);
+        let s_in = ctx
+            .core
+            .profile(task.model)
+            .migration_score(ctx.now + t_hat_in <= dl);
         let mut s_victims = 0.0;
         for &vi in &probe.victims {
             let (vmodel, vcreated) = {
@@ -370,13 +380,13 @@ pub(crate) fn dem_admit<S: Scheduler + ?Sized>(s: &mut S,
                 let victim = ctx.core.edge_q.remove_at(vi);
                 s.offer_cloud(ctx, victim.task, false);
             }
-            ctx.core.edge_q.insert(task, dl, p.t_edge, p.hpf_priority());
+            ctx.core.edge_q.insert(task, dl, t_edge, hpf);
         } else {
             // Retain existing tasks; incoming goes to the cloud
             // (Fig. 5, scenario 3).
             s.offer_cloud(ctx, task, false);
         }
     } else {
-        ctx.core.edge_q.insert(task, dl, p.t_edge, p.hpf_priority());
+        ctx.core.edge_q.insert(task, dl, t_edge, hpf);
     }
 }

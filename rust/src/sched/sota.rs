@@ -16,22 +16,21 @@ impl Scheduler for Sota1 {
     }
 
     fn place(&mut self, ctx: &mut SchedCtx<'_>, task: &Task) -> Placement {
-        let p = ctx.core.profile(task.model).clone();
-        let dl = task.absolute_deadline(p.deadline);
+        let (deadline, te, hp) = {
+            let p = ctx.core.profile(task.model);
+            (p.deadline, p.t_edge, p.hpf_priority())
+        };
+        let dl = task.absolute_deadline(deadline);
         let busy = ctx.core.edge_busy_until(ctx.now);
-        if ctx.core.edge_q.feasible(dl, p.t_edge, p.hpf_priority(), busy) {
+        if ctx.core.edge_q.feasible(dl, te, hp, busy) {
             return Placement::Edge;
         }
-        let urgent = p.deadline < ctx.core.policy.sota1_urgent_below;
+        let urgent = deadline < ctx.core.policy.sota1_urgent_below;
         if !urgent {
             let stretched = dl
-                + (p.deadline as f64 * ctx.core.policy.sota1_extension)
+                + (deadline as f64 * ctx.core.policy.sota1_extension)
                     as Micros;
-            if ctx
-                .core
-                .edge_q
-                .feasible(stretched, p.t_edge, p.hpf_priority(), busy)
-            {
+            if ctx.core.edge_q.feasible(stretched, te, hp, busy) {
                 return Placement::EdgeWithDeadline(stretched);
             }
         }
@@ -51,13 +50,12 @@ impl Scheduler for Sota2 {
     }
 
     fn place(&mut self, ctx: &mut SchedCtx<'_>, task: &Task) -> Placement {
-        let p = ctx.core.profile(task.model).clone();
-        let dl = task.absolute_deadline(p.deadline);
+        let (te, hp, dl) = {
+            let p = ctx.core.profile(task.model);
+            (p.t_edge, p.hpf_priority(), task.absolute_deadline(p.deadline))
+        };
         let busy = ctx.core.edge_busy_until(ctx.now);
-        let probe = ctx
-            .core
-            .edge_q
-            .probe_insert(dl, p.t_edge, p.hpf_priority(), busy);
+        let probe = ctx.core.edge_q.probe_insert(dl, te, hp, busy);
         let accept = if probe.completion > dl || probe.victims.len() > 1 {
             false
         } else if probe.victims.is_empty() {
@@ -65,9 +63,8 @@ impl Scheduler for Sota2 {
         } else {
             // One victim: compare ACT of the two candidate schedules.
             let act_without = ctx.core.edge_act(busy, None);
-            let act_with =
-                ctx.core.edge_act(busy, Some((probe.pos, p.t_edge)));
-            act_with <= act_without + p.t_edge as f64
+            let act_with = ctx.core.edge_act(busy, Some((probe.pos, te)));
+            act_with <= act_without + te as f64
         };
         if accept {
             Placement::Edge

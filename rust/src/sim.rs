@@ -85,6 +85,16 @@ impl EventQueue {
         self.scope = scope;
     }
 
+    /// Reset to the empty state (scope and FIFO tie-break counter
+    /// included) while keeping the heap's allocation, so one queue can be
+    /// reused across cluster runs with bit-identical results
+    /// ([`crate::cluster::Cluster::run_with`]).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.scope = 0;
+    }
+
     pub fn push(&mut self, at: Micros, event: Event) {
         self.seq += 1;
         self.heap.push(Reverse(Item {

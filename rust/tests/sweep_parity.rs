@@ -1,0 +1,56 @@
+//! Parallel-sweep parity: `--jobs N` must produce **byte-identical**
+//! reports to `--jobs 1` for every experiment. The sweep engine
+//! enumerates each grid into a flat job list, fans the cells out over the
+//! work-stealing pool and re-assembles results in enumeration order
+//! (`scenario.rs` / `pool.rs`) — these tests pin that the schedule never
+//! leaks into the output, on a paper table (`t1`), the biggest paper grid
+//! (`fig8`), and the heterogeneous beyond-paper scenario
+//! (`hetero-edges`), plus a downscaled grid across worker counts.
+
+use ocularone::scenario::run_scenario_jobs;
+
+fn assert_parity(id: &str, seed: u64) {
+    let seq = run_scenario_jobs(id, seed, 1).expect("sequential run");
+    let par = run_scenario_jobs(id, seed, 8).expect("parallel run");
+    assert_eq!(seq, par, "{id}: structured reports diverged");
+    assert_eq!(seq.to_markdown(), par.to_markdown(),
+               "{id}: markdown bytes diverged");
+    assert_eq!(seq.to_json(), par.to_json(), "{id}: JSON bytes diverged");
+}
+
+#[test]
+fn t1_parallel_parity() {
+    assert_parity("t1", 42);
+}
+
+#[test]
+fn fig8_parallel_parity() {
+    assert_parity("fig8", 42);
+}
+
+#[test]
+fn hetero_edges_parallel_parity() {
+    assert_parity("hetero-edges", 42);
+}
+
+#[test]
+fn scenario_grid_parity_across_worker_counts() {
+    use ocularone::fleet::Workload;
+    use ocularone::policy::Policy;
+    use ocularone::scenario::Scenario;
+    use ocularone::time::secs;
+
+    // 2 workloads × 2 policies × 3 seeds = 12 cells; more workers than
+    // cells in some configurations, fewer in others.
+    let sc = Scenario::new("mini-par", "Mini parallel grid")
+        .workload(Workload::emulation(2, false).with_duration(secs(30)))
+        .workload(Workload::emulation(2, true).with_duration(secs(30)))
+        .policies(vec![Policy::edf_ec(), Policy::dems()])
+        .edges(2)
+        .seeds(3);
+    let seq = sc.run_jobs(7, 1).expect("sequential grid");
+    for jobs in [2, 4, 16, 0] {
+        let par = sc.run_jobs(7, jobs).expect("parallel grid");
+        assert_eq!(seq, par, "jobs={jobs} diverged from sequential");
+    }
+}

@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Gate CI on end-to-end bench regressions.
+
+Compares a freshly produced ``BENCH_<target>.json`` (written by a bench
+binary run with ``--json``, see rust/src/benchutil.rs) against the
+committed baseline and fails when any matching benchmark regressed past
+the threshold.
+
+Usage:
+    check_bench_regression.py CURRENT BASELINE [--threshold 2.0]
+                              [--prefix fig8]
+
+* Benchmarks are matched by exact name; only names starting with
+  ``--prefix`` (default ``fig8``, the end-to-end figure benches) gate.
+* The comparison uses ``p50_ns`` (robust center — a single descheduled CI
+  sample skews the mean, not the median).
+* A missing baseline file is an informational pass: the first CI run
+  seeds it — download the ``bench-json`` artifact and commit it at the
+  baseline path (see docs/PERF.md).
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc.get("results", [])}
+
+
+def main(argv):
+    positional = []
+    threshold = 2.0
+    prefix = "fig8"
+    it = iter(argv[1:])
+    for a in it:
+        if a in ("--threshold", "--prefix"):
+            try:
+                value = next(it)
+            except StopIteration:
+                print(f"{a} needs a value\n{__doc__}")
+                return 2
+            if a == "--threshold":
+                threshold = float(value)
+            else:
+                prefix = value
+        elif a.startswith("--"):
+            print(f"unknown flag {a!r}\n{__doc__}")
+            return 2
+        else:
+            positional.append(a)
+    if len(positional) != 2:
+        print(__doc__)
+        return 2
+    current_path, baseline_path = positional
+
+    if not os.path.exists(baseline_path):
+        print(
+            f"no committed baseline at {baseline_path}; skipping the "
+            "regression gate. Seed it by committing this run's "
+            f"{os.path.basename(current_path)} (uploaded as the "
+            "bench-json artifact) at that path — see docs/PERF.md."
+        )
+        return 0
+
+    current = load(current_path)
+    baseline = load(baseline_path)
+    gated = [
+        name
+        for name in current
+        if name.startswith(prefix) and name in baseline
+    ]
+    # A rename/removal must not silently disarm the gate: every baseline
+    # entry has to resolve to a current bench (or the baseline must be
+    # refreshed deliberately).
+    missing = [
+        name
+        for name in baseline
+        if name.startswith(prefix) and name not in current
+    ]
+    if missing:
+        print(
+            f"{len(missing)} baseline bench(es) missing from "
+            f"{current_path}: {missing}; renamed or removed benches "
+            "require refreshing the committed baseline."
+        )
+        return 1
+    if not gated:
+        print(
+            f"no benchmarks matching prefix {prefix!r} present in both "
+            f"{current_path} and {baseline_path}; nothing to gate."
+        )
+        return 0
+
+    failures = []
+    for name in sorted(gated):
+        cur = current[name]["p50_ns"]
+        base = baseline[name]["p50_ns"]
+        ratio = cur / base if base > 0 else float("inf")
+        marker = "FAIL" if ratio > threshold else "ok"
+        print(
+            f"  [{marker}] {name}: p50 {cur / 1e6:.3f} ms vs baseline "
+            f"{base / 1e6:.3f} ms ({ratio:.2f}x)"
+        )
+        if ratio > threshold:
+            failures.append((name, ratio))
+
+    if failures:
+        print(
+            f"\n{len(failures)} bench(es) regressed past {threshold}x; "
+            "if intentional, refresh the committed baseline from the "
+            "bench-json artifact."
+        )
+        return 1
+    print(f"\nall {len(gated)} gated bench(es) within {threshold}x.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
