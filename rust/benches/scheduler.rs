@@ -172,6 +172,78 @@ fn main() {
         });
     }
 
+    // FaaS backend container lifecycle on the invoke/complete hot path:
+    // steady-state warm-pool hits, the all-cold keep-alive-expired path,
+    // and the throttle fast path (see src/cloud/faas.rs).
+    {
+        use ocularone::cloud::{Attempt, CloudBackend, FaasBackend,
+                               FaasConfig};
+        let mk_net = || {
+            Box::new(ConstantNet { latency: ms(40), bandwidth: 25.0e6 })
+        };
+        let m = table1()[0].clone();
+        let mut warm = FaasBackend::new(FaasConfig::default(), mk_net());
+        let mut rng = Rng::new(9);
+        let mut now = 0u64;
+        suite.bench("faas_backend invoke+complete (warm pool)", 300,
+                    move || {
+                        now += 1_000;
+                        if let Attempt::Run(inv) =
+                            warm.invoke(&m, now, 38_000, 0, &mut rng)
+                        {
+                            warm.complete(m.kind, inv.token,
+                                          now + inv.duration);
+                        }
+                    });
+        let m = table1()[0].clone();
+        let mut cold = FaasBackend::new(
+            FaasConfig { keep_alive: 0, ..FaasConfig::default() },
+            mk_net(),
+        );
+        let mut rng = Rng::new(10);
+        let mut now = 0u64;
+        suite.bench("faas_backend invoke+complete (every-cold)", 300,
+                    move || {
+                        now += 1_000;
+                        if let Attempt::Run(inv) =
+                            cold.invoke(&m, now, 38_000, 0, &mut rng)
+                        {
+                            cold.complete(m.kind, inv.token,
+                                          now + inv.duration);
+                        }
+                    });
+        let m = table1()[0].clone();
+        let mut full = FaasBackend::new(
+            FaasConfig { concurrency: 0, ..FaasConfig::default() },
+            mk_net(),
+        );
+        let mut rng = Rng::new(11);
+        suite.bench("faas_backend throttle fast path", 300, move || {
+            black_box(full.invoke(&m, 0, 38_000, 0, &mut rng));
+        });
+    }
+
+    // Full 300 s 3D-A run against the FaaS backend (container lifecycle
+    // + billing on every cloud dispatch) vs the simple-sampler runs
+    // above — the subsystem's end-to-end overhead in one number.
+    {
+        use ocularone::cluster::Cluster;
+        use ocularone::scenario::CloudSpec;
+        use ocularone::time::secs;
+        let wl = Workload::emulation(3, true);
+        suite.bench("full 300s 3D-A sim [DEMS-A, faas backend]", 2000,
+                    move || {
+                        let spec = CloudSpec::Faas {
+                            keep_alive: secs(300),
+                            concurrency: 64,
+                        };
+                        let cm = Cluster::single(&Policy::dems_a(), &wl, 7,
+                                                 spec.build())
+                            .run();
+                        black_box(cm);
+                    });
+    }
+
     // The parallel sweep engine itself: a 12-cell grid (3 workloads × 2
     // policies × 2 seeds) on 1 worker vs all cores — the `--jobs`
     // speedup knob in one number.

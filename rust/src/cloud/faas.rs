@@ -1,0 +1,433 @@
+//! A faithful FaaS account model (AWS-Lambda-shaped, §3.2):
+//! warm-container pools per model with keep-alive expiry, deterministic
+//! cold starts on pool miss, a per-account concurrency ceiling with
+//! throttle semantics, and per-invocation billing (GB-seconds plus a
+//! per-request fee).
+//!
+//! One `FaasBackend` instance **is** one account. The platform core owns
+//! one backend per edge station, so cluster scenarios model one account
+//! per edge (N-edge cluster = N independent ceilings/pools/bills) —
+//! which also keeps sweep cells shared-nothing and `--jobs`-parallel
+//! byte-identical.
+//!
+//! Differences from the legacy [`CloudExecModel`] sampler it supersedes:
+//!
+//! * **Container lifecycle** — each completed invocation parks its
+//!   container in the model's warm pool until `now + keep_alive`; an
+//!   invocation is cold exactly when the pool holds no live container at
+//!   invoke time (no `cold_prob` coin flip). Concurrency-driven pool
+//!   growth falls out naturally: N overlapping invocations leave N warm
+//!   containers behind.
+//! * **Concurrency ceiling** — at most `concurrency` invocations may be
+//!   in flight account-wide; excess attempts are throttled with a
+//!   deterministic `retry_after` backoff instead of queueing silently.
+//! * **Billing** — compute time (cold start included, network excluded,
+//!   rounded up to `billing_quantum`) × memory × GB-second price, plus a
+//!   flat per-request fee. Timed-out requests still bill: the function
+//!   keeps running after the client hangs up.
+//!
+//! [`CloudExecModel`]: crate::exec::CloudExecModel
+
+use std::collections::VecDeque;
+
+use crate::cloud::{Attempt, CloudBackend, CloudStats, Invocation};
+use crate::exec::{sample_cloud_compute, sample_cold_start,
+                  shared_uplink_bytes, CLOUD_COLD_START_MS,
+                  CLOUD_HOST_EDGES, CLOUD_NOMINAL_NET_MS, CLOUD_SIGMA,
+                  CLOUD_TIMEOUT_MS};
+use crate::model::{DnnKind, ModelProfile};
+use crate::net::NetworkModel;
+use crate::rng::Rng;
+use crate::time::{ms_f, Micros};
+
+/// Invocation token marking a client-abandoned (timed-out) request: the
+/// function keeps running server-side, so [`FaasBackend::complete`] (which
+/// fires at the client timeout) must NOT release the slot — the backend
+/// drains it itself once the true duration elapses.
+const TOKEN_ABANDONED: u32 = 1;
+
+/// Declarative FaaS account parameters.
+#[derive(Clone, Debug)]
+pub struct FaasConfig {
+    /// Idle warm containers survive this long after their last release.
+    pub keep_alive: Micros,
+    /// Per-account in-flight invocation ceiling (AWS default: 1000).
+    pub concurrency: usize,
+    /// Earliest-retry backoff handed to throttled callers.
+    pub retry_after: Micros,
+    /// Cold-start penalty; jittered ×[0.6, 1.4) per cold invocation.
+    pub cold_start: Micros,
+    /// Lognormal sigma of the FaaS compute time (Fig. 1b).
+    pub sigma: f64,
+    /// Nominal network overhead folded into the Table-1 t̂ values.
+    pub nominal_net: Micros,
+    /// HTTP client timeout (the platform abandons slower requests).
+    pub timeout: Micros,
+    /// Edge containers sharing this host's uplink (§8.1).
+    pub host_edges: usize,
+    /// Allocated function memory, in GB.
+    pub memory_gb: f64,
+    /// Dollars per GB-second of billed compute.
+    pub gb_second_price: f64,
+    /// Flat dollars per request.
+    pub request_price: f64,
+    /// Billed durations round up to this quantum (1 ms on Lambda).
+    pub billing_quantum: Micros,
+}
+
+impl Default for FaasConfig {
+    /// Lambda-shaped defaults over the `exec.rs` calibration: 5 min
+    /// keep-alive, the 1000-slot account ceiling (unreachable under the
+    /// default 16-thread edge pool — ceilings matter only when scenarios
+    /// lower them), 1.5 GB functions at public list prices.
+    fn default() -> Self {
+        FaasConfig {
+            keep_alive: ms_f(300_000.0),
+            concurrency: 1000,
+            retry_after: ms_f(200.0),
+            // Calibration numbers come from the exec.rs shared consts so
+            // the two samplers can never drift apart.
+            cold_start: ms_f(CLOUD_COLD_START_MS),
+            sigma: CLOUD_SIGMA,
+            nominal_net: ms_f(CLOUD_NOMINAL_NET_MS),
+            timeout: ms_f(CLOUD_TIMEOUT_MS),
+            host_edges: CLOUD_HOST_EDGES,
+            memory_gb: 1.5,
+            gb_second_price: 0.000_016_666_7,
+            request_price: 0.000_000_2,
+            billing_quantum: ms_f(1.0),
+        }
+    }
+}
+
+impl FaasConfig {
+    /// Dollars billed for one invocation running `billed` of compute.
+    pub fn invocation_cost(&self, billed: Micros) -> (f64, f64) {
+        let q = self.billing_quantum.max(1);
+        let rounded = billed.div_ceil(q) * q;
+        let gb_s = rounded as f64 / 1e6 * self.memory_gb;
+        (gb_s, gb_s * self.gb_second_price + self.request_price)
+    }
+}
+
+/// One FaaS account/region: per-model warm pools + concurrency ceiling +
+/// cost meter, over a pluggable [`NetworkModel`].
+pub struct FaasBackend {
+    pub cfg: FaasConfig,
+    net: Box<dyn NetworkModel>,
+    /// Expiry timestamps of idle warm containers, per model. Not
+    /// sorted — abandoned-request drains park out of release order, so
+    /// eviction scans the whole (small) pool.
+    pools: [VecDeque<Micros>; DnnKind::COUNT],
+    /// Client-abandoned invocations still running server-side:
+    /// `(model index, true end time)`. Each holds a concurrency slot
+    /// until its true end, then parks its container warm.
+    draining: Vec<(usize, Micros)>,
+    in_flight: usize,
+    stats: CloudStats,
+}
+
+impl FaasBackend {
+    pub fn new(cfg: FaasConfig, net: Box<dyn NetworkModel>) -> Self {
+        FaasBackend {
+            cfg,
+            net,
+            pools: std::array::from_fn(|_| VecDeque::new()),
+            draining: Vec::new(),
+            in_flight: 0,
+            stats: CloudStats::default(),
+        }
+    }
+
+    /// Invocations currently holding a concurrency slot (abandoned
+    /// requests included until their functions really finish).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Live (unexpired, idle) warm containers for `kind` at time `now`.
+    pub fn warm_containers(&self, kind: DnnKind, now: Micros) -> usize {
+        self.pools[kind.index()].iter().filter(|&&e| e > now).count()
+    }
+
+    /// Release abandoned invocations whose functions have finished by
+    /// `now`: free the slot and park the container warm from its true
+    /// end (not the client timeout).
+    fn reap_abandoned(&mut self, now: Micros) {
+        let keep_alive = self.cfg.keep_alive;
+        let mut i = 0;
+        while i < self.draining.len() {
+            let (idx, end) = self.draining[i];
+            if end <= now {
+                self.draining.swap_remove(i);
+                self.in_flight = self.in_flight.saturating_sub(1);
+                self.pools[idx].push_back(end + keep_alive);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+impl CloudBackend for FaasBackend {
+    fn name(&self) -> &'static str {
+        "faas"
+    }
+
+    fn invoke(&mut self, profile: &ModelProfile, now: Micros, bytes: u64,
+              concurrent: usize, rng: &mut Rng) -> Attempt {
+        self.reap_abandoned(now);
+        if self.in_flight >= self.cfg.concurrency {
+            self.stats.throttles += 1;
+            return Attempt::Throttle { retry_after: self.cfg.retry_after };
+        }
+        // Evict expired containers, then take any live one (pools are
+        // not expiry-sorted; see the field docs).
+        let pool = &mut self.pools[profile.kind.index()];
+        pool.retain(|&expiry| expiry > now);
+        let warm = pool.pop_front().is_some();
+        // The exec.rs calibration helpers are the single home of the
+        // sampling formulas (shared with the legacy CloudExecModel).
+        let compute = sample_cloud_compute(profile, self.cfg.sigma,
+                                           self.cfg.nominal_net, rng);
+        let cold_penalty = if warm {
+            0
+        } else {
+            sample_cold_start(self.cfg.cold_start, rng)
+        };
+        let payload =
+            shared_uplink_bytes(bytes, concurrent, self.cfg.host_edges);
+        let transfer = self.net.transfer_time(now, payload, rng);
+        let d = compute + cold_penalty + transfer;
+        let (duration, timed_out) = if d >= self.cfg.timeout {
+            (self.cfg.timeout, true)
+        } else {
+            (d, false)
+        };
+        // Billing covers the function's own runtime (init included,
+        // network excluded) — even when the client times out.
+        let (gb_s, cost) = self.cfg.invocation_cost(compute + cold_penalty);
+        self.in_flight += 1;
+        self.stats.invocations += 1;
+        self.stats.cold_starts += !warm as u64;
+        self.stats.gb_seconds += gb_s;
+        self.stats.dollars += cost;
+        if timed_out {
+            // The client hangs up at the timeout, but the function keeps
+            // running: the slot stays held and the container parks warm
+            // only at the TRUE end (reaped on later invokes/completes).
+            self.draining.push((profile.kind.index(), now + d));
+        }
+        Attempt::Run(Invocation {
+            duration,
+            timed_out,
+            cold: !warm,
+            cost,
+            token: if timed_out { TOKEN_ABANDONED } else { 0 },
+        })
+    }
+
+    fn complete(&mut self, kind: DnnKind, token: u32, now: Micros) {
+        self.reap_abandoned(now);
+        if token == TOKEN_ABANDONED {
+            // Client-side timeout event: the server-side function still
+            // runs; `draining` owns the slot release.
+            return;
+        }
+        debug_assert!(self.in_flight > 0, "complete without invoke");
+        self.in_flight = self.in_flight.saturating_sub(1);
+        self.pools[kind.index()].push_back(now + self.cfg.keep_alive);
+    }
+
+    fn stats(&self) -> CloudStats {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::table1;
+    use crate::net::ConstantNet;
+    use crate::time::{ms, secs};
+
+    /// Deterministic backend: sigma 0 (compute = calibrated median) over
+    /// a constant network, so durations are exactly reproducible.
+    fn backend(cfg: FaasConfig) -> FaasBackend {
+        FaasBackend::new(cfg, Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 10.0e6,
+        }))
+    }
+
+    fn det_cfg() -> FaasConfig {
+        FaasConfig { sigma: 0.0, keep_alive: secs(5), ..FaasConfig::default() }
+    }
+
+    fn run(be: &mut FaasBackend, now: Micros, rng: &mut Rng) -> Invocation {
+        let m = &table1()[0]; // HV
+        match be.invoke(m, now, 38_000, 0, rng) {
+            Attempt::Run(inv) => inv,
+            Attempt::Throttle { .. } => panic!("unexpected throttle"),
+        }
+    }
+
+    #[test]
+    fn keep_alive_expiry_warm_to_cold_exactly_at_expiry() {
+        let mut be = backend(det_cfg());
+        let mut rng = Rng::new(1);
+        // First invocation: pool miss → cold.
+        let first = run(&mut be, 0, &mut rng);
+        assert!(first.cold);
+        let done = first.duration;
+        be.complete(DnnKind::Hv, 0, done);
+        assert_eq!(be.warm_containers(DnnKind::Hv, done), 1);
+        // One microsecond before expiry: still warm.
+        let last_warm = done + secs(5) - 1;
+        let second = run(&mut be, last_warm, &mut rng);
+        assert!(!second.cold, "container must be warm right before expiry");
+        be.complete(DnnKind::Hv, 0, last_warm + second.duration);
+        // Exactly at expiry (expiry <= now): cold again.
+        let released = last_warm + second.duration;
+        let third = run(&mut be, released + secs(5), &mut rng);
+        assert!(third.cold, "container must expire exactly at keep-alive");
+        assert_eq!(be.stats().cold_starts, 2);
+        assert_eq!(be.stats().invocations, 3);
+    }
+
+    #[test]
+    fn warm_pools_are_per_model() {
+        let mut be = backend(det_cfg());
+        let mut rng = Rng::new(2);
+        let hv = run(&mut be, 0, &mut rng);
+        be.complete(DnnKind::Hv, 0, hv.duration);
+        // A different model finds no warm container.
+        let m = &table1()[3]; // BP
+        match be.invoke(m, hv.duration + 1, 38_000, 0, &mut rng) {
+            Attempt::Run(inv) => assert!(inv.cold, "pools are per model"),
+            Attempt::Throttle { .. } => panic!("unexpected throttle"),
+        }
+    }
+
+    #[test]
+    fn concurrency_ceiling_throttles_n_plus_first() {
+        let cfg = FaasConfig { concurrency: 3, ..det_cfg() };
+        let mut be = backend(cfg);
+        let mut rng = Rng::new(3);
+        for _ in 0..3 {
+            run(&mut be, 0, &mut rng);
+        }
+        assert_eq!(be.in_flight(), 3);
+        // The N+1st in-flight invocation is throttled.
+        let m = &table1()[0];
+        match be.invoke(m, 0, 38_000, 0, &mut rng) {
+            Attempt::Throttle { retry_after } => {
+                assert_eq!(retry_after, ms(200));
+            }
+            Attempt::Run(_) => panic!("4th concurrent invoke must throttle"),
+        }
+        assert_eq!(be.stats().throttles, 1);
+        // Releasing one slot re-admits.
+        be.complete(DnnKind::Hv, 0, ms(500));
+        match be.invoke(m, ms(500), 38_000, 0, &mut rng) {
+            Attempt::Run(inv) => assert!(!inv.cold, "reuses the container"),
+            Attempt::Throttle { .. } => panic!("slot was released"),
+        }
+    }
+
+    #[test]
+    fn cost_is_gb_seconds_plus_request_fee() {
+        let cfg = FaasConfig {
+            keep_alive: secs(60),
+            ..det_cfg()
+        };
+        let gb_price = cfg.gb_second_price;
+        let req_price = cfg.request_price;
+        let mem = cfg.memory_gb;
+        let mut be = backend(cfg);
+        let mut rng = Rng::new(4);
+        let first = run(&mut be, 0, &mut rng); // cold
+        be.complete(DnnKind::Hv, 0, first.duration);
+        let second = run(&mut be, first.duration, &mut rng); // warm
+        // Warm billed compute: exactly the sigma-0 median, rounded up to
+        // the 1 ms quantum. HV: (398 − 84) ms.
+        let billed_ms = (ms(398 - 84)).div_ceil(ms(1));
+        let want_gb_s = (billed_ms * ms(1)) as f64 / 1e6 * mem;
+        let want = want_gb_s * gb_price + req_price;
+        assert!((second.cost - want).abs() < 1e-12,
+                "warm cost {} want {want}", second.cost);
+        // The cold invocation billed its init too.
+        assert!(first.cost > second.cost);
+        let s = be.stats();
+        assert!((s.dollars - (first.cost + second.cost)).abs() < 1e-12);
+        assert!(s.gb_seconds > want_gb_s);
+    }
+
+    #[test]
+    fn timeout_still_bills_and_flags() {
+        let cfg = FaasConfig { timeout: ms(100), ..det_cfg() };
+        let mut be = backend(cfg);
+        let mut rng = Rng::new(5);
+        let inv = run(&mut be, 0, &mut rng);
+        assert!(inv.timed_out);
+        assert_eq!(inv.duration, ms(100));
+        assert!(inv.cost > 0.0, "abandoned requests still bill");
+    }
+
+    #[test]
+    fn timed_out_invocation_holds_slot_until_true_end() {
+        // sigma 0, no cold penalty: true duration = (398−84) ms compute
+        // + 2×40 ms latency + 3.8 ms transfer = 397.8 ms, but the client
+        // abandons at 100 ms.
+        let mut be = backend(FaasConfig {
+            timeout: ms(100),
+            concurrency: 1,
+            cold_start: 0,
+            ..det_cfg()
+        });
+        let mut rng = Rng::new(8);
+        let inv = run(&mut be, 0, &mut rng);
+        assert!(inv.timed_out);
+        // The platform completes at the client timeout; the function is
+        // still running server-side, so the slot stays held…
+        be.complete(DnnKind::Hv, inv.token, ms(100));
+        let m = &table1()[0];
+        match be.invoke(m, ms(150), 38_000, 0, &mut rng) {
+            Attempt::Throttle { .. } => {}
+            Attempt::Run(_) => {
+                panic!("slot must stay held until the function really ends")
+            }
+        }
+        // …and frees once the true duration (397.8 ms) elapses, parking
+        // the container warm from its true end.
+        match be.invoke(m, ms(398), 38_000, 0, &mut rng) {
+            Attempt::Run(inv2) => {
+                assert!(!inv2.cold, "drained container parks warm")
+            }
+            Attempt::Throttle { .. } => {
+                panic!("slot must free at the function's true end")
+            }
+        }
+        assert_eq!(be.stats().throttles, 1);
+    }
+
+    #[test]
+    fn overlapping_invocations_grow_the_pool() {
+        let cfg = FaasConfig { concurrency: 8, ..det_cfg() };
+        let mut be = backend(cfg);
+        let mut rng = Rng::new(6);
+        for _ in 0..3 {
+            run(&mut be, 0, &mut rng);
+        }
+        for _ in 0..3 {
+            be.complete(DnnKind::Hv, 0, ms(700));
+        }
+        assert_eq!(be.warm_containers(DnnKind::Hv, ms(701)), 3);
+        // Three warm slots serve three overlapping invocations cold-free.
+        for _ in 0..3 {
+            let inv = run(&mut be, ms(800), &mut rng);
+            assert!(!inv.cold);
+        }
+        assert_eq!(be.stats().cold_starts, 3);
+    }
+}

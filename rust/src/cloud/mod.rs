@@ -1,0 +1,164 @@
+//! Pluggable cloud FaaS backend subsystem.
+//!
+//! The paper's cloud tier is AWS Lambda (§3.2), and its headline
+//! adaptation result (§5.4, Fig. 12) hinges on cloud variability. The
+//! original harness modelled that tier as a single hard-coded sampler
+//! ([`CloudExecModel`](crate::exec::CloudExecModel)); this module turns
+//! "the cloud" into an extensible backend API every scheduler and
+//! scenario can target:
+//!
+//! * [`CloudBackend`] — the trait: `invoke` (admission + service-time
+//!   sampling at virtual time), `complete` (container release), `stats`
+//!   (cost/cold-start/throttle accounting).
+//! * [`SimpleBackend`] — wraps the calibrated [`CloudExecModel`]
+//!   unchanged; the default path is bit-identical to the pre-subsystem
+//!   engine (pinned by the golden/parity tests).
+//! * [`FaasBackend`] — a faithful FaaS account: per-model warm-container
+//!   pools with keep-alive expiry, deterministic cold starts on pool
+//!   miss, a per-account concurrency ceiling with throttle/retry
+//!   semantics, and per-invocation cost accounting (GB-seconds + a
+//!   per-request fee).
+//! * [`MultiRegionBackend`] — two FaaS regions with distinct network
+//!   models and latency-based failover.
+//!
+//! Event flow: the platform's cloud trigger calls
+//! [`CloudBackend::invoke`]; an [`Attempt::Run`] schedules `CloudDone`
+//! at `now + duration` (whose handler calls [`CloudBackend::complete`],
+//! returning the container to its warm pool), while an
+//! [`Attempt::Throttle`] is routed back to the scheduler through the
+//! `on_cloud_report` hook (so DEMS-A genuinely reacts to throttling)
+//! and retried or dropped by deadline feasibility.
+
+mod faas;
+mod multi_region;
+mod simple;
+
+pub use faas::{FaasBackend, FaasConfig};
+pub use multi_region::MultiRegionBackend;
+pub use simple::SimpleBackend;
+
+use crate::model::{DnnKind, ModelProfile};
+use crate::rng::Rng;
+use crate::time::Micros;
+
+/// One admitted cloud invocation, as sampled by a backend.
+#[derive(Clone, Copy, Debug)]
+pub struct Invocation {
+    /// End-to-end duration t̂ᵢʲ (compute + cold start + network transfer;
+    /// clamped to the client timeout when `timed_out`).
+    pub duration: Micros,
+    /// The HTTP client abandoned the request (no usable output).
+    pub timed_out: bool,
+    /// The invocation paid a cold start (no warm container available).
+    pub cold: bool,
+    /// Dollars billed for this invocation (0 for uncosted backends).
+    pub cost: f64,
+    /// Backend-private routing token (e.g. the region index), handed back
+    /// verbatim to [`CloudBackend::complete`].
+    pub token: u32,
+}
+
+/// Outcome of asking a backend to start an invocation.
+#[derive(Clone, Copy, Debug)]
+pub enum Attempt {
+    /// Admitted: the request is in flight for `Invocation::duration`.
+    Run(Invocation),
+    /// Rejected at the account concurrency ceiling; the caller may retry
+    /// no earlier than `now + retry_after`.
+    Throttle { retry_after: Micros },
+}
+
+/// Cumulative per-backend accounting, merged into
+/// [`Metrics`](crate::metrics::Metrics) at the end of a run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CloudStats {
+    /// Admitted invocations (throttled attempts excluded).
+    pub invocations: u64,
+    /// Invocations that paid a cold start.
+    pub cold_starts: u64,
+    /// Rejected (throttled) invocation attempts.
+    pub throttles: u64,
+    /// Billed compute, in GB-seconds.
+    pub gb_seconds: f64,
+    /// Total dollars billed (GB-seconds + per-request fees).
+    pub dollars: f64,
+}
+
+impl CloudStats {
+    /// Fold another backend's accounting into this one (multi-region /
+    /// cluster aggregation).
+    pub fn merge(&mut self, other: &CloudStats) {
+        self.invocations += other.invocations;
+        self.cold_starts += other.cold_starts;
+        self.throttles += other.throttles;
+        self.gb_seconds += other.gb_seconds;
+        self.dollars += other.dollars;
+    }
+
+    /// Cold starts per admitted invocation (0 when idle).
+    pub fn cold_start_rate(&self) -> f64 {
+        if self.invocations == 0 {
+            0.0
+        } else {
+            self.cold_starts as f64 / self.invocations as f64
+        }
+    }
+}
+
+/// A cloud execution backend driven by virtual time.
+///
+/// Implementations are deterministic: all randomness comes from the
+/// caller's seeded [`Rng`], and all state advances only through `invoke`
+/// and `complete`, so whole runs reproduce from a single seed (and sweep
+/// cells stay byte-identical for any `--jobs` value).
+pub trait CloudBackend: Send {
+    /// Short backend tag for reports and logs ("simple", "faas", …).
+    fn name(&self) -> &'static str;
+
+    /// Try to start one invocation of `profile`'s model at virtual time
+    /// `now`, carrying `bytes` up the shared uplink with `concurrent`
+    /// transfers already in flight on this edge.
+    fn invoke(&mut self, profile: &ModelProfile, now: Micros, bytes: u64,
+              concurrent: usize, rng: &mut Rng) -> Attempt;
+
+    /// An invocation admitted earlier (for `kind`, with `token`) finished
+    /// at `now`: release its concurrency slot and return its container to
+    /// the warm pool. Backends without container state ignore this.
+    fn complete(&mut self, _kind: DnnKind, _token: u32, _now: Micros) {}
+
+    /// Cumulative accounting snapshot.
+    fn stats(&self) -> CloudStats {
+        CloudStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_merge_and_rate() {
+        let mut a = CloudStats {
+            invocations: 10,
+            cold_starts: 2,
+            throttles: 1,
+            gb_seconds: 1.5,
+            dollars: 0.25,
+        };
+        let b = CloudStats {
+            invocations: 5,
+            cold_starts: 1,
+            throttles: 0,
+            gb_seconds: 0.5,
+            dollars: 0.05,
+        };
+        a.merge(&b);
+        assert_eq!(a.invocations, 15);
+        assert_eq!(a.cold_starts, 3);
+        assert_eq!(a.throttles, 1);
+        assert!((a.gb_seconds - 2.0).abs() < 1e-12);
+        assert!((a.dollars - 0.30).abs() < 1e-12);
+        assert!((a.cold_start_rate() - 0.2).abs() < 1e-12);
+        assert_eq!(CloudStats::default().cold_start_rate(), 0.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! Two FaaS regions with distinct network paths and latency-based
+//! failover: invocations route to the region whose recent end-to-end
+//! durations look fastest (EWMA), and a throttle at the chosen region
+//! fails over to the other before giving up. The A²-UAV line of work
+//! (arXiv 2301.06363) motivates exactly this application-aware
+//! network/compute split — which offload wins depends on where it runs.
+
+use crate::cloud::{Attempt, CloudBackend, CloudStats, FaasBackend};
+use crate::model::{DnnKind, ModelProfile};
+use crate::rng::Rng;
+use crate::time::Micros;
+
+/// EWMA smoothing for the per-region duration estimate.
+const ALPHA: f64 = 0.2;
+
+/// A primary + secondary FaaS region pair behind one [`CloudBackend`].
+pub struct MultiRegionBackend {
+    regions: [FaasBackend; 2],
+    /// EWMA of observed duration *inflation* per region — each sample is
+    /// `duration / profile.t_cloud`, so the comparison measures the
+    /// region rather than the model mix it happened to serve (per-model
+    /// cloud times differ by >2×; raw durations would confound them).
+    /// `None` until a region has served once.
+    ewma: [Option<f64>; 2],
+    /// Invocations served by the non-preferred region after a throttle.
+    failovers: u64,
+}
+
+impl MultiRegionBackend {
+    pub fn new(primary: FaasBackend, secondary: FaasBackend) -> Self {
+        MultiRegionBackend {
+            regions: [primary, secondary],
+            ewma: [None, None],
+            failovers: 0,
+        }
+    }
+
+    /// Preferred region right now: the lower inflation EWMA; unobserved
+    /// regions are tried first (optimistic discovery), ties and the
+    /// initial state go to region 0 (the nominal primary).
+    pub fn preferred(&self) -> usize {
+        match self.ewma {
+            [None, _] => 0,
+            [_, None] => 1,
+            [Some(a), Some(b)] => usize::from(b < a),
+        }
+    }
+
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    /// Record one served invocation: `duration` normalized by the
+    /// model's expected cloud time (see the `ewma` field docs).
+    fn observe(&mut self, region: usize, duration: Micros,
+               expected: Micros) {
+        let d = duration as f64 / expected.max(1) as f64;
+        self.ewma[region] = Some(match self.ewma[region] {
+            None => d,
+            Some(e) => e + ALPHA * (d - e),
+        });
+    }
+}
+
+impl CloudBackend for MultiRegionBackend {
+    fn name(&self) -> &'static str {
+        "multi-region"
+    }
+
+    fn invoke(&mut self, profile: &ModelProfile, now: Micros, bytes: u64,
+              concurrent: usize, rng: &mut Rng) -> Attempt {
+        let first = self.preferred();
+        let mut retry = Micros::MAX;
+        for region in [first, 1 - first] {
+            match self.regions[region]
+                .invoke(profile, now, bytes, concurrent, rng)
+            {
+                Attempt::Run(mut inv) => {
+                    self.observe(region, inv.duration, profile.t_cloud);
+                    self.failovers += (region != first) as u64;
+                    // Region in bit 0; the region's own token (e.g. its
+                    // abandoned-request marker) shifted above it.
+                    inv.token = (inv.token << 1) | region as u32;
+                    return Attempt::Run(inv);
+                }
+                Attempt::Throttle { retry_after } => {
+                    retry = retry.min(retry_after);
+                }
+            }
+        }
+        Attempt::Throttle { retry_after: retry }
+    }
+
+    fn complete(&mut self, kind: DnnKind, token: u32, now: Micros) {
+        self.regions[(token & 1) as usize].complete(kind, token >> 1, now);
+    }
+
+    fn stats(&self) -> CloudStats {
+        let mut s = self.regions[0].stats();
+        s.merge(&self.regions[1].stats());
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::FaasConfig;
+    use crate::model::table1;
+    use crate::net::ConstantNet;
+    use crate::time::{ms, secs};
+
+    /// Deterministic region: sigma-0 compute, no cold-start jitter, over
+    /// a constant network with the given one-way latency.
+    fn region(latency: Micros, concurrency: usize) -> FaasBackend {
+        FaasBackend::new(
+            FaasConfig {
+                sigma: 0.0,
+                cold_start: 0,
+                keep_alive: secs(60),
+                concurrency,
+                ..FaasConfig::default()
+            },
+            Box::new(ConstantNet { latency, bandwidth: 10.0e6 }),
+        )
+    }
+
+    fn invoke(be: &mut MultiRegionBackend, now: Micros,
+              rng: &mut Rng) -> (Micros, u32) {
+        let m = &table1()[0];
+        match be.invoke(m, now, 38_000, 0, rng) {
+            Attempt::Run(inv) => (inv.duration, inv.token),
+            Attempt::Throttle { .. } => panic!("unexpected throttle"),
+        }
+    }
+
+    #[test]
+    fn routes_to_lower_latency_region_after_discovery() {
+        // Region 0 is 5× slower than region 1.
+        let mut be =
+            MultiRegionBackend::new(region(ms(200), 16), region(ms(40), 16));
+        let mut rng = Rng::new(1);
+        let (_, t0) = invoke(&mut be, 0, &mut rng);
+        assert_eq!(t0, 0, "nominal primary is discovered first");
+        be.complete(DnnKind::Hv, t0, ms(900));
+        let (_, t1) = invoke(&mut be, secs(1), &mut rng);
+        assert_eq!(t1, 1, "unobserved secondary tried next");
+        be.complete(DnnKind::Hv, t1, secs(1) + ms(900));
+        // Both observed: every further call steers to the fast region.
+        for i in 2..6u64 {
+            let (_, t) = invoke(&mut be, secs(i), &mut rng);
+            assert_eq!(t, 1, "EWMA must prefer the fast region");
+            be.complete(DnnKind::Hv, t, secs(i) + ms(900));
+        }
+        assert_eq!(be.failovers(), 0);
+    }
+
+    #[test]
+    fn throttle_fails_over_then_gives_up() {
+        // Preferred region admits only one in-flight invocation.
+        let mut be =
+            MultiRegionBackend::new(region(ms(40), 1), region(ms(40), 1));
+        let mut rng = Rng::new(2);
+        let (_, t0) = invoke(&mut be, 0, &mut rng);
+        assert_eq!(t0, 0);
+        // Second overlapping call: region 0 throttles → failover to 1.
+        let (_, t1) = invoke(&mut be, 0, &mut rng);
+        assert_eq!(t1, 1, "throttle must fail over");
+        assert_eq!(be.failovers(), 1);
+        // Third: both full → throttled for real.
+        let m = &table1()[0];
+        match CloudBackend::invoke(&mut be, m, 0, 38_000, 0, &mut rng) {
+            Attempt::Throttle { retry_after } => {
+                assert_eq!(retry_after, ms(200));
+            }
+            Attempt::Run(_) => panic!("both regions are saturated"),
+        }
+        // Stats aggregate across regions (2 runs + the 2 inner throttles).
+        let s = be.stats();
+        assert_eq!(s.invocations, 2);
+        assert_eq!(s.throttles, 2);
+    }
+
+    #[test]
+    fn completion_releases_the_serving_region() {
+        let mut be =
+            MultiRegionBackend::new(region(ms(40), 1), region(ms(40), 1));
+        let mut rng = Rng::new(3);
+        let (_, t0) = invoke(&mut be, 0, &mut rng);
+        let (_, t1) = invoke(&mut be, 0, &mut rng);
+        assert_eq!((t0, t1), (0, 1));
+        be.complete(DnnKind::Hv, 1, ms(900));
+        // Region 1 freed; region 0 still full → next run lands on 1.
+        let (_, t2) = invoke(&mut be, ms(901), &mut rng);
+        assert_eq!(t2, 1);
+    }
+}

@@ -18,7 +18,7 @@
 
 use std::cell::RefCell;
 
-use crate::exec::CloudExecModel;
+use crate::cloud::{CloudBackend, CloudStats};
 use crate::fleet::{Arrival, Workload};
 use crate::metrics::{self, Metrics};
 use crate::platform::Platform;
@@ -111,6 +111,21 @@ impl ClusterMetrics {
     pub fn minmax_utility(&self) -> (f64, f64) {
         metrics::minmax_qos_utility(&self.per_edge)
     }
+
+    /// Cloud backend accounting summed across the edges (dollars,
+    /// GB-seconds, cold starts, backend-side throttles).
+    pub fn cloud_stats(&self) -> CloudStats {
+        let mut s = CloudStats::default();
+        for m in &self.per_edge {
+            s.merge(&m.cloud);
+        }
+        s
+    }
+
+    /// Platform-observed throttled dispatch attempts across the edges.
+    pub fn throttled(&self) -> u64 {
+        self.per_edge.iter().map(Metrics::throttled).sum()
+    }
 }
 
 /// N edge platforms + drone router + per-edge arrival streams, driven by
@@ -143,7 +158,7 @@ impl Cluster<Box<dyn Scheduler>> {
     /// Shared by [`Cluster::emulation`] and the hetero scenario builder so
     /// the derivation can never drift between them.
     pub fn edge_parts(policy: &Policy, wl: &Workload, base_seed: u64,
-                      e: usize, cloud: CloudExecModel)
+                      e: usize, cloud: impl Into<Box<dyn CloudBackend>>)
                       -> (Platform, u64) {
         let s = base_seed ^ ((e as u64 + 1) * EDGE_SEED_PHI);
         let mut p =
@@ -157,7 +172,8 @@ impl Cluster<Box<dyn Scheduler>> {
     /// `seed ^ ((e+1)·EDGE_SEED_PHI)`.
     pub fn emulation(policy: &Policy, wl: &Workload, seed: u64,
                      n_edges: usize,
-                     make_cloud: &dyn Fn() -> CloudExecModel) -> Self {
+                     make_cloud: &dyn Fn() -> Box<dyn CloudBackend>)
+                     -> Self {
         let mut platforms = Vec::with_capacity(n_edges);
         let mut arrival_seeds = Vec::with_capacity(n_edges);
         for e in 0..n_edges {
@@ -172,7 +188,7 @@ impl Cluster<Box<dyn Scheduler>> {
     /// Single-edge cluster seeded directly with `seed` (the `simulate`
     /// path; bit-identical to the pre-cluster single-edge engine).
     pub fn single(policy: &Policy, wl: &Workload, seed: u64,
-                  cloud: CloudExecModel) -> Self {
+                  cloud: impl Into<Box<dyn CloudBackend>>) -> Self {
         let mut p =
             Platform::new(policy.clone(), wl.models.clone(), cloud, seed);
         p.edge_exec = wl.edge_exec.clone();
@@ -398,10 +414,11 @@ fn emit_segment<S: Scheduler>(platform: &mut Platform<S>, wl: &Workload,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::CloudExecModel;
     use crate::net::LognormalWan;
 
-    fn wan() -> CloudExecModel {
-        CloudExecModel::new(Box::new(LognormalWan::default()))
+    fn wan() -> Box<dyn CloudBackend> {
+        CloudExecModel::new(Box::new(LognormalWan::default())).into()
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! so those percentiles land on the table values under the default network,
 //! keeping every JIT/feasibility decision numerically faithful.
 
-use crate::model::ModelProfile;
+use crate::model::{DnnKind, ModelProfile};
 use crate::net::NetworkModel;
 use crate::rng::Rng;
 use crate::time::{ms_f, Micros};
@@ -15,6 +15,52 @@ use crate::time::{ms_f, Micros};
 /// z-scores used to back out medians from the tabulated percentiles.
 const Z99: f64 = 2.326;
 const Z95: f64 = 1.645;
+
+// ----------------------------------------------------- shared calibration
+//
+// The FaaS cloud calibration is used by two samplers: the legacy
+// [`CloudExecModel`] below and the warm-pool
+// [`FaasBackend`](crate::cloud::FaasBackend). These constants and helpers
+// are the single home of the numbers AND the formulas so a recalibration
+// can never desynchronize them. Each helper draws exactly the RNG values
+// its formula needs, so callers control the overall draw order (the
+// legacy order is pinned by the golden tests).
+
+/// Lognormal sigma of the FaaS compute time (wider than edge; Fig. 1b).
+pub(crate) const CLOUD_SIGMA: f64 = 0.20;
+/// Nominal network overhead assumed inside the Table-1 t̂ values
+/// (2×40 ms latency + 38 kB at 10 MB/s ≈ 84 ms), in ms.
+pub(crate) const CLOUD_NOMINAL_NET_MS: f64 = 84.0;
+/// Cold-start penalty (§4 cites FaaS cold starts), in ms.
+pub(crate) const CLOUD_COLD_START_MS: f64 = 900.0;
+/// HTTP client timeout: ~2.5× the longest deadline (§8.3), in ms.
+pub(crate) const CLOUD_TIMEOUT_MS: f64 = 2_500.0;
+/// Edge containers sharing one host's uplink (§8.1 runs 7 per host).
+pub(crate) const CLOUD_HOST_EDGES: usize = 7;
+
+/// Sample the FaaS compute time: lognormal around the median backed out
+/// of the profile's tabulated p95 t̂ minus the nominal network share.
+pub(crate) fn sample_cloud_compute(profile: &ModelProfile, sigma: f64,
+                                   nominal_net: Micros,
+                                   rng: &mut Rng) -> Micros {
+    let compute_p95 = profile.t_cloud.saturating_sub(nominal_net) as f64;
+    let median = compute_p95 / (sigma * Z95).exp();
+    rng.lognormal(median.max(1.0), sigma) as Micros
+}
+
+/// Cold-start penalty with the §4 jitter: `cold_start × U[0.6, 1.4)`.
+pub(crate) fn sample_cold_start(cold_start: Micros,
+                                rng: &mut Rng) -> Micros {
+    (cold_start as f64 * rng.range_f64(0.6, 1.4)) as Micros
+}
+
+/// Effective transfer payload on the shared host uplink: `concurrent`
+/// in-flight transfers across `host_edges` peer stations shrink each
+/// transfer's bandwidth share (§8.6), modeled as a payload multiplier.
+pub(crate) fn shared_uplink_bytes(bytes: u64, concurrent: usize,
+                                  host_edges: usize) -> u64 {
+    bytes * (1 + concurrent * host_edges) as u64
+}
 
 /// Edge accelerator service-time model: tight lognormal whose p99 equals
 /// the profile's `t_edge` (Fig. 1a shows low variance — the edge has no
@@ -79,7 +125,7 @@ pub struct CloudExecModel {
     pub cold_start: Micros,
     pub cold_prob: f64,
     /// Per-model warm state: first invocation is always cold.
-    warm: [bool; 6],
+    warm: [bool; DnnKind::COUNT],
     /// HTTP client timeout: the platform never waits longer than ~2.5× the
     /// longest deadline (the paper observes WAN timeouts for several tasks
     /// at 4D loads; timed-out requests yield no usable output).
@@ -95,13 +141,13 @@ impl CloudExecModel {
     pub fn new(net: Box<dyn NetworkModel>) -> Self {
         CloudExecModel {
             net,
-            sigma: 0.20,
-            nominal_net: ms_f(84.0),
-            cold_start: ms_f(900.0),
+            sigma: CLOUD_SIGMA,
+            nominal_net: ms_f(CLOUD_NOMINAL_NET_MS),
+            cold_start: ms_f(CLOUD_COLD_START_MS),
             cold_prob: 0.002,
-            warm: [false; 6],
-            timeout: ms_f(2_500.0),
-            host_edges: 7,
+            warm: [false; DnnKind::COUNT],
+            timeout: ms_f(CLOUD_TIMEOUT_MS),
+            host_edges: CLOUD_HOST_EDGES,
         }
     }
 
@@ -110,19 +156,17 @@ impl CloudExecModel {
     /// this edge. Returns `(duration, timed_out)`.
     pub fn sample(&mut self, profile: &ModelProfile, now: Micros, bytes: u64,
                   concurrent: usize, rng: &mut Rng) -> (Micros, bool) {
-        let compute_p95 =
-            profile.t_cloud.saturating_sub(self.nominal_net) as f64;
-        let median = compute_p95 / (self.sigma * Z95).exp();
-        let mut d = rng.lognormal(median.max(1.0), self.sigma) as Micros;
+        let mut d =
+            sample_cloud_compute(profile, self.sigma, self.nominal_net, rng);
         // Uplink contention: the host's WAN bandwidth is shared by all
         // edges' in-flight transfers (this edge is representative of its
         // host peers). Effective per-transfer share shrinks accordingly,
         // which at CLD-style offload rates snowballs into deadline misses.
-        let sharers = (1 + concurrent * self.host_edges) as u64;
-        d += self.net.transfer_time(now, bytes * sharers, rng);
+        let payload = shared_uplink_bytes(bytes, concurrent, self.host_edges);
+        d += self.net.transfer_time(now, payload, rng);
         let idx = profile.kind.index();
         if !self.warm[idx] || rng.chance(self.cold_prob) {
-            d += (self.cold_start as f64 * rng.range_f64(0.6, 1.4)) as Micros;
+            d += sample_cold_start(self.cold_start, rng);
             self.warm[idx] = true;
         }
         if d >= self.timeout {
@@ -190,6 +234,62 @@ mod tests {
         let (first, _) = cm.sample(m, 0, 38_000, 0, &mut rng);
         let (second, _) = cm.sample(m, 0, 38_000, 0, &mut rng);
         assert!(first > second + ms(300), "cold {first} warm {second}");
+    }
+
+    #[test]
+    fn timeout_boundary_is_inclusive() {
+        // Pin the `(timeout, true)` edge: a draw landing EXACTLY on the
+        // timeout is clamped and flagged (`d >= timeout`), one microsecond
+        // of headroom is not. sigma = 0 makes the lognormal collapse to
+        // its median, so the warm duration is exactly computable:
+        // (398 − 84) ms compute + 2×40 ms latency + 38 kB / 10 MB/s.
+        let m = &table1()[0];
+        let exact = ms(398 - 84) + ms(80) + 3_800;
+        for (timeout, want_flag) in
+            [(exact, true), (exact + 1, false), (exact - 1, true)]
+        {
+            let mut cm = CloudExecModel::new(Box::new(ConstantNet {
+                latency: ms(40),
+                bandwidth: 10.0e6,
+            }));
+            cm.sigma = 0.0;
+            cm.cold_prob = 0.0;
+            cm.cold_start = 0;
+            cm.timeout = timeout;
+            let mut rng = Rng::new(6);
+            let (d, to) = cm.sample(m, 0, 38_000, 0, &mut rng);
+            assert_eq!(to, want_flag, "timeout {timeout}");
+            assert_eq!(d, if want_flag { timeout } else { exact });
+        }
+    }
+
+    #[test]
+    fn cold_start_jitter_stays_in_range_bounds() {
+        // Pin the cold-start `range_f64(0.6, 1.4)` jitter: with sigma 0
+        // and a constant network, every draw is warm-duration + jitter ×
+        // cold_start, so the added penalty must stay in [0.6, 1.4) and
+        // actually exercise both halves of the range.
+        let m = &table1()[0];
+        let mut cm = CloudExecModel::new(Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 10.0e6,
+        }));
+        cm.sigma = 0.0;
+        cm.cold_prob = 1.0; // every invocation re-colds
+        cm.timeout = ms(1_000_000);
+        let warm = ms(398 - 84) + ms(80) + 3_800;
+        let mut rng = Rng::new(7);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for _ in 0..2_000 {
+            let (d, to) = cm.sample(m, 0, 38_000, 0, &mut rng);
+            assert!(!to);
+            let jitter = (d - warm) as f64 / cm.cold_start as f64;
+            assert!((0.6..1.4).contains(&jitter), "jitter {jitter}");
+            lo = lo.min(jitter);
+            hi = hi.max(jitter);
+        }
+        assert!(lo < 0.7, "lower half unexercised: min {lo}");
+        assert!(hi > 1.3, "upper half unexercised: max {hi}");
     }
 
     #[test]

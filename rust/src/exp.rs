@@ -10,6 +10,7 @@
 //! [`run_experiment`].
 
 use crate::bail;
+use crate::cloud::CloudBackend;
 use crate::cluster::{Cluster, ClusterMetrics};
 use crate::errors::Result;
 use crate::exec::CloudExecModel;
@@ -72,7 +73,7 @@ pub fn run_experiment(id: &str, seed: u64, jobs: usize) -> Result<()> {
 
 // ------------------------------------------------------------------ utils
 
-fn default_cloud() -> CloudExecModel {
+fn default_cloud() -> Box<dyn CloudBackend> {
     CloudSpec::NominalWan.build()
 }
 
@@ -82,7 +83,8 @@ fn default_cloud() -> CloudExecModel {
 /// bit-identical to independent single-edge runs (pinned by
 /// `tests/paper_shape.rs`), so the recorded figures stand.
 fn run_edges(policy: &Policy, wl: &Workload, seed: u64, n_edges: usize,
-             make_cloud: &dyn Fn() -> CloudExecModel) -> ClusterMetrics {
+             make_cloud: &dyn Fn() -> Box<dyn CloudBackend>)
+             -> ClusterMetrics {
     Cluster::emulation(policy, wl, seed, n_edges, make_cloud).run()
 }
 
@@ -138,7 +140,8 @@ pub(crate) fn fig1_report(seed: u64) -> Result<Report> {
     );
     let mut rng = Rng::new(seed);
     let edge = crate::exec::EdgeExecModel::default();
-    let mut cloud = default_cloud();
+    // Raw sampler (not a backend): fig1 draws service times directly.
+    let mut cloud = CloudExecModel::new(Box::new(LognormalWan::default()));
     let mut t = Table::new(&[
         "DNN", "edge p50", "edge p95", "edge p99", "cloud p50",
         "cloud p95",
@@ -327,7 +330,7 @@ pub(crate) fn fig11_report(seed: u64, wl_name: &str) -> Result<Report> {
             "cloud missed",
         ]);
         for policy in [Policy::dems(), Policy::dems_a()] {
-            let make: Box<dyn Fn() -> CloudExecModel> = {
+            let make: Box<dyn Fn() -> Box<dyn CloudBackend>> = {
                 let spec = spec.clone();
                 Box::new(move || spec.build())
             };

@@ -35,6 +35,13 @@
 //!   [`sim::EventQueue`], with aggregated [`cluster::ClusterMetrics`] —
 //!   the §8.1 multi-edge emulation as a first-class API
 //!   (`ocularone simulate --edges 7`).
+//! * [`cloud`] — the pluggable cloud tier behind
+//!   [`cloud::CloudBackend`]: [`cloud::SimpleBackend`] (the calibrated
+//!   legacy sampler, bit-identical default), [`cloud::FaasBackend`]
+//!   (warm-container pools with keep-alive expiry, per-account
+//!   concurrency throttling, GB-second + per-request billing) and
+//!   [`cloud::MultiRegionBackend`] (two regions, latency-based
+//!   failover).
 //!
 //! On top of the engine sits the **scenario & report layer**:
 //! [`scenario::Scenario`] declaratively composes workload × policy ×
@@ -63,6 +70,7 @@
 
 pub mod adapt;
 pub mod benchutil;
+pub mod cloud;
 pub mod cluster;
 pub mod errors;
 pub mod exec;
@@ -91,8 +99,8 @@ pub mod time;
 
 use crate::cluster::{Cluster, ClusterMetrics};
 
-fn default_wan_cloud() -> exec::CloudExecModel {
-    exec::CloudExecModel::new(Box::new(net::LognormalWan::default()))
+fn default_wan_cloud() -> Box<dyn cloud::CloudBackend> {
+    exec::CloudExecModel::new(Box::new(net::LognormalWan::default())).into()
 }
 
 /// Convenience: run one simulated single-edge experiment with the default

@@ -35,10 +35,16 @@ USAGE:
                                            byte-identical to --jobs 1)
   ocularone simulate [--workload 3D-A] [--policy dems] [--edges N]
                      [--seed N] [--seeds K] [--jobs N]
+                     [--cloud wan|trapezium|mobility|faas|multi-region]
+                     [--keep-alive SECS] [--concurrency N]
                                            N>1 emulates N edge stations
                                            through one Cluster engine (§8.1);
                                            --seeds K sweeps K derived seeds
-                                           (in parallel with --jobs)
+                                           (in parallel with --jobs);
+                                           --cloud picks the cloud backend
+                                           (faas/multi-region add container
+                                           keep-alive, a per-edge-account
+                                           concurrency ceiling and $ cost)
   ocularone serve [--policy ec] [--rate R] [--drones D] [--secs S]
                   [--artifacts DIR]        (requires the pjrt feature)
   ocularone bench-models [--artifacts DIR] (requires the pjrt feature)
@@ -102,6 +108,73 @@ fn parse_jobs(args: &[String]) -> Result<usize> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(1))
+}
+
+/// Cloud backend spec for `simulate` (see `scenario::CloudSpec`):
+/// `--cloud faas|multi-region` takes `--keep-alive` (seconds) and
+/// `--concurrency` (the in-flight ceiling of each edge station's own
+/// FaaS account — one account per edge). Passing either flag with a
+/// non-FaaS backend is an error, not a silent no-op.
+fn parse_cloud(args: &[String]) -> Result<scenario::CloudSpec> {
+    use ocularone::time::{ms, secs};
+    let name = flag(args, "--cloud").unwrap_or_else(|| "wan".into());
+    let keep_alive_flag = flag(args, "--keep-alive")
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .map(secs);
+    let concurrency_flag: Option<usize> = flag(args, "--concurrency")
+        .map(|s| s.parse())
+        .transpose()?;
+    let keep_alive = keep_alive_flag.unwrap_or(secs(300));
+    let concurrency = concurrency_flag.unwrap_or(1000);
+    let spec = match name.to_lowercase().as_str() {
+        "wan" | "simple" => scenario::CloudSpec::NominalWan,
+        "trapezium" => scenario::CloudSpec::TrapeziumLatency,
+        "mobility" => scenario::CloudSpec::MobilityBandwidth { device: 3 },
+        "faas" => scenario::CloudSpec::Faas { keep_alive, concurrency },
+        "multi-region" | "multiregion" => scenario::CloudSpec::MultiRegion {
+            keep_alive,
+            concurrency,
+            extra_latency: ms(40),
+        },
+        other => bail!(
+            "unknown cloud backend {other} \
+             (wan|trapezium|mobility|faas|multi-region)"
+        ),
+    };
+    if !cloud_has_accounting(&spec)
+        && (keep_alive_flag.is_some() || concurrency_flag.is_some())
+    {
+        bail!(
+            "--keep-alive/--concurrency only apply to \
+             --cloud faas|multi-region (got --cloud {name})"
+        );
+    }
+    Ok(spec)
+}
+
+/// True when the spec carries FaaS accounting worth printing.
+fn cloud_has_accounting(spec: &scenario::CloudSpec) -> bool {
+    matches!(
+        spec,
+        scenario::CloudSpec::Faas { .. }
+            | scenario::CloudSpec::MultiRegion { .. }
+    )
+}
+
+/// One-line cloud accounting summary for a cluster run.
+fn cloud_summary(cm: &ocularone::cluster::ClusterMetrics) -> String {
+    let s = cm.cloud_stats();
+    format!(
+        "cloud: ${:.4} ({} invocations, {} cold {:.1}%, {} throttled, \
+         {:.1} GB-s)",
+        s.dollars,
+        s.invocations,
+        s.cold_starts,
+        100.0 * s.cold_start_rate(),
+        cm.throttled(),
+        s.gb_seconds,
+    )
 }
 
 fn cmd_experiment(args: &[String], seed: u64) -> Result<()> {
@@ -205,17 +278,22 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
         .transpose()?
         .unwrap_or(1);
     let jobs = parse_jobs(args)?;
+    let cloud = parse_cloud(args)?;
     let name = policy.kind.name().to_string();
     if sweeps > 1 {
         return simulate_sweep(&name, policy, &wl, seed, edges, sweeps,
-                              jobs);
+                              jobs, &cloud);
     }
     if edges == 1 {
-        let m = ocularone::simulate(policy, &wl, seed);
-        println!("{} on {}: {}", name, wl.name, summarize(&m));
+        let cm = scenario::run_cluster(&policy, &wl, seed, 1, &cloud);
+        println!("{} on {}: {}", name, wl.name,
+                 summarize(&cm.per_edge[0]));
+        if cloud_has_accounting(&cloud) {
+            println!("  {}", cloud_summary(&cm));
+        }
         return Ok(());
     }
-    let cm = ocularone::simulate_cluster(policy, &wl, seed, edges);
+    let cm = scenario::run_cluster(&policy, &wl, seed, edges, &cloud);
     println!(
         "{} on {} x {} edges ({} drones, {} tasks):",
         name,
@@ -239,6 +317,9 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
         hi,
         cm.total_utility(),
     );
+    if cloud_has_accounting(&cloud) {
+        println!("  {}", cloud_summary(&cm));
+    }
     Ok(())
 }
 
@@ -247,8 +328,10 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
 /// derivation), in parallel on `--jobs` workers, and summarize the
 /// spread. Per-seed results are independent pool jobs, so the printed
 /// order and every number are identical for any `--jobs` value.
+#[allow(clippy::too_many_arguments)]
 fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
-                  edges: usize, sweeps: u64, jobs: usize) -> Result<()> {
+                  edges: usize, sweeps: u64, jobs: usize,
+                  cloud: &scenario::CloudSpec) -> Result<()> {
     use ocularone::metrics::percentile;
 
     let runs = ocularone::pool::Pool::new(jobs).run(
@@ -256,7 +339,7 @@ fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
         |i| {
             let s = seed
                 .wrapping_add((i as u64).wrapping_mul(scenario::SEED_STRIDE));
-            ocularone::simulate_cluster(policy.clone(), wl, s, edges)
+            scenario::run_cluster(&policy, wl, s, edges, cloud)
         },
     );
     println!(
@@ -288,6 +371,15 @@ fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
         percentile(&qos, 0.5),
         percentile(&qos, 1.0),
     );
+    if cloud_has_accounting(cloud) {
+        let dollars: f64 =
+            runs.iter().map(|cm| cm.cloud_stats().dollars).sum();
+        let throttled: u64 = runs.iter().map(|cm| cm.throttled()).sum();
+        println!(
+            "  cloud: ${dollars:.4} total across seeds, \
+             {throttled} throttled"
+        );
+    }
     Ok(())
 }
 

@@ -1,5 +1,6 @@
 //! Per-run accounting: everything the paper's figures report (§8).
 
+use crate::cloud::CloudStats;
 use crate::model::{DnnKind, Resource};
 use crate::task::{DropReason, Fate, TaskOutcome};
 use crate::time::{to_ms, Micros};
@@ -18,6 +19,10 @@ pub struct ModelStats {
     pub dropped_trigger: u64,
     pub dropped_shed: u64,
     pub dropped_timeout: u64,
+    pub dropped_throttled: u64,
+    /// Dispatch attempts the cloud backend throttled (each either retried
+    /// later or counted once more under `dropped_throttled`).
+    pub throttled: u64,
     pub utility_edge: f64,
     pub utility_cloud: f64,
     pub qoe_utility: f64,
@@ -45,6 +50,7 @@ impl ModelStats {
             + self.dropped_trigger
             + self.dropped_shed
             + self.dropped_timeout
+            + self.dropped_throttled
     }
 
     pub fn utility(&self) -> f64 {
@@ -89,6 +95,10 @@ pub struct Metrics {
     /// Edge executor busy time (for the §8.4 utilization numbers).
     pub edge_busy: Micros,
     pub duration: Micros,
+    /// Cloud backend accounting. The default
+    /// [`SimpleBackend`](crate::cloud::SimpleBackend) path only counts
+    /// invocations (no cost, cold-start or throttle accounting).
+    pub cloud: CloudStats,
 }
 
 impl Metrics {
@@ -144,6 +154,7 @@ impl Metrics {
                 DropReason::TriggerExpired => s.dropped_trigger += 1,
                 DropReason::Shed => s.dropped_shed += 1,
                 DropReason::Timeout => s.dropped_timeout += 1,
+                DropReason::Throttled => s.dropped_throttled += 1,
             },
         }
         if o.stolen {
@@ -224,6 +235,13 @@ impl Metrics {
 
     pub fn gems_rescheduled(&self) -> u64 {
         self.per_model.iter().map(|(_, s)| s.gems_rescheduled).sum()
+    }
+
+    /// Throttled dispatch attempts across all models (platform-observed;
+    /// `cloud.throttles` is the backend-side count, which can differ
+    /// under multi-region failover).
+    pub fn throttled(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.throttled).sum()
     }
 
     /// Edge utilization: busy time / run duration.

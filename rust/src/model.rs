@@ -27,7 +27,12 @@ pub enum DnnKind {
 }
 
 impl DnnKind {
-    pub const ALL: [DnnKind; 6] = [
+    /// Number of model kinds; [`DnnKind::index`] is dense in `0..COUNT`,
+    /// so per-model arrays on hot paths size themselves with this instead
+    /// of a magic `6` (asserted by `index_is_dense_in_count`).
+    pub const COUNT: usize = 6;
+
+    pub const ALL: [DnnKind; Self::COUNT] = [
         DnnKind::Hv,
         DnnKind::Dev,
         DnnKind::Md,
@@ -359,6 +364,18 @@ mod tests {
         assert_eq!(hv.utility(Resource::Edge, false), -1.0);
         assert_eq!(hv.utility(Resource::Cloud, true), 100.0);
         assert_eq!(hv.utility(Resource::Cloud, false), -25.0);
+    }
+
+    #[test]
+    fn index_is_dense_in_count() {
+        // The compile-time-adjacent contract per-model arrays rely on:
+        // ALL enumerates exactly COUNT kinds and index() maps them
+        // bijectively onto 0..COUNT in declaration order.
+        assert_eq!(DnnKind::ALL.len(), DnnKind::COUNT);
+        for (i, k) in DnnKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i, "{k:?} index not dense");
+            assert!(k.index() < DnnKind::COUNT);
+        }
     }
 
     #[test]

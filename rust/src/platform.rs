@@ -24,7 +24,8 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::exec::{CloudExecModel, EdgeExecModel};
+use crate::cloud::{Attempt, CloudBackend, CloudStats};
+use crate::exec::EdgeExecModel;
 use crate::metrics::{Metrics, TimelinePoint};
 use crate::model::{DnnKind, ModelProfile, Resource};
 use crate::policy::Policy;
@@ -53,6 +54,8 @@ pub(crate) struct CloudRunning {
     pub(crate) end: Micros,
     pub(crate) duration: Micros,
     pub(crate) timed_out: bool,
+    /// Backend routing token (see [`CloudBackend::complete`]).
+    pub(crate) token: u32,
 }
 
 /// Mechanism-only substrate of one edge base station: queues, executors,
@@ -76,7 +79,11 @@ pub struct Core {
     /// Cloud executor thread-pool size (§3.3).
     pub cloud_pool: usize,
     pub edge_exec: EdgeExecModel,
-    pub(crate) cloud_exec: CloudExecModel,
+    /// Pluggable cloud tier (see [`crate::cloud`]): the default
+    /// [`SimpleBackend`](crate::cloud::SimpleBackend) reproduces the
+    /// legacy sampler bit-identically; FaaS/multi-region backends add
+    /// container lifecycle, concurrency ceilings and billing.
+    pub(crate) cloud: Box<dyn CloudBackend>,
     /// Per-model QoE window monitors (Alg. 1 counters; always recorded so
     /// any scheduler can consult them).
     pub(crate) qoe: Vec<WindowMonitor>,
@@ -93,7 +100,7 @@ pub struct Core {
 
 impl Core {
     pub fn new(policy: Policy, models: Vec<ModelProfile>,
-               cloud_exec: CloudExecModel, seed: u64) -> Self {
+               cloud: impl Into<Box<dyn CloudBackend>>, seed: u64) -> Self {
         let kinds: Vec<DnnKind> = models.iter().map(|m| m.kind).collect();
         let qoe = models
             .iter()
@@ -114,7 +121,7 @@ impl Core {
             cloud_inflight: 0,
             cloud_pool: 16,
             edge_exec: EdgeExecModel::default(),
-            cloud_exec,
+            cloud: cloud.into(),
             qoe,
             rng: Rng::new(seed),
             next_task_id: 0,
@@ -208,27 +215,43 @@ impl Core {
         q.push(trigger, Event::CloudTrigger);
     }
 
+    /// Hand an entry to the cloud backend. `None` when the invocation is
+    /// in flight (a `CloudDone` event is scheduled); `Some((entry,
+    /// retry_after))` when the backend throttled it — the caller decides
+    /// retry-or-drop (see [`Platform::on_cloud_throttled`]).
     pub(crate) fn dispatch_cloud(&mut self, now: Micros, e: CloudEntry,
-                                 q: &mut EventQueue) {
-        // Split field borrows (exec model / profile table / RNG are
+                                 q: &mut EventQueue)
+                                 -> Option<(CloudEntry, Micros)> {
+        // Split field borrows (backend / profile table / RNG are
         // disjoint) instead of cloning the profile per dispatch.
         let i = self.idx(e.task.model);
-        let (dur, timed_out) = self.cloud_exec.sample(
+        let inv = match self.cloud.invoke(
             &self.models[i],
             now,
             e.task.segment.bytes,
             self.cloud_inflight,
             &mut self.rng,
-        );
+        ) {
+            Attempt::Run(inv) => inv,
+            Attempt::Throttle { retry_after } => {
+                return Some((e, retry_after));
+            }
+        };
         self.next_cloud_key += 1;
         let key = self.next_cloud_key;
         self.cloud_running.insert(
             key,
-            CloudRunning { entry: e, end: now + dur, duration: dur,
-                           timed_out },
+            CloudRunning {
+                entry: e,
+                end: now + inv.duration,
+                duration: inv.duration,
+                timed_out: inv.timed_out,
+                token: inv.token,
+            },
         );
         self.cloud_inflight += 1;
-        q.push(now + dur, Event::CloudDone { key });
+        q.push(now + inv.duration, Event::CloudDone { key });
+        None
     }
 
     // --------------------------------------------------------------- edge
@@ -316,6 +339,17 @@ impl Core {
     pub fn cloud_inflight(&self) -> usize {
         self.cloud_inflight
     }
+
+    /// Cumulative accounting of the cloud backend (cost, cold starts,
+    /// throttles). Also merged into [`Metrics::cloud`] at end of run.
+    pub fn cloud_stats(&self) -> CloudStats {
+        self.cloud.stats()
+    }
+
+    /// Tag of the configured cloud backend ("simple", "faas", …).
+    pub fn cloud_backend_name(&self) -> &'static str {
+        self.cloud.name()
+    }
 }
 
 /// One edge base station = mechanism [`Core`] + pluggable [`Scheduler`].
@@ -346,11 +380,14 @@ impl<S: Scheduler> std::ops::DerefMut for Platform<S> {
 
 impl Platform<Box<dyn Scheduler>> {
     /// Build a platform whose scheduler is resolved from the policy via
-    /// [`Policy::build`] (dynamic dispatch).
+    /// [`Policy::build`] (dynamic dispatch). `cloud` accepts a raw
+    /// [`CloudExecModel`](crate::exec::CloudExecModel) (wrapped into the
+    /// default [`SimpleBackend`](crate::cloud::SimpleBackend)) or any
+    /// boxed [`CloudBackend`].
     pub fn new(policy: Policy, models: Vec<ModelProfile>,
-               cloud_exec: CloudExecModel, seed: u64) -> Self {
+               cloud: impl Into<Box<dyn CloudBackend>>, seed: u64) -> Self {
         let sched = policy.build();
-        Self::with_scheduler(sched, policy, models, cloud_exec, seed)
+        Self::with_scheduler(sched, policy, models, cloud, seed)
     }
 }
 
@@ -360,15 +397,19 @@ impl<S: Scheduler> Platform<S> {
     /// core mechanisms and the scheduler interpret.
     pub fn with_scheduler(mut sched: S, policy: Policy,
                           models: Vec<ModelProfile>,
-                          cloud_exec: CloudExecModel, seed: u64) -> Self {
-        let core = Core::new(policy, models, cloud_exec, seed);
+                          cloud: impl Into<Box<dyn CloudBackend>>,
+                          seed: u64) -> Self {
+        let core = Core::new(policy, models, cloud, seed);
         sched.bind(&core);
         Platform { core, sched }
     }
 
-    /// Consume the platform, returning its metrics (end of a run).
+    /// Consume the platform, returning its metrics (end of a run) with
+    /// the cloud backend's accounting folded in.
     pub fn into_metrics(self) -> Metrics {
-        self.core.metrics
+        let mut m = self.core.metrics;
+        m.cloud = self.core.cloud.stats();
+        m
     }
 
     /// The scheduler driving this platform.
@@ -493,10 +534,47 @@ impl<S: Scheduler> Platform<S> {
                 continue;
             }
             if self.core.cloud_inflight < self.core.cloud_pool {
-                self.core.dispatch_cloud(now, e, q);
+                if let Some((e, retry)) = self.core.dispatch_cloud(now, e, q)
+                {
+                    self.on_cloud_throttled(now, e, retry, q);
+                }
             } else {
                 self.core.cloud_ready.push_back(e);
             }
+        }
+    }
+
+    /// The backend throttled a dispatch (per-account concurrency
+    /// ceiling). The attempt is reported through `on_cloud_report` as an
+    /// unsuccessful observation whose effective duration is the backoff
+    /// plus the current expectation — so DEMS-A's sliding window sees
+    /// throttling as cloud slowdown and adapts — then retried at
+    /// `now + retry_after` when the deadline still allows, else dropped.
+    fn on_cloud_throttled(&mut self, now: Micros, mut e: CloudEntry,
+                          retry_after: Micros, q: &mut EventQueue) {
+        let t_hat = self.sched.expected_cloud(&self.core, e.task.model);
+        let report = CloudReport {
+            kind: e.task.model,
+            duration: retry_after + t_hat,
+            timed_out: false,
+            success: false,
+            throttled: true,
+        };
+        {
+            let mut ctx = SchedCtx { now, core: &mut self.core, q: &mut *q };
+            self.sched.on_cloud_report(&mut ctx, &report);
+        }
+        self.core.metrics.stats_mut(e.task.model).throttled += 1;
+        let retry_at = now + retry_after.max(1);
+        // Re-check feasibility with the (possibly re-adapted) t̂.
+        let t_hat = self.sched.expected_cloud(&self.core, e.task.model);
+        if retry_at + t_hat <= e.abs_deadline {
+            e.trigger = retry_at;
+            self.core.push_cloud(e, q);
+        } else {
+            self.sched.on_cloud_skip(&self.core, now, e.task.model);
+            self.core.drop_task(now, e.task, DropReason::Throttled);
+            self.drain_done(now, q);
         }
     }
 
@@ -507,6 +585,8 @@ impl<S: Scheduler> Platform<S> {
             None => return,
         };
         self.core.cloud_inflight -= 1;
+        // Release the backend's concurrency slot / warm container.
+        self.core.cloud.complete(run.entry.task.model, run.token, now);
         let success = !run.timed_out && run.end <= run.entry.abs_deadline;
         // §5.4 observation hook fires before verdicting so adapted
         // expectations (and the timeline's expected_ms) include this sample.
@@ -515,6 +595,7 @@ impl<S: Scheduler> Platform<S> {
             duration: run.duration,
             timed_out: run.timed_out,
             success,
+            throttled: false,
         };
         {
             let mut ctx = SchedCtx { now, core: &mut self.core, q: &mut *q };
@@ -589,7 +670,11 @@ impl<S: Scheduler> Platform<S> {
                 self.drain_done(now, q);
                 continue;
             }
-            self.core.dispatch_cloud(now, e, q);
+            if let Some((e, retry)) = self.core.dispatch_cloud(now, e, q) {
+                // Account ceiling hit: any further ready entry would
+                // throttle too; this one retries via its trigger event.
+                self.on_cloud_throttled(now, e, retry, q);
+            }
             break;
         }
     }
@@ -618,6 +703,8 @@ impl<S: Scheduler> Platform<S> {
         let keys: Vec<u64> = self.core.cloud_running.keys().copied().collect();
         for k in keys {
             if let Some(run) = self.core.cloud_running.remove(&k) {
+                self.core.cloud.complete(run.entry.task.model, run.token,
+                                         now);
                 self.core.drop_task(now, run.entry.task, DropReason::Timeout);
                 self.drain_done(now, q);
             }
@@ -641,7 +728,7 @@ impl<S: Scheduler> Platform<S> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::EdgeExecModel;
+    use crate::exec::{CloudExecModel, EdgeExecModel};
     use crate::model::table1;
     use crate::net::ConstantNet;
     use crate::task::VideoSegment;
@@ -869,6 +956,96 @@ mod tests {
         settle(&mut p, &mut q, ms(20_000));
         assert_eq!(p.metrics.completed_on(Resource::Cloud), 0);
         assert_eq!(p.cloud_queue_len(), 0);
+    }
+
+    /// Deterministic FaaS backend: sigma-0 compute, no cold jitter, tiny
+    /// concurrency ceiling.
+    fn faas_platform(policy: Policy, concurrency: usize) -> Platform {
+        use crate::cloud::{FaasBackend, FaasConfig};
+        let be = FaasBackend::new(
+            FaasConfig {
+                concurrency,
+                sigma: 0.0,
+                cold_start: 0,
+                ..FaasConfig::default()
+            },
+            Box::new(ConstantNet { latency: ms(40), bandwidth: 25.0e6 }),
+        );
+        let mut p = Platform::new(policy, table1(),
+                                  Box::new(be) as Box<dyn CloudBackend>, 7);
+        p.edge_exec = EdgeExecModel { sigma: 0.0, overhead: (0, 0) };
+        p
+    }
+
+    #[test]
+    fn faas_throttle_retries_then_drops_and_counts() {
+        // CLD with a 1-slot account: the first HV runs, later dispatches
+        // are throttled, retried on the 200 ms backoff while the deadline
+        // allows, and finally dropped as Throttled.
+        let mut p = faas_platform(Policy::cloud_only(), 1);
+        let mut q = EventQueue::new();
+        for _ in 0..4 {
+            let t = mktask(&mut p, DnnKind::Hv, 0);
+            p.submit_task(0, t, &mut q);
+        }
+        settle(&mut p, &mut q, ms(20_000));
+        let s = p.metrics.stats(DnnKind::Hv);
+        assert_eq!(s.generated, 4);
+        assert!(p.metrics.throttled() >= 2,
+                "throttles observed: {}", p.metrics.throttled());
+        assert!(s.dropped_throttled >= 1,
+                "deadline-exhausted retries drop: {s:?}");
+        assert_eq!(s.generated, s.executed() + s.dropped(),
+                   "accounting closes under throttling");
+        let cs = p.cloud_stats();
+        assert!(cs.throttles >= 2);
+        assert!(cs.dollars > 0.0, "admitted invocations bill");
+        assert_eq!(p.cloud_backend_name(), "faas");
+    }
+
+    #[test]
+    fn faas_throttle_reports_raise_dems_a_expectations() {
+        // DEMS-A folds throttle reports (backoff + expectation) into its
+        // §5.4 window: after one throttled DEO dispatch the expected
+        // cloud duration rises above the static 832 ms, so later DEOs
+        // are refused for the cloud instead of burning retries.
+        let mut p = faas_platform(Policy::dems_a(), 1);
+        let mut q = EventQueue::new();
+        for _ in 0..4 {
+            let t = mktask(&mut p, DnnKind::Deo, 0);
+            p.submit_task(0, t, &mut q);
+        }
+        settle(&mut p, &mut q, ms(20_000));
+        assert!(p.metrics.throttled() >= 1, "a dispatch was throttled");
+        assert!(
+            p.expected_cloud_ms(DnnKind::Deo) > 832.0,
+            "throttle must inflate the adapted expectation: {}",
+            p.expected_cloud_ms(DnnKind::Deo)
+        );
+        let total: u64 =
+            p.metrics.per_model.iter().map(|(_, s)| s.generated).sum();
+        let closed: u64 = p
+            .metrics
+            .per_model
+            .iter()
+            .map(|(_, s)| s.executed() + s.dropped())
+            .sum();
+        assert_eq!(total, closed);
+    }
+
+    #[test]
+    fn simple_backend_metrics_cloud_accounting_is_zero_cost() {
+        let mut p = mkplatform(Policy::cloud_only());
+        let mut q = EventQueue::new();
+        let t = mktask(&mut p, DnnKind::Hv, 0);
+        p.submit_task(0, t, &mut q);
+        settle(&mut p, &mut q, ms(5_000));
+        assert_eq!(p.cloud_backend_name(), "simple");
+        let m = p.into_metrics();
+        assert_eq!(m.cloud.invocations, 1);
+        assert_eq!(m.cloud.dollars, 0.0);
+        assert_eq!(m.cloud.throttles, 0);
+        assert_eq!(m.throttled(), 0);
     }
 
     #[test]

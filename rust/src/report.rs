@@ -60,6 +60,12 @@ impl Cell {
         }
     }
 
+    /// Dollar amount: `$0.0123` display over `Value::Float` (cloud cost
+    /// columns; four decimals resolve sub-cent FaaS fees).
+    pub fn dollars(v: f64) -> Cell {
+        Cell { value: Value::Float(v), text: format!("${v:.4}") }
+    }
+
     /// Custom display text over an explicit machine value (e.g. `83.1%`
     /// over `Float(83.1)`, or `DNF@112s` over a string).
     pub fn fmt(value: Value, text: impl Into<String>) -> Cell {

@@ -14,6 +14,8 @@
 //! CLI surface; `ocularone experiment list` prints this registry.
 
 use crate::bail;
+use crate::cloud::{CloudBackend, FaasBackend, FaasConfig,
+                   MultiRegionBackend};
 use crate::cluster::{Cluster, ClusterMetrics};
 use crate::errors::Result;
 use crate::exec::CloudExecModel;
@@ -26,7 +28,7 @@ use crate::net::{mobility_trace, LognormalWan, TraceBandwidth,
 use crate::policy::Policy;
 use crate::pool::Pool;
 use crate::report::{Cell, Report, Table, Value};
-use crate::time::{secs, Micros};
+use crate::time::{ms_f, secs, Micros};
 
 /// Stride between seeds of a sweep (a large odd constant so derived seeds
 /// do not collide with the per-edge `EDGE_SEED_PHI` derivation).
@@ -34,27 +36,47 @@ pub const SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 
 // ------------------------------------------------------------ cloud specs
 
-/// Declarative choice of the cloud/WAN model an experiment runs against.
+/// Declarative choice of the cloud backend / WAN model an experiment
+/// runs against (see [`crate::cloud`] for the backend subsystem).
 #[derive(Clone, Debug)]
 pub enum CloudSpec {
-    /// Calibrated nominal AWS WAN (lognormal latency + bandwidth).
+    /// Calibrated nominal AWS WAN (lognormal latency + bandwidth)
+    /// behind the legacy sampler — the bit-identical default path.
     NominalWan,
     /// §8.5 latency shaping: trapezium 0→400 ms ramp over the run.
     TrapeziumLatency,
     /// §8.5 bandwidth shaping: 4G mobility-trace replay for one device.
     MobilityBandwidth { device: u64 },
+    /// FaaS account over the nominal WAN: per-model warm pools with
+    /// `keep_alive` expiry, a `concurrency` ceiling (throttle + retry),
+    /// Lambda-shaped GB-second billing. [`CloudSpec::build`] runs once
+    /// per platform, so **each edge station holds its own account** —
+    /// the ceiling, pools and bill are per edge, and an N-edge cluster
+    /// has N independent accounts.
+    Faas { keep_alive: Micros, concurrency: usize },
+    /// Two FaaS regions with latency-based failover: the nominal-WAN
+    /// primary plus a secondary whose median latency is `extra_latency`
+    /// higher; each region has its own `concurrency` ceiling (and, as
+    /// with [`CloudSpec::Faas`], each edge station its own region pair).
+    MultiRegion {
+        keep_alive: Micros,
+        concurrency: usize,
+        extra_latency: Micros,
+    },
 }
 
 impl CloudSpec {
-    /// Instantiate a fresh cloud executor for one platform.
-    pub fn build(&self) -> CloudExecModel {
+    /// Instantiate a fresh cloud backend for one platform.
+    pub fn build(&self) -> Box<dyn CloudBackend> {
         match self {
             CloudSpec::NominalWan => {
                 CloudExecModel::new(Box::new(LognormalWan::default()))
+                    .into()
             }
             CloudSpec::TrapeziumLatency => CloudExecModel::new(Box::new(
                 TrapeziumLatency::paper_default(LognormalWan::default()),
-            )),
+            ))
+            .into(),
             CloudSpec::MobilityBandwidth { device } => {
                 CloudExecModel::new(Box::new(TraceBandwidth {
                     base: LognormalWan {
@@ -66,6 +88,42 @@ impl CloudSpec {
                     samples: mobility_trace(*device, 300),
                     period: secs(1),
                 }))
+                .into()
+            }
+            CloudSpec::Faas { keep_alive, concurrency } => {
+                Box::new(FaasBackend::new(
+                    FaasConfig {
+                        keep_alive: *keep_alive,
+                        concurrency: *concurrency,
+                        ..FaasConfig::default()
+                    },
+                    Box::new(LognormalWan::default()),
+                ))
+            }
+            CloudSpec::MultiRegion {
+                keep_alive,
+                concurrency,
+                extra_latency,
+            } => {
+                let cfg = FaasConfig {
+                    keep_alive: *keep_alive,
+                    concurrency: *concurrency,
+                    ..FaasConfig::default()
+                };
+                let primary = FaasBackend::new(
+                    cfg.clone(),
+                    Box::new(LognormalWan::default()),
+                );
+                let secondary = FaasBackend::new(
+                    cfg,
+                    Box::new(LognormalWan {
+                        median_latency: LognormalWan::default()
+                            .median_latency
+                            + extra_latency,
+                        ..LognormalWan::default()
+                    }),
+                );
+                Box::new(MultiRegionBackend::new(primary, secondary))
             }
         }
     }
@@ -450,6 +508,242 @@ pub fn hetero_scenario() -> Scenario {
     )
 }
 
+// ------------------------------------------- FaaS backend scenarios
+
+/// Stations per cluster for the FaaS scenarios (kept below the §8.1 host
+/// width so the keep-alive × concurrency grids stay cheap to sweep).
+const FAAS_EDGES: usize = 3;
+
+/// Column labels shared by every FaaS scenario table (appended after the
+/// scenario's own axis columns).
+const FAAS_TAIL_COLS: [&str; 8] = [
+    "tasks", "done %", "QoS util", "cloud done", "cold %", "throttled",
+    "GB-s", "cloud $",
+];
+
+/// Completion/utility next to the backend's cost, cold-start and
+/// throttle accounting — the row tail under [`FAAS_TAIL_COLS`].
+fn faas_row_tail(cm: &ClusterMetrics) -> Vec<Cell> {
+    let s = cm.cloud_stats();
+    let cloud_done: u64 = cm
+        .per_edge
+        .iter()
+        .map(|m| m.completed_on(Resource::Cloud))
+        .sum();
+    vec![
+        Cell::uint(cm.generated()),
+        Cell::percent(100.0 * cm.completion_rate(), 1),
+        Cell::float(cm.total_qos_utility() / 1e5, 2),
+        Cell::uint(cloud_done),
+        Cell::percent(100.0 * s.cold_start_rate(), 1),
+        Cell::uint(cm.throttled()),
+        Cell::float(s.gb_seconds, 1),
+        Cell::dollars(s.dollars),
+    ]
+}
+
+fn faas_table(axis_cols: &[&str]) -> Table {
+    let cols: Vec<&str> =
+        axis_cols.iter().chain(FAAS_TAIL_COLS.iter()).copied().collect();
+    Table::new(&cols)
+}
+
+/// Human label for a keep-alive axis value.
+fn keep_alive_label(ka: Micros) -> String {
+    format!("{}s", ka / 1_000_000)
+}
+
+/// `cold-start-sweep`: the container keep-alive axis — from
+/// expire-immediately (every invocation cold) to Lambda-like 120 s — for
+/// DEMS and DEMS-A on the 3D-A mix. Cold starts inflate observed cloud
+/// durations, so DEMS-A's §5.4 window reacts exactly as it does to WAN
+/// variability.
+pub fn cold_start_sweep_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let keep_alives =
+        [0, secs(1), secs(5), secs(30), secs(120)];
+    let policies = [Policy::dems(), Policy::dems_a()];
+    let wl = Workload::emulation(3, true);
+    let mut cells: Vec<(Micros, &Policy)> = Vec::new();
+    for &ka in &keep_alives {
+        for policy in &policies {
+            cells.push((ka, policy));
+        }
+    }
+    let metrics = pool.run(cells.len(), |j| {
+        let (ka, policy) = cells[j];
+        run_cluster(
+            policy,
+            &wl,
+            seed,
+            FAAS_EDGES,
+            &CloudSpec::Faas { keep_alive: ka, concurrency: 64 },
+        )
+    });
+    let mut rep = Report::new(
+        "cold-start-sweep",
+        "FaaS keep-alive sweep — cold-start rate vs cloud cost (3D-A)",
+        seed,
+    );
+    let mut t = faas_table(&["keep-alive", "algo"]);
+    for ((ka, policy), cm) in cells.iter().zip(&metrics) {
+        let mut row = vec![
+            Cell::str(keep_alive_label(*ka)),
+            Cell::str(policy.kind.name()),
+        ];
+        row.extend(faas_row_tail(cm));
+        t.push_row(row);
+    }
+    rep.table(t);
+    rep.text(
+        "(keep-alive 0 s expires every container immediately — the \
+         all-cold ceiling; longer keep-alives trade idle container \
+         lifetime for cold-start rate. cold % = cold starts per admitted \
+         invocation; cloud $ = GB-seconds + per-request fees.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
+/// `throttled-cloud`: the per-edge-account concurrency axis on the
+/// cloud-heavy 4D-A mix, CLD vs DEMS vs DEMS-A, plus a single-region vs
+/// two-region failover comparison. Throttles are reported through
+/// `on_cloud_report`, so DEMS-A backs off the cloud instead of burning
+/// retries (LLHR, arXiv 2305.15858, motivates exactly this
+/// reliability-aware placement under constrained backends).
+pub fn throttled_cloud_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let concs = [1usize, 2, 4, 16];
+    let policies =
+        [Policy::cloud_only(), Policy::dems(), Policy::dems_a()];
+    let wl = Workload::emulation(4, true);
+    let mut cells: Vec<(usize, &Policy)> = Vec::new();
+    for &c in &concs {
+        for policy in &policies {
+            cells.push((c, policy));
+        }
+    }
+    let metrics = pool.run(cells.len(), |j| {
+        let (conc, policy) = cells[j];
+        run_cluster(
+            policy,
+            &wl,
+            seed,
+            FAAS_EDGES,
+            &CloudSpec::Faas { keep_alive: secs(300), concurrency: conc },
+        )
+    });
+    let mut rep = Report::new(
+        "throttled-cloud",
+        "FaaS concurrency ceiling — throttle/retry vs adaptation (4D-A)",
+        seed,
+    );
+    let mut t = faas_table(&["conc", "algo"]);
+    for ((conc, policy), cm) in cells.iter().zip(&metrics) {
+        let mut row = vec![
+            Cell::uint(*conc as u64),
+            Cell::str(policy.kind.name()),
+        ];
+        row.extend(faas_row_tail(cm));
+        t.push_row(row);
+    }
+    rep.table(t);
+    // Failover study: the same starved ceilings, DEMS-A, one region vs
+    // two regions (secondary +40 ms median latency, own ceiling).
+    let fo_cells: Vec<(usize, bool)> = [1usize, 2, 4]
+        .iter()
+        .flat_map(|&c| [(c, false), (c, true)])
+        .collect();
+    let fo_metrics = pool.run(fo_cells.len(), |j| {
+        let (conc, multi) = fo_cells[j];
+        let spec = if multi {
+            CloudSpec::MultiRegion {
+                keep_alive: secs(300),
+                concurrency: conc,
+                extra_latency: ms_f(40.0),
+            }
+        } else {
+            CloudSpec::Faas { keep_alive: secs(300), concurrency: conc }
+        };
+        run_cluster(&Policy::dems_a(), &wl, seed, FAAS_EDGES, &spec)
+    });
+    rep.text("### two-region failover (DEMS-A)".to_string());
+    let mut t = faas_table(&["backend", "conc"]);
+    for ((conc, multi), cm) in fo_cells.iter().zip(&fo_metrics) {
+        let mut row = vec![
+            Cell::str(if *multi { "2-region" } else { "faas" }),
+            Cell::uint(*conc as u64),
+        ];
+        row.extend(faas_row_tail(cm));
+        t.push_row(row);
+    }
+    rep.table(t);
+    rep.text(
+        "(conc = in-flight ceiling of each edge station's own FaaS \
+         account — one account per edge, so this 3-edge cluster holds 3 \
+         independent ceilings; throttled counts dispatch attempts \
+         rejected at a ceiling — each is retried while its deadline \
+         allows, else dropped. The 2-region backend fails a throttled \
+         attempt over to a +40 ms secondary before giving up.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
+/// `cost-frontier`: keep-alive × concurrency grid under DEMS-A — where
+/// QoS utility is bought cheapest. The frontier column reports utility
+/// per cloud dollar.
+pub fn cost_frontier_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let keep_alives = [0, secs(5), secs(60)];
+    let concs = [2usize, 8, 64];
+    let wl = Workload::emulation(3, true);
+    let mut cells: Vec<(Micros, usize)> = Vec::new();
+    for &ka in &keep_alives {
+        for &c in &concs {
+            cells.push((ka, c));
+        }
+    }
+    let metrics = pool.run(cells.len(), |j| {
+        let (ka, conc) = cells[j];
+        run_cluster(
+            &Policy::dems_a(),
+            &wl,
+            seed,
+            FAAS_EDGES,
+            &CloudSpec::Faas { keep_alive: ka, concurrency: conc },
+        )
+    });
+    let mut rep = Report::new(
+        "cost-frontier",
+        "FaaS cost frontier — keep-alive × concurrency vs QoS utility \
+         (DEMS-A, 3D-A)",
+        seed,
+    );
+    let mut t = faas_table(&["keep-alive", "conc"]);
+    t.columns.push("util / $".to_string());
+    for ((ka, conc), cm) in cells.iter().zip(&metrics) {
+        let mut row = vec![
+            Cell::str(keep_alive_label(*ka)),
+            Cell::uint(*conc as u64),
+        ];
+        row.extend(faas_row_tail(cm));
+        let dollars = cm.cloud_stats().dollars;
+        row.push(if dollars > 0.0 {
+            Cell::float(cm.total_qos_utility() / 1e5 / dollars, 1)
+        } else {
+            Cell::fmt(Value::Null, "—")
+        });
+        t.push_row(row);
+    }
+    rep.table(t);
+    rep.text(
+        "(util / $ = QoS utility (×1e5) per cloud dollar — the frontier \
+         metric: tight ceilings throttle offloads and waste deadline \
+         headroom, short keep-alives re-bill cold starts; the knee is \
+         where extra spend stops buying utility.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
 // --------------------------------------------------------------- registry
 
 /// One runnable experiment in the registry.
@@ -481,6 +775,14 @@ pub fn registry() -> Vec<ScenarioEntry> {
           false),
         e("churn", "mid-run drone join/leave on 4D-P", false),
         e("hetero-edges", "mixed per-edge fleets and hardware", false),
+        e("cold-start-sweep",
+          "FaaS keep-alive sweep: cold-start rate vs cloud cost", false),
+        e("throttled-cloud",
+          "FaaS concurrency ceiling: throttling vs adaptation + failover",
+          false),
+        e("cost-frontier",
+          "FaaS keep-alive x concurrency vs QoS utility per dollar",
+          false),
     ]
 }
 
@@ -514,6 +816,9 @@ pub fn run_scenario_jobs(id: &str, seed: u64, jobs: usize) -> Result<Report> {
         "poisson" => poisson_scenario().run_jobs(seed, jobs),
         "churn" => churn_scenario().run_jobs(seed, jobs),
         "hetero-edges" => hetero_scenario().run_jobs(seed, jobs),
+        "cold-start-sweep" => cold_start_sweep_report(seed, &pool),
+        "throttled-cloud" => throttled_cloud_report(seed, &pool),
+        "cost-frontier" => cost_frontier_report(seed, &pool),
         other => {
             let known: Vec<&str> =
                 registry().iter().map(|e| e.id).collect();
@@ -624,6 +929,58 @@ mod tests {
             .edges(0)
             .run(1)
             .is_err());
+    }
+
+    #[test]
+    fn cloud_specs_build_their_backends() {
+        assert_eq!(CloudSpec::NominalWan.build().name(), "simple");
+        assert_eq!(CloudSpec::TrapeziumLatency.build().name(), "simple");
+        let faas = CloudSpec::Faas {
+            keep_alive: secs(30),
+            concurrency: 8,
+        };
+        assert_eq!(faas.build().name(), "faas");
+        let mr = CloudSpec::MultiRegion {
+            keep_alive: secs(30),
+            concurrency: 8,
+            extra_latency: ms_f(40.0),
+        };
+        assert_eq!(mr.build().name(), "multi-region");
+    }
+
+    #[test]
+    fn faas_keep_alive_reduces_cold_rate_and_bills() {
+        let wl = Workload::emulation(3, true).with_duration(secs(60));
+        let all_cold = run_cluster(
+            &Policy::dems(),
+            &wl,
+            5,
+            1,
+            &CloudSpec::Faas { keep_alive: 0, concurrency: 64 },
+        );
+        let kept_warm = run_cluster(
+            &Policy::dems(),
+            &wl,
+            5,
+            1,
+            &CloudSpec::Faas { keep_alive: secs(120), concurrency: 64 },
+        );
+        let (c, w) = (all_cold.cloud_stats(), kept_warm.cloud_stats());
+        assert!(c.invocations > 0, "DEMS offloads to the cloud");
+        assert_eq!(c.cold_start_rate(), 1.0,
+                   "keep-alive 0 makes every invocation cold");
+        assert!(w.cold_start_rate() < c.cold_start_rate(),
+                "keep-alive must reduce cold starts: {} vs {}",
+                w.cold_start_rate(), c.cold_start_rate());
+        assert!(c.dollars > 0.0 && w.dollars > 0.0);
+        // Cold inits bill extra: cost per invocation is strictly higher
+        // when every invocation pays its init.
+        assert!(c.gb_seconds / c.invocations as f64
+                    > w.gb_seconds / w.invocations as f64,
+                "per-invocation GB-s must shrink with warm reuse");
+        // A generous ceiling never throttles.
+        assert_eq!(all_cold.throttled(), 0);
+        assert_eq!(kept_warm.throttled(), 0);
     }
 
     #[test]

@@ -58,16 +58,23 @@ pub struct SchedCtx<'a> {
     pub q: &'a mut EventQueue,
 }
 
-/// A completed FaaS invocation, reported to the scheduler before the
-/// outcome is finalized (so §5.4 adaptation sees the sample first).
+/// A completed (or throttled) FaaS invocation, reported to the scheduler
+/// before the outcome is finalized (so §5.4 adaptation sees the sample
+/// first).
 #[derive(Clone, Copy, Debug)]
 pub struct CloudReport {
     pub kind: DnnKind,
     /// Actual end-to-end duration (includes the timeout value when
-    /// `timed_out`).
+    /// `timed_out`; for throttled attempts, the retry backoff plus the
+    /// expectation at the time of the attempt — the effective delay the
+    /// throttle imposed).
     pub duration: Micros,
     pub timed_out: bool,
     pub success: bool,
+    /// The attempt never ran: the backend's per-account concurrency
+    /// ceiling rejected it (see [`crate::cloud`]). Adaptive schedulers
+    /// fold these into their estimates like any slow observation.
+    pub throttled: bool,
 }
 
 /// Where a simple (non-mutating) admission decision sends a task.

@@ -274,6 +274,7 @@ pub fn serve(artifacts_dir: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
                     duration: done - dispatched_at,
                     timed_out: false,
                     success,
+                    throttled: false,
                 });
                 let lat_ms =
                     (done - task.segment.created_at) as f64 / 1_000.0;

@@ -64,6 +64,9 @@ pub enum DropReason {
     /// Cloud request abandoned at the HTTP client timeout (§8.3's network
     /// timeouts); no usable output, utility 0.
     Timeout,
+    /// Rejected at the FaaS account's concurrency ceiling with no retry
+    /// window left before the deadline (see [`crate::cloud`]).
+    Throttled,
 }
 
 /// Completion record appended to the results queue.

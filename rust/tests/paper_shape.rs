@@ -5,6 +5,7 @@
 //! migration, stealing, adaptation, the QoE monitor, both executors and
 //! the network models together.
 
+use ocularone::cloud::CloudBackend;
 use ocularone::cluster::{Cluster, EDGE_SEED_PHI};
 use ocularone::exec::CloudExecModel;
 use ocularone::fleet::Workload;
@@ -110,8 +111,8 @@ fn dispatch_parity_flag_branch_vs_boxed_trait() {
     assert_eq!(a, b, "dispatch divergence under GEMS");
 }
 
-fn default_wan() -> CloudExecModel {
-    CloudExecModel::new(Box::new(LognormalWan::default()))
+fn default_wan() -> Box<dyn CloudBackend> {
+    CloudExecModel::new(Box::new(LognormalWan::default())).into()
 }
 
 #[test]

@@ -34,6 +34,21 @@ fn hetero_edges_parallel_parity() {
 }
 
 #[test]
+fn cold_start_sweep_parallel_parity() {
+    // FaaS backend state (warm pools, cold-start accounting) is strictly
+    // per cell, so cold-start rates reproduce for any worker count.
+    assert_parity("cold-start-sweep", 42);
+}
+
+#[test]
+fn cost_frontier_parallel_parity() {
+    // Cost accumulation (GB-seconds + per-request fees, summed as f64 in
+    // event order inside each cell) must be byte-identical across
+    // `--jobs` values — the dollars column is part of the JSON bytes.
+    assert_parity("cost-frontier", 42);
+}
+
+#[test]
 fn scenario_grid_parity_across_worker_counts() {
     use ocularone::fleet::Workload;
     use ocularone::policy::Policy;
