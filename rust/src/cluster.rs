@@ -17,17 +17,19 @@
 //! `exp::run_edges` reproduces the paper figures unchanged.
 
 use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
 
 use crate::cloud::{CloudBackend, CloudStats};
 use crate::fleet::{Arrival, Workload};
 use crate::metrics::{self, Metrics};
+use crate::net::{ConstantNet, NetworkModel, SharedUplink};
 use crate::platform::Platform;
 use crate::policy::Policy;
 use crate::rng::Rng;
 use crate::sched::Scheduler;
 use crate::sim::{Event, EventQueue, SETTLE};
 use crate::task::{Task, VideoSegment};
-use crate::time::Micros;
+use crate::time::{ms, Micros};
 
 /// XOR-multiplier used to derive per-edge seeds in emulation runs (the
 /// same derivation the pre-cluster harness used, kept for reproducibility
@@ -47,20 +49,70 @@ thread_local! {
 /// Maps fleet drones onto edge base stations: drone `g` reports to edge
 /// `g / drones_per_edge` (the §8.1 setup assigns each VIP's buddy drones
 /// to their personal edge).
-#[derive(Clone, Copy, Debug)]
+///
+/// Since the fleet-federation layer the router is **dynamic**: a
+/// mobility/churn window can [`re_home`](Router::re_home) a drone to the
+/// nearest edge mid-run, after which its segment stream emits at the new
+/// edge while tasks already admitted at the old edge run there to
+/// completion (no double-count — generation and outcome both move with
+/// the stream, never split).
+#[derive(Clone, Debug, Default)]
 pub struct Router {
     pub drones_per_edge: u32,
+    /// Mid-run re-homes (fleet handover): `(global drone, current edge)`.
+    /// Empty for the paper's static mapping.
+    overrides: Vec<(u32, u32)>,
 }
 
 impl Router {
+    /// The static §8.1 mapping: `drones_per_edge` buddies per station.
+    pub fn uniform(drones_per_edge: u32) -> Self {
+        Router { drones_per_edge, overrides: Vec::new() }
+    }
+
     /// Edge index serving a (global) drone id.
     pub fn edge_of(&self, drone: u32) -> usize {
+        if let Some(&(_, e)) =
+            self.overrides.iter().find(|(d, _)| *d == drone)
+        {
+            return e as usize;
+        }
         (drone / self.drones_per_edge.max(1)) as usize
     }
 
     /// Global drone id of edge-local drone `local` on edge `edge`.
     pub fn global_id(&self, edge: usize, local: u32) -> u32 {
         edge as u32 * self.drones_per_edge + local
+    }
+
+    /// Dynamic re-home of one drone (fleet handover): subsequent lookups
+    /// report `edge`. Idempotent per drone — a second handover replaces
+    /// the first.
+    pub fn re_home(&mut self, drone: u32, edge: usize) {
+        if let Some(o) =
+            self.overrides.iter_mut().find(|(d, _)| *d == drone)
+        {
+            o.1 = edge as u32;
+        } else {
+            self.overrides.push((drone, edge as u32));
+        }
+    }
+
+    /// Current home of `drone` given its static origin edge `origin`
+    /// (prefix-sum correct for hetero clusters, where the flat
+    /// `drones_per_edge` division is undefined).
+    pub fn homed_edge(&self, drone: u32, origin: usize) -> usize {
+        if let Some(&(_, e)) =
+            self.overrides.iter().find(|(d, _)| *d == drone)
+        {
+            return e as usize;
+        }
+        origin
+    }
+
+    /// Has any drone been re-homed?
+    pub fn is_dynamic(&self) -> bool {
+        !self.overrides.is_empty()
     }
 }
 
@@ -126,6 +178,128 @@ impl ClusterMetrics {
     pub fn throttled(&self) -> u64 {
         self.per_edge.iter().map(Metrics::throttled).sum()
     }
+
+    // ----------------------------------------------- federation columns
+
+    /// Cross-edge steal arrivals executed-side (fleet federation).
+    pub fn fed_steals(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.fed_steals_in).sum()
+    }
+
+    /// Deferred entries offered away to sibling edges. Every arrival
+    /// has an offer, so `fed_offers() >= fed_steals()`; the difference
+    /// is transfers still in flight at drain (dropped at the
+    /// destination without counting as arrivals).
+    pub fn fed_offers(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.fed_steals_out).sum()
+    }
+
+    /// Drone re-homes performed mid-run (fleet handover).
+    pub fn handovers(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.handovers).sum()
+    }
+
+    /// Total shared-uplink queueing delay across the edges (µs).
+    pub fn uplink_wait(&self) -> Micros {
+        self.per_edge.iter().map(|m| m.uplink_wait).sum()
+    }
+
+    /// Cloud dispatches that queued on the shared uplink.
+    pub fn uplink_queued(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.uplink_queued).sum()
+    }
+}
+
+// -------------------------------------------------------------- federation
+
+/// One scheduled drone re-home (fleet handover): at virtual time `at`,
+/// global drone `drone`'s stream moves to `to_edge`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Handover {
+    pub at: Micros,
+    pub drone: u32,
+    pub to_edge: usize,
+}
+
+/// Fleet-federation configuration for one cluster run — the cross-edge
+/// layer the scope-tagged event queue always reserved a slot for:
+///
+/// 1. **Work stealing across edges**: when an edge goes fully idle, the
+///    coordinator offers it the best deadline-viable entry from a
+///    sibling's deferred cloud queue (the §5.3 population), charging the
+///    edge↔edge LAN transfer through a [`NetworkModel`] and ranking
+///    candidates with the schedulers' κ/κ̂ machinery.
+/// 2. **Drone handover**: scheduled [`Handover`]s re-home a stream via
+///    the dynamic [`Router`]; in-flight tasks finish at the old edge.
+/// 3. **Shared-uplink contention**: sibling edges serialize their cloud
+///    transfers through one [`SharedUplink`] budget, so concurrent
+///    dispatches inflate each other's observed durations (and DEMS-A's
+///    t̂ adapts through the ordinary `on_cloud_report` path).
+///
+/// The default config turns everything off; a cluster federated with it
+/// is **bit-identical** to an unfederated one (pinned by
+/// `tests/sweep_parity.rs`).
+pub struct Federation {
+    /// Cross-edge §5.3 work stealing between sibling edges.
+    pub steal: bool,
+    /// Edge↔edge LAN charging steal transfers (default: 2 ms constant
+    /// latency at 125 MB/s — a switched MAN between base stations).
+    pub lan: Box<dyn NetworkModel>,
+    /// Scheduled drone re-homes, applied at their `at` instants.
+    pub handovers: Vec<Handover>,
+    /// Shared backhaul bandwidth (bytes/s) serializing the sibling
+    /// edges' cloud transfers; `None` = independent uplinks.
+    pub uplink_bytes_per_sec: Option<f64>,
+    /// RNG for stochastic LAN models — its own stream, so federation
+    /// never perturbs the platforms' paper-calibrated draw sequences.
+    rng: Rng,
+}
+
+impl Default for Federation {
+    fn default() -> Self {
+        Federation {
+            steal: false,
+            lan: Box::new(ConstantNet {
+                latency: ms(2),
+                bandwidth: 125.0e6,
+            }),
+            handovers: Vec::new(),
+            uplink_bytes_per_sec: None,
+            rng: Rng::new(0xFED_F1EE7),
+        }
+    }
+}
+
+impl Federation {
+    /// Cross-edge stealing on, everything else default.
+    pub fn stealing() -> Self {
+        Federation { steal: true, ..Federation::default() }
+    }
+
+    /// Add one scheduled drone re-home.
+    pub fn with_handover(mut self, h: Handover) -> Self {
+        self.handovers.push(h);
+        self
+    }
+
+    /// Serialize the edges' cloud transfers through one shared uplink.
+    pub fn with_uplink(mut self, bytes_per_sec: f64) -> Self {
+        self.uplink_bytes_per_sec = Some(bytes_per_sec);
+        self
+    }
+
+    /// Replace the edge↔edge LAN model for steal transfers.
+    pub fn with_lan(mut self, lan: Box<dyn NetworkModel>) -> Self {
+        self.lan = lan;
+        self
+    }
+
+    /// Is any federation mechanism active?
+    pub fn enabled(&self) -> bool {
+        self.steal
+            || !self.handovers.is_empty()
+            || self.uplink_bytes_per_sec.is_some()
+    }
 }
 
 /// N edge platforms + drone router + per-edge arrival streams, driven by
@@ -149,6 +323,9 @@ pub struct Cluster<S: Scheduler = Box<dyn Scheduler>> {
     arrivals: Vec<Rng>,
     /// Per-edge segment-id counters.
     segment_ids: Vec<u64>,
+    /// Fleet-federation layer; `None` (the default) runs the edges fully
+    /// isolated, bit-identical to the pre-federation engine.
+    federation: Option<Federation>,
 }
 
 impl Cluster<Box<dyn Scheduler>> {
@@ -218,9 +395,8 @@ impl<S: Scheduler> Cluster<S> {
                    "one arrival seed per edge");
         assert_eq!(edges.len(), workloads.len(), "one workload per edge");
         let n = edges.len();
-        let router = Router {
-            drones_per_edge: workloads.first().map_or(0, |w| w.drones),
-        };
+        let router =
+            Router::uniform(workloads.first().map_or(0, |w| w.drones));
         let mut drone_base = Vec::with_capacity(n);
         let mut base = 0u32;
         for w in &workloads {
@@ -234,7 +410,21 @@ impl<S: Scheduler> Cluster<S> {
             drone_base,
             arrivals: arrival_seeds.into_iter().map(Rng::new).collect(),
             segment_ids: vec![0; n],
+            federation: None,
         }
+    }
+
+    /// Attach a fleet-federation layer (cross-edge work stealing, drone
+    /// handover, shared-uplink contention). With the default all-off
+    /// [`Federation`] the run stays bit-identical to an unfederated
+    /// cluster.
+    pub fn federated(mut self, fed: Federation) -> Self {
+        for h in &fed.handovers {
+            assert!(h.to_edge < self.edges.len(),
+                    "handover target edge {} out of range", h.to_edge);
+        }
+        self.federation = Some(fed);
+        self
     }
 
     /// Uniform drone→edge router. Only defined when every edge serves the
@@ -250,7 +440,7 @@ impl<S: Scheduler> Cluster<S> {
             "router() is undefined for mixed-fleet clusters; \
              use first_drone(edge)"
         );
-        self.router
+        self.router.clone()
     }
 
     /// First global drone id served by edge `e` (prefix sums of the
@@ -287,12 +477,36 @@ impl<S: Scheduler> Cluster<S> {
         let Cluster {
             mut edges,
             workloads,
-            router: _,
+            mut router,
             drone_base,
             mut arrivals,
             mut segment_ids,
+            federation,
         } = self;
         let n = edges.len();
+        let mut fed = federation;
+
+        // Shared-uplink contention: hand every edge the same budget so
+        // their cloud dispatches serialize against each other.
+        if let Some(f) = &fed {
+            if let Some(bw) = f.uplink_bytes_per_sec {
+                let up = Arc::new(Mutex::new(SharedUplink::new(bw)));
+                for edge in edges.iter_mut() {
+                    edge.core.uplink = Some(up.clone());
+                }
+            }
+            // Handovers are pushed *before* the segment seeds, so a
+            // re-home at exactly a tick instant wins the tie and that
+            // tick already emits at the new edge (push-order tie-break,
+            // pinned in sim.rs).
+            for h in &f.handovers {
+                q.set_scope(h.to_edge as u32);
+                q.push(h.at, Event::Handover {
+                    drone: h.drone,
+                    to_edge: h.to_edge as u32,
+                });
+            }
+        }
 
         // Seed every edge's drone streams (staggered phases so segment
         // arrivals don't collide on identical microsecond ticks — real
@@ -316,10 +530,24 @@ impl<S: Scheduler> Cluster<S> {
                 + SETTLE;
         while let Some((now, scope, ev)) = q.pop_scoped() {
             if now > horizon {
-                break;
+                if fed.is_none() {
+                    break;
+                }
+                // Federated runs keep popping: a steal still in LAN
+                // transfer must close its accounting at the destination
+                // edge or the cluster-wide conservation invariant leaks.
+                if let Event::FedArrive { task } = ev {
+                    let e = scope as usize;
+                    q.set_scope(scope);
+                    edges[e].drop_in_transit(horizon, task, &mut *q);
+                }
+                continue;
             }
             let e = scope as usize;
             q.set_scope(scope);
+            // Which edge this event mutated (differs from the scope only
+            // when a handed-over drone's segment emits at its new home).
+            let mut touched = e;
             match ev {
                 Event::Segment { drone, tick } => {
                     let wl = &workloads[e];
@@ -333,9 +561,21 @@ impl<S: Scheduler> Cluster<S> {
                         {
                             segment_ids[e] += 1;
                             let sid = segment_ids[e];
-                            emit_segment(&mut edges[e], wl, now, drone,
-                                         tick, sid, &mut arrivals[e],
-                                         &mut q);
+                            // Fleet handover: a re-homed drone emits at
+                            // its current edge; the tick chain, churn
+                            // windows and arrival RNG stay with the
+                            // origin stream.
+                            let home = router.homed_edge(drone, e);
+                            if home != e {
+                                q.set_scope(home as u32);
+                                touched = home;
+                            }
+                            emit_segment(&mut edges[home], wl, now,
+                                         drone, tick, sid,
+                                         &mut arrivals[e], &mut q);
+                            if home != e {
+                                q.set_scope(scope);
+                            }
                         }
                         // Periodic ticks draw nothing from the RNG, so
                         // the paper's workloads stay bit-identical to the
@@ -368,6 +608,24 @@ impl<S: Scheduler> Cluster<S> {
                         edges[e].on_window_close(now, model_idx, &mut q);
                     }
                 }
+                Event::FedArrive { task } => {
+                    edges[e].accept_federated(now, task, &mut q);
+                }
+                Event::Handover { drone, to_edge } => {
+                    router.re_home(drone, to_edge as usize);
+                    edges[e].metrics.handovers += 1;
+                }
+            }
+            // Fleet work stealing: when the event left the touched edge
+            // fully idle, pull the best deadline-viable deferred entry
+            // from a sibling's cloud queue (§5.3 across edges).
+            if n > 1 {
+                if let Some(f) = fed.as_mut() {
+                    if f.steal {
+                        try_fed_steal(now, touched, f, &mut edges,
+                                      &mut *q);
+                    }
+                }
             }
         }
 
@@ -380,6 +638,87 @@ impl<S: Scheduler> Cluster<S> {
             per_edge.push(m);
         }
         ClusterMetrics { per_edge }
+    }
+}
+
+/// Cross-edge steal attempt for an idle `thief` edge: scan the siblings'
+/// deferred cloud queues for the best candidate by (negative-utility
+/// first, then κ/κ̂ steal rank — the same order as
+/// [`CloudQueue::best_steal`](crate::queues::CloudQueue)), feasibility-
+/// screened against the thief's own profile *including* the LAN transfer.
+/// The winner is removed from its origin queue and arrives at the thief
+/// as a [`Event::FedArrive`] after the transfer.
+fn try_fed_steal<S: Scheduler>(now: Micros, thief: usize,
+                               fed: &mut Federation,
+                               edges: &mut [Platform<S>],
+                               q: &mut EventQueue) {
+    {
+        // Only a fully idle thief steals across edges: its executor is
+        // free and its own queues gave it nothing to run (the local
+        // §5.3 hook already had its chance inside try_start_edge). The
+        // thief must itself run a stealing policy — in a mixed-policy
+        // cluster a non-stealing baseline neither offers nor steals, so
+        // federation extends §5.3 symmetrically.
+        let t = &edges[thief];
+        if !t.policy.use_edge
+            || !t.scheduler().federates(&t.core)
+            || t.core.running_edge.is_some()
+            || !t.core.edge_q.is_empty()
+        {
+            return;
+        }
+    }
+    // (origin edge, cloud-queue index, negative-utility, rank, transfer)
+    let mut best: Option<(usize, usize, bool, f64, Micros)> = None;
+    for (s, origin) in edges.iter().enumerate() {
+        if s == thief {
+            continue;
+        }
+        // The origin's scheduler gates federation (§5.3 extended): a
+        // policy that never steals locally is never stolen from either.
+        if !origin.scheduler().federates(&origin.core) {
+            continue;
+        }
+        for (idx, en) in origin.core.cloud_q.iter().enumerate() {
+            let kind = en.task.model;
+            // The thief must serve the model (hetero mixes differ) and
+            // its own profile prices the feasibility and the rank.
+            let tp = match edges[thief]
+                .models
+                .iter()
+                .find(|m| m.kind == kind)
+            {
+                Some(p) => p,
+                None => continue,
+            };
+            let transfer = fed.lan.transfer_time(
+                now,
+                en.task.segment.bytes,
+                &mut fed.rng,
+            );
+            if now + transfer + tp.t_edge > en.abs_deadline {
+                continue;
+            }
+            let cand =
+                (s, idx, en.negative_utility, tp.steal_rank(), transfer);
+            best = Some(match best {
+                None => cand,
+                Some(b) => {
+                    let better = (cand.2 && !b.2)
+                        || (cand.2 == b.2 && cand.3 > b.3);
+                    if better {
+                        cand
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+    }
+    if let Some((s, idx, _, _, transfer)) = best {
+        let entry = edges[s].take_fed_offer(idx);
+        q.set_scope(thief as u32);
+        q.push(now + transfer, Event::FedArrive { task: entry.task });
     }
 }
 
@@ -398,7 +737,20 @@ fn emit_segment<S: Scheduler>(platform: &mut Platform<S>, wl: &Workload,
     };
     let mut due: Vec<usize> = (0..platform.models.len())
         .filter(|&i| {
-            let every = wl.model_every.get(i).copied().unwrap_or(1);
+            // Cadence follows the *origin* workload per model kind: on
+            // the drone's home edge `platform.models == wl.models` and
+            // this is the plain positional lookup; after a handover to
+            // a hetero sibling, the decimation still tracks the model,
+            // not whatever sits at the same index there (models the
+            // origin never listed default to every tick).
+            let kind = platform.models[i].kind;
+            let every = wl
+                .models
+                .iter()
+                .position(|m| m.kind == kind)
+                .and_then(|j| wl.model_every.get(j))
+                .copied()
+                .unwrap_or(1);
             tick % every as u64 == 0
         })
         .collect();
@@ -423,12 +775,30 @@ mod tests {
 
     #[test]
     fn router_partitions_drones() {
-        let r = Router { drones_per_edge: 3 };
+        let r = Router::uniform(3);
         assert_eq!(r.edge_of(0), 0);
         assert_eq!(r.edge_of(2), 0);
         assert_eq!(r.edge_of(3), 1);
         assert_eq!(r.global_id(2, 1), 7);
         assert_eq!(r.edge_of(r.global_id(5, 2)), 5);
+        assert!(!r.is_dynamic());
+    }
+
+    #[test]
+    fn router_re_home_overrides_static_mapping() {
+        let mut r = Router::uniform(3);
+        assert_eq!(r.edge_of(4), 1);
+        r.re_home(4, 2);
+        assert!(r.is_dynamic());
+        assert_eq!(r.edge_of(4), 2);
+        assert_eq!(r.homed_edge(4, 1), 2);
+        // Untouched drones keep the static mapping (and the hetero
+        // prefix-sum fallback).
+        assert_eq!(r.edge_of(3), 1);
+        assert_eq!(r.homed_edge(3, 1), 1);
+        // A second handover replaces the first.
+        r.re_home(4, 0);
+        assert_eq!(r.edge_of(4), 0);
     }
 
     #[test]
@@ -594,6 +964,106 @@ mod tests {
             std::panic::AssertUnwindSafe(|| c.router()),
         );
         assert!(r.is_err(), "router() must reject mixed fleets");
+    }
+
+    fn closed_tasks(cm: &ClusterMetrics) -> u64 {
+        cm.per_edge
+            .iter()
+            .flat_map(|m| m.per_model.iter())
+            .map(|(_, s)| s.executed() + s.dropped())
+            .sum()
+    }
+
+    #[test]
+    fn federated_default_is_bit_identical() {
+        let wl = Workload::emulation(3, true);
+        let a =
+            Cluster::emulation(&Policy::dems_a(), &wl, 7, 3, &wan).run();
+        let b = Cluster::emulation(&Policy::dems_a(), &wl, 7, 3, &wan)
+            .federated(Federation::default())
+            .run();
+        assert_eq!(a, b, "all-off federation must change nothing");
+    }
+
+    #[test]
+    fn handover_rehomes_stream_at_exact_window_edge() {
+        use crate::time::secs;
+        let wl = Workload::emulation(2, false);
+        let fed = Federation::default().with_handover(Handover {
+            at: secs(150),
+            drone: 0,
+            to_edge: 1,
+        });
+        let cm = Cluster::emulation(&Policy::dems(), &wl, 9, 2, &wan)
+            .federated(fed)
+            .run();
+        // The handover is pushed at setup, so it wins the equal-
+        // timestamp tie: drone 0's tick at exactly t = 150 s already
+        // emits at edge 1 (150 ticks stay, 150 move; 4 models per tick).
+        assert_eq!(cm.per_edge[0].generated(), (150 + 300) * 4);
+        assert_eq!(cm.per_edge[1].generated(), (600 + 150) * 4);
+        assert_eq!(cm.per_edge[1].handovers, 1);
+        assert_eq!(cm.per_edge[0].handovers, 0);
+        // No double-count: tasks admitted at the old edge before the
+        // handover finish there, so each edge's accounting closes on
+        // its own generation count.
+        for m in &cm.per_edge {
+            let closed: u64 = m
+                .per_model
+                .iter()
+                .map(|(_, s)| s.executed() + s.dropped())
+                .sum();
+            assert_eq!(m.generated(), closed, "per-edge closure");
+        }
+        assert_eq!(cm.generated(), 2 * wl.total_tasks());
+    }
+
+    #[test]
+    fn fed_steal_relieves_overloaded_sibling_and_conserves() {
+        use crate::fleet::Arrival;
+        use crate::time::secs;
+        let policy = Policy::dems_a();
+        let heavy = Workload::emulation(4, true);
+        let light = Workload::emulation(2, false)
+            .with_arrival(Arrival::Bursty { on: secs(2), off: secs(8) });
+        let build = || {
+            let wls = vec![heavy.clone(), light.clone()];
+            let mut platforms = Vec::new();
+            let mut seeds = Vec::new();
+            for (e, w) in wls.iter().enumerate() {
+                let (p, s) =
+                    Cluster::edge_parts(&policy, w, 33, e, wan());
+                platforms.push(p);
+                seeds.push(s);
+            }
+            Cluster::from_parts_hetero(platforms, wls, seeds)
+        };
+        let iso = build().run();
+        let fed = build().federated(Federation::stealing()).run();
+        assert!(fed.fed_steals() > 0, "cross-edge steals occurred");
+        assert!(fed.fed_offers() >= fed.fed_steals(),
+                "every arrival has an offer");
+        // Conservation closes cluster-wide: stolen tasks are generated
+        // at the origin edge and finalized at the thief.
+        assert_eq!(fed.generated(), closed_tasks(&fed));
+        assert_eq!(fed.generated(), iso.generated(),
+                   "stealing never changes what is generated");
+    }
+
+    #[test]
+    fn shared_uplink_contention_queues_and_inflates() {
+        let wl = Workload::emulation(4, true);
+        let free =
+            Cluster::emulation(&Policy::dems(), &wl, 3, 2, &wan).run();
+        let tight = Cluster::emulation(&Policy::dems(), &wl, 3, 2, &wan)
+            .federated(Federation::default().with_uplink(2.0e6))
+            .run();
+        assert_eq!(free.uplink_wait(), 0);
+        assert_eq!(free.uplink_queued(), 0);
+        assert!(tight.uplink_queued() > 0,
+                "concurrent dispatches must queue on a 2 MB/s backhaul");
+        assert!(tight.uplink_wait() > 0);
+        assert_eq!(tight.generated(), closed_tasks(&tight));
     }
 
     #[test]

@@ -685,9 +685,12 @@ pub(crate) fn fig18_report(seed: u64) -> Result<Report> {
 
 // ---------------------------------------------------------------- helpers
 
-/// Quick textual summary of one run (used by examples and tests).
+/// Quick textual summary of one run (used by examples and tests). The
+/// fleet-federation counters are appended only when nonzero, so
+/// federation-off output is byte-identical to the pre-federation
+/// harness.
 pub fn summarize(m: &Metrics) -> String {
-    format!(
+    let mut s = format!(
         "done {}/{} ({:.1}%), QoS {:.0}, QoE {:.0}, stolen {}, resched {}",
         m.completed(),
         m.generated(),
@@ -696,5 +699,22 @@ pub fn summarize(m: &Metrics) -> String {
         m.qoe_utility(),
         m.stolen(),
         m.gems_rescheduled()
-    )
+    );
+    if m.fed_steals_in > 0 || m.fed_steals_out > 0 {
+        s.push_str(&format!(
+            ", x-steals {}in/{}out",
+            m.fed_steals_in, m.fed_steals_out
+        ));
+    }
+    if m.handovers > 0 {
+        s.push_str(&format!(", handovers {}", m.handovers));
+    }
+    if m.uplink_queued > 0 {
+        s.push_str(&format!(
+            ", uplink-queued {} ({:.1}s)",
+            m.uplink_queued,
+            m.uplink_wait as f64 / 1e6
+        ));
+    }
+    s
 }

@@ -34,7 +34,12 @@
 //!   [`cluster::Router`] driven by ONE scope-tagged
 //!   [`sim::EventQueue`], with aggregated [`cluster::ClusterMetrics`] —
 //!   the §8.1 multi-edge emulation as a first-class API
-//!   (`ocularone simulate --edges 7`).
+//!   (`ocularone simulate --edges 7`). A [`cluster::Federation`] layer
+//!   optionally lets the stations cooperate: cross-edge work stealing
+//!   (κ/κ̂-ranked, LAN-transfer charged), mid-run drone handover on the
+//!   now-dynamic router, and shared-uplink contention
+//!   ([`net::SharedUplink`]); all off by default and bit-identical to
+//!   the isolated engine when off.
 //! * [`cloud`] — the pluggable cloud tier behind
 //!   [`cloud::CloudBackend`]: [`cloud::SimpleBackend`] (the calibrated
 //!   legacy sampler, bit-identical default), [`cloud::FaasBackend`]

@@ -37,6 +37,8 @@ USAGE:
                      [--seed N] [--seeds K] [--jobs N]
                      [--cloud wan|trapezium|mobility|faas|multi-region]
                      [--keep-alive SECS] [--concurrency N]
+                     [--federation] [--uplink-mbps F]
+                     [--handover DRONE:EDGE@SECS[,..]]
                                            N>1 emulates N edge stations
                                            through one Cluster engine (§8.1);
                                            --seeds K sweeps K derived seeds
@@ -44,7 +46,13 @@ USAGE:
                                            --cloud picks the cloud backend
                                            (faas/multi-region add container
                                            keep-alive, a per-edge-account
-                                           concurrency ceiling and $ cost)
+                                           concurrency ceiling and $ cost);
+                                           --federation turns on cross-edge
+                                           work stealing, --uplink-mbps
+                                           shares one backhaul across the
+                                           stations, --handover re-homes a
+                                           drone mid-run (all need
+                                           --edges >= 2)
   ocularone serve [--policy ec] [--rate R] [--drones D] [--secs S]
                   [--artifacts DIR]        (requires the pjrt feature)
   ocularone bench-models [--artifacts DIR] (requires the pjrt feature)
@@ -55,6 +63,11 @@ fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter()
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Boolean flag presence (no value argument).
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 fn parse_policy(name: &str) -> Result<Policy> {
@@ -151,6 +164,76 @@ fn parse_cloud(args: &[String]) -> Result<scenario::CloudSpec> {
         );
     }
     Ok(spec)
+}
+
+/// Fleet-federation spec for `simulate`: `--federation` turns on
+/// cross-edge work stealing, `--uplink-mbps F` shares one F-MB/s
+/// backhaul across the stations, `--handover D:E@S` re-homes global
+/// drone D to edge E at S seconds (comma-separate several). All three
+/// are cross-edge mechanisms, so they demand `--edges >= 2` instead of
+/// being silently ignored.
+fn parse_federation(args: &[String], edges: usize)
+                    -> Result<Option<scenario::FederationSpec>> {
+    let steal = has_flag(args, "--federation");
+    let uplink_mbps: Option<f64> = flag(args, "--uplink-mbps")
+        .map(|s| s.parse())
+        .transpose()?;
+    let mut handovers = Vec::new();
+    if let Some(list) = flag(args, "--handover") {
+        for part in list.split(',') {
+            let (de, at) = match part.split_once('@') {
+                Some(x) => x,
+                None => bail!(
+                    "--handover expects DRONE:EDGE@SECS, got {part:?}"
+                ),
+            };
+            let (d, e) = match de.split_once(':') {
+                Some(x) => x,
+                None => bail!(
+                    "--handover expects DRONE:EDGE@SECS, got {part:?}"
+                ),
+            };
+            handovers.push(ocularone::cluster::Handover {
+                drone: d.parse()?,
+                to_edge: e.parse()?,
+                at: ocularone::time::secs(at.parse()?),
+            });
+        }
+    }
+    let spec = scenario::FederationSpec {
+        steal,
+        handovers,
+        uplink_bytes_per_sec: uplink_mbps.map(|m| m * 1.0e6),
+    };
+    if !spec.enabled() {
+        return Ok(None);
+    }
+    if edges < 2 {
+        bail!(
+            "--federation/--uplink-mbps/--handover need --edges >= 2 \
+             (cross-edge mechanisms on one station are no-ops)"
+        );
+    }
+    for h in &spec.handovers {
+        if h.to_edge >= edges {
+            bail!("--handover target edge {} out of range ({edges} edges)",
+                  h.to_edge);
+        }
+    }
+    Ok(Some(spec))
+}
+
+/// One-line federation summary for a cluster run.
+fn federation_summary(cm: &ocularone::cluster::ClusterMetrics) -> String {
+    format!(
+        "federation: {} x-edge steals ({} offered), {} handovers, \
+         uplink queued {} ({:.1}s delay)",
+        cm.fed_steals(),
+        cm.fed_offers(),
+        cm.handovers(),
+        cm.uplink_queued(),
+        cm.uplink_wait() as f64 / 1e6,
+    )
 }
 
 /// True when the spec carries FaaS accounting worth printing.
@@ -279,10 +362,11 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
         .unwrap_or(1);
     let jobs = parse_jobs(args)?;
     let cloud = parse_cloud(args)?;
+    let fed = parse_federation(args, edges)?;
     let name = policy.kind.name().to_string();
     if sweeps > 1 {
         return simulate_sweep(&name, policy, &wl, seed, edges, sweeps,
-                              jobs, &cloud);
+                              jobs, &cloud, fed.as_ref());
     }
     if edges == 1 {
         let cm = scenario::run_cluster(&policy, &wl, seed, 1, &cloud);
@@ -293,7 +377,8 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
         }
         return Ok(());
     }
-    let cm = scenario::run_cluster(&policy, &wl, seed, edges, &cloud);
+    let cm = scenario::run_cluster_federated(&policy, &wl, seed, edges,
+                                             &cloud, fed.as_ref());
     println!(
         "{} on {} x {} edges ({} drones, {} tasks):",
         name,
@@ -320,6 +405,9 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
     if cloud_has_accounting(&cloud) {
         println!("  {}", cloud_summary(&cm));
     }
+    if fed.is_some() {
+        println!("  {}", federation_summary(&cm));
+    }
     Ok(())
 }
 
@@ -331,7 +419,8 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
 #[allow(clippy::too_many_arguments)]
 fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
                   edges: usize, sweeps: u64, jobs: usize,
-                  cloud: &scenario::CloudSpec) -> Result<()> {
+                  cloud: &scenario::CloudSpec,
+                  fed: Option<&scenario::FederationSpec>) -> Result<()> {
     use ocularone::metrics::percentile;
 
     let runs = ocularone::pool::Pool::new(jobs).run(
@@ -339,7 +428,8 @@ fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
         |i| {
             let s = seed
                 .wrapping_add((i as u64).wrapping_mul(scenario::SEED_STRIDE));
-            scenario::run_cluster(&policy, wl, s, edges, cloud)
+            scenario::run_cluster_federated(&policy, wl, s, edges, cloud,
+                                            fed)
         },
     );
     println!(
@@ -378,6 +468,15 @@ fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
         println!(
             "  cloud: ${dollars:.4} total across seeds, \
              {throttled} throttled"
+        );
+    }
+    if fed.is_some() {
+        let steals: u64 = runs.iter().map(|cm| cm.fed_steals()).sum();
+        let handovers: u64 = runs.iter().map(|cm| cm.handovers()).sum();
+        let queued: u64 = runs.iter().map(|cm| cm.uplink_queued()).sum();
+        println!(
+            "  federation: {steals} x-edge steals, {handovers} \
+             handovers, {queued} uplink-queued across seeds"
         );
     }
     Ok(())

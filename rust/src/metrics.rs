@@ -95,6 +95,19 @@ pub struct Metrics {
     /// Edge executor busy time (for the §8.4 utilization numbers).
     pub edge_busy: Micros,
     pub duration: Micros,
+    /// Fleet-federation accounting (all zero unless the cluster runs a
+    /// [`Federation`](crate::cluster::Federation) layer): cross-edge
+    /// steal arrivals this edge executed-side received.
+    pub fed_steals_in: u64,
+    /// Deferred cloud entries this edge offered away to sibling edges.
+    pub fed_steals_out: u64,
+    /// Drones re-homed *to* this edge mid-run (fleet handover).
+    pub handovers: u64,
+    /// Total shared-uplink queueing delay charged to this edge's cloud
+    /// dispatches (fleet federation's contention model).
+    pub uplink_wait: Micros,
+    /// Cloud dispatches that had to queue on the shared uplink.
+    pub uplink_queued: u64,
     /// Cloud backend accounting. The default
     /// [`SimpleBackend`](crate::cloud::SimpleBackend) path only counts
     /// invocations (no cost, cold-start or throttle accounting).

@@ -184,6 +184,40 @@ pub fn mobility_trace(device: u64, duration_s: u64) -> Vec<f64> {
     out
 }
 
+/// Cluster-level shared backhaul (fleet federation): sibling edge
+/// stations on one uplink serialize their cloud transfers through a
+/// single bandwidth budget, so concurrent dispatches queue behind each
+/// other instead of each enjoying the full pipe.
+///
+/// The per-edge [`NetworkModel`] still samples the transfer itself (its
+/// latency and nominal bandwidth are unchanged); the uplink adds only the
+/// *queueing delay* of contention — how long a dispatch waits for the
+/// shared pipe to free up before its bytes can start flowing. That delay
+/// is folded into the invocation's observed duration, which is exactly
+/// what DEMS-A's §5.4 window sees and adapts t̂ to.
+#[derive(Clone, Debug)]
+pub struct SharedUplink {
+    /// Shared serialization bandwidth, bytes/second.
+    pub bandwidth: f64,
+    /// When the pipe frees up (virtual time).
+    busy_until: Micros,
+}
+
+impl SharedUplink {
+    pub fn new(bandwidth: f64) -> Self {
+        SharedUplink { bandwidth, busy_until: 0 }
+    }
+
+    /// Book a transfer of `bytes` starting no earlier than `now`; returns
+    /// the queueing delay (0 when the pipe is idle).
+    pub fn acquire(&mut self, now: Micros, bytes: u64) -> Micros {
+        let start = self.busy_until.max(now);
+        let tx = ms_f(bytes as f64 / self.bandwidth.max(1.0) * 1_000.0);
+        self.busy_until = start + tx;
+        start - now
+    }
+}
+
 /// Pretty stats helper used by the Fig. 2 harness.
 pub fn trace_stats(samples: &[f64]) -> (f64, f64, f64) {
     let mut s: Vec<f64> = samples.to_vec();
@@ -273,6 +307,20 @@ mod tests {
         assert_eq!(tr.sample_at(0), 1.0e6);
         assert_eq!(tr.sample_at(secs(1)), 2.0e6);
         assert_eq!(tr.sample_at(secs(2)), 1.0e6); // wraps
+    }
+
+    #[test]
+    fn shared_uplink_serializes_concurrent_transfers() {
+        // 1 MB/s pipe; 500 kB transfers occupy it 500 ms each.
+        let mut up = SharedUplink::new(1.0e6);
+        // Idle pipe: no wait, slot booked.
+        assert_eq!(up.acquire(0, 500_000), 0);
+        // Concurrent dispatch queues behind the full remaining slot.
+        assert_eq!(up.acquire(0, 500_000), ms(500));
+        // A later dispatch waits only for the residue.
+        assert_eq!(up.acquire(ms(800), 100_000), ms(200));
+        // Once the pipe drains, waits return to zero.
+        assert_eq!(up.acquire(ms(5_000), 100_000), 0);
     }
 
     #[test]

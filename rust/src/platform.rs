@@ -23,11 +23,13 @@
 //! `edge_exec`, `cloud_pool`, …) read like the pre-split monolith.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
 
 use crate::cloud::{Attempt, CloudBackend, CloudStats};
 use crate::exec::EdgeExecModel;
 use crate::metrics::{Metrics, TimelinePoint};
 use crate::model::{DnnKind, ModelProfile, Resource};
+use crate::net::SharedUplink;
 use crate::policy::Policy;
 use crate::qoe::WindowMonitor;
 use crate::queues::{CloudEntry, CloudQueue, EdgeEntry, EdgeQueue};
@@ -84,6 +86,10 @@ pub struct Core {
     /// legacy sampler bit-identically; FaaS/multi-region backends add
     /// container lifecycle, concurrency ceilings and billing.
     pub(crate) cloud: Box<dyn CloudBackend>,
+    /// Shared backhaul serializing this edge's cloud transfers with its
+    /// siblings' (fleet federation); `None` — the default — models
+    /// independent uplinks and changes nothing.
+    pub(crate) uplink: Option<Arc<Mutex<SharedUplink>>>,
     /// Per-model QoE window monitors (Alg. 1 counters; always recorded so
     /// any scheduler can consult them).
     pub(crate) qoe: Vec<WindowMonitor>,
@@ -122,6 +128,7 @@ impl Core {
             cloud_pool: 16,
             edge_exec: EdgeExecModel::default(),
             cloud: cloud.into(),
+            uplink: None,
             qoe,
             rng: Rng::new(seed),
             next_task_id: 0,
@@ -237,20 +244,36 @@ impl Core {
                 return Some((e, retry_after));
             }
         };
+        // Shared-uplink contention (fleet federation): the dispatch
+        // queues for the sibling-shared pipe before its bytes can flow;
+        // the wait inflates the observed duration, which is what the
+        // §5.4 adaptation window then reacts to.
+        let mut duration = inv.duration;
+        if let Some(up) = &self.uplink {
+            let wait = up
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .acquire(now, e.task.segment.bytes);
+            if wait > 0 {
+                self.metrics.uplink_wait += wait;
+                self.metrics.uplink_queued += 1;
+                duration += wait;
+            }
+        }
         self.next_cloud_key += 1;
         let key = self.next_cloud_key;
         self.cloud_running.insert(
             key,
             CloudRunning {
                 entry: e,
-                end: now + inv.duration,
-                duration: inv.duration,
+                end: now + duration,
+                duration,
                 timed_out: inv.timed_out,
                 token: inv.token,
             },
         );
         self.cloud_inflight += 1;
-        q.push(now + inv.duration, Event::CloudDone { key });
+        q.push(now + duration, Event::CloudDone { key });
         None
     }
 
@@ -690,6 +713,54 @@ impl<S: Scheduler> Platform<S> {
         self.sched.on_window_close(&mut ctx, model_idx);
     }
 
+    // --------------------------------------------------------- federation
+
+    /// Fleet federation: a task stolen from a sibling edge arrives after
+    /// its LAN transfer. It is JIT-checked against *this* edge's profile
+    /// (hetero stations run their own t table); accepted tasks join the
+    /// edge queue under this edge's priority order and start immediately
+    /// when the executor is idle. Generation stays accounted at the
+    /// origin edge — only the execution outcome lands here, so
+    /// conservation holds cluster-wide (not per edge), which is exactly
+    /// what the invariant harness asserts.
+    pub fn accept_federated(&mut self, now: Micros, task: Task,
+                            q: &mut EventQueue) {
+        self.core.metrics.fed_steals_in += 1;
+        let (dl, te, hp) = {
+            let p = self.core.profile(task.model);
+            (task.absolute_deadline(p.deadline), p.t_edge,
+             p.hpf_priority())
+        };
+        if now + te > dl {
+            // The transfer ate the remaining headroom (the steal-time
+            // feasibility screen makes this rare).
+            self.core.drop_task(now, task, DropReason::JitExpired);
+            self.drain_done(now, q);
+            return;
+        }
+        self.core.edge_q.insert(task, dl, te, hp);
+        self.try_start_edge(now, q);
+    }
+
+    /// Fleet federation: hand the cloud-queue entry at `idx` to a sibling
+    /// edge (the federation coordinator picked it via the κ/κ̂ steal
+    /// rank). The stale trigger event it leaves behind is harmless — the
+    /// trigger handler pops by due time, exactly as local §5.3 steals
+    /// always have.
+    pub(crate) fn take_fed_offer(&mut self, idx: usize)
+                                 -> crate::queues::CloudEntry {
+        self.core.metrics.fed_steals_out += 1;
+        self.core.cloud_q.remove_at(idx)
+    }
+
+    /// Fleet federation: a stolen task was still in LAN transfer when the
+    /// run drained — close its accounting at the destination edge.
+    pub fn drop_in_transit(&mut self, now: Micros, task: Task,
+                           q: &mut EventQueue) {
+        self.core.drop_task(now, task, DropReason::JitExpired);
+        self.drain_done(now, q);
+    }
+
     // --------------------------------------------------------------- end
 
     /// Drain bookkeeping at end of run (drops queued tasks as infeasible so
@@ -777,7 +848,8 @@ mod tests {
                 Event::WindowClose { model_idx } => {
                     p.on_window_close(t, model_idx, q)
                 }
-                Event::Segment { .. } => {}
+                // Segment / federation events: cluster-driver concerns.
+                _ => {}
             }
         }
     }

@@ -66,6 +66,13 @@ impl Cell {
         Cell { value: Value::Float(v), text: format!("${v:.4}") }
     }
 
+    /// Seconds cell over a microsecond total (federation uplink delays,
+    /// transfer budgets): renders `12.3`, serializes `Value::Float` in
+    /// seconds.
+    pub fn seconds(us: u64, decimals: usize) -> Cell {
+        Cell::float(us as f64 / 1e6, decimals)
+    }
+
     /// Custom display text over an explicit machine value (e.g. `83.1%`
     /// over `Float(83.1)`, or `DNF@112s` over a string).
     pub fn fmt(value: Value, text: impl Into<String>) -> Cell {
@@ -674,6 +681,14 @@ mod tests {
         // Ordinary seeds stay plain JSON numbers.
         let small = Report::new("s", "S", 42).to_json();
         assert!(small.contains("\"seed\":42"), "{small}");
+    }
+
+    #[test]
+    fn seconds_cell_converts_micros() {
+        let c = Cell::seconds(12_345_678, 1);
+        assert_eq!(c.value, Value::Float(12.345678));
+        assert_eq!(c.text, "12.3");
+        assert_eq!(Cell::seconds(0, 1).text, "0.0");
     }
 
     #[test]

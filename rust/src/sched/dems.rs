@@ -3,6 +3,14 @@
 //! adaptation of the expected cloud durations. Which rungs of the ladder
 //! are active comes from the declarative [`Policy`](crate::policy::Policy)
 //! flags (`migration`, `stealing`, `defer_cloud`, `adaptive`).
+//!
+//! Fleet federation hooks in here for free: DEMS's `stealing` +
+//! `defer_cloud` flags satisfy the default
+//! [`Scheduler::federates`](crate::sched::Scheduler::federates) gate, so
+//! a federated cluster may offer this edge's deferred entries to idle
+//! siblings; and shared-uplink queueing delay arrives through the same
+//! `on_cloud_report` observations, so DEMS-A's §5.4 window adapts t̂ to
+//! backhaul contention exactly as it does to WAN slowdown.
 
 use crate::adapt::ModelAdapt;
 use crate::model::DnnKind;

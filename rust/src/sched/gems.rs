@@ -5,6 +5,11 @@
 //! addition is the per-completion hook: when a model's incremental window
 //! completion rate α̂ falls behind its target α, the scheduler greedily
 //! reschedules that model's pending edge tasks to the cloud (lines 8–14).
+//!
+//! Under a fleet [`Federation`](crate::cluster::Federation) GEMS behaves
+//! like DEMS: its policy flags pass the default
+//! [`Scheduler::federates`] gate, so rescheduled-to-cloud tasks parked in
+//! the deferred queue are steal candidates for idle sibling edges too.
 
 use crate::model::DnnKind;
 use crate::platform::Core;

@@ -179,6 +179,18 @@ pub trait Scheduler: Send {
                        _model_idx: usize) {
     }
 
+    /// Fleet federation (cross-edge §5.3): may this edge's deferred
+    /// cloud entries be offered to sibling edges? The default follows
+    /// the local steal gate — only deferring, stealing policies
+    /// participate, so federation *extends* §5.3 rather than overruling
+    /// a policy that never steals. DEMS/GEMS inherit this (their
+    /// `stealing`+`defer_cloud` flags opt them in); the candidate itself
+    /// is then ranked with the same κ/κ̂ machinery as
+    /// [`steal_candidate`].
+    fn federates(&self, core: &Core) -> bool {
+        core.policy.stealing && core.policy.defer_cloud
+    }
+
     // ------------------------------------------------- provided machinery
 
     /// Deliver buffered task-done reports (from finalizes performed inside
@@ -318,6 +330,10 @@ impl Scheduler for Box<dyn Scheduler> {
     fn on_window_close(&mut self, ctx: &mut SchedCtx<'_>,
                        model_idx: usize) {
         (**self).on_window_close(ctx, model_idx)
+    }
+
+    fn federates(&self, core: &Core) -> bool {
+        (**self).federates(core)
     }
 }
 

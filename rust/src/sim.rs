@@ -19,6 +19,7 @@ use crate::fleet::Workload;
 use crate::metrics::Metrics;
 use crate::platform::Platform;
 use crate::sched::Scheduler;
+use crate::task::Task;
 use crate::time::{secs, Micros};
 
 /// Platform events, ordered by virtual time.
@@ -34,6 +35,12 @@ pub enum Event {
     CloudDone { key: u64 },
     /// A model's tumbling QoE window closed.
     WindowClose { model_idx: usize },
+    /// A cross-edge stolen task arrives at its destination edge after
+    /// its LAN transfer (fleet federation; scope = destination edge).
+    FedArrive { task: Task },
+    /// A drone re-homes to another edge (fleet handover; scope = the
+    /// destination edge, which records the handover).
+    Handover { drone: u32, to_edge: u32 },
 }
 
 struct Item {
@@ -68,6 +75,18 @@ impl Ord for Item {
 /// one queue can interleave N independent platforms deterministically. The
 /// scope is ignored in single-edge runs; relative ordering is always
 /// `(time, push order)`, never scope.
+///
+/// Cross-edge tie-break (audited for the fleet-federation layer): when a
+/// federated event — a steal arrival, a handover — lands on the same
+/// microsecond as a sibling edge's local event (a cloud trigger, an
+/// `EdgeDone`), the winner is strictly whichever was *pushed first*; the
+/// scope stamp never reorders. Handovers are pushed at cluster setup, so
+/// a handover at `t` always precedes segment ticks at `t` (their pushes
+/// chain from `t − period`); steal arrivals are pushed at steal time, so
+/// they rank after any same-instant event that was already pending. This
+/// order is pinned by `cross_edge_equal_timestamp_ties_break_by_push_order`
+/// below — federation stays deterministic because every tie is resolved
+/// by push order alone.
 #[derive(Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Reverse<Item>>,
@@ -174,6 +193,56 @@ mod tests {
         assert!(matches!(e1, Event::EdgeDone));
         let (_, s2, _) = q.pop_scoped().unwrap();
         assert_eq!(s2, 1);
+    }
+
+    #[test]
+    fn cross_edge_equal_timestamp_ties_break_by_push_order() {
+        // Federation determinism pin: a steal arrival for edge 1 pushed
+        // *before* edge 0's local cloud dispatch at the same timestamp
+        // pops first, and vice versa — (time, push seq) is the whole
+        // order; the scope stamp never reorders equal timestamps.
+        use crate::model::DnnKind;
+        use crate::task::VideoSegment;
+        let mktask = || Task {
+            id: 1,
+            model: DnnKind::Hv,
+            segment: VideoSegment {
+                id: 1,
+                drone: 0,
+                created_at: 0,
+                bytes: 38_000,
+            },
+        };
+        let mut q = EventQueue::new();
+        q.set_scope(1);
+        q.push(100, Event::FedArrive { task: mktask() });
+        q.set_scope(0);
+        q.push(100, Event::CloudTrigger);
+        let (t, s, e) = q.pop_scoped().unwrap();
+        assert_eq!((t, s), (100, 1));
+        assert!(matches!(e, Event::FedArrive { .. }));
+        let (t, s, e) = q.pop_scoped().unwrap();
+        assert_eq!((t, s), (100, 0));
+        assert!(matches!(e, Event::CloudTrigger));
+        // Reversed push order reverses the winner at the same instant.
+        let mut q = EventQueue::new();
+        q.set_scope(0);
+        q.push(100, Event::CloudTrigger);
+        q.set_scope(1);
+        q.push(100, Event::FedArrive { task: mktask() });
+        let (_, s, e) = q.pop_scoped().unwrap();
+        assert_eq!(s, 0);
+        assert!(matches!(e, Event::CloudTrigger));
+        // And a handover pushed at setup precedes a same-instant local
+        // event pushed later (the "re-home exactly at the window edge"
+        // boundary).
+        let mut q = EventQueue::new();
+        q.set_scope(1);
+        q.push(200, Event::Handover { drone: 0, to_edge: 1 });
+        q.set_scope(0);
+        q.push(200, Event::Segment { drone: 0, tick: 3 });
+        let (_, _, e) = q.pop_scoped().unwrap();
+        assert!(matches!(e, Event::Handover { .. }));
     }
 
     #[test]

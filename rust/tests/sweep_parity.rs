@@ -49,6 +49,57 @@ fn cost_frontier_parallel_parity() {
 }
 
 #[test]
+fn fed_steal_parallel_parity() {
+    // Federation state (LAN model, steal RNG, shared uplink) is built
+    // fresh per cluster cell, so cross-edge steal counts and transfer
+    // charges reproduce for any worker count.
+    assert_parity("fed-steal", 42);
+}
+
+#[test]
+fn handover_churn_parallel_parity() {
+    assert_parity("handover-churn", 42);
+}
+
+#[test]
+fn shared_uplink_parallel_parity() {
+    // The shared-uplink Mutex serializes within one cluster only; cells
+    // share nothing, so the queue-delay columns are byte-identical
+    // across `--jobs` values.
+    assert_parity("shared-uplink", 42);
+}
+
+#[test]
+fn federation_off_is_bit_identical_to_unfederated() {
+    // The regression pin behind "federation off changes nothing": a
+    // cluster federated with the all-off config produces bit-identical
+    // metrics to an unfederated run — which is also why the golden
+    // fig8 summaries and `experiment all` JSON stay byte-identical.
+    use ocularone::cloud::CloudBackend;
+    use ocularone::cluster::{Cluster, Federation};
+    use ocularone::exec::CloudExecModel;
+    use ocularone::fleet::Workload;
+    use ocularone::net::LognormalWan;
+    use ocularone::policy::Policy;
+
+    fn wan() -> Box<dyn CloudBackend> {
+        CloudExecModel::new(Box::new(LognormalWan::default())).into()
+    }
+    for policy in [Policy::dems(), Policy::dems_a(), Policy::gems(false)]
+    {
+        let wl = Workload::emulation(3, true);
+        let plain =
+            Cluster::emulation(&policy, &wl, 42, 3, &wan).run();
+        let federated = Cluster::emulation(&policy, &wl, 42, 3, &wan)
+            .federated(Federation::default())
+            .run();
+        assert_eq!(plain, federated,
+                   "all-off federation diverged under {}",
+                   policy.kind.name());
+    }
+}
+
+#[test]
 fn scenario_grid_parity_across_worker_counts() {
     use ocularone::fleet::Workload;
     use ocularone::policy::Policy;
