@@ -23,6 +23,7 @@ use crate::cloud::{CloudBackend, CloudStats};
 use crate::fleet::{Arrival, Workload};
 use crate::metrics::{self, Metrics};
 use crate::net::{ConstantNet, NetworkModel, SharedUplink};
+use crate::pipeline::PipelineRef;
 use crate::platform::Platform;
 use crate::policy::Policy;
 use crate::rng::Rng;
@@ -528,18 +529,27 @@ impl<S: Scheduler> Cluster<S> {
         let horizon =
             workloads.iter().map(|w| w.duration).max().unwrap_or(0)
                 + SETTLE;
+        let pipelined = workloads.iter().any(|w| w.pipeline.is_some());
         while let Some((now, scope, ev)) = q.pop_scoped() {
             if now > horizon {
-                if fed.is_none() {
+                if fed.is_none() && !pipelined {
                     break;
                 }
                 // Federated runs keep popping: a steal still in LAN
                 // transfer must close its accounting at the destination
                 // edge or the cluster-wide conservation invariant leaks.
-                if let Event::FedArrive { task } = ev {
-                    let e = scope as usize;
-                    q.set_scope(scope);
-                    edges[e].drop_in_transit(horizon, task, &mut *q);
+                // Pipeline runs likewise: a stage still running on a
+                // drone was counted generated and must close, while a
+                // successor still in handoff was never submitted and is
+                // simply discarded.
+                match ev {
+                    Event::FedArrive { task }
+                    | Event::DroneDone { task, .. } => {
+                        let e = scope as usize;
+                        q.set_scope(scope);
+                        edges[e].drop_in_transit(horizon, task, &mut *q);
+                    }
+                    _ => {}
                 }
                 continue;
             }
@@ -615,6 +625,12 @@ impl<S: Scheduler> Cluster<S> {
                     router.re_home(drone, to_edge as usize);
                     edges[e].metrics.handovers += 1;
                 }
+                Event::StageArrive { task } => {
+                    edges[e].submit_task(now, task, &mut q)
+                }
+                Event::DroneDone { task, started } => {
+                    edges[e].on_drone_done(now, task, started, &mut q)
+                }
             }
             // Fleet work stealing: when the event left the touched edge
             // fully idle, pull the best deadline-viable deferred entry
@@ -680,6 +696,12 @@ fn try_fed_steal<S: Scheduler>(now: Micros, thief: usize,
             continue;
         }
         for (idx, en) in origin.core.cloud_q.iter().enumerate() {
+            // Fixed-cut pipeline stages are pinned to their tier — the
+            // cut is the experiment's control variable, so the fleet
+            // never steals them either.
+            if en.pinned {
+                continue;
+            }
             let kind = en.task.model;
             // The thief must serve the model (hetero mixes differ) and
             // its own profile prices the feasibility and the rank.
@@ -693,7 +715,7 @@ fn try_fed_steal<S: Scheduler>(now: Micros, thief: usize,
             };
             let transfer = fed.lan.transfer_time(
                 now,
-                en.task.segment.bytes,
+                en.task.payload_bytes(),
                 &mut fed.rng,
             );
             if now + transfer + tp.t_edge > en.abs_deadline {
@@ -735,6 +757,28 @@ fn emit_segment<S: Scheduler>(platform: &mut Platform<S>, wl: &Workload,
         created_at: now,
         bytes: wl.segment_bytes,
     };
+    // Pipeline workload: each tick emits ONE stage-0 chain task — the
+    // chain's stages cover the app mix, and successors are minted by
+    // the platform as stages complete. The branch draws nothing from
+    // the arrival RNG (a 1-model plain workload's shuffle draws nothing
+    // either), which keeps single-stage graphs bit-identical to the
+    // plain path below.
+    if let Some(graph) = &wl.pipeline {
+        let drone_prefix = platform.plan_drone_prefix(graph);
+        let id = platform.fresh_task_id();
+        let task = Task {
+            id,
+            model: graph.stages[0].kind,
+            segment,
+            pipeline: Some(PipelineRef {
+                graph: graph.clone(),
+                stage: 0,
+                drone_prefix,
+            }),
+        };
+        platform.submit_task(now, task, q);
+        return;
+    }
     let mut due: Vec<usize> = (0..platform.models.len())
         .filter(|&i| {
             // Cadence follows the *origin* workload per model kind: on
@@ -758,7 +802,8 @@ fn emit_segment<S: Scheduler>(platform: &mut Platform<S>, wl: &Workload,
     for i in due {
         let model = platform.models[i].kind;
         let id = platform.fresh_task_id();
-        let task = Task { id, model, segment: segment.clone() };
+        let task =
+            Task { id, model, segment: segment.clone(), pipeline: None };
         platform.submit_task(now, task, q);
     }
 }
@@ -1064,6 +1109,28 @@ mod tests {
                 "concurrent dispatches must queue on a 2 MB/s backhaul");
         assert!(tight.uplink_wait() > 0);
         assert_eq!(tight.generated(), closed_tasks(&tight));
+    }
+
+    #[test]
+    fn pipeline_workload_runs_chains_and_conserves() {
+        let wl = Workload::vip_pipeline();
+        let cm =
+            Cluster::emulation(&Policy::dems(), &wl, 11, 2, &wan).run();
+        assert!(cm.generated() > 0);
+        assert_eq!(cm.generated(), closed_tasks(&cm),
+                   "per-stage accounting closes");
+        // Chains make progress end-to-end: final stages complete.
+        let finals: u64 = cm
+            .per_edge
+            .iter()
+            .map(|m| m.stats(crate::model::DnnKind::Deo).completed())
+            .sum();
+        assert!(finals > 0, "chains complete end-to-end");
+        // All-off federation stays bit-identical under pipelines too.
+        let fed = Cluster::emulation(&Policy::dems(), &wl, 11, 2, &wan)
+            .federated(Federation::default())
+            .run();
+        assert_eq!(cm, fed);
     }
 
     #[test]

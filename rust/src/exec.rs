@@ -111,6 +111,46 @@ impl EdgeExecModel {
     }
 }
 
+/// Drone companion-computer service-time model for split-DNN pipeline
+/// prefixes (see [`crate::pipeline`]): the early backbone layers run on a
+/// lighter accelerator, modeled as a constant slowdown of the profile's
+/// edge p99 with the same lognormal shape as [`EdgeExecModel`]. Only
+/// tasks carrying a `PipelineRef` with a planned drone prefix ever sample
+/// this, so non-pipeline runs draw nothing from it (bit-identity).
+#[derive(Clone, Debug)]
+pub struct DroneExecModel {
+    /// Companion-computer slowdown vs. the edge accelerator (p99 ratio).
+    pub slowdown: f64,
+    /// Lognormal sigma; 0 collapses to the exact p99 (deterministic).
+    pub sigma: f64,
+}
+
+impl Default for DroneExecModel {
+    /// 2× the edge p99 — between the paper's Jetson Nano edge and a
+    /// typical companion-computer class device — with the edge's σ.
+    fn default() -> Self {
+        DroneExecModel { slowdown: 2.0, sigma: 0.22 }
+    }
+}
+
+impl DroneExecModel {
+    /// Expected (p99) duration of one stage on the drone — what the
+    /// prefix planner budgets against per-stage deadlines.
+    pub fn expected(&self, profile: &ModelProfile) -> Micros {
+        (profile.t_edge as f64 * self.slowdown).round() as Micros
+    }
+
+    /// Sample an actual on-drone execution duration.
+    pub fn sample(&self, profile: &ModelProfile, rng: &mut Rng) -> Micros {
+        let p99 = self.expected(profile);
+        if self.sigma == 0.0 {
+            return p99;
+        }
+        let median = p99 as f64 / (self.sigma * Z99).exp();
+        rng.lognormal(median, self.sigma) as Micros
+    }
+}
+
 /// Cloud FaaS service-time model: per-invocation compute sample + cold
 /// starts + network transfer via the pluggable [`NetworkModel`].
 pub struct CloudExecModel {
@@ -203,6 +243,22 @@ mod tests {
         // work-stealing heuristic exploits (§5.3).
         let p50 = pctile(&mut xs, 0.50);
         assert!(p50 < 174.0 * 0.85, "p50 = {p50}");
+    }
+
+    #[test]
+    fn drone_p99_is_slowdown_times_edge() {
+        let m = &table1()[0]; // HV: t = 174 ms
+        let dm = DroneExecModel::default();
+        assert_eq!(dm.expected(m), ms(348));
+        let mut rng = Rng::new(5);
+        let mut xs: Vec<f64> = (0..40_000)
+            .map(|_| to_ms(dm.sample(m, &mut rng)))
+            .collect();
+        let p99 = pctile(&mut xs, 0.99);
+        assert!((p99 - 348.0).abs() < 24.0, "p99 = {p99}");
+        // sigma = 0 collapses to the exact p99.
+        let det = DroneExecModel { slowdown: 2.0, sigma: 0.0 };
+        assert_eq!(det.sample(m, &mut rng), ms(348));
     }
 
     #[test]

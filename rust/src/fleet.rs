@@ -6,10 +6,13 @@
 //! per registered model — 8–24 tasks/s per edge. The §8.8 field workload
 //! instead generates HV per frame and DEV/BP every third frame at 15/30 FPS.
 
+use std::sync::Arc;
+
 use crate::exec::EdgeExecModel;
-use crate::model::{table1, table1_passive, table2, GemsWorkload,
+use crate::model::{table1, table1_passive, table2, DnnKind, GemsWorkload,
                    ModelProfile};
-use crate::time::{ms_f, secs, Micros};
+use crate::pipeline::{Stage, StageGraph};
+use crate::time::{ms, ms_f, secs, Micros};
 
 /// Per-drone segment arrival process (beyond-paper axis; the paper's
 /// emulation is strictly periodic).
@@ -56,6 +59,11 @@ pub struct Workload {
     /// Mid-run drone join/leave windows (default: none — all drones
     /// stream for the whole run).
     pub churn: Vec<DroneChurn>,
+    /// Split-DNN pipeline chain: when set, each drone tick emits ONE
+    /// stage-0 chain task (instead of one task per model) and stage
+    /// completions spawn the successors ([`crate::pipeline`]). `None`
+    /// keeps the classic per-model emission bit-identically.
+    pub pipeline: Option<Arc<StageGraph>>,
 }
 
 impl Workload {
@@ -84,6 +92,14 @@ impl Workload {
     /// Override the run duration.
     pub fn with_duration(mut self, duration: Micros) -> Workload {
         self.duration = duration;
+        self
+    }
+
+    /// Attach a split-DNN pipeline chain: every drone tick emits one
+    /// stage-0 task of `graph` and completions chain the successors. The
+    /// graph's stage kinds must be registered in `models`.
+    pub fn with_pipeline(mut self, graph: StageGraph) -> Workload {
+        self.pipeline = Some(Arc::new(graph));
         self
     }
 
@@ -131,9 +147,15 @@ impl Workload {
             / (self.segment_period as f64 / 1_000_000.0)
     }
 
-    /// Total tasks generated over the run.
+    /// Total tasks generated over the run. For a pipeline workload this
+    /// counts the chain roots (one per segment tick); successor stages
+    /// spawn dynamically on upstream success, so the realized stage-task
+    /// total is between this and `len ×` it.
     pub fn total_tasks(&self) -> u64 {
         let ticks = self.duration / self.segment_period;
+        if self.pipeline.is_some() {
+            return ticks * self.drones as u64;
+        }
         let mut n = 0u64;
         for &e in &self.model_every {
             n += ticks / e.max(1) as u64 + u64::from(ticks % e.max(1) as u64 != 0);
@@ -164,6 +186,7 @@ impl Workload {
             edge_exec: EdgeExecModel::default(),
             arrival: Arrival::Periodic,
             churn: Vec::new(),
+            pipeline: None,
         }
     }
 
@@ -201,6 +224,7 @@ impl Workload {
             edge_exec: EdgeExecModel::sleep_semantics(),
             arrival: Arrival::Periodic,
             churn: Vec::new(),
+            pipeline: None,
         }
     }
 
@@ -226,7 +250,86 @@ impl Workload {
             edge_exec: EdgeExecModel { sigma: 0.14, overhead: (0, 0) },
             arrival: Arrival::Periodic,
             churn: Vec::new(),
+            pipeline: None,
         }
+    }
+
+    /// The split-DNN VIP chain: detect → track → describe, one chain per
+    /// drone per second with a 2 s end-to-end deadline.
+    ///
+    /// The three stages are *layer partitions* of one perception
+    /// pipeline, so the profiles are chain-specific rather than Table 1
+    /// rows: only the final stage carries the chain's β (intermediate
+    /// outputs are worthless alone), the early stages are light enough
+    /// for a companion computer, and the describe head is cloud-friendly
+    /// (t̂ < t, as for Deo in Table 1). The numbers make the cut matter:
+    /// pinning everything cloud-side blows the tight stage-0 deadline,
+    /// keeping everything edge-side overloads the station at 4 chains/s,
+    /// and the adaptive policy's drone prefix + stage-aware κ̂ ranking
+    /// threads the needle (pinned by the `split-pipeline` scenario test).
+    pub fn vip_pipeline() -> Workload {
+        let stage_profile = |kind, benefit, dl_ms, te_ms, tc_ms, ke, kc| {
+            ModelProfile {
+                kind,
+                benefit,
+                deadline: ms(dl_ms),
+                t_edge: ms(te_ms),
+                t_cloud: ms(tc_ms),
+                cost_edge: ke,
+                cost_cloud: kc,
+                qoe_benefit: 0.0,
+                qoe_rate: 0.0,
+                qoe_window: ms(20_000),
+            }
+        };
+        let models = vec![
+            // Detect backbone: cheap on fleet hardware, hopeless on the
+            // cloud within its 320 ms stage budget (t̂ ≈ 600 ms).
+            stage_profile(DnnKind::Hv, 0.0, 320, 120, 600, 5.0, 25.0),
+            // Track: same shape, slightly heavier.
+            stage_profile(DnnKind::Md, 0.0, 640, 180, 700, 5.0, 15.0),
+            // Describe head: the chain's whole β, cloud-friendly.
+            stage_profile(DnnKind::Deo, 250.0, 2_000, 700, 450, 40.0, 60.0),
+        ];
+        let graph = StageGraph::chain(
+            "vip-chain",
+            vec![
+                Stage {
+                    kind: DnnKind::Hv,
+                    deadline_slack: 0.16,
+                    output_bytes: 24_000,
+                    drone_capable: true,
+                },
+                Stage {
+                    kind: DnnKind::Md,
+                    deadline_slack: 0.16,
+                    output_bytes: 16_000,
+                    drone_capable: true,
+                },
+                Stage {
+                    kind: DnnKind::Deo,
+                    deadline_slack: 0.68,
+                    output_bytes: 0,
+                    drone_capable: false,
+                },
+            ],
+            ms(2_000),
+        );
+        let n = models.len();
+        Workload {
+            name: "vip-pipe".into(),
+            models,
+            drones: 4,
+            duration: secs(60),
+            segment_period: secs(1),
+            segment_bytes: 38_000,
+            model_every: vec![1; n],
+            edge_exec: EdgeExecModel::default(),
+            arrival: Arrival::Periodic,
+            churn: Vec::new(),
+            pipeline: None,
+        }
+        .with_pipeline(graph)
     }
 }
 
@@ -344,6 +447,38 @@ mod tests {
         let z = Workload::emulation(2, false)
             .with_arrival(Arrival::Bursty { on: 0, off: 0 });
         assert!(z.arrival_on(secs(5)));
+    }
+
+    #[test]
+    fn vip_pipeline_chain_is_well_formed() {
+        let wl = Workload::vip_pipeline();
+        let g = wl.pipeline.as_ref().expect("pipeline attached");
+        assert_eq!(g.len(), 3);
+        // Stage deadlines partition the 2 s end-to-end budget.
+        assert_eq!(g.stage_deadline(0), ms(320));
+        assert_eq!(g.stage_deadline(1), ms(640));
+        assert_eq!(g.stage_deadline(2), ms(2_000));
+        // Every stage kind is registered in the workload's models.
+        for s in &g.stages {
+            assert!(wl.models.iter().any(|m| m.kind == s.kind),
+                    "{:?} unregistered", s.kind);
+        }
+        // Only the final stage carries the chain's benefit, and its
+        // remaining-chain cloud utility is positive from stage 0 on —
+        // what lets the adaptive cut send the describe head out.
+        assert_eq!(wl.models[0].benefit, 0.0);
+        assert_eq!(wl.models[1].benefit, 0.0);
+        assert!(wl.models[2].benefit > 0.0);
+        let pr = crate::pipeline::PipelineRef {
+            graph: g.clone(),
+            stage: 0,
+            drone_prefix: 2,
+        };
+        let chain_util = crate::pipeline::chain_util_cloud(
+            Some(&pr), &wl.models[0], &wl.models);
+        assert_eq!(chain_util, 250.0 - 25.0 - 15.0 - 60.0);
+        // The classic presets stay pipeline-free.
+        assert!(Workload::emulation(3, true).pipeline.is_none());
     }
 
     #[test]

@@ -85,6 +85,7 @@ pub mod metrics;
 pub mod model;
 pub mod nav;
 pub mod net;
+pub mod pipeline;
 pub mod platform;
 pub mod policy;
 pub mod pool;

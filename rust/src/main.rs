@@ -33,14 +33,19 @@ USAGE:
                                            --jobs N sweeps on N workers
                                            (0 = all cores; reports are
                                            byte-identical to --jobs 1)
-  ocularone simulate [--workload 3D-A] [--policy dems] [--edges N]
-                     [--seed N] [--seeds K] [--jobs N]
+  ocularone simulate [--workload 3D-A] [--pipeline] [--policy dems]
+                     [--edges N] [--seed N] [--seeds K] [--jobs N]
                      [--cloud wan|trapezium|mobility|faas|multi-region]
                      [--keep-alive SECS] [--concurrency N]
                      [--federation] [--uplink-mbps F]
                      [--handover DRONE:EDGE@SECS[,..]]
                                            N>1 emulates N edge stations
                                            through one Cluster engine (§8.1);
+                                           --pipeline swaps the workload
+                                           for the VIP split-DNN chain
+                                           (Hv -> Md -> Deo stage graph,
+                                           partitioned across drone, edge
+                                           and cloud by the scheduler);
                                            --seeds K sweeps K derived seeds
                                            (in parallel with --jobs);
                                            --cloud picks the cloud backend
@@ -343,9 +348,16 @@ fn cmd_experiment(args: &[String], seed: u64) -> Result<()> {
 }
 
 fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
-    let wl = parse_workload(
-        &flag(args, "--workload").unwrap_or_else(|| "3D-A".into()),
-    )?;
+    let wl = if has_flag(args, "--pipeline") {
+        if flag(args, "--workload").is_some() {
+            bail!("--pipeline replaces the workload; drop --workload");
+        }
+        Workload::vip_pipeline()
+    } else {
+        parse_workload(
+            &flag(args, "--workload").unwrap_or_else(|| "3D-A".into()),
+        )?
+    };
     let policy = parse_policy(
         &flag(args, "--policy").unwrap_or_else(|| "dems".into()),
     )?;

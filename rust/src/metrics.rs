@@ -11,8 +11,12 @@ pub struct ModelStats {
     pub generated: u64,
     pub completed_edge: u64,
     pub completed_cloud: u64,
+    /// Pipeline stages executed on the drone's companion computer
+    /// (always zero without pipeline workloads).
+    pub completed_drone: u64,
     pub missed_edge: u64,
     pub missed_cloud: u64,
+    pub missed_drone: u64,
     pub dropped_infeasible: u64,
     pub dropped_negative: u64,
     pub dropped_jit: u64,
@@ -25,6 +29,7 @@ pub struct ModelStats {
     pub throttled: u64,
     pub utility_edge: f64,
     pub utility_cloud: f64,
+    pub utility_drone: f64,
     pub qoe_utility: f64,
     pub windows_total: u64,
     pub windows_met: u64,
@@ -36,11 +41,14 @@ pub struct ModelStats {
 
 impl ModelStats {
     pub fn completed(&self) -> u64 {
-        self.completed_edge + self.completed_cloud
+        self.completed_edge + self.completed_cloud + self.completed_drone
     }
 
     pub fn executed(&self) -> u64 {
-        self.completed() + self.missed_edge + self.missed_cloud
+        self.completed()
+            + self.missed_edge
+            + self.missed_cloud
+            + self.missed_drone
     }
 
     pub fn dropped(&self) -> u64 {
@@ -54,7 +62,7 @@ impl ModelStats {
     }
 
     pub fn utility(&self) -> f64 {
-        self.utility_edge + self.utility_cloud
+        self.utility_edge + self.utility_cloud + self.utility_drone
     }
 }
 
@@ -152,6 +160,10 @@ impl Metrics {
                 s.completed_cloud += 1;
                 s.utility_cloud += o.utility;
             }
+            Fate::Completed(Resource::Drone) => {
+                s.completed_drone += 1;
+                s.utility_drone += o.utility;
+            }
             Fate::Missed(Resource::Edge) => {
                 s.missed_edge += 1;
                 s.utility_edge += o.utility;
@@ -159,6 +171,10 @@ impl Metrics {
             Fate::Missed(Resource::Cloud) => {
                 s.missed_cloud += 1;
                 s.utility_cloud += o.utility;
+            }
+            Fate::Missed(Resource::Drone) => {
+                s.missed_drone += 1;
+                s.utility_drone += o.utility;
             }
             Fate::Dropped(r) => match r {
                 DropReason::Infeasible => s.dropped_infeasible += 1,
@@ -205,6 +221,7 @@ impl Metrics {
             .map(|(_, s)| match r {
                 Resource::Edge => s.completed_edge,
                 Resource::Cloud => s.completed_cloud,
+                Resource::Drone => s.completed_drone,
             })
             .sum()
     }
@@ -229,6 +246,7 @@ impl Metrics {
             .map(|(_, s)| match r {
                 Resource::Edge => s.utility_edge,
                 Resource::Cloud => s.utility_cloud,
+                Resource::Drone => s.utility_drone,
             })
             .sum()
     }
@@ -339,6 +357,22 @@ mod tests {
         assert_eq!(m.qos_utility(), 99.0);
         assert_eq!(m.qos_utility_on(Resource::Edge), 124.0);
         assert_eq!(m.qos_utility_on(Resource::Cloud), -25.0);
+    }
+
+    #[test]
+    fn drone_bucket_counts_like_the_others() {
+        let mut m = Metrics::new(&[DnnKind::Hv]);
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Drone),
+                          124.0));
+        m.record(&outcome(DnnKind::Hv, Fate::Missed(Resource::Drone),
+                          -1.0));
+        let s = m.stats(DnnKind::Hv);
+        assert_eq!((s.completed_drone, s.missed_drone), (1, 1));
+        assert_eq!(s.completed(), 1);
+        assert_eq!(s.executed(), 2);
+        assert_eq!(m.completed_on(Resource::Drone), 1);
+        assert_eq!(m.qos_utility_on(Resource::Drone), 123.0);
+        assert_eq!(m.qos_utility(), 123.0);
     }
 
     #[test]

@@ -69,6 +69,10 @@ impl DnnKind {
 pub enum Resource {
     Edge,
     Cloud,
+    /// The drone's companion computer — the early-layer tier of a
+    /// split-DNN pipeline (see [`crate::pipeline`]). Billed at edge κ:
+    /// the companion computer is fleet-owned hardware like the edge.
+    Drone,
 }
 
 /// Scheduler-facing description of one registered DNN model.
@@ -112,11 +116,12 @@ impl ModelProfile {
         self.benefit - self.cost_cloud
     }
 
-    /// Utility for the given resource/outcome per Eqn 1.
+    /// Utility for the given resource/outcome per Eqn 1. The drone tier
+    /// bills at edge κ (fleet-owned hardware, no FaaS invoice).
     pub fn utility(&self, on: Resource, met_deadline: bool) -> f64 {
         match (on, met_deadline) {
-            (Resource::Edge, true) => self.util_edge(),
-            (Resource::Edge, false) => -self.cost_edge,
+            (Resource::Edge | Resource::Drone, true) => self.util_edge(),
+            (Resource::Edge | Resource::Drone, false) => -self.cost_edge,
             (Resource::Cloud, true) => self.util_cloud(),
             (Resource::Cloud, false) => -self.cost_cloud,
         }
@@ -364,6 +369,9 @@ mod tests {
         assert_eq!(hv.utility(Resource::Edge, false), -1.0);
         assert_eq!(hv.utility(Resource::Cloud, true), 100.0);
         assert_eq!(hv.utility(Resource::Cloud, false), -25.0);
+        // The drone tier bills at edge κ.
+        assert_eq!(hv.utility(Resource::Drone, true), 124.0);
+        assert_eq!(hv.utility(Resource::Drone, false), -1.0);
     }
 
     #[test]

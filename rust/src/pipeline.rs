@@ -1,0 +1,267 @@
+//! Split-DNN pipeline workloads: linear stage graphs partitioned across
+//! drone, edge and cloud (the ROADMAP's "DAG tasks" open item).
+//!
+//! The paper's VIP applications are naturally chains — detect → track →
+//! describe — with one *end-to-end* deadline; LLHR and "Distributed CNN
+//! Inference on Resource-Constrained UAVs" (PAPERS.md) both show the
+//! *partition point* of such a chain dominates latency and reliability.
+//! This module defines the workload side: a [`StageGraph`] is a linear
+//! chain of [`Stage`]s whose per-stage deadlines are derived from the
+//! end-to-end deadline via `deadline_slack` weights, and a task carries a
+//! [`PipelineRef`] (graph handle + stage index + planned drone prefix)
+//! through the engine. Mechanics live in `platform.rs`/`cluster.rs`
+//! (stage completion enqueues the successor at its placed tier, charging
+//! the drone↔edge wireless link through `net.rs` when the handoff leaves
+//! the drone); the partition decision lives in the schedulers
+//! (stage-aware κ via [`chain_util_cloud`], fixed cuts via
+//! [`crate::policy::PipelineCut`]).
+//!
+//! Single-stage graphs degenerate to today's engine bit-identically:
+//! the stage deadline equals the end-to-end deadline, the payload is the
+//! raw segment, and [`chain_util_cloud`] returns exactly the profile's
+//! γᶜ (pinned by `tests/sweep_parity.rs`).
+
+use std::sync::Arc;
+
+use crate::model::{DnnKind, ModelProfile};
+use crate::time::Micros;
+
+/// One stage of a split-DNN chain.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    /// Which DNN runs this stage (its [`ModelProfile`] supplies the
+    /// service times and κ/κ̂ costs; the *final* stage's β is the chain's
+    /// benefit).
+    pub kind: DnnKind,
+    /// Share of the end-to-end deadline budgeted to this stage (the
+    /// weights are normalized, so any positive numbers work).
+    pub deadline_slack: f64,
+    /// Intermediate tensor size handed to the successor stage — the
+    /// transfer payload whenever the handoff crosses a tier boundary.
+    pub output_bytes: u64,
+    /// May this stage run on the drone's companion computer? Early
+    /// backbone layers can; late heads generally cannot.
+    pub drone_capable: bool,
+}
+
+/// A linear chain of stages with one end-to-end deadline.
+///
+/// Per-stage deadlines are *cumulative* offsets from segment creation:
+/// stage *i* must finish by `stage_deadline(i)`, and the last stage's
+/// deadline is exactly the end-to-end deadline.
+#[derive(Clone, Debug)]
+pub struct StageGraph {
+    pub name: String,
+    pub stages: Vec<Stage>,
+    pub e2e_deadline: Micros,
+    /// Cumulative per-stage deadlines (relative to segment creation).
+    offsets: Vec<Micros>,
+}
+
+impl StageGraph {
+    /// Build a chain, deriving per-stage deadlines from the slack
+    /// weights: stage *i*'s deadline offset is the end-to-end deadline
+    /// scaled by the cumulative normalized slack through stage *i* (the
+    /// final stage lands exactly on `e2e_deadline`).
+    pub fn chain(name: impl Into<String>, stages: Vec<Stage>,
+                 e2e_deadline: Micros) -> StageGraph {
+        assert!(!stages.is_empty(), "a stage graph needs >= 1 stage");
+        let total: f64 = stages.iter().map(|s| s.deadline_slack).sum();
+        assert!(total > 0.0, "slack weights must be positive");
+        let mut offsets = Vec::with_capacity(stages.len());
+        let mut cum = 0.0;
+        for (i, s) in stages.iter().enumerate() {
+            cum += s.deadline_slack / total;
+            offsets.push(if i + 1 == stages.len() {
+                e2e_deadline
+            } else {
+                (e2e_deadline as f64 * cum).round() as Micros
+            });
+        }
+        StageGraph { name: name.into(), stages, e2e_deadline, offsets }
+    }
+
+    /// Absolute-offset deadline of stage `i` (from segment creation);
+    /// the last stage's equals the end-to-end deadline.
+    #[inline]
+    pub fn stage_deadline(&self, i: usize) -> Micros {
+        self.offsets[i]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    #[inline]
+    pub fn is_final(&self, i: usize) -> bool {
+        i + 1 == self.stages.len()
+    }
+
+    /// The chain's output model — whose β the chain earns on completion
+    /// and whose QoE window the chain's verdict lands in.
+    #[inline]
+    pub fn final_kind(&self) -> DnnKind {
+        self.stages[self.stages.len() - 1].kind
+    }
+}
+
+/// A task's position within a chain: the shared graph, the stage this
+/// task executes, and the drone prefix planned at chain admission (the
+/// first `drone_prefix` stages run on the drone's companion computer).
+#[derive(Clone, Debug)]
+pub struct PipelineRef {
+    pub graph: Arc<StageGraph>,
+    pub stage: usize,
+    pub drone_prefix: usize,
+}
+
+impl PipelineRef {
+    /// Is this the chain's final stage?
+    #[inline]
+    pub fn is_final(&self) -> bool {
+        self.graph.is_final(self.stage)
+    }
+}
+
+/// Stage-aware cloud utility γᶜ for the κ̂ ranking (§5 extended to
+/// chains): the utility of sending *this* task to the cloud is the
+/// remaining chain's — the final stage's β minus the κ̂ of every stage
+/// still to run — not just the current stage's own γᶜ.
+///
+/// Non-pipeline tasks (and final stages) return exactly the profile's
+/// `util_cloud()`, so the single-stage path is bit-identical to the
+/// pre-pipeline engine.
+pub fn chain_util_cloud(pr: Option<&PipelineRef>, profile: &ModelProfile,
+                        models: &[ModelProfile]) -> f64 {
+    match pr {
+        None => profile.util_cloud(),
+        Some(p) if p.is_final() => profile.util_cloud(),
+        Some(p) => {
+            let g = &p.graph;
+            let benefit = models
+                .iter()
+                .find(|m| m.kind == g.final_kind())
+                .map_or(0.0, |m| m.benefit);
+            let mut util = benefit;
+            for s in &g.stages[p.stage..] {
+                if let Some(m) = models.iter().find(|m| m.kind == s.kind) {
+                    util -= m.cost_cloud;
+                }
+            }
+            util
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::table1;
+    use crate::time::ms;
+
+    fn three_stage() -> StageGraph {
+        StageGraph::chain(
+            "t",
+            vec![
+                Stage {
+                    kind: DnnKind::Hv,
+                    deadline_slack: 0.16,
+                    output_bytes: 24_000,
+                    drone_capable: true,
+                },
+                Stage {
+                    kind: DnnKind::Md,
+                    deadline_slack: 0.16,
+                    output_bytes: 16_000,
+                    drone_capable: true,
+                },
+                Stage {
+                    kind: DnnKind::Deo,
+                    deadline_slack: 0.68,
+                    output_bytes: 0,
+                    drone_capable: false,
+                },
+            ],
+            ms(2_000),
+        )
+    }
+
+    #[test]
+    fn stage_deadlines_are_cumulative_and_end_on_e2e() {
+        let g = three_stage();
+        assert_eq!(g.stage_deadline(0), ms(320));
+        assert_eq!(g.stage_deadline(1), ms(640));
+        assert_eq!(g.stage_deadline(2), ms(2_000));
+        assert_eq!(g.len(), 3);
+        assert!(!g.is_final(0) && !g.is_final(1) && g.is_final(2));
+        assert_eq!(g.final_kind(), DnnKind::Deo);
+    }
+
+    #[test]
+    fn slack_weights_are_normalized() {
+        // Un-normalized weights (sum 4) derive the same deadlines as
+        // the equivalent fractions.
+        let g = StageGraph::chain(
+            "n",
+            vec![
+                Stage {
+                    kind: DnnKind::Hv,
+                    deadline_slack: 1.0,
+                    output_bytes: 0,
+                    drone_capable: false,
+                },
+                Stage {
+                    kind: DnnKind::Deo,
+                    deadline_slack: 3.0,
+                    output_bytes: 0,
+                    drone_capable: false,
+                },
+            ],
+            ms(1_000),
+        );
+        assert_eq!(g.stage_deadline(0), ms(250));
+        assert_eq!(g.stage_deadline(1), ms(1_000));
+    }
+
+    #[test]
+    fn single_stage_deadline_is_the_e2e_deadline() {
+        let g = StageGraph::chain(
+            "s",
+            vec![Stage {
+                kind: DnnKind::Hv,
+                deadline_slack: 1.0,
+                output_bytes: 0,
+                drone_capable: false,
+            }],
+            ms(650),
+        );
+        assert_eq!(g.stage_deadline(0), ms(650));
+        assert!(g.is_final(0));
+    }
+
+    #[test]
+    fn chain_util_cloud_matches_profile_for_plain_and_final() {
+        let models = table1();
+        let hv = models.iter().find(|m| m.kind == DnnKind::Hv).unwrap();
+        // Non-pipeline: exactly the profile's own γᶜ.
+        assert_eq!(chain_util_cloud(None, hv, &models), hv.util_cloud());
+        // Final stage of a chain: same.
+        let g = Arc::new(three_stage());
+        let deo = models.iter().find(|m| m.kind == DnnKind::Deo).unwrap();
+        let pr = PipelineRef { graph: g.clone(), stage: 2, drone_prefix: 0 };
+        assert_eq!(chain_util_cloud(Some(&pr), deo, &models),
+                   deo.util_cloud());
+        // Intermediate stage: the remaining chain's utility — final β
+        // minus every remaining stage's κ̂.
+        let md = models.iter().find(|m| m.kind == DnnKind::Md).unwrap();
+        let pr1 = PipelineRef { graph: g, stage: 1, drone_prefix: 0 };
+        let expect = deo.benefit - md.cost_cloud - deo.cost_cloud;
+        assert_eq!(chain_util_cloud(Some(&pr1), md, &models), expect);
+    }
+}

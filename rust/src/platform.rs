@@ -26,18 +26,19 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use crate::cloud::{Attempt, CloudBackend, CloudStats};
-use crate::exec::EdgeExecModel;
+use crate::exec::{DroneExecModel, EdgeExecModel};
 use crate::metrics::{Metrics, TimelinePoint};
 use crate::model::{DnnKind, ModelProfile, Resource};
-use crate::net::SharedUplink;
-use crate::policy::Policy;
+use crate::net::{ConstantNet, NetworkModel, SharedUplink};
+use crate::pipeline::{PipelineRef, StageGraph};
+use crate::policy::{PipelineCut, Policy};
 use crate::qoe::WindowMonitor;
 use crate::queues::{CloudEntry, CloudQueue, EdgeEntry, EdgeQueue};
 use crate::rng::Rng;
 use crate::sched::{CloudReport, SchedCtx, Scheduler};
 use crate::sim::{Event, EventQueue};
 use crate::task::{DropReason, Fate, Task, TaskId, TaskOutcome};
-use crate::time::Micros;
+use crate::time::{ms, Micros};
 
 /// The edge executor's currently running task.
 #[derive(Debug)]
@@ -81,6 +82,14 @@ pub struct Core {
     /// Cloud executor thread-pool size (§3.3).
     pub cloud_pool: usize,
     pub edge_exec: EdgeExecModel,
+    /// Companion-computer execution model for pipeline prefix stages
+    /// ([`crate::pipeline`]); idle unless a workload carries a
+    /// [`StageGraph`] whose planned drone prefix is non-zero.
+    pub drone_exec: DroneExecModel,
+    /// Wireless drone→edge link, charged when a pipeline stage handoff
+    /// leaves the drone tier (intermediate tensors are small, the link
+    /// is slow — the trade-off the partition point navigates).
+    pub(crate) drone_net: Box<dyn NetworkModel>,
     /// Pluggable cloud tier (see [`crate::cloud`]): the default
     /// [`SimpleBackend`](crate::cloud::SimpleBackend) reproduces the
     /// legacy sampler bit-identically; FaaS/multi-region backends add
@@ -127,6 +136,11 @@ impl Core {
             cloud_inflight: 0,
             cloud_pool: 16,
             edge_exec: EdgeExecModel::default(),
+            drone_exec: DroneExecModel::default(),
+            drone_net: Box::new(ConstantNet {
+                latency: ms(10),
+                bandwidth: 2.0e6,
+            }),
             cloud: cloud.into(),
             uplink: None,
             qoe,
@@ -235,7 +249,7 @@ impl Core {
         let inv = match self.cloud.invoke(
             &self.models[i],
             now,
-            e.task.segment.bytes,
+            e.task.payload_bytes(),
             self.cloud_inflight,
             &mut self.rng,
         ) {
@@ -253,7 +267,7 @@ impl Core {
             let wait = up
                 .lock()
                 .unwrap_or_else(std::sync::PoisonError::into_inner)
-                .acquire(now, e.task.segment.bytes);
+                .acquire(now, e.task.payload_bytes());
             if wait > 0 {
                 self.metrics.uplink_wait += wait;
                 self.metrics.uplink_queued += 1;
@@ -296,13 +310,33 @@ impl Core {
     /// Record a finalized outcome: metrics, the QoE window counters
     /// (Alg. 1 lines 3–7 — always tracked when a model's monitor is
     /// enabled) and the pending-done queue the scheduler hook drains.
-    pub(crate) fn finalize(&mut self, outcome: TaskOutcome) {
+    ///
+    /// QoE credit is per *chain*, not per stage: a successful
+    /// intermediate pipeline stage records nothing (the operator's
+    /// frequency window counts end-to-end results), while any stage
+    /// failure kills the chain and records a miss against the chain's
+    /// *final* model — the one whose window the verdict belongs to.
+    /// Plain tasks and final stages keep the pre-pipeline accounting.
+    pub(crate) fn finalize(&mut self, outcome: TaskOutcome,
+                           pipeline: Option<&PipelineRef>) {
         let kind = outcome.model;
         let success = outcome.success();
         self.metrics.record(&outcome);
-        let i = self.idx(kind);
-        if self.qoe[i].enabled() {
-            self.qoe[i].record(success);
+        match pipeline {
+            Some(pr) if !pr.is_final() => {
+                if !success {
+                    let f = self.idx(pr.graph.final_kind());
+                    if self.qoe[f].enabled() {
+                        self.qoe[f].record(false);
+                    }
+                }
+            }
+            _ => {
+                let i = self.idx(kind);
+                if self.qoe[i].enabled() {
+                    self.qoe[i].record(success);
+                }
+            }
         }
         self.pending_done.push_back((kind, success));
     }
@@ -322,7 +356,88 @@ impl Core {
             gems_rescheduled: false,
             stolen: false,
         };
-        self.finalize(outcome);
+        self.finalize(outcome, task.pipeline.as_ref());
+    }
+
+    /// Stage-gated QoS utility: a successful intermediate pipeline stage
+    /// earns nothing (the chain's β is credited once, by its final
+    /// stage), while any executed stage that fails is billed the
+    /// resource cost it burned. Plain tasks are exactly Eqn 1.
+    pub(crate) fn stage_utility(&self, task: &Task, on: Resource,
+                                success: bool) -> f64 {
+        match &task.pipeline {
+            Some(pr) if !pr.is_final() && success => 0.0,
+            _ => self.profile(task.model).utility(on, success),
+        }
+    }
+
+    /// How many leading stages of `graph` the drone's companion computer
+    /// takes. A fixed cut pins the count outright; the adaptive planner
+    /// keeps extending the prefix while the stage is drone-capable and
+    /// the cumulative expected on-drone time still meets each stage's
+    /// deadline budget.
+    pub fn plan_drone_prefix(&self, graph: &StageGraph) -> usize {
+        let limit = match self.policy.pipeline {
+            PipelineCut::Fixed { drone, .. } => drone.min(graph.len()),
+            PipelineCut::Adaptive => graph.len(),
+        };
+        let adaptive =
+            matches!(self.policy.pipeline, PipelineCut::Adaptive);
+        let mut cum: Micros = 0;
+        let mut prefix = 0;
+        while prefix < limit && graph.stages[prefix].drone_capable {
+            cum += self.drone_exec.expected(
+                self.profile(graph.stages[prefix].kind));
+            if adaptive && cum > graph.stage_deadline(prefix) {
+                break;
+            }
+            prefix += 1;
+        }
+        prefix
+    }
+
+    /// Run a pipeline prefix stage on the drone's companion computer.
+    /// The drone tier is per-drone hardware, so there is no shared
+    /// queue: the stage starts immediately and its `DroneDone` fires
+    /// after a sampled companion-computer duration.
+    pub(crate) fn start_drone(&mut self, now: Micros, task: Task,
+                              q: &mut EventQueue) {
+        let i = self.idx(task.model);
+        let actual = self.drone_exec.sample(&self.models[i], &mut self.rng);
+        q.push(now + actual, Event::DroneDone { task, started: now });
+    }
+
+    /// A non-final pipeline stage completed: mint the successor stage as
+    /// a fresh task and schedule its arrival at this edge's scheduler.
+    /// Leaving the drone tier charges the wireless drone→edge link for
+    /// the intermediate tensor; edge→cloud handoffs pay their transfer
+    /// inside the cloud invocation itself (via [`Task::payload_bytes`]).
+    pub(crate) fn spawn_successor(&mut self, now: Micros, done: &Task,
+                                  from: Resource, q: &mut EventQueue) {
+        let Some(pr) = &done.pipeline else { return };
+        if pr.is_final() {
+            return;
+        }
+        let next = pr.stage + 1;
+        let next_ref = PipelineRef {
+            graph: pr.graph.clone(),
+            stage: next,
+            drone_prefix: pr.drone_prefix,
+        };
+        let at = if from == Resource::Drone && next >= pr.drone_prefix {
+            let bytes = pr.graph.stages[pr.stage].output_bytes;
+            now + self.drone_net.transfer_time(now, bytes, &mut self.rng)
+        } else {
+            now
+        };
+        let id = self.fresh_task_id();
+        let task = Task {
+            id,
+            model: next_ref.graph.stages[next].kind,
+            segment: done.segment.clone(),
+            pipeline: Some(next_ref),
+        };
+        q.push(at, Event::StageArrive { task });
     }
 
     /// Next finalized (model, success) pair awaiting the scheduler's
@@ -373,6 +488,20 @@ impl Core {
     pub fn cloud_backend_name(&self) -> &'static str {
         self.cloud.name()
     }
+}
+
+/// Where [`Platform::submit_task`] sends a task before (or instead of)
+/// scheduler admission.
+enum Route {
+    /// Pipeline prefix stage: the drone's companion computer.
+    Drone,
+    /// Fixed-cut pipeline stage at/past the cloud cut: pinned cloud entry.
+    FixedCloud,
+    /// Fixed-cut pipeline stage between drone prefix and cloud cut:
+    /// straight to the edge queue.
+    FixedEdge,
+    /// Everything else: normal scheduler admission.
+    Admit,
 }
 
 /// One edge base station = mechanism [`Core`] + pluggable [`Scheduler`].
@@ -456,15 +585,124 @@ impl<S: Scheduler> Platform<S> {
     /// Entry point: the task-scheduler thread of Fig. 4. Admission is fully
     /// delegated to the scheduler; the platform only does the generation
     /// accounting and kicks the edge executor afterwards.
+    ///
+    /// Pipeline stages are *routed* first: drone-prefix stages run on the
+    /// companion computer, and under a fixed [`PipelineCut`] the stage's
+    /// tier is the experiment's control variable — it bypasses scheduler
+    /// admission entirely. Plain tasks (and adaptive pipeline stages past
+    /// the drone prefix) take the unchanged admission path, which keeps
+    /// single-stage runs bit-identical to the pre-pipeline engine.
     pub fn submit_task(&mut self, now: Micros, task: Task,
                        q: &mut EventQueue) {
         self.core.metrics.stats_mut(task.model).generated += 1;
-        {
-            let mut ctx = SchedCtx { now, core: &mut self.core, q: &mut *q };
-            self.sched.admit(&mut ctx, task);
+        match self.route(&task) {
+            Route::Drone => {
+                self.core.start_drone(now, task, q);
+                return;
+            }
+            Route::FixedCloud => self.enqueue_fixed_cloud(now, task, q),
+            Route::FixedEdge => self.enqueue_fixed_edge(task),
+            Route::Admit => {
+                let mut ctx =
+                    SchedCtx { now, core: &mut self.core, q: &mut *q };
+                self.sched.admit(&mut ctx, task);
+            }
         }
         self.drain_done(now, q);
         self.try_start_edge(now, q);
+    }
+
+    /// Tier routing ahead of scheduler admission (pipeline stages only;
+    /// plain tasks always take [`Route::Admit`]).
+    fn route(&self, task: &Task) -> Route {
+        let Some(pr) = &task.pipeline else { return Route::Admit };
+        if pr.stage < pr.drone_prefix {
+            return Route::Drone;
+        }
+        if let PipelineCut::Fixed { cloud_start, .. } =
+            self.core.policy.pipeline
+        {
+            if pr.stage >= cloud_start {
+                return Route::FixedCloud;
+            }
+            return Route::FixedEdge;
+        }
+        Route::Admit
+    }
+
+    /// Fixed-cut stage at/past the cloud cut: a *pinned* cloud entry
+    /// (never a steal candidate — the cut is the control variable),
+    /// triggered immediately. The trigger-time JIT check still applies,
+    /// which is exactly how an infeasible fixed cut shows up as QoS loss.
+    fn enqueue_fixed_cloud(&mut self, now: Micros, task: Task,
+                           q: &mut EventQueue) {
+        let (dl, te) = {
+            let p = self.core.profile(task.model);
+            (task.absolute_deadline(p.deadline), p.t_edge)
+        };
+        let t_hat = self.sched.expected_cloud(&self.core, task.model);
+        self.core.push_cloud(
+            CloudEntry {
+                task,
+                abs_deadline: dl,
+                t_cloud: t_hat,
+                t_edge: te,
+                trigger: now,
+                negative_utility: false,
+                gems_rescheduled: false,
+                pinned: true,
+            },
+            q,
+        );
+    }
+
+    /// Fixed-cut stage on the edge side of the cloud cut: straight into
+    /// the edge queue under this edge's priority order, bypassing
+    /// admission. The executor's JIT check still guards staleness.
+    fn enqueue_fixed_edge(&mut self, task: Task) {
+        let (dl, te, hp) = {
+            let p = self.core.profile(task.model);
+            (task.absolute_deadline(p.deadline), p.t_edge,
+             p.hpf_priority())
+        };
+        self.core.edge_q.insert(task, dl, te, hp);
+    }
+
+    /// The drone's companion computer finished a pipeline prefix stage:
+    /// verdict it against the stage deadline and, on success, hand off
+    /// to the successor stage (paying the wireless link if the successor
+    /// leaves the drone tier).
+    pub fn on_drone_done(&mut self, now: Micros, task: Task,
+                         started: Micros, q: &mut EventQueue) {
+        let dl = {
+            let p = self.core.profile(task.model);
+            task.absolute_deadline(p.deadline)
+        };
+        let success = now <= dl;
+        let utility =
+            self.core.stage_utility(&task, Resource::Drone, success);
+        let fate = if success {
+            Fate::Completed(Resource::Drone)
+        } else {
+            Fate::Missed(Resource::Drone)
+        };
+        let outcome = TaskOutcome {
+            task_id: task.id,
+            model: task.model,
+            drone: task.segment.drone,
+            fate,
+            at: now,
+            created_at: task.segment.created_at,
+            exec_duration: now - started,
+            utility,
+            gems_rescheduled: false,
+            stolen: false,
+        };
+        self.core.finalize(outcome, task.pipeline.as_ref());
+        self.drain_done(now, q);
+        if success {
+            self.core.spawn_successor(now, &task, Resource::Drone, q);
+        }
     }
 
     // --------------------------------------------------------------- edge
@@ -509,10 +747,8 @@ impl<S: Scheduler> Platform<S> {
             None => return,
         };
         let success = run.actual_end <= run.entry.abs_deadline;
-        let utility = self
-            .core
-            .profile(run.entry.task.model)
-            .utility(Resource::Edge, success);
+        let utility = self.core.stage_utility(&run.entry.task,
+                                              Resource::Edge, success);
         let fate = if success {
             Fate::Completed(Resource::Edge)
         } else {
@@ -531,8 +767,12 @@ impl<S: Scheduler> Platform<S> {
             gems_rescheduled: run.entry.gems_rescheduled,
             stolen: run.stolen,
         };
-        self.core.finalize(outcome);
+        self.core.finalize(outcome, run.entry.task.pipeline.as_ref());
         self.drain_done(now, q);
+        if success {
+            self.core.spawn_successor(now, &run.entry.task,
+                                      Resource::Edge, q);
+        }
         self.try_start_edge(now, q);
     }
 
@@ -638,7 +878,7 @@ impl<S: Scheduler> Platform<S> {
                 gems_rescheduled: run.entry.gems_rescheduled,
                 stolen: false,
             };
-            self.core.finalize(outcome);
+            self.core.finalize(outcome, run.entry.task.pipeline.as_ref());
             self.drain_done(now, q);
             self.pull_cloud_ready(now, q);
             return;
@@ -662,10 +902,8 @@ impl<S: Scheduler> Platform<S> {
         } else {
             Fate::Missed(Resource::Cloud)
         };
-        let utility = self
-            .core
-            .profile(run.entry.task.model)
-            .utility(Resource::Cloud, success);
+        let utility = self.core.stage_utility(&run.entry.task,
+                                              Resource::Cloud, success);
         let outcome = TaskOutcome {
             task_id: run.entry.task.id,
             model: run.entry.task.model,
@@ -678,8 +916,12 @@ impl<S: Scheduler> Platform<S> {
             gems_rescheduled: run.entry.gems_rescheduled,
             stolen: false,
         };
-        self.core.finalize(outcome);
+        self.core.finalize(outcome, run.entry.task.pipeline.as_ref());
         self.drain_done(now, q);
+        if success {
+            self.core.spawn_successor(now, &run.entry.task,
+                                      Resource::Cloud, q);
+        }
         self.pull_cloud_ready(now, q);
     }
 
@@ -830,6 +1072,7 @@ mod tests {
                 created_at: created,
                 bytes: 38_000,
             },
+            pipeline: None,
         }
     }
 
@@ -847,6 +1090,10 @@ mod tests {
                 Event::CloudDone { key } => p.on_cloud_done(t, key, q),
                 Event::WindowClose { model_idx } => {
                     p.on_window_close(t, model_idx, q)
+                }
+                Event::StageArrive { task } => p.submit_task(t, task, q),
+                Event::DroneDone { task, started } => {
+                    p.on_drone_done(t, task, started, q)
                 }
                 // Segment / federation events: cluster-driver concerns.
                 _ => {}
@@ -1151,5 +1398,183 @@ mod tests {
                 policy.kind.name()
             );
         }
+    }
+
+    // ------------------------------------------------ pipeline mechanics
+
+    use crate::pipeline::Stage;
+
+    /// Deterministic DEMS platform with QoE monitors enabled on HV and
+    /// DEO (so the chain-gating of `finalize` is observable).
+    fn pipe_platform(cut: PipelineCut) -> Platform {
+        let mut models = table1();
+        for m in &mut models {
+            if matches!(m.kind, DnnKind::Hv | DnnKind::Deo) {
+                m.qoe_rate = 0.9;
+                m.qoe_window = ms(20_000);
+                m.qoe_benefit = 50.0;
+            }
+        }
+        let mut cloud = CloudExecModel::new(Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 25.0e6,
+        }));
+        cloud.cold_start = 0;
+        cloud.cold_prob = 0.0;
+        let mut p = Platform::new(Policy::dems().with_pipeline_cut(cut),
+                                  models, cloud, 7);
+        p.edge_exec = EdgeExecModel { sigma: 0.0, overhead: (0, 0) };
+        p.drone_exec = DroneExecModel { slowdown: 2.0, sigma: 0.0 };
+        p
+    }
+
+    /// HV → DEO chain; `s0_slack` is stage 0's share of the e2e budget.
+    fn chain2(e2e: Micros, s0_slack: f64) -> Arc<StageGraph> {
+        Arc::new(StageGraph::chain(
+            "t",
+            vec![
+                Stage {
+                    kind: DnnKind::Hv,
+                    deadline_slack: s0_slack,
+                    output_bytes: 24_000,
+                    drone_capable: true,
+                },
+                Stage {
+                    kind: DnnKind::Deo,
+                    deadline_slack: 1.0 - s0_slack,
+                    output_bytes: 0,
+                    drone_capable: false,
+                },
+            ],
+            e2e,
+        ))
+    }
+
+    fn mkchain(p: &mut Platform, g: &Arc<StageGraph>, drone_prefix: usize,
+               created: Micros) -> Task {
+        let id = p.fresh_task_id();
+        Task {
+            id,
+            model: g.stages[0].kind,
+            segment: VideoSegment {
+                id,
+                drone: 0,
+                created_at: created,
+                bytes: 38_000,
+            },
+            pipeline: Some(crate::pipeline::PipelineRef {
+                graph: g.clone(),
+                stage: 0,
+                drone_prefix,
+            }),
+        }
+    }
+
+    #[test]
+    fn pipeline_qoe_credits_on_chain_completion_not_per_stage() {
+        let mut p = pipe_platform(PipelineCut::Adaptive);
+        let mut q = EventQueue::new();
+        let g = chain2(ms(4_000), 0.5);
+        let t = mkchain(&mut p, &g, 0, 0);
+        p.submit_task(0, t, &mut q);
+        settle(&mut p, &mut q, ms(10_000));
+        assert_eq!(p.metrics.completed(), 2, "both stages complete");
+        // The HV stage succeeded but is intermediate: no QoE sample even
+        // though its monitor is enabled.
+        let hv = p.core.idx(DnnKind::Hv);
+        assert_eq!(p.core.qoe[hv].total, 0);
+        // Exactly one sample — the chain verdict — in DEO's window.
+        let deo = p.core.idx(DnnKind::Deo);
+        assert_eq!((p.core.qoe[deo].total, p.core.qoe[deo].succeeded),
+                   (1, 1));
+        // Stage-gated Eqn 1: only the final stage's γ counts.
+        assert_eq!(p.metrics.qos_utility(), 244.0);
+    }
+
+    #[test]
+    fn chain_kill_records_one_miss_in_final_models_window() {
+        let mut p = pipe_platform(PipelineCut::Adaptive);
+        let mut q = EventQueue::new();
+        // Stage 0 gets 1% of the budget — hopeless on every tier — so
+        // the chain dies at admission and DEO never runs.
+        let g = chain2(ms(1_000), 0.01);
+        let t = mkchain(&mut p, &g, 0, 0);
+        p.submit_task(0, t, &mut q);
+        settle(&mut p, &mut q, ms(10_000));
+        assert_eq!(p.metrics.stats(DnnKind::Hv).dropped(), 1);
+        assert_eq!(p.metrics.stats(DnnKind::Deo).generated, 0,
+                   "a dead chain spawns no successor");
+        let hv = p.core.idx(DnnKind::Hv);
+        let deo = p.core.idx(DnnKind::Deo);
+        assert_eq!(p.core.qoe[hv].total, 0);
+        assert_eq!((p.core.qoe[deo].total, p.core.qoe[deo].succeeded),
+                   (1, 0));
+    }
+
+    #[test]
+    fn adaptive_drone_prefix_runs_early_stage_on_the_drone() {
+        let mut p = pipe_platform(PipelineCut::Adaptive);
+        let mut q = EventQueue::new();
+        let g = chain2(ms(4_000), 0.5);
+        let prefix = p.plan_drone_prefix(&g);
+        assert_eq!(prefix, 1, "HV is drone-capable, DEO is not");
+        let t = mkchain(&mut p, &g, prefix, 0);
+        p.submit_task(0, t, &mut q);
+        settle(&mut p, &mut q, ms(10_000));
+        assert_eq!(p.metrics.completed_on(Resource::Drone), 1);
+        assert_eq!(p.metrics.stats(DnnKind::Deo).completed(), 1);
+        assert_eq!(p.metrics.qos_utility(), 244.0);
+    }
+
+    #[test]
+    fn fixed_cloud_cut_routes_stages_to_pinned_cloud_entries() {
+        let mut p = pipe_platform(PipelineCut::Fixed {
+            drone: 0,
+            cloud_start: 0,
+        });
+        let mut q = EventQueue::new();
+        let g = chain2(ms(8_000), 0.5);
+        let t = mkchain(&mut p, &g, 0, 0);
+        p.submit_task(0, t, &mut q);
+        // The stage sits in the cloud queue, pinned against stealing
+        // (the idle edge executor must NOT claim it).
+        assert_eq!(p.cloud_queue_len(), 1);
+        settle(&mut p, &mut q, ms(20_000));
+        assert_eq!(p.metrics.completed_on(Resource::Cloud), 2);
+        assert_eq!(p.metrics.completed_on(Resource::Edge), 0);
+        // Stage-gated Eqn 1: only the final stage's cloud γ counts.
+        assert_eq!(p.metrics.qos_utility(), 40.0);
+    }
+
+    #[test]
+    fn single_stage_pipeline_matches_plain_submission() {
+        // A 1-stage graph must take the exact legacy admission path:
+        // same outcome, same utility, same RNG consumption as a plain
+        // task (the bit-identity pin at platform granularity).
+        let run = |pipelined: bool| {
+            let mut p = mkplatform(Policy::dems());
+            let mut q = EventQueue::new();
+            for i in 0..4u64 {
+                let task = if pipelined {
+                    let g = Arc::new(StageGraph::chain(
+                        "one",
+                        vec![Stage {
+                            kind: DnnKind::Hv,
+                            deadline_slack: 1.0,
+                            output_bytes: 0,
+                            drone_capable: false,
+                        }],
+                        p.profile(DnnKind::Hv).deadline,
+                    ));
+                    mkchain(&mut p, &g, 0, i * 1_000)
+                } else {
+                    mktask(&mut p, DnnKind::Hv, i * 1_000)
+                };
+                p.submit_task(i * 1_000, task, &mut q);
+            }
+            settle(&mut p, &mut q, ms(30_000));
+            (p.metrics.completed(), p.metrics.qos_utility())
+        };
+        assert_eq!(run(false), run(true));
     }
 }

@@ -57,6 +57,22 @@ impl PolicyKind {
     }
 }
 
+/// How split-DNN pipeline chains are partitioned across drone, edge and
+/// cloud (see [`crate::pipeline`]). Non-pipeline workloads ignore this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineCut {
+    /// The scheduler decides per chain/stage: the drone prefix is planned
+    /// from per-stage deadline budgets at admission, and edge-vs-cloud
+    /// falls out of the family's own admission path with the stage-aware
+    /// κ̂ ranking ([`crate::pipeline::chain_util_cloud`]).
+    Adaptive,
+    /// A fixed partition (the baselines and the partition sweep): stages
+    /// `0..drone` run on the drone's companion computer, stages
+    /// `cloud_start..` are pinned to the cloud, the rest go straight to
+    /// the edge queue. `drone <= cloud_start` is assumed.
+    Fixed { drone: usize, cloud_start: usize },
+}
+
 /// Declarative scheduler configuration.
 #[derive(Clone, Debug)]
 pub struct Policy {
@@ -91,6 +107,9 @@ pub struct Policy {
     /// SOTA 1: urgency threshold on δ and the per-retry deadline stretch.
     pub sota1_urgent_below: Micros,
     pub sota1_extension: f64,
+    /// Split-DNN pipeline partitioning (ignored without pipeline
+    /// workloads): adaptive per-chain cuts or a fixed partition.
+    pub pipeline: PipelineCut,
 }
 
 impl Policy {
@@ -113,7 +132,14 @@ impl Policy {
             cooling_period: secs(10),
             sota1_urgent_below: ms(750),
             sota1_extension: 0.10,
+            pipeline: PipelineCut::Adaptive,
         }
+    }
+
+    /// Pin the split-DNN partition point (see [`PipelineCut`]); used by
+    /// the fixed-cut baselines and the `partition-sweep` scenario.
+    pub fn with_pipeline_cut(self, cut: PipelineCut) -> Policy {
+        Policy { pipeline: cut, ..self }
     }
 
     pub fn edge_edf() -> Policy {
@@ -288,6 +314,19 @@ mod tests {
             let s = p.build();
             assert!(!s.family().is_empty(), "{:?}", p.kind);
         }
+    }
+
+    #[test]
+    fn pipeline_cut_defaults_to_adaptive() {
+        assert_eq!(Policy::dems().pipeline, PipelineCut::Adaptive);
+        let fixed = Policy::dems().with_pipeline_cut(PipelineCut::Fixed {
+            drone: 1,
+            cloud_start: 2,
+        });
+        assert_eq!(fixed.pipeline,
+                   PipelineCut::Fixed { drone: 1, cloud_start: 2 });
+        // The cut is orthogonal to the heuristic flags.
+        assert!(fixed.migration && fixed.stealing);
     }
 
     #[test]

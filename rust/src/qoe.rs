@@ -154,4 +154,37 @@ mod tests {
         assert!(!w.falling_behind());
         assert!(!w.enabled());
     }
+
+    #[test]
+    fn multi_stage_chains_record_once_per_chain() {
+        // Pipeline contract (platform::Core::finalize): a split-DNN
+        // chain contributes exactly ONE sample to the final model's
+        // window — the chain verdict — never one per stage. 9 of 10
+        // three-stage chains completing must read α̂ = 0.9, identical
+        // to 9 of 10 single-stage tasks; chain depth never inflates λ.
+        let mut w = WindowMonitor::new(0.9, secs(20), 100.0);
+        for chain in 0..10u32 {
+            // Two intermediate successes record nothing...
+            // ...and only the end-to-end verdict lands in the window.
+            w.record(chain != 0);
+        }
+        assert_eq!((w.total, w.succeeded), (10, 9));
+        assert!((w.rate() - 0.9).abs() < 1e-12);
+        assert!(!w.falling_behind());
+        assert!(w.close_window());
+    }
+
+    #[test]
+    fn chain_kill_weighs_like_a_missed_final_stage() {
+        // A chain killed at an intermediate stage records a single miss
+        // in the *final* model's window (the output that never arrived),
+        // so a stage-1 drop and a final-stage deadline miss are
+        // indistinguishable to the frequency accounting.
+        let mut w = WindowMonitor::new(0.9, secs(20), 100.0);
+        w.record(false); // stage 1 of 3 dropped → chain dead, one miss
+        w.record(true); // a second chain completed end-to-end
+        assert_eq!((w.total, w.succeeded), (2, 1));
+        assert!(w.falling_behind());
+        assert!(!w.close_window());
+    }
 }

@@ -226,6 +226,9 @@ pub struct CloudEntry {
     pub negative_utility: bool,
     /// Set when GEMS moved the task here (§6).
     pub gems_rescheduled: bool,
+    /// Fixed-cut pipeline stage: the partition policy placed it on the
+    /// cloud, so it is never a steal candidate (local or federated).
+    pub pinned: bool,
 }
 
 /// Trigger-time priority queue for the cloud executor.
@@ -283,6 +286,9 @@ impl CloudQueue {
         }
         let mut best: Option<(usize, bool, f64)> = None;
         for (i, e) in self.entries.iter().enumerate() {
+            if e.pinned {
+                continue; // fixed-cut pipeline stages stay on the cloud
+            }
             if e.t_edge as i64 > slack {
                 continue;
             }
@@ -352,6 +358,7 @@ mod tests {
                 created_at: created,
                 bytes: 38_000,
             },
+            pipeline: None,
         }
     }
 
@@ -448,6 +455,7 @@ mod tests {
             trigger,
             negative_utility: neg,
             gems_rescheduled: false,
+            pinned: false,
         }
     }
 
@@ -508,6 +516,20 @@ mod tests {
         // ...must not shadow a live positive-utility candidate.
         q.insert(centry(2, ms(700), ms(100), ms(900), false));
         let idx = q.best_steal(ms(400), ms(500) as i64, |_| 1.0).unwrap();
+        assert_eq!(q.remove_at(idx).task.id, 2);
+    }
+
+    #[test]
+    fn pinned_entries_are_never_stolen() {
+        // A fixed-cut pipeline stage placed on the cloud is invisible to
+        // the steal scan even when it fits and out-ranks everything.
+        let mut q = CloudQueue::new();
+        let mut pinned = centry(1, ms(500), ms(100), ms(900), true);
+        pinned.pinned = true;
+        q.insert(pinned);
+        assert!(q.best_steal(0, ms(400) as i64, |_| 10.0).is_none());
+        q.insert(centry(2, ms(600), ms(100), ms(900), false));
+        let idx = q.best_steal(0, ms(400) as i64, |_| 1.0).unwrap();
         assert_eq!(q.remove_at(idx).task.id, 2);
     }
 

@@ -25,7 +25,7 @@ use crate::metrics::Metrics;
 use crate::model::{ModelProfile, Resource};
 use crate::net::{mobility_trace, LognormalWan, TraceBandwidth,
                  TrapeziumLatency};
-use crate::policy::Policy;
+use crate::policy::{PipelineCut, Policy};
 use crate::pool::Pool;
 use crate::report::{Cell, Report, Table, Value};
 use crate::time::{ms_f, secs, Micros};
@@ -1054,6 +1054,126 @@ pub fn shared_uplink_report(seed: u64, pool: &Pool) -> Result<Report> {
     Ok(rep)
 }
 
+// ------------------------------------------------- pipeline scenarios
+
+/// Stations per cluster for the split-DNN pipeline scenarios.
+const PIPELINE_EDGES: usize = 2;
+
+/// Run one partition-cut cell of the pipeline scenarios: the VIP
+/// split-DNN chain ([`Workload::vip_pipeline`]) under DEMS with the
+/// given partition decision. Each cell builds its own cluster from the
+/// raw seed, so the sweep stays shared-nothing and `--jobs` reports are
+/// byte-identical.
+fn run_pipeline_cell(cut: PipelineCut, seed: u64) -> ClusterMetrics {
+    let wl = Workload::vip_pipeline();
+    let policy = Policy::dems().with_pipeline_cut(cut);
+    run_cluster(&policy, &wl, seed, PIPELINE_EDGES,
+                &CloudSpec::NominalWan)
+}
+
+/// Summary row shared by the pipeline scenario tables: stage-task
+/// totals, end-to-end completion and QoS utility, and where the stages
+/// ran.
+fn pipeline_row(label: &str, cm: &ClusterMetrics) -> Vec<Cell> {
+    let on = |r: Resource| -> u64 {
+        cm.per_edge.iter().map(|m| m.completed_on(r)).sum()
+    };
+    vec![
+        Cell::str(label),
+        Cell::uint(cm.generated()),
+        Cell::uint(cm.completed()),
+        Cell::percent(100.0 * cm.completion_rate(), 1),
+        Cell::float(cm.total_qos_utility() / 1e5, 2),
+        Cell::uint(on(Resource::Drone)),
+        Cell::uint(on(Resource::Edge)),
+        Cell::uint(on(Resource::Cloud)),
+    ]
+}
+
+const PIPELINE_COLS: [&str; 8] = [
+    "cut", "stage tasks", "done", "done %", "QoS util", "drone done",
+    "edge done", "cloud done",
+];
+
+/// `split-pipeline`: the partition point of the 3-stage VIP chain
+/// (Hv → Md → Deo) as a scheduling decision — adaptive DEMS (drone
+/// prefix planned against per-stage deadlines, tail stages placed by
+/// κ-ranked admission) against representative fixed cuts. A scenario
+/// test pins that adaptive strictly beats both the edge-only and the
+/// cloud-only fixed cut on end-to-end QoS utility.
+pub fn split_pipeline_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let cuts: [(&str, PipelineCut); 5] = [
+        ("adaptive", PipelineCut::Adaptive),
+        ("edge-only", PipelineCut::Fixed { drone: 0, cloud_start: 3 }),
+        ("cloud-only", PipelineCut::Fixed { drone: 0, cloud_start: 0 }),
+        ("drone+edge", PipelineCut::Fixed { drone: 2, cloud_start: 3 }),
+        ("drone+cloud", PipelineCut::Fixed { drone: 2, cloud_start: 2 }),
+    ];
+    let metrics =
+        pool.run(cuts.len(), |j| run_pipeline_cell(cuts[j].1, seed));
+    let mut rep = Report::new(
+        "split-pipeline",
+        "Split-DNN pipeline — adaptive vs fixed partition cuts \
+         (Hv → Md → Deo chain)",
+        seed,
+    );
+    let mut t = Table::new(&PIPELINE_COLS);
+    for ((label, _), cm) in cuts.iter().zip(&metrics) {
+        t.push_row(pipeline_row(label, cm));
+    }
+    rep.table(t);
+    rep.text(
+        "(Each chain is one Hv → Md → Deo split-DNN inference with an \
+         end-to-end deadline; stage tasks counts every spawned stage. \
+         edge-only runs all three stages at the station, cloud-only \
+         pins all three to the cloud — its first stage cannot meet its \
+         per-stage deadline over the WAN; drone+X runs the first two \
+         stages on the capturing drone and the tail at X. adaptive \
+         plans the drone prefix against per-stage deadlines and leaves \
+         the tail to DEMS's κ-ranked edge/cloud admission.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
+/// `partition-sweep`: the full fixed-cut grid of the 3-stage chain —
+/// every `(drone prefix d, first cloud stage c)` with `d ≤ c` — next to
+/// the adaptive policy, mapping where each placement's QoS comes from.
+pub fn partition_sweep_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let mut cuts: Vec<(String, PipelineCut)> = Vec::new();
+    for d in 0..=2usize {
+        for c in d..=3usize {
+            cuts.push((
+                format!("d<{d} c>={c}"),
+                PipelineCut::Fixed { drone: d, cloud_start: c },
+            ));
+        }
+    }
+    cuts.push(("adaptive".to_string(), PipelineCut::Adaptive));
+    let metrics =
+        pool.run(cuts.len(), |j| run_pipeline_cell(cuts[j].1, seed));
+    let mut rep = Report::new(
+        "partition-sweep",
+        "Split-DNN pipeline — fixed-cut grid vs the adaptive partition \
+         (Hv → Md → Deo chain)",
+        seed,
+    );
+    let mut t = Table::new(&PIPELINE_COLS);
+    for ((label, _), cm) in cuts.iter().zip(&metrics) {
+        t.push_row(pipeline_row(label.as_str(), cm));
+    }
+    rep.table(t);
+    rep.text(
+        "(cut d<N c>=M: stages below N run on the capturing drone, \
+         stages at or above M are pinned to the cloud, the rest run at \
+         the edge station. Stage 2 (Deo) is not drone-capable, so the \
+         drone prefix tops out at 2. The adaptive row is the same \
+         partition decision made by DEMS at admission time.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
 // --------------------------------------------------------------- registry
 
 /// One runnable experiment in the registry.
@@ -1102,6 +1222,12 @@ pub fn registry() -> Vec<ScenarioEntry> {
         e("shared-uplink",
           "fleet federation: shared-backhaul contention vs adaptation",
           false),
+        e("split-pipeline",
+          "split-DNN pipelines: adaptive vs fixed drone/edge/cloud cuts",
+          false),
+        e("partition-sweep",
+          "split-DNN pipelines: the full fixed-cut grid vs adaptive",
+          false),
     ]
 }
 
@@ -1141,6 +1267,8 @@ pub fn run_scenario_jobs(id: &str, seed: u64, jobs: usize) -> Result<Report> {
         "fed-steal" => fed_steal_report(seed, &pool),
         "handover-churn" => handover_churn_report(seed, &pool),
         "shared-uplink" => shared_uplink_report(seed, &pool),
+        "split-pipeline" => split_pipeline_report(seed, &pool),
+        "partition-sweep" => partition_sweep_report(seed, &pool),
         other => {
             let known: Vec<&str> =
                 registry().iter().map(|e| e.id).collect();
@@ -1347,6 +1475,52 @@ mod tests {
             fed.total_utility(),
             iso.total_utility()
         );
+    }
+
+    #[test]
+    fn split_pipeline_adaptive_beats_fixed_cuts() {
+        // The acceptance pin: on the VIP split-DNN chain, the
+        // stage-aware adaptive partition (drone prefix planned against
+        // per-stage deadlines, tail placed by DEMS) strictly beats both
+        // degenerate fixed cuts on end-to-end QoS utility — edge-only
+        // overloads the station with the full chain's work, cloud-only
+        // dies on the first stage's per-stage deadline over the WAN.
+        let adaptive = run_pipeline_cell(PipelineCut::Adaptive, 42);
+        let edge_only = run_pipeline_cell(
+            PipelineCut::Fixed { drone: 0, cloud_start: 3 }, 42);
+        let cloud_only = run_pipeline_cell(
+            PipelineCut::Fixed { drone: 0, cloud_start: 0 }, 42);
+        let drone_done: u64 = adaptive
+            .per_edge
+            .iter()
+            .map(|m| m.completed_on(Resource::Drone))
+            .sum();
+        assert!(drone_done > 0,
+                "adaptive must run early stages on the drone tier");
+        assert!(
+            adaptive.total_qos_utility() > edge_only.total_qos_utility(),
+            "adaptive must strictly beat the edge-only cut: {:.0} vs {:.0}",
+            adaptive.total_qos_utility(),
+            edge_only.total_qos_utility()
+        );
+        assert!(
+            adaptive.total_qos_utility() > cloud_only.total_qos_utility(),
+            "adaptive must strictly beat the cloud-only cut: {:.0} vs {:.0}",
+            adaptive.total_qos_utility(),
+            cloud_only.total_qos_utility()
+        );
+    }
+
+    #[test]
+    fn pipeline_reports_tabulate_every_cut() {
+        let rep = split_pipeline_report(7, &Pool::new(1)).expect("runs");
+        let tables = rep.tables();
+        assert_eq!(tables.len(), 1);
+        // adaptive + 4 fixed cuts.
+        assert_eq!(tables[0].rows.len(), 5);
+        let rep = partition_sweep_report(7, &Pool::new(1)).expect("runs");
+        // 4 + 3 + 2 fixed cells + the adaptive row.
+        assert_eq!(rep.tables()[0].rows.len(), 10);
     }
 
     #[test]

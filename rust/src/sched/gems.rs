@@ -80,18 +80,25 @@ impl Scheduler for Gems {
             return; // GEMS only helps via positive-utility cloud runs (§6)
         }
         let t_hat = self.est.expected(ctx.core, kind);
+        let fixed_cut = matches!(ctx.core.policy.pipeline,
+                                 crate::policy::PipelineCut::Fixed { .. });
         let pending = ctx.core.edge_q.tasks_of_model(kind);
         for (_, tid) in pending {
             // Re-find by id: earlier removals shift indices.
-            let Some(abs_deadline) = ctx
+            let Some((abs_deadline, pipelined)) = ctx
                 .core
                 .edge_q
                 .iter()
                 .find(|e| e.task.id == tid)
-                .map(|e| e.abs_deadline)
+                .map(|e| (e.abs_deadline, e.task.pipeline.is_some()))
             else {
                 continue;
             };
+            // Under a fixed partition the cut is the experiment's control
+            // variable: GEMS must not move pipeline stages across it.
+            if fixed_cut && pipelined {
+                continue;
+            }
             if now + t_hat <= abs_deadline {
                 let e = ctx.core.edge_q.remove_task(tid).unwrap();
                 ctx.core.cloud_q.insert(CloudEntry {
@@ -102,6 +109,7 @@ impl Scheduler for Gems {
                     trigger: now,
                     negative_utility: false,
                     gems_rescheduled: true,
+                    pinned: false,
                 });
                 ctx.q.push(now, Event::CloudTrigger);
             }

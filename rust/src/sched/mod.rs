@@ -225,10 +225,16 @@ pub trait Scheduler: Send {
             return false;
         }
         // Read the profile scalars the decision needs up front (no
-        // per-offer profile clone on this hot path).
+        // per-offer profile clone on this hot path). For pipeline stages
+        // the cloud utility is stage-aware: the *remaining chain's*
+        // utility — the final stage's β minus every remaining κ̂ — not
+        // just this stage's own γᶜ, so DEMS ranks the cut by what the
+        // whole suffix earns (exact profile γᶜ for plain tasks).
         let (dl, t_edge, util_cloud) = {
             let p = ctx.core.profile(task.model);
-            (task.absolute_deadline(p.deadline), p.t_edge, p.util_cloud())
+            (task.absolute_deadline(p.deadline), p.t_edge,
+             crate::pipeline::chain_util_cloud(task.pipeline.as_ref(), p,
+                                               &ctx.core.models))
         };
         let t_hat = self.expected_cloud(ctx.core, task.model);
         if ctx.now + t_hat > dl {
@@ -251,6 +257,7 @@ pub trait Scheduler: Send {
                     trigger,
                     negative_utility: true,
                     gems_rescheduled: gems,
+                    pinned: false,
                 };
                 ctx.core.push_cloud(entry, ctx.q);
                 return true;
@@ -278,6 +285,7 @@ pub trait Scheduler: Send {
             trigger,
             negative_utility: negative,
             gems_rescheduled: gems,
+            pinned: false,
         };
         ctx.core.push_cloud(entry, ctx.q);
         true

@@ -41,6 +41,14 @@ pub enum Event {
     /// A drone re-homes to another edge (fleet handover; scope = the
     /// destination edge, which records the handover).
     Handover { drone: u32, to_edge: u32 },
+    /// A pipeline successor stage arrives at its home edge for admission
+    /// — pushed at the predecessor's completion time plus the wireless
+    /// transfer when the handoff leaves the drone tier
+    /// ([`crate::pipeline`]).
+    StageArrive { task: Task },
+    /// The drone's companion computer finished a pipeline prefix stage
+    /// (`started` = when it began, for the exec-duration accounting).
+    DroneDone { task: Task, started: Micros },
 }
 
 struct Item {
@@ -212,6 +220,7 @@ mod tests {
                 created_at: 0,
                 bytes: 38_000,
             },
+            pipeline: None,
         };
         let mut q = EventQueue::new();
         q.set_scope(1);

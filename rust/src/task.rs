@@ -1,6 +1,7 @@
 //! Tasks and video segments — the scheduler's unit of work (§3.3, §4).
 
 use crate::model::{DnnKind, Resource};
+use crate::pipeline::PipelineRef;
 use crate::time::Micros;
 
 /// Globally unique task id within one platform run.
@@ -21,18 +22,46 @@ pub struct VideoSegment {
 }
 
 /// One DNN inferencing task τᵢʲ = (model μᵢ, segment vⱼ).
+///
+/// A split-DNN pipeline stage is a full task too: `pipeline` carries the
+/// chain handle + stage index, and the deadline/payload accessors below
+/// become stage-aware. `pipeline: None` is the classic single-stage task.
 #[derive(Clone, Debug)]
 pub struct Task {
     pub id: TaskId,
     pub model: DnnKind,
     pub segment: VideoSegment,
+    /// Chain position for split-DNN pipeline stages; `None` for the
+    /// classic single-stage tasks (bit-identical legacy path).
+    pub pipeline: Option<PipelineRef>,
 }
 
 impl Task {
-    /// Absolute deadline: t′ⱼ + δᵢ.
+    /// Absolute deadline: t′ⱼ + δᵢ for plain tasks; for a pipeline stage
+    /// the per-stage deadline derived from the chain's end-to-end
+    /// deadline (`t′ⱼ + stage_deadline(i)` — the slack-weighted cut of
+    /// the e2e budget, see [`crate::pipeline::StageGraph`]).
     #[inline]
     pub fn absolute_deadline(&self, deadline: Micros) -> Micros {
-        self.segment.created_at + deadline
+        match &self.pipeline {
+            Some(pr) => {
+                self.segment.created_at + pr.graph.stage_deadline(pr.stage)
+            }
+            None => self.segment.created_at + deadline,
+        }
+    }
+
+    /// Transfer payload when this task crosses a tier boundary: the raw
+    /// segment for plain tasks and stage 0, the predecessor stage's
+    /// intermediate tensor for later stages.
+    #[inline]
+    pub fn payload_bytes(&self) -> u64 {
+        match &self.pipeline {
+            Some(pr) if pr.stage > 0 => {
+                pr.graph.stages[pr.stage - 1].output_bytes
+            }
+            _ => self.segment.bytes,
+        }
     }
 }
 
@@ -114,8 +143,54 @@ mod tests {
 
     #[test]
     fn absolute_deadline_offsets_from_creation() {
-        let t = Task { id: 1, model: DnnKind::Hv, segment: seg(ms(100)) };
+        let t = Task {
+            id: 1,
+            model: DnnKind::Hv,
+            segment: seg(ms(100)),
+            pipeline: None,
+        };
         assert_eq!(t.absolute_deadline(ms(650)), ms(750));
+        assert_eq!(t.payload_bytes(), 38_000);
+    }
+
+    #[test]
+    fn pipeline_stage_deadline_and_payload() {
+        use crate::pipeline::{PipelineRef, Stage, StageGraph};
+        use std::sync::Arc;
+        let g = Arc::new(StageGraph::chain(
+            "c",
+            vec![
+                Stage {
+                    kind: DnnKind::Hv,
+                    deadline_slack: 0.25,
+                    output_bytes: 9_000,
+                    drone_capable: true,
+                },
+                Stage {
+                    kind: DnnKind::Deo,
+                    deadline_slack: 0.75,
+                    output_bytes: 0,
+                    drone_capable: false,
+                },
+            ],
+            ms(1_000),
+        ));
+        let mk = |stage| Task {
+            id: 1,
+            model: DnnKind::Hv,
+            segment: seg(ms(100)),
+            pipeline: Some(PipelineRef {
+                graph: g.clone(),
+                stage,
+                drone_prefix: 0,
+            }),
+        };
+        // Stage deadlines override the per-model δ entirely.
+        assert_eq!(mk(0).absolute_deadline(ms(650)), ms(100) + ms(250));
+        assert_eq!(mk(1).absolute_deadline(ms(650)), ms(100) + ms(1_000));
+        // Stage 0 ships the raw segment; stage 1 the intermediate tensor.
+        assert_eq!(mk(0).payload_bytes(), 38_000);
+        assert_eq!(mk(1).payload_bytes(), 9_000);
     }
 
     #[test]

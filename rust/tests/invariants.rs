@@ -1,13 +1,19 @@
 //! Dependency-free seeded property-test harness: ~50 randomized
 //! scenarios across arrival process × churn × cloud backend × federation
-//! on/off, each pinned to the DES conservation invariants.
+//! on/off × split-DNN pipelines, each pinned to the DES conservation
+//! invariants.
 //!
 //! Per run, the harness asserts:
 //!
 //! * **Conservation / zero in-flight at drain** — per model kind, folded
 //!   across the cluster (cross-edge steals finalize at the thief, so the
 //!   ledger closes cluster-wide): generated == executed + dropped over
-//!   all `DropReason`s.
+//!   all `DropReason`s. Pipeline stage tasks are ordinary tasks of their
+//!   stage's kind, so every spawned stage closes under the same ledger.
+//! * **Chain causality** — a pipelined scenario never spawns more
+//!   stage-1 successors than stage-0 completions (successors spawn only
+//!   on upstream success; in-flight handoffs at the horizon may lower
+//!   the count, never raise it).
 //! * **QoS ≤ max attainable** — per-kind folded QoS utility never
 //!   exceeds `generated × max(γᴱ, γᶜ, 0)`.
 //! * **Monotone virtual time** — every edge's finalization log is
@@ -19,8 +25,9 @@
 
 use ocularone::cluster::{Cluster, ClusterMetrics, Federation, Handover};
 use ocularone::fleet::{Arrival, DroneChurn, Workload};
-use ocularone::model::DnnKind;
-use ocularone::policy::Policy;
+use ocularone::model::{DnnKind, ModelProfile};
+use ocularone::pipeline::{Stage, StageGraph};
+use ocularone::policy::{PipelineCut, Policy};
 use ocularone::rng::Rng;
 use ocularone::scenario::CloudSpec;
 use ocularone::sim::{Event, EventQueue};
@@ -112,9 +119,34 @@ fn assert_invariants(cm: &ClusterMetrics, wls: &[Workload], label: &str) {
     }
 }
 
+/// Two-stage split-DNN chain over the first two kinds of a mix: a
+/// drone-capable early stage handing 24 kB to the final stage, on a 2 s
+/// end-to-end deadline split 30/70.
+fn two_stage_graph(models: &[ModelProfile]) -> StageGraph {
+    StageGraph::chain(
+        "inv-chain",
+        vec![
+            Stage {
+                kind: models[0].kind,
+                deadline_slack: 0.3,
+                output_bytes: 24_000,
+                drone_capable: true,
+            },
+            Stage {
+                kind: models[1].kind,
+                deadline_slack: 0.7,
+                output_bytes: 0,
+                drone_capable: false,
+            },
+        ],
+        secs(2),
+    )
+}
+
 /// Randomized scenario sweep: ~50 sampled points of the
-/// arrival × churn × cloud × federation grid, every one asserted
-/// against the invariants above. Fully seeded — failures reproduce.
+/// arrival × churn × cloud × federation × pipeline grid, every one
+/// asserted against the invariants above. Fully seeded — failures
+/// reproduce.
 #[test]
 fn randomized_scenarios_preserve_conservation_invariants() {
     let policies = [
@@ -128,14 +160,30 @@ fn randomized_scenarios_preserve_conservation_invariants() {
     let mut rng = Rng::new(0xC0FF_EE00);
     for iter in 0..50 {
         let n_edges = 1 + rng.below(3);
-        let policy = policies[rng.below(policies.len())].clone();
+        let mut policy = policies[rng.below(policies.len())].clone();
         let duration = secs(15 + rng.below(16) as u64);
+        // ~30% of scenarios swap the plain fan-out for a 2-stage
+        // split-DNN chain. All pipelined edges share one mix (and so one
+        // stage-kind pair), keeping the chain-causality fold well-typed
+        // cluster-wide; half the pipelined runs pin a random fixed cut.
+        let pipelined = rng.chance(0.3);
+        let shared_active = rng.chance(0.5);
+        if pipelined && rng.chance(0.5) {
+            let drone = rng.below(3);
+            let cloud_start = drone + rng.below(3 - drone);
+            policy = policy
+                .with_pipeline_cut(PipelineCut::Fixed { drone, cloud_start });
+        }
         let mut wls: Vec<Workload> = Vec::new();
         for _ in 0..n_edges {
             let drones = 1 + rng.below(3) as u32;
-            let active = rng.chance(0.5);
+            let active =
+                if pipelined { shared_active } else { rng.chance(0.5) };
             let mut wl = Workload::emulation(drones, active)
                 .with_duration(duration);
+            if pipelined {
+                wl = wl.with_pipeline(two_stage_graph(&wl.models));
+            }
             match rng.below(3) {
                 0 => {}
                 1 => wl = wl.with_arrival(Arrival::Poisson),
@@ -208,13 +256,40 @@ fn randomized_scenarios_preserve_conservation_invariants() {
             (cluster, "single-edge")
         };
         let label = format!(
-            "iter {iter} ({} edges, {}, fed={fed_desc}, seed {seed:#x})",
+            "iter {iter} ({} edges, {}, fed={fed_desc}, \
+             pipeline={pipelined}, seed {seed:#x})",
             n_edges,
             policy.kind.name(),
         );
         let cm = cluster.run();
         assert!(cm.generated() > 0, "{label}: degenerate scenario");
         assert_invariants(&cm, &wls, &label);
+        if pipelined {
+            // Chain causality: every stage-1 task was spawned by a
+            // completed stage-0 task (folded cluster-wide — steals and
+            // handovers move stages across edges, never mint them).
+            let fold = |k: DnnKind| -> (u64, u64) {
+                let mut gen = 0u64;
+                let mut done = 0u64;
+                for m in &cm.per_edge {
+                    if let Some((_, s)) =
+                        m.per_model.iter().find(|(kk, _)| *kk == k)
+                    {
+                        gen += s.generated;
+                        done += s.completed();
+                    }
+                }
+                (gen, done)
+            };
+            let (gen0, done0) = fold(wls[0].models[0].kind);
+            let (gen1, _) = fold(wls[0].models[1].kind);
+            assert!(gen0 > 0, "{label}: no chain roots emitted");
+            assert!(
+                gen1 <= done0,
+                "{label}: {gen1} stage-1 tasks spawned from only \
+                 {done0} stage-0 completions"
+            );
+        }
     }
 }
 

@@ -70,6 +70,72 @@ fn shared_uplink_parallel_parity() {
 }
 
 #[test]
+fn split_pipeline_parallel_parity() {
+    // Pipeline cells build their own cluster (drone tier, stage graphs,
+    // handoff transfers) from the raw seed, so the cut sweep reproduces
+    // for any worker count.
+    assert_parity("split-pipeline", 42);
+}
+
+#[test]
+fn partition_sweep_parallel_parity() {
+    assert_parity("partition-sweep", 42);
+}
+
+#[test]
+fn single_stage_pipeline_is_bit_identical_to_plain() {
+    // The pipeline-off pin: wrapping a workload's first model in a
+    // degenerate 1-stage graph (same kind, same deadline, no handoff
+    // bytes, no drone tier) must leave the whole engine on the plain
+    // path — identical RNG draws, identical metrics, bit for bit. This
+    // is what keeps the existing goldens valid with the pipeline
+    // subsystem compiled in.
+    use ocularone::cloud::CloudBackend;
+    use ocularone::cluster::Cluster;
+    use ocularone::exec::CloudExecModel;
+    use ocularone::fleet::Workload;
+    use ocularone::net::LognormalWan;
+    use ocularone::pipeline::{Stage, StageGraph};
+    use ocularone::policy::Policy;
+
+    fn wan() -> Box<dyn CloudBackend> {
+        CloudExecModel::new(Box::new(LognormalWan::default())).into()
+    }
+    // One model, every tick — the plain emitter and the chain-root
+    // emitter then draw identically from the arrival RNG.
+    let mut base = Workload::emulation(3, true);
+    base.models.truncate(1);
+    base.model_every.truncate(1);
+    assert_eq!(base.model_every[0], 1);
+    let profile = base.models[0].clone();
+    let graph = StageGraph::chain(
+        "one",
+        vec![Stage {
+            kind: profile.kind,
+            deadline_slack: 1.0,
+            output_bytes: 0,
+            drone_capable: false,
+        }],
+        profile.deadline,
+    );
+    for policy in [Policy::dems(), Policy::dems_a(), Policy::gems(false)]
+    {
+        let plain = Cluster::emulation(&policy, &base, 42, 3, &wan).run();
+        let piped = Cluster::emulation(
+            &policy,
+            &base.clone().with_pipeline(graph.clone()),
+            42,
+            3,
+            &wan,
+        )
+        .run();
+        assert_eq!(plain, piped,
+                   "single-stage pipeline diverged under {}",
+                   policy.kind.name());
+    }
+}
+
+#[test]
 fn federation_off_is_bit_identical_to_unfederated() {
     // The regression pin behind "federation off changes nothing": a
     // cluster federated with the all-off config produces bit-identical
