@@ -126,6 +126,12 @@ pub trait CloudBackend: Send {
     /// the warm pool. Backends without container state ignore this.
     fn complete(&mut self, _kind: DnnKind, _token: u32, _now: Micros) {}
 
+    /// Fault injection (see [`crate::fault`]): region `region` is dark
+    /// until `until` (0 clears an outage early). A dark region refuses
+    /// invocations, shaped as throttles so the scheduler's adaptation
+    /// path reacts. Backends without regions ignore this.
+    fn fault_outage(&mut self, _region: usize, _until: Micros) {}
+
     /// Cumulative accounting snapshot.
     fn stats(&self) -> CloudStats {
         CloudStats::default()

@@ -24,6 +24,11 @@ pub struct MultiRegionBackend {
     ewma: [Option<f64>; 2],
     /// Invocations served by the non-preferred region after a throttle.
     failovers: u64,
+    /// Fault injection: a region refuses invocations while
+    /// `now < outage_until[region]` (see [`crate::fault`]). Refusals are
+    /// shaped as throttles, so the ordinary failover and scheduler
+    /// adaptation paths react to the outage.
+    outage_until: [Micros; 2],
 }
 
 impl MultiRegionBackend {
@@ -32,6 +37,7 @@ impl MultiRegionBackend {
             regions: [primary, secondary],
             ewma: [None, None],
             failovers: 0,
+            outage_until: [0, 0],
         }
     }
 
@@ -72,6 +78,14 @@ impl CloudBackend for MultiRegionBackend {
         let first = self.preferred();
         let mut retry = Micros::MAX;
         for region in [first, 1 - first] {
+            // A region dark under fault injection refuses the attempt
+            // outright, shaped as a throttle that clears when the
+            // outage does — the failover below and the scheduler's
+            // adaptation window both see it as cloud degradation.
+            if now < self.outage_until[region] {
+                retry = retry.min(self.outage_until[region] - now);
+                continue;
+            }
             match self.regions[region]
                 .invoke(profile, now, bytes, concurrent, rng)
             {
@@ -93,6 +107,12 @@ impl CloudBackend for MultiRegionBackend {
 
     fn complete(&mut self, kind: DnnKind, token: u32, now: Micros) {
         self.regions[(token & 1) as usize].complete(kind, token >> 1, now);
+    }
+
+    fn fault_outage(&mut self, region: usize, until: Micros) {
+        if let Some(slot) = self.outage_until.get_mut(region) {
+            *slot = until;
+        }
     }
 
     fn stats(&self) -> CloudStats {
@@ -179,6 +199,34 @@ mod tests {
         let s = be.stats();
         assert_eq!(s.invocations, 2);
         assert_eq!(s.throttles, 2);
+    }
+
+    #[test]
+    fn outage_darkens_region_and_early_clear_restores_it() {
+        let mut be =
+            MultiRegionBackend::new(region(ms(40), 16), region(ms(200), 16));
+        let mut rng = Rng::new(4);
+        be.fault_outage(0, secs(10));
+        // Region 0 dark: the call fails over to 1 despite 0 being the
+        // nominal primary.
+        let (_, t0) = invoke(&mut be, 0, &mut rng);
+        assert_eq!(t0, 1, "dark region must refuse");
+        assert_eq!(be.failovers(), 1);
+        be.complete(DnnKind::Hv, t0, ms(900));
+        // Both dark: throttle-shaped refusal until the nearer outage ends.
+        be.fault_outage(1, secs(5));
+        let m = &table1()[0];
+        match CloudBackend::invoke(&mut be, m, secs(1), 38_000, 0, &mut rng)
+        {
+            Attempt::Throttle { retry_after } => {
+                assert_eq!(retry_after, secs(4));
+            }
+            Attempt::Run(_) => panic!("both regions are dark"),
+        }
+        // An early clear restores service before the scheduled end.
+        be.fault_outage(0, 0);
+        let (_, t) = invoke(&mut be, secs(2), &mut rng);
+        assert_eq!(t & 1, 0, "cleared region serves again");
     }
 
     #[test]

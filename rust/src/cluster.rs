@@ -20,6 +20,8 @@ use std::cell::RefCell;
 use std::sync::{Arc, Mutex};
 
 use crate::cloud::{CloudBackend, CloudStats};
+use crate::fault::{DegradedLan, FaultAction, FaultDriver, FaultSpec,
+                   FlapLink, Recovery};
 use crate::fleet::{Arrival, Workload};
 use crate::metrics::{self, Metrics};
 use crate::net::{ConstantNet, NetworkModel, SharedUplink};
@@ -115,6 +117,22 @@ impl Router {
     pub fn is_dynamic(&self) -> bool {
         !self.overrides.is_empty()
     }
+
+    /// The current override for `drone`, if any (fault recovery snapshots
+    /// this before re-homing a crashed edge's drones, so it can restore
+    /// the pre-crash mapping verbatim).
+    pub fn override_of(&self, drone: u32) -> Option<u32> {
+        self.overrides
+            .iter()
+            .find(|(d, _)| *d == drone)
+            .map(|&(_, e)| e)
+    }
+
+    /// Remove `drone`'s override, restoring its static/origin mapping
+    /// (fault recovery for a drone that had no override pre-crash).
+    pub fn clear_override(&mut self, drone: u32) {
+        self.overrides.retain(|(d, _)| *d != drone);
+    }
 }
 
 /// Aggregated results of one cluster run.
@@ -208,6 +226,36 @@ impl ClusterMetrics {
     /// Cloud dispatches that queued on the shared uplink.
     pub fn uplink_queued(&self) -> u64 {
         self.per_edge.iter().map(|m| m.uplink_queued).sum()
+    }
+
+    // ---------------------------------------------------- fault columns
+
+    /// Edge-crash events applied (fault injection).
+    pub fn crashes(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.crashes).sum()
+    }
+
+    /// Edge recoveries applied (fault injection).
+    pub fn recoveries(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.recoveries).sum()
+    }
+
+    /// Queued entries a crashed edge relocated to live siblings through
+    /// the federation steal path ([`Recovery::Requeue`]).
+    pub fn fault_relocated(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.fault_relocated).sum()
+    }
+
+    /// Tasks lost to node failure (in-flight work on a crashed edge,
+    /// infeasible relocations, arrivals during downtime).
+    pub fn node_failures(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.node_failures()).sum()
+    }
+
+    /// Total edge downtime across the cluster (µs; never-recovered
+    /// edges are charged to the run horizon).
+    pub fn downtime(&self) -> Micros {
+        self.per_edge.iter().map(|m| m.downtime).sum()
     }
 }
 
@@ -327,6 +375,9 @@ pub struct Cluster<S: Scheduler = Box<dyn Scheduler>> {
     /// Fleet-federation layer; `None` (the default) runs the edges fully
     /// isolated, bit-identical to the pre-federation engine.
     federation: Option<Federation>,
+    /// Fault-injection schedule; the default (empty) spec is inert and
+    /// keeps the run bit-identical to the pre-fault engine.
+    faults: FaultSpec,
 }
 
 impl Cluster<Box<dyn Scheduler>> {
@@ -412,6 +463,7 @@ impl<S: Scheduler> Cluster<S> {
             arrivals: arrival_seeds.into_iter().map(Rng::new).collect(),
             segment_ids: vec![0; n],
             federation: None,
+            faults: FaultSpec::default(),
         }
     }
 
@@ -425,6 +477,19 @@ impl<S: Scheduler> Cluster<S> {
                     "handover target edge {} out of range", h.to_edge);
         }
         self.federation = Some(fed);
+        self
+    }
+
+    /// Attach a fault-injection schedule (edge crashes, region outages,
+    /// link flaps — see [`crate::fault`]). The default empty
+    /// [`FaultSpec`] is inert: the run stays bit-identical to a cluster
+    /// without one.
+    pub fn with_faults(mut self, spec: FaultSpec) -> Self {
+        if let Some(max) = spec.max_edge() {
+            assert!(max < self.edges.len(),
+                    "fault crash edge {} out of range", max);
+        }
+        self.faults = spec;
         self
     }
 
@@ -483,18 +548,53 @@ impl<S: Scheduler> Cluster<S> {
             mut arrivals,
             mut segment_ids,
             federation,
+            faults,
         } = self;
         let n = edges.len();
         let mut fed = federation;
 
+        // Fault injection: compile the schedule FIRST, so at equal
+        // timestamps a fault wins the tie by push order — a crash at
+        // exactly a handover/tick instant strictly precedes it. The
+        // driver only exists when the spec injects something, keeping
+        // faults-off runs bit-identical to the pre-fault engine.
+        let faults_on = faults.enabled();
+        let mut driver = if faults_on {
+            faults.compile(q);
+            Some(FaultDriver::new(n, faults.recovery))
+        } else {
+            None
+        };
+        if let Some(d) = &driver {
+            // A LAN flap needs a hook into the federation's steal/
+            // relocation network model: wrap it once, here, so the
+            // in-run toggle is just the shared cell.
+            if faults.flaps.iter().any(|f| f.link == FlapLink::Lan) {
+                if let Some(f) = fed.as_mut() {
+                    let inner = std::mem::replace(
+                        &mut f.lan,
+                        Box::new(ConstantNet { latency: 0,
+                                               bandwidth: f64::INFINITY }),
+                    );
+                    f.lan = Box::new(DegradedLan {
+                        inner,
+                        degraded: d.lan_degraded.clone(),
+                    });
+                }
+            }
+        }
+
         // Shared-uplink contention: hand every edge the same budget so
-        // their cloud dispatches serialize against each other.
+        // their cloud dispatches serialize against each other. The
+        // handle is kept so an uplink flap can degrade it mid-run.
+        let mut shared_up: Option<Arc<Mutex<SharedUplink>>> = None;
         if let Some(f) = &fed {
             if let Some(bw) = f.uplink_bytes_per_sec {
                 let up = Arc::new(Mutex::new(SharedUplink::new(bw)));
                 for edge in edges.iter_mut() {
                     edge.core.uplink = Some(up.clone());
                 }
+                shared_up = Some(up);
             }
             // Handovers are pushed *before* the segment seeds, so a
             // re-home at exactly a tick instant wins the tie and that
@@ -532,7 +632,7 @@ impl<S: Scheduler> Cluster<S> {
         let pipelined = workloads.iter().any(|w| w.pipeline.is_some());
         while let Some((now, scope, ev)) = q.pop_scoped() {
             if now > horizon {
-                if fed.is_none() && !pipelined {
+                if fed.is_none() && !pipelined && !faults_on {
                     break;
                 }
                 // Federated runs keep popping: a steal still in LAN
@@ -619,17 +719,50 @@ impl<S: Scheduler> Cluster<S> {
                     }
                 }
                 Event::FedArrive { task } => {
-                    edges[e].accept_federated(now, task, &mut q);
+                    // A transfer landing on an edge that crashed while
+                    // it was on the LAN dies here — closed exactly once
+                    // (it was charged `generated` at its origin).
+                    if driver.as_ref().map_or(false, |d| d.is_down(e)) {
+                        edges[e].drop_failed(now, task, &mut q);
+                    } else {
+                        edges[e].accept_federated(now, task, &mut q);
+                    }
                 }
                 Event::Handover { drone, to_edge } => {
-                    router.re_home(drone, to_edge as usize);
-                    edges[e].metrics.handovers += 1;
+                    let mut dst = Some(to_edge as usize);
+                    if let Some(d) = driver.as_mut() {
+                        // The planned handover supersedes any crash
+                        // re-home: recovery must not undo it.
+                        d.forget_rehome(drone);
+                        if d.is_down(to_edge as usize) {
+                            dst = d.live_edge(to_edge as usize);
+                        }
+                    }
+                    if let Some(dst) = dst {
+                        router.re_home(drone, dst);
+                        edges[e].metrics.handovers += 1;
+                    }
                 }
                 Event::StageArrive { task } => {
                     edges[e].submit_task(now, task, &mut q)
                 }
                 Event::DroneDone { task, started } => {
-                    edges[e].on_drone_done(now, task, started, &mut q)
+                    // The drone survives, but the station that would
+                    // collect its result is dark.
+                    if driver.as_ref().map_or(false, |d| d.is_down(e)) {
+                        edges[e].drop_failed(now, task, &mut q);
+                    } else {
+                        edges[e].on_drone_done(now, task, started,
+                                               &mut q)
+                    }
+                }
+                Event::Fault(action) => {
+                    apply_fault(now, action,
+                                driver.as_mut()
+                                      .expect("fault event without driver"),
+                                fed.as_mut(), &shared_up, &mut router,
+                                &workloads, &drone_base, &mut edges,
+                                &mut q);
                 }
             }
             // Fleet work stealing: when the event left the touched edge
@@ -642,6 +775,14 @@ impl<S: Scheduler> Cluster<S> {
                                       &mut *q);
                     }
                 }
+            }
+        }
+
+        // Edges still dark at the horizon never saw their Recover
+        // event: charge the open downtime window to the run end.
+        if let Some(d) = &driver {
+            for (e, edge) in edges.iter_mut().enumerate() {
+                edge.metrics.downtime += d.residual_downtime(e, horizon);
             }
         }
 
@@ -676,7 +817,10 @@ fn try_fed_steal<S: Scheduler>(now: Micros, thief: usize,
         // cluster a non-stealing baseline neither offers nor steals, so
         // federation extends §5.3 symmetrically.
         let t = &edges[thief];
-        if !t.policy.use_edge
+        // A crashed thief has (vacuously) empty queues — gate it
+        // explicitly so a dark station never pulls work.
+        if t.core.crashed
+            || !t.policy.use_edge
             || !t.scheduler().federates(&t.core)
             || t.core.running_edge.is_some()
             || !t.core.edge_q.is_empty()
@@ -692,7 +836,11 @@ fn try_fed_steal<S: Scheduler>(now: Micros, thief: usize,
         }
         // The origin's scheduler gates federation (§5.3 extended): a
         // policy that never steals locally is never stolen from either.
-        if !origin.scheduler().federates(&origin.core) {
+        // A crashed origin's queues were swept at the crash, but skip
+        // it outright for clarity.
+        if origin.core.crashed
+            || !origin.scheduler().federates(&origin.core)
+        {
             continue;
         }
         for (idx, en) in origin.core.cloud_q.iter().enumerate() {
@@ -741,6 +889,139 @@ fn try_fed_steal<S: Scheduler>(now: Micros, thief: usize,
         let entry = edges[s].take_fed_offer(idx);
         q.set_scope(thief as u32);
         q.push(now + transfer, Event::FedArrive { task: entry.task });
+    }
+}
+
+/// Apply one compiled [`FaultAction`] to the running cluster. Crash and
+/// recover mutate one platform + the router; outages fan out to every
+/// edge's cloud backend; flaps toggle the shared link models in place.
+#[allow(clippy::too_many_arguments)]
+fn apply_fault<S: Scheduler>(now: Micros, action: FaultAction,
+                             d: &mut FaultDriver,
+                             mut fed: Option<&mut Federation>,
+                             shared_up: &Option<Arc<Mutex<SharedUplink>>>,
+                             router: &mut Router, workloads: &[Workload],
+                             drone_base: &[u32],
+                             edges: &mut [Platform<S>],
+                             q: &mut EventQueue) {
+    match action {
+        FaultAction::Crash { edge } => {
+            // A double crash in a random spec is a no-op, not a second
+            // sweep.
+            if !d.mark_down(edge, now) {
+                return;
+            }
+            // Re-home the dead station's buddy drones to the lowest-
+            // index live sibling (deterministic), remembering their
+            // pre-crash mapping for recovery. With every edge dark the
+            // fleet has nowhere to stream and arrivals die at submit.
+            if let Some(fallback) = d.live_edge(edge) {
+                for (o, wl) in workloads.iter().enumerate() {
+                    for ld in 0..wl.drones {
+                        let g = drone_base[o] + ld;
+                        if router.homed_edge(g, o) == edge {
+                            d.save_rehome(edge, g,
+                                          router.override_of(g));
+                            router.re_home(g, fallback);
+                        }
+                    }
+                }
+            }
+            // Sweep the platform: in-flight work is always lost;
+            // queued, un-pinned entries come back as relocation
+            // candidates under Recovery::Requeue — federated runs
+            // with a live sibling only, since without a federation
+            // there is no LAN to carry them.
+            let relocate = d.recovery == Recovery::Requeue
+                && fed.is_some()
+                && d.live_edge(edge).is_some();
+            q.set_scope(edge as u32);
+            let orphans = edges[edge].crash(now, relocate, q);
+            if orphans.is_empty() {
+                return;
+            }
+            let f = fed.as_mut().expect("relocation implies federation");
+            let target = d
+                .live_edge(edge)
+                .expect("relocation implies a live sibling");
+            for (task, abs_deadline, _) in orphans {
+                // Same screen as try_fed_steal: the target must serve
+                // the model and make the deadline after the LAN hop.
+                let tp = edges[target]
+                    .models
+                    .iter()
+                    .find(|m| m.kind == task.model);
+                let transfer = f.lan.transfer_time(
+                    now, task.payload_bytes(), &mut f.rng);
+                let feasible = tp.map_or(false, |p| {
+                    now + transfer + p.t_edge <= abs_deadline
+                });
+                if feasible {
+                    edges[edge].metrics.fault_relocated += 1;
+                    // The relocation is an offer through the steal
+                    // path, so the offers ≥ arrivals ledger still
+                    // closes.
+                    edges[edge].metrics.fed_steals_out += 1;
+                    q.set_scope(target as u32);
+                    q.push(now + transfer, Event::FedArrive { task });
+                    q.set_scope(edge as u32);
+                } else {
+                    edges[edge].drop_failed(now, task, q);
+                }
+            }
+        }
+        FaultAction::Recover { edge } => {
+            let Some(dt) = d.mark_up(edge, now) else { return };
+            edges[edge].metrics.downtime += dt;
+            edges[edge].recover();
+            // Hand the re-homed streams back: restore each drone's
+            // pre-crash mapping (drones a planned handover retargeted
+            // mid-downtime were already forgotten).
+            for (g, prev) in d.take_rehomed(edge) {
+                match prev {
+                    Some(p) => router.re_home(g, p as usize),
+                    None => router.clear_override(g),
+                }
+            }
+        }
+        FaultAction::OutageStart { region, until } => {
+            for edge in edges.iter_mut() {
+                edge.core.cloud.fault_outage(region, until);
+            }
+        }
+        FaultAction::OutageEnd { region } => {
+            for edge in edges.iter_mut() {
+                edge.core.cloud.fault_outage(region, 0);
+            }
+        }
+        FaultAction::FlapStart { link, degraded_bps } => match link {
+            FlapLink::Uplink => {
+                if let Some(up) = shared_up {
+                    let mut u = up.lock().expect("shared uplink");
+                    if d.uplink_nominal.is_none() {
+                        d.uplink_nominal = Some(u.bandwidth);
+                    }
+                    u.bandwidth = degraded_bps;
+                }
+            }
+            FlapLink::Lan => {
+                *d.lan_degraded.lock().expect("lan flap cell") =
+                    Some(degraded_bps);
+            }
+        },
+        FaultAction::FlapEnd { link } => match link {
+            FlapLink::Uplink => {
+                if let Some(up) = shared_up {
+                    if let Some(nom) = d.uplink_nominal.take() {
+                        up.lock().expect("shared uplink").bandwidth =
+                            nom;
+                    }
+                }
+            }
+            FlapLink::Lan => {
+                *d.lan_degraded.lock().expect("lan flap cell") = None;
+            }
+        },
     }
 }
 
@@ -1093,6 +1374,112 @@ mod tests {
         assert_eq!(fed.generated(), closed_tasks(&fed));
         assert_eq!(fed.generated(), iso.generated(),
                    "stealing never changes what is generated");
+    }
+
+    #[test]
+    fn empty_fault_spec_is_bit_identical() {
+        let wl = Workload::emulation(3, true);
+        let a =
+            Cluster::emulation(&Policy::dems_a(), &wl, 7, 2, &wan).run();
+        let b = Cluster::emulation(&Policy::dems_a(), &wl, 7, 2, &wan)
+            .with_faults(FaultSpec::default())
+            .run();
+        assert_eq!(a, b, "the empty fault spec must change nothing");
+    }
+
+    #[test]
+    fn crash_at_exact_handover_boundary_wins_the_tie() {
+        use crate::time::secs;
+        let wl = Workload::emulation(2, false);
+        // The handover targets edge 1 at the very instant edge 1 dies.
+        // Faults compile before handovers, so the crash wins the tie:
+        // the handover falls back to the live edge 0 and drone 0 never
+        // actually moves.
+        let fed = Federation::default().with_handover(Handover {
+            at: secs(150),
+            drone: 0,
+            to_edge: 1,
+        });
+        let spec = FaultSpec::default().crash(1, secs(150), None);
+        let cm = Cluster::emulation(&Policy::dems(), &wl, 9, 2, &wan)
+            .federated(fed)
+            .with_faults(spec)
+            .run();
+        assert_eq!(cm.crashes(), 1);
+        assert_eq!(cm.recoveries(), 0);
+        // Edge 1's two drones re-home at the crash: their first 150
+        // ticks stayed, the rest emit at edge 0 — and drone 0's full
+        // stream stays at edge 0 (4 models per tick).
+        assert_eq!(cm.per_edge[1].generated(), (150 + 150) * 4);
+        assert_eq!(cm.per_edge[0].generated(),
+                   (300 + 300 + 150 + 150) * 4);
+        assert_eq!(cm.generated(), 2 * wl.total_tasks());
+        // The handover still happened — onto the fallback edge.
+        assert_eq!(cm.handovers(), 1);
+        // A never-recovered edge is charged downtime to the horizon.
+        assert_eq!(cm.per_edge[1].downtime, secs(150) + SETTLE);
+        assert_eq!(cm.generated(), closed_tasks(&cm),
+                   "conservation closes under the crash");
+    }
+
+    #[test]
+    fn crash_mid_transit_relocation_closes_ledger_once() {
+        use crate::time::secs;
+        let wl = Workload::emulation(4, true);
+        // Edge 0 dies and relocates its queued work to edge 1 over the
+        // ~2 ms LAN; edge 1 dies 1 ms later, while those transfers are
+        // still in flight. Every relocated task must close exactly once
+        // (NodeFailure at the dead target), never twice.
+        let spec = FaultSpec::default()
+            .crash(0, secs(150), None)
+            .crash(1, secs(150) + ms(1), None)
+            .with_recovery(Recovery::Requeue);
+        let (mut relocated, mut failures) = (0, 0);
+        for seed in 0..5u64 {
+            let cm = Cluster::emulation(&Policy::dems_a(), &wl, 33 + seed,
+                                        2, &wan)
+                .federated(Federation::stealing())
+                .with_faults(spec.clone())
+                .run();
+            assert_eq!(cm.crashes(), 2);
+            assert_eq!(cm.generated(), closed_tasks(&cm),
+                       "seed {seed}: every task closes exactly once");
+            assert!(cm.fed_offers() >= cm.fed_steals(),
+                    "seed {seed}: offers cover arrivals");
+            relocated += cm.fault_relocated();
+            failures += cm.node_failures();
+        }
+        assert!(relocated > 0,
+                "a heavy cluster relocates queued work at the crash");
+        assert!(failures > 0, "in-flight work dies with the node");
+    }
+
+    #[test]
+    fn recovery_readmits_rehomed_stream() {
+        use crate::time::secs;
+        let wl = Workload::emulation(2, false);
+        let spec = FaultSpec::default()
+            .crash(1, secs(100), Some(secs(200)));
+        let cm = Cluster::emulation(&Policy::dems(), &wl, 9, 2, &wan)
+            .with_faults(spec)
+            .run();
+        assert_eq!(cm.per_edge[1].crashes, 1);
+        assert_eq!(cm.per_edge[1].recoveries, 1);
+        assert_eq!(cm.per_edge[1].downtime, secs(100));
+        // Edge 1's two drones spend ticks [100, 200) at edge 0 and
+        // return at recovery: 200 of each drone's 300 ticks stay home.
+        assert_eq!(cm.per_edge[1].generated(), 2 * 200 * 4);
+        assert_eq!(cm.per_edge[0].generated(), (2 * 300 + 2 * 100) * 4);
+        assert_eq!(cm.generated(), 2 * wl.total_tasks());
+        // Unfederated Lose semantics: each edge closes its own ledger.
+        for m in &cm.per_edge {
+            let closed: u64 = m
+                .per_model
+                .iter()
+                .map(|(_, s)| s.executed() + s.dropped())
+                .sum();
+            assert_eq!(m.generated(), closed, "per-edge closure");
+        }
     }
 
     #[test]

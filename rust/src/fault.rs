@@ -1,0 +1,476 @@
+//! Fault-injection & chaos subsystem (beyond-paper).
+//!
+//! The paper's DEMS-A/GEMS heuristics promise QoS under *cloud
+//! variability*, but real fleets also lose whole substrates: an edge
+//! station reboots, a FaaS region goes dark, a backhaul link degrades.
+//! This module gives the engine a deterministic failure model:
+//!
+//! * [`FaultSpec`] — a declarative, seed-free schedule of
+//!   [`EdgeCrash`]es, [`RegionOutage`]s and [`LinkFlap`]s. It is
+//!   *compiled* at cluster setup into [`Event::Fault`](crate::sim::Event)
+//!   entries on the existing scope-tagged event queue, so faults ride the
+//!   same `(time, push order)` determinism contract as everything else —
+//!   and, being pushed before handovers and all in-run events, a fault at
+//!   `t` strictly precedes any same-instant event.
+//! * [`FaultDriver`] — the runtime state the cluster loop consults:
+//!   which edges are down, since when, which drones were re-homed away
+//!   from a crashed edge (restored at recovery), and the shared
+//!   degraded-bandwidth cell behind [`DegradedLan`].
+//! * [`Recovery`] — what a crashed edge does with its *queued* work:
+//!   [`Recovery::Lose`] drops it with
+//!   [`DropReason::NodeFailure`](crate::task::DropReason), while
+//!   [`Recovery::Requeue`] pushes still-feasible entries through the
+//!   fleet-federation steal path (`Event::FedArrive` after a LAN
+//!   transfer) to live siblings. Work already *executing* on the dead
+//!   substrate (the edge slot, in-flight cloud invocations it would have
+//!   received) is always lost — you cannot steal from a corpse.
+//!
+//! The empty spec is inert by construction: [`FaultSpec::enabled`] gates
+//! every hook in `cluster.rs`, so faults-off runs stay bit-identical to
+//! the pre-subsystem engine (pinned by the sweep-parity tests).
+
+use std::sync::{Arc, Mutex};
+
+use crate::net::NetworkModel;
+use crate::rng::Rng;
+use crate::sim::{Event, EventQueue};
+use crate::time::Micros;
+
+/// Policy knob: what a crashed edge does with its recoverable (queued,
+/// not-yet-executing) work.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Recovery {
+    /// Queued work dies with the node (`DropReason::NodeFailure`).
+    #[default]
+    Lose,
+    /// Still-feasible queued entries are re-queued through the
+    /// fleet-federation steal path to live siblings (a LAN transfer plus
+    /// the thief's own just-in-time admission). Degrades to [`Lose`]
+    /// when the cluster is not federated — there is no path to a
+    /// sibling without one.
+    ///
+    /// [`Lose`]: Recovery::Lose
+    Requeue,
+}
+
+/// One edge station failing at `at` (and optionally rebooting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EdgeCrash {
+    pub edge: usize,
+    pub at: Micros,
+    /// Reboot instant; `None` = the edge stays dark to the horizon.
+    pub recover_at: Option<Micros>,
+}
+
+/// One FaaS region dark over `[from, until)`; layers onto
+/// [`MultiRegionBackend`](crate::cloud::MultiRegionBackend) failover and
+/// surfaces as throttle-shaped reports, so DEMS-A's §5.4 adaptation
+/// window reacts to it like any other cloud degradation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegionOutage {
+    pub region: usize,
+    pub from: Micros,
+    pub until: Micros,
+}
+
+/// Which shared link a [`LinkFlap`] degrades.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlapLink {
+    /// The cluster's shared cloud uplink ([`crate::net::SharedUplink`]).
+    Uplink,
+    /// The inter-edge LAN the federation steals over.
+    Lan,
+}
+
+/// A link-bandwidth flap: over `[from, until)` the link runs at
+/// `degraded_bps` bytes/second instead of its nominal rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFlap {
+    pub link: FlapLink,
+    pub from: Micros,
+    pub until: Micros,
+    pub degraded_bps: f64,
+}
+
+/// Deterministic fault schedule for one cluster run. Empty = inert
+/// (bit-identical engine, see module docs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub crashes: Vec<EdgeCrash>,
+    pub outages: Vec<RegionOutage>,
+    pub flaps: Vec<LinkFlap>,
+    pub recovery: Recovery,
+}
+
+impl FaultSpec {
+    /// Add an edge crash (recovering at `recover_at`, or never).
+    pub fn crash(mut self, edge: usize, at: Micros,
+                 recover_at: Option<Micros>) -> Self {
+        self.crashes.push(EdgeCrash { edge, at, recover_at });
+        self
+    }
+
+    /// Add a region outage over `[from, until)`.
+    pub fn outage(mut self, region: usize, from: Micros,
+                  until: Micros) -> Self {
+        self.outages.push(RegionOutage { region, from, until });
+        self
+    }
+
+    /// Add a link flap over `[from, until)`.
+    pub fn flap(mut self, link: FlapLink, from: Micros, until: Micros,
+                degraded_bps: f64) -> Self {
+        self.flaps.push(LinkFlap { link, from, until, degraded_bps });
+        self
+    }
+
+    /// Set the crashed-edge recovery policy.
+    pub fn with_recovery(mut self, recovery: Recovery) -> Self {
+        self.recovery = recovery;
+        self
+    }
+
+    /// Does this spec inject anything at all? The all-empty spec leaves
+    /// the engine untouched (bit-identity pin).
+    pub fn enabled(&self) -> bool {
+        !(self.crashes.is_empty()
+            && self.outages.is_empty()
+            && self.flaps.is_empty())
+    }
+
+    /// Largest edge index referenced by a crash (setup validation).
+    pub fn max_edge(&self) -> Option<usize> {
+        self.crashes.iter().map(|c| c.edge).max()
+    }
+
+    /// Compile the schedule into `Event::Fault` entries. Called at
+    /// cluster setup *before* handovers and segment seeds are pushed, so
+    /// at equal timestamps a fault wins the tie by push order (the
+    /// "crash at exactly a handover boundary tick" contract).
+    pub fn compile(&self, q: &mut EventQueue) {
+        for c in &self.crashes {
+            q.set_scope(c.edge as u32);
+            q.push(c.at, Event::Fault(FaultAction::Crash { edge: c.edge }));
+            if let Some(r) = c.recover_at {
+                q.push(r, Event::Fault(FaultAction::Recover {
+                    edge: c.edge,
+                }));
+            }
+        }
+        q.set_scope(0);
+        for o in &self.outages {
+            q.push(o.from, Event::Fault(FaultAction::OutageStart {
+                region: o.region,
+                until: o.until,
+            }));
+            q.push(o.until, Event::Fault(FaultAction::OutageEnd {
+                region: o.region,
+            }));
+        }
+        for f in &self.flaps {
+            q.push(f.from, Event::Fault(FaultAction::FlapStart {
+                link: f.link,
+                degraded_bps: f.degraded_bps,
+            }));
+            q.push(f.until, Event::Fault(FaultAction::FlapEnd {
+                link: f.link,
+            }));
+        }
+    }
+
+    /// Draw a random, internally consistent spec for the chaos axis of
+    /// the invariants harness: 1–2 crashes (70% recovering), an optional
+    /// outage and an optional flap, random recovery policy. All indices
+    /// stay within `n_edges`/`duration`.
+    pub fn random(rng: &mut Rng, n_edges: usize, duration: Micros) -> Self {
+        let mut spec = FaultSpec::default();
+        for _ in 0..(1 + rng.below(2)) {
+            let at = duration / 10 + rng.below((duration / 2) as usize) as u64;
+            let recover_at = if rng.chance(0.7) {
+                Some(at + 1 + rng.below((duration / 3).max(1) as usize) as u64)
+            } else {
+                None
+            };
+            spec = spec.crash(rng.below(n_edges), at, recover_at);
+        }
+        if rng.chance(0.3) {
+            let from = rng.below(duration as usize / 2) as u64;
+            let until = from + 1 + rng.below(duration as usize / 3) as u64;
+            spec = spec.outage(rng.below(2), from, until);
+        }
+        if rng.chance(0.3) {
+            let from = rng.below(duration as usize / 2) as u64;
+            let until = from + 1 + rng.below(duration as usize / 3) as u64;
+            let link = if rng.chance(0.5) {
+                FlapLink::Uplink
+            } else {
+                FlapLink::Lan
+            };
+            spec = spec.flap(link, from, until,
+                             (1 + rng.below(20)) as f64 * 1.0e6);
+        }
+        if rng.chance(0.5) {
+            spec = spec.with_recovery(Recovery::Requeue);
+        }
+        spec
+    }
+}
+
+/// One compiled fault firing, carried by [`Event::Fault`](crate::sim::Event).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Edge `edge` dies: its in-flight work is lost, its queued work is
+    /// lost or relocated per [`Recovery`], its drones re-home.
+    Crash { edge: usize },
+    /// Edge `edge` reboots: empty queues, drones re-homed back.
+    Recover { edge: usize },
+    /// Region dark until `until` (the backend refuses invocations,
+    /// shaped as throttles).
+    OutageStart { region: usize, until: Micros },
+    /// Region back up (defensive clear; `invoke` also checks `until`).
+    OutageEnd { region: usize },
+    /// Link degraded to `degraded_bps` bytes/second.
+    FlapStart { link: FlapLink, degraded_bps: f64 },
+    /// Link back to nominal bandwidth.
+    FlapEnd { link: FlapLink },
+}
+
+/// Runtime fault state the cluster loop consults. Only constructed when
+/// the spec is [`enabled`](FaultSpec::enabled) — faults-off runs never
+/// touch it.
+pub struct FaultDriver {
+    pub recovery: Recovery,
+    down: Vec<bool>,
+    down_since: Vec<Micros>,
+    /// Per crashed edge: the drones re-homed away from it, with the
+    /// router override they had *before* the crash (restored verbatim at
+    /// recovery — unless a planned handover retargeted the drone while
+    /// the edge was dark, see `forget_rehome`).
+    rehomed: Vec<Vec<(u32, Option<u32>)>>,
+    /// Degraded-bandwidth cell shared with [`DegradedLan`]; `None` in
+    /// the cell = nominal.
+    pub lan_degraded: Arc<Mutex<Option<f64>>>,
+    /// Nominal shared-uplink bandwidth saved at flap start.
+    pub uplink_nominal: Option<f64>,
+}
+
+impl FaultDriver {
+    pub fn new(n_edges: usize, recovery: Recovery) -> Self {
+        FaultDriver {
+            recovery,
+            down: vec![false; n_edges],
+            down_since: vec![0; n_edges],
+            rehomed: vec![Vec::new(); n_edges],
+            lan_degraded: Arc::new(Mutex::new(None)),
+            uplink_nominal: None,
+        }
+    }
+
+    #[inline]
+    pub fn is_down(&self, e: usize) -> bool {
+        self.down.get(e).copied().unwrap_or(false)
+    }
+
+    /// Lowest-index live edge, skipping `except` — the deterministic
+    /// re-home / relocation fallback target.
+    pub fn live_edge(&self, except: usize) -> Option<usize> {
+        (0..self.down.len()).find(|&e| e != except && !self.down[e])
+    }
+
+    /// Mark `e` down at `now`; returns false if it already was (a
+    /// double-crash in a random spec is a no-op, not a double sweep).
+    pub fn mark_down(&mut self, e: usize, now: Micros) -> bool {
+        if self.down[e] {
+            return false;
+        }
+        self.down[e] = true;
+        self.down_since[e] = now;
+        true
+    }
+
+    /// Mark `e` up at `now`; returns the downtime just ended (`None` if
+    /// it was not down).
+    pub fn mark_up(&mut self, e: usize, now: Micros) -> Option<Micros> {
+        if !self.down[e] {
+            return None;
+        }
+        self.down[e] = false;
+        Some(now.saturating_sub(self.down_since[e]))
+    }
+
+    /// Downtime still open at the horizon for a never-recovered edge.
+    pub fn residual_downtime(&self, e: usize, horizon: Micros) -> Micros {
+        if self.down[e] {
+            horizon.saturating_sub(self.down_since[e])
+        } else {
+            0
+        }
+    }
+
+    /// Remember a drone re-homed away from crashed edge `e` (`prev` =
+    /// its router override before the crash).
+    pub fn save_rehome(&mut self, e: usize, drone: u32,
+                       prev: Option<u32>) {
+        self.rehomed[e].push((drone, prev));
+    }
+
+    /// A planned handover retargeted `drone` mid-downtime: its pre-crash
+    /// home is stale, so recovery must not undo the handover.
+    pub fn forget_rehome(&mut self, drone: u32) {
+        for v in &mut self.rehomed {
+            v.retain(|&(d, _)| d != drone);
+        }
+    }
+
+    /// Take the re-home list saved for edge `e` (at recovery).
+    pub fn take_rehomed(&mut self, e: usize) -> Vec<(u32, Option<u32>)> {
+        std::mem::take(&mut self.rehomed[e])
+    }
+}
+
+/// Federation-LAN wrapper that overrides bandwidth while a
+/// [`FlapLink::Lan`] flap is active. Installed once at cluster setup
+/// (only when the spec contains a LAN flap); the driver toggles the
+/// shared cell at `FlapStart`/`FlapEnd`.
+pub struct DegradedLan {
+    pub inner: Box<dyn NetworkModel>,
+    pub degraded: Arc<Mutex<Option<f64>>>,
+}
+
+impl NetworkModel for DegradedLan {
+    fn latency(&mut self, now: Micros, rng: &mut Rng) -> Micros {
+        self.inner.latency(now, rng)
+    }
+    fn bandwidth(&mut self, now: Micros, rng: &mut Rng) -> f64 {
+        match *self.degraded.lock().expect("lan flap cell") {
+            Some(bw) => bw,
+            None => self.inner.bandwidth(now, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::ConstantNet;
+    use crate::time::{ms, secs};
+
+    #[test]
+    fn empty_spec_is_disabled_and_compiles_to_nothing() {
+        let spec = FaultSpec::default();
+        assert!(!spec.enabled());
+        let mut q = EventQueue::new();
+        spec.compile(&mut q);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn compile_pushes_crash_recover_outage_and_flap_events() {
+        let spec = FaultSpec::default()
+            .crash(1, secs(10), Some(secs(20)))
+            .outage(0, secs(5), secs(15))
+            .flap(FlapLink::Uplink, secs(2), secs(4), 1.0e6);
+        assert!(spec.enabled());
+        assert_eq!(spec.max_edge(), Some(1));
+        let mut q = EventQueue::new();
+        spec.compile(&mut q);
+        let mut got = Vec::new();
+        while let Some((at, ev)) = q.pop() {
+            let Event::Fault(a) = ev else {
+                panic!("non-fault event compiled")
+            };
+            got.push((at, a));
+        }
+        assert_eq!(got, vec![
+            (secs(2), FaultAction::FlapStart {
+                link: FlapLink::Uplink,
+                degraded_bps: 1.0e6,
+            }),
+            (secs(4), FaultAction::FlapEnd { link: FlapLink::Uplink }),
+            (secs(5), FaultAction::OutageStart {
+                region: 0,
+                until: secs(15),
+            }),
+            (secs(10), FaultAction::Crash { edge: 1 }),
+            (secs(15), FaultAction::OutageEnd { region: 0 }),
+            (secs(20), FaultAction::Recover { edge: 1 }),
+        ]);
+    }
+
+    #[test]
+    fn driver_tracks_downtime_and_rehomes() {
+        let mut d = FaultDriver::new(3, Recovery::Requeue);
+        assert!(!d.is_down(1));
+        assert!(d.mark_down(1, secs(10)));
+        assert!(!d.mark_down(1, secs(11)), "double crash is a no-op");
+        assert!(d.is_down(1));
+        assert_eq!(d.live_edge(1), Some(0));
+        assert!(d.mark_down(0, secs(12)));
+        assert_eq!(d.live_edge(1), Some(2));
+        d.save_rehome(1, 4, None);
+        d.save_rehome(1, 5, Some(2));
+        d.forget_rehome(4);
+        assert_eq!(d.take_rehomed(1), vec![(5, Some(2))]);
+        assert!(d.take_rehomed(1).is_empty());
+        assert_eq!(d.mark_up(1, secs(25)), Some(secs(15)));
+        assert_eq!(d.mark_up(1, secs(26)), None, "double recover no-op");
+        assert_eq!(d.residual_downtime(0, secs(30)), secs(18));
+        assert_eq!(d.residual_downtime(1, secs(30)), 0);
+    }
+
+    #[test]
+    fn all_down_has_no_live_edge() {
+        let mut d = FaultDriver::new(2, Recovery::Lose);
+        d.mark_down(0, 0);
+        assert_eq!(d.live_edge(0), Some(1));
+        d.mark_down(1, 0);
+        assert_eq!(d.live_edge(0), None);
+    }
+
+    #[test]
+    fn degraded_lan_overrides_bandwidth_only_while_flapped() {
+        let cell = Arc::new(Mutex::new(None));
+        let mut lan = DegradedLan {
+            inner: Box::new(ConstantNet {
+                latency: ms(2),
+                bandwidth: 125.0e6,
+            }),
+            degraded: cell.clone(),
+        };
+        let mut rng = Rng::new(1);
+        assert_eq!(lan.bandwidth(0, &mut rng), 125.0e6);
+        let nominal = lan.transfer_time(0, 1_250_000, &mut rng);
+        *cell.lock().unwrap() = Some(1.0e6);
+        assert_eq!(lan.bandwidth(0, &mut rng), 1.0e6);
+        assert!(lan.transfer_time(0, 1_250_000, &mut rng) > nominal);
+        *cell.lock().unwrap() = None;
+        assert_eq!(lan.bandwidth(0, &mut rng), 125.0e6);
+        // Latency passes through untouched.
+        assert_eq!(lan.latency(0, &mut rng), ms(2));
+    }
+
+    #[test]
+    fn random_specs_are_well_formed() {
+        let mut rng = Rng::new(0xFA017);
+        for _ in 0..200 {
+            let n = 1 + rng.below(3);
+            let spec = FaultSpec::random(&mut rng, n, secs(20));
+            assert!(spec.enabled());
+            for c in &spec.crashes {
+                assert!(c.edge < n);
+                assert!(c.at > 0);
+                if let Some(r) = c.recover_at {
+                    assert!(r > c.at);
+                }
+            }
+            for o in &spec.outages {
+                assert!(o.region < 2);
+                assert!(o.until > o.from);
+            }
+            for f in &spec.flaps {
+                assert!(f.until > f.from);
+                assert!(f.degraded_bps > 0.0);
+            }
+        }
+    }
+}

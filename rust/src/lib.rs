@@ -39,7 +39,10 @@
 //!   (κ/κ̂-ranked, LAN-transfer charged), mid-run drone handover on the
 //!   now-dynamic router, and shared-uplink contention
 //!   ([`net::SharedUplink`]); all off by default and bit-identical to
-//!   the isolated engine when off.
+//!   the isolated engine when off. The [`fault`] chaos layer injects
+//!   deterministic edge crashes, region outages and link flaps on the
+//!   same event queue (`simulate --fault crash:0@60-120`), with
+//!   conservation-audited recovery semantics.
 //! * [`cloud`] — the pluggable cloud tier behind
 //!   [`cloud::CloudBackend`]: [`cloud::SimpleBackend`] (the calibrated
 //!   legacy sampler, bit-identical default), [`cloud::FaasBackend`]
@@ -80,6 +83,7 @@ pub mod cluster;
 pub mod errors;
 pub mod exec;
 pub mod exp;
+pub mod fault;
 pub mod fleet;
 pub mod metrics;
 pub mod model;

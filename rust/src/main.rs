@@ -13,6 +13,7 @@
 use ocularone::bail;
 use ocularone::errors::Result;
 use ocularone::exp::summarize;
+use ocularone::fault::{FaultSpec, FlapLink, Recovery};
 use ocularone::fleet::Workload;
 use ocularone::model::orin_field;
 use ocularone::nav;
@@ -39,6 +40,7 @@ USAGE:
                      [--keep-alive SECS] [--concurrency N]
                      [--federation] [--uplink-mbps F]
                      [--handover DRONE:EDGE@SECS[,..]]
+                     [--fault SPEC[,..]] [--recovery lose|requeue]
                                            N>1 emulates N edge stations
                                            through one Cluster engine (§8.1);
                                            --pipeline swaps the workload
@@ -57,7 +59,19 @@ USAGE:
                                            shares one backhaul across the
                                            stations, --handover re-homes a
                                            drone mid-run (all need
-                                           --edges >= 2)
+                                           --edges >= 2);
+                                           --fault injects chaos:
+                                           crash:EDGE@FROM[-UNTIL] kills a
+                                           station (optionally rebooting),
+                                           outage:REGION@FROM-UNTIL darkens
+                                           a multi-region FaaS region,
+                                           flap:uplink|lan@FROM-UNTIL:MBPS
+                                           degrades a link for the window
+                                           (times in seconds); --recovery
+                                           requeue relocates a crashed
+                                           station's queue over the
+                                           federation LAN instead of
+                                           losing it
   ocularone serve [--policy ec] [--rate R] [--drones D] [--secs S]
                   [--artifacts DIR]        (requires the pjrt feature)
   ocularone bench-models [--artifacts DIR] (requires the pjrt feature)
@@ -228,6 +242,159 @@ fn parse_federation(args: &[String], edges: usize)
     Ok(Some(spec))
 }
 
+/// `"FROM-UNTIL"` (seconds) → a closed fault window.
+fn parse_window(s: &str) -> Result<(u64, u64)> {
+    match s.split_once('-') {
+        Some((a, b)) => Ok((a.parse()?, b.parse()?)),
+        None => bail!("expected a FROM-UNTIL seconds window, got {s:?}"),
+    }
+}
+
+/// Fault-injection spec for `simulate` (see `ocularone::fault`):
+/// `--fault` takes a comma list of `crash:EDGE@FROM[-UNTIL]` (station
+/// crash, optionally rebooting at UNTIL), `outage:REGION@FROM-UNTIL`
+/// (FaaS region dark; needs `--cloud multi-region`) and
+/// `flap:uplink|lan@FROM-UNTIL:MBPS` (link degraded to MBPS for the
+/// window), all times in seconds. `--recovery lose|requeue` picks what
+/// happens to a crashed station's queue; `requeue` relocates over the
+/// federation LAN, so it — like the LAN/uplink flaps — demands the
+/// matching federation flags instead of being silently ignored.
+fn parse_faults(args: &[String], edges: usize,
+                cloud: &scenario::CloudSpec,
+                fed: Option<&scenario::FederationSpec>)
+                -> Result<Option<FaultSpec>> {
+    use ocularone::time::secs;
+    let recovery_flag = flag(args, "--recovery");
+    let mut spec = FaultSpec::default();
+    if let Some(list) = flag(args, "--fault") {
+        for part in list.split(',') {
+            let (kind, rest) = match part.split_once(':') {
+                Some(x) => x,
+                None => bail!(
+                    "--fault expects KIND:SPEC (crash|outage|flap), \
+                     got {part:?}"
+                ),
+            };
+            match kind {
+                "crash" => {
+                    let (edge, window) = match rest.split_once('@') {
+                        Some(x) => x,
+                        None => bail!(
+                            "--fault crash expects crash:EDGE@FROM[-UNTIL], \
+                             got {part:?}"
+                        ),
+                    };
+                    let (at, until) = match window.split_once('-') {
+                        Some((a, b)) => {
+                            (a.parse()?, Some(secs(b.parse()?)))
+                        }
+                        None => (window.parse()?, None),
+                    };
+                    spec = spec.crash(edge.parse()?, secs(at), until);
+                }
+                "outage" => {
+                    let (region, window) = match rest.split_once('@') {
+                        Some(x) => x,
+                        None => bail!(
+                            "--fault outage expects \
+                             outage:REGION@FROM-UNTIL, got {part:?}"
+                        ),
+                    };
+                    let (from, until) = parse_window(window)?;
+                    spec = spec.outage(region.parse()?, secs(from),
+                                       secs(until));
+                }
+                "flap" => {
+                    let (link, rem) = match rest.split_once('@') {
+                        Some(x) => x,
+                        None => bail!(
+                            "--fault flap expects \
+                             flap:uplink|lan@FROM-UNTIL:MBPS, got {part:?}"
+                        ),
+                    };
+                    let link = match link {
+                        "uplink" => FlapLink::Uplink,
+                        "lan" => FlapLink::Lan,
+                        other => bail!(
+                            "unknown flap link {other:?} (uplink|lan)"
+                        ),
+                    };
+                    let (window, mbps) = match rem.rsplit_once(':') {
+                        Some(x) => x,
+                        None => bail!(
+                            "--fault flap expects \
+                             flap:uplink|lan@FROM-UNTIL:MBPS, got {part:?}"
+                        ),
+                    };
+                    let (from, until) = parse_window(window)?;
+                    spec = spec.flap(link, secs(from), secs(until),
+                                     mbps.parse::<f64>()? * 1.0e6);
+                }
+                other => bail!(
+                    "unknown --fault kind {other:?} (crash|outage|flap)"
+                ),
+            }
+        }
+    }
+    if !spec.enabled() {
+        if recovery_flag.is_some() {
+            bail!("--recovery needs --fault crash:...");
+        }
+        return Ok(None);
+    }
+    if let Some(r) = recovery_flag {
+        spec = spec.with_recovery(match r.to_lowercase().as_str() {
+            "lose" => Recovery::Lose,
+            "requeue" => Recovery::Requeue,
+            other => bail!("unknown recovery {other} (lose|requeue)"),
+        });
+    }
+    if let Some(max) = spec.max_edge() {
+        if max >= edges {
+            bail!("--fault crash edge {max} out of range ({edges} edge(s))");
+        }
+    }
+    if !spec.outages.is_empty()
+        && !matches!(cloud, scenario::CloudSpec::MultiRegion { .. })
+    {
+        bail!("--fault outage:... needs --cloud multi-region");
+    }
+    if spec.recovery == Recovery::Requeue && fed.is_none() {
+        bail!(
+            "--recovery requeue relocates over the federation LAN; \
+             add --federation"
+        );
+    }
+    if spec.flaps.iter().any(|f| f.link == FlapLink::Lan) && fed.is_none() {
+        bail!(
+            "--fault flap:lan degrades the federation LAN; \
+             add --federation"
+        );
+    }
+    if spec.flaps.iter().any(|f| f.link == FlapLink::Uplink)
+        && fed.map_or(true, |f| f.uplink_bytes_per_sec.is_none())
+    {
+        bail!(
+            "--fault flap:uplink degrades the shared backhaul; \
+             add --uplink-mbps F"
+        );
+    }
+    Ok(Some(spec))
+}
+
+/// One-line fault summary for a cluster run.
+fn fault_summary(cm: &ocularone::cluster::ClusterMetrics) -> String {
+    format!(
+        "faults: {} crashes ({} recovered, {:.1}s downtime), \
+         {} relocated, {} node-failed",
+        cm.crashes(),
+        cm.recoveries(),
+        cm.downtime() as f64 / 1e6,
+        cm.fault_relocated(),
+        cm.node_failures(),
+    )
+}
+
 /// One-line federation summary for a cluster run.
 fn federation_summary(cm: &ocularone::cluster::ClusterMetrics) -> String {
     format!(
@@ -375,22 +542,30 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
     let jobs = parse_jobs(args)?;
     let cloud = parse_cloud(args)?;
     let fed = parse_federation(args, edges)?;
+    let faults = parse_faults(args, edges, &cloud, fed.as_ref())?;
     let name = policy.kind.name().to_string();
     if sweeps > 1 {
         return simulate_sweep(&name, policy, &wl, seed, edges, sweeps,
-                              jobs, &cloud, fed.as_ref());
+                              jobs, &cloud, fed.as_ref(),
+                              faults.as_ref());
     }
     if edges == 1 {
-        let cm = scenario::run_cluster(&policy, &wl, seed, 1, &cloud);
+        let cm = scenario::run_cluster_faulted(&policy, &wl, seed, 1,
+                                               &cloud, None,
+                                               faults.as_ref());
         println!("{} on {}: {}", name, wl.name,
                  summarize(&cm.per_edge[0]));
         if cloud_has_accounting(&cloud) {
             println!("  {}", cloud_summary(&cm));
         }
+        if faults.is_some() {
+            println!("  {}", fault_summary(&cm));
+        }
         return Ok(());
     }
-    let cm = scenario::run_cluster_federated(&policy, &wl, seed, edges,
-                                             &cloud, fed.as_ref());
+    let cm = scenario::run_cluster_faulted(&policy, &wl, seed, edges,
+                                           &cloud, fed.as_ref(),
+                                           faults.as_ref());
     println!(
         "{} on {} x {} edges ({} drones, {} tasks):",
         name,
@@ -420,6 +595,9 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
     if fed.is_some() {
         println!("  {}", federation_summary(&cm));
     }
+    if faults.is_some() {
+        println!("  {}", fault_summary(&cm));
+    }
     Ok(())
 }
 
@@ -432,7 +610,8 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
 fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
                   edges: usize, sweeps: u64, jobs: usize,
                   cloud: &scenario::CloudSpec,
-                  fed: Option<&scenario::FederationSpec>) -> Result<()> {
+                  fed: Option<&scenario::FederationSpec>,
+                  faults: Option<&FaultSpec>) -> Result<()> {
     use ocularone::metrics::percentile;
 
     let runs = ocularone::pool::Pool::new(jobs).run(
@@ -440,8 +619,8 @@ fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
         |i| {
             let s = seed
                 .wrapping_add((i as u64).wrapping_mul(scenario::SEED_STRIDE));
-            scenario::run_cluster_federated(&policy, wl, s, edges, cloud,
-                                            fed)
+            scenario::run_cluster_faulted(&policy, wl, s, edges, cloud,
+                                          fed, faults)
         },
     );
     println!(
@@ -489,6 +668,16 @@ fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
         println!(
             "  federation: {steals} x-edge steals, {handovers} \
              handovers, {queued} uplink-queued across seeds"
+        );
+    }
+    if faults.is_some() {
+        let crashes: u64 = runs.iter().map(|cm| cm.crashes()).sum();
+        let relocated: u64 =
+            runs.iter().map(|cm| cm.fault_relocated()).sum();
+        let failed: u64 = runs.iter().map(|cm| cm.node_failures()).sum();
+        println!(
+            "  faults: {crashes} crashes, {relocated} relocated, \
+             {failed} node-failed across seeds"
         );
     }
     Ok(())

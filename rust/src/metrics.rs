@@ -24,6 +24,10 @@ pub struct ModelStats {
     pub dropped_shed: u64,
     pub dropped_timeout: u64,
     pub dropped_throttled: u64,
+    /// Lost to an injected node failure (edge crash, see
+    /// [`crate::fault`]): in-flight or queued work whose substrate died
+    /// and could not be relocated.
+    pub dropped_node_failure: u64,
     /// Dispatch attempts the cloud backend throttled (each either retried
     /// later or counted once more under `dropped_throttled`).
     pub throttled: u64,
@@ -59,6 +63,7 @@ impl ModelStats {
             + self.dropped_shed
             + self.dropped_timeout
             + self.dropped_throttled
+            + self.dropped_node_failure
     }
 
     pub fn utility(&self) -> f64 {
@@ -120,6 +125,20 @@ pub struct Metrics {
     /// [`SimpleBackend`](crate::cloud::SimpleBackend) path only counts
     /// invocations (no cost, cold-start or throttle accounting).
     pub cloud: CloudStats,
+    /// Fault-injection accounting (all zero without a
+    /// [`FaultSpec`](crate::fault::FaultSpec)): times this edge crashed.
+    pub crashes: u64,
+    /// Times this edge came back up.
+    pub recoveries: u64,
+    /// Queued entries this (crashed) edge relocated to live siblings via
+    /// the federation steal path ([`Recovery::Requeue`]
+    /// semantics — the lost ones land in `dropped_node_failure`).
+    ///
+    /// [`Recovery::Requeue`]: crate::fault::Recovery::Requeue
+    pub fault_relocated: u64,
+    /// Total virtual time this edge spent dark (crash → recovery, or to
+    /// the horizon when it never recovered).
+    pub downtime: Micros,
 }
 
 impl Metrics {
@@ -184,6 +203,7 @@ impl Metrics {
                 DropReason::Shed => s.dropped_shed += 1,
                 DropReason::Timeout => s.dropped_timeout += 1,
                 DropReason::Throttled => s.dropped_throttled += 1,
+                DropReason::NodeFailure => s.dropped_node_failure += 1,
             },
         }
         if o.stolen {
@@ -273,6 +293,11 @@ impl Metrics {
     /// under multi-region failover).
     pub fn throttled(&self) -> u64 {
         self.per_model.iter().map(|(_, s)| s.throttled).sum()
+    }
+
+    /// Tasks lost to injected node failures across all models.
+    pub fn node_failures(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.dropped_node_failure).sum()
     }
 
     /// Edge utilization: busy time / run duration.

@@ -103,6 +103,11 @@ pub struct Core {
     /// any scheduler can consult them).
     pub(crate) qoe: Vec<WindowMonitor>,
     pub(crate) rng: Rng,
+    /// Fault injection (see [`crate::fault`]): the edge is dark — any
+    /// work submitted while set is immediately lost with
+    /// [`DropReason::NodeFailure`]. Always false without a `FaultSpec`
+    /// (bit-identity with the fault-free engine).
+    pub(crate) crashed: bool,
     next_task_id: TaskId,
     next_cloud_key: u64,
     /// Smallest expected edge duration across models (steal gate, §5.3).
@@ -145,6 +150,7 @@ impl Core {
             uplink: None,
             qoe,
             rng: Rng::new(seed),
+            crashed: false,
             next_task_id: 0,
             next_cloud_key: 0,
             min_t_edge,
@@ -595,6 +601,14 @@ impl<S: Scheduler> Platform<S> {
     pub fn submit_task(&mut self, now: Micros, task: Task,
                        q: &mut EventQueue) {
         self.core.metrics.stats_mut(task.model).generated += 1;
+        if self.core.crashed {
+            // The station is dark (fault injection): the task is still
+            // *generated* — the drone streamed it — but nothing can
+            // serve it, so the ledger closes immediately.
+            self.core.drop_task(now, task, DropReason::NodeFailure);
+            self.drain_done(now, q);
+            return;
+        }
         match self.route(&task) {
             Route::Drone => {
                 self.core.start_drone(now, task, q);
@@ -1000,6 +1014,97 @@ impl<S: Scheduler> Platform<S> {
     pub fn drop_in_transit(&mut self, now: Micros, task: Task,
                            q: &mut EventQueue) {
         self.core.drop_task(now, task, DropReason::JitExpired);
+        self.drain_done(now, q);
+    }
+
+    // -------------------------------------------------------------- fault
+
+    /// Fault injection: this edge dies at `now`. Every holder of work
+    /// decides its fate (the conservation contract — nothing is silently
+    /// lost):
+    ///
+    /// * the edge executor's running task and in-flight cloud
+    ///   invocations are lost outright (`DropReason::NodeFailure`; the
+    ///   backend still gets its `complete` so warm pools / concurrency
+    ///   slots don't leak, and the stale `EdgeDone`/`CloudDone` events
+    ///   become no-ops);
+    /// * queued work (edge queue, un-pinned cloud-queue entries, the
+    ///   triggered ready line) is *returned* for relocation when
+    ///   `relocate` is set ([`Recovery::Requeue`]
+    ///   semantics — the cluster pushes survivors through the federation
+    ///   steal path), otherwise lost;
+    /// * pinned fixed-cloud pipeline stages are always lost — the cut
+    ///   bound them to this station's cloud path.
+    ///
+    /// Until [`recover`](Self::recover), `submit_task` closes any new
+    /// arrival as a `NodeFailure` drop.
+    ///
+    /// [`Recovery::Requeue`]: crate::fault::Recovery::Requeue
+    pub fn crash(&mut self, now: Micros, relocate: bool,
+                 q: &mut EventQueue) -> Vec<(Task, Micros, Micros)> {
+        self.core.crashed = true;
+        self.core.metrics.crashes += 1;
+        if let Some(run) = self.core.running_edge.take() {
+            self.core.drop_task(now, run.entry.task,
+                                DropReason::NodeFailure);
+            self.drain_done(now, q);
+        }
+        let mut keys: Vec<u64> =
+            self.core.cloud_running.keys().copied().collect();
+        keys.sort_unstable(); // HashMap order must not leak into the run
+        for k in keys {
+            if let Some(run) = self.core.cloud_running.remove(&k) {
+                self.core.cloud.complete(run.entry.task.model, run.token,
+                                         now);
+                self.core.drop_task(now, run.entry.task,
+                                    DropReason::NodeFailure);
+                self.drain_done(now, q);
+            }
+        }
+        self.core.cloud_inflight = 0;
+        let mut out = Vec::new();
+        while let Some(e) = self.core.edge_q.pop() {
+            if relocate {
+                out.push((e.task, e.abs_deadline, e.t_edge));
+            } else {
+                self.core.drop_task(now, e.task, DropReason::NodeFailure);
+                self.drain_done(now, q);
+            }
+        }
+        while !self.core.cloud_q.is_empty() {
+            let e = self.core.cloud_q.remove_at(0);
+            if relocate && !e.pinned {
+                out.push((e.task, e.abs_deadline, e.t_edge));
+            } else {
+                self.core.drop_task(now, e.task, DropReason::NodeFailure);
+                self.drain_done(now, q);
+            }
+        }
+        while let Some(e) = self.core.cloud_ready.pop_front() {
+            if relocate && !e.pinned {
+                out.push((e.task, e.abs_deadline, e.t_edge));
+            } else {
+                self.core.drop_task(now, e.task, DropReason::NodeFailure);
+                self.drain_done(now, q);
+            }
+        }
+        out
+    }
+
+    /// Fault injection: the station reboots — queues are already empty
+    /// (swept at crash), so it simply starts accepting work again.
+    pub fn recover(&mut self) {
+        self.core.crashed = false;
+        self.core.metrics.recoveries += 1;
+    }
+
+    /// Fault injection: a task was bound for this edge (a federated
+    /// steal or crash relocation in LAN transit, a pipeline stage
+    /// handoff) when the station died — close its ledger here, exactly
+    /// once, as a node failure.
+    pub fn drop_failed(&mut self, now: Micros, task: Task,
+                       q: &mut EventQueue) {
+        self.core.drop_task(now, task, DropReason::NodeFailure);
         self.drain_done(now, q);
     }
 

@@ -20,6 +20,7 @@ use crate::cluster::{Cluster, ClusterMetrics, Federation, Handover};
 use crate::errors::Result;
 use crate::exec::CloudExecModel;
 use crate::exp;
+use crate::fault::{FaultSpec, FlapLink, Recovery};
 use crate::fleet::{Arrival, DroneChurn, Workload};
 use crate::metrics::Metrics;
 use crate::model::{ModelProfile, Resource};
@@ -226,6 +227,9 @@ pub struct Scenario {
     /// Fleet-federation layer applied to every cluster of the grid
     /// (`None` — the default — runs the edges fully isolated).
     pub federation: Option<FederationSpec>,
+    /// Fault-injection schedule applied to every cluster of the grid
+    /// (`None` or an empty spec keeps the engine untouched).
+    pub faults: Option<FaultSpec>,
     /// Free-text notes appended to the report.
     pub notes: Vec<String>,
 }
@@ -242,6 +246,7 @@ impl Scenario {
             seeds: 1,
             per_edge: Vec::new(),
             federation: None,
+            faults: None,
             notes: Vec::new(),
         }
     }
@@ -285,6 +290,13 @@ impl Scenario {
     /// Run every cluster of the grid under this fleet-federation spec.
     pub fn federation(mut self, f: FederationSpec) -> Self {
         self.federation = Some(f);
+        self
+    }
+
+    /// Inject this deterministic fault schedule into every cluster of
+    /// the grid. An empty spec is equivalent to no spec at all.
+    pub fn faults(mut self, spec: FaultSpec) -> Self {
+        self.faults = Some(spec);
         self
     }
 
@@ -355,9 +367,10 @@ impl Scenario {
         }
         let metrics = pool.run(cells.len(), |j| {
             let (wl, policy, i) = cells[j];
-            run_cluster_federated(policy, wl, self.sweep_seed(seed, i),
-                                  self.edges, &self.cloud,
-                                  self.federation.as_ref())
+            run_cluster_faulted(policy, wl, self.sweep_seed(seed, i),
+                                self.edges, &self.cloud,
+                                self.federation.as_ref(),
+                                self.faults.as_ref())
         });
         for ((wl, policy, i), cm) in cells.iter().zip(&metrics) {
             t.push_row(summary_row(wl, policy, *i, cm));
@@ -417,9 +430,14 @@ impl Scenario {
             workloads.push(wl);
             arrival_seeds.push(aseed);
         }
-        let cluster =
+        let mut cluster =
             Cluster::from_parts_hetero(platforms, workloads,
                                        arrival_seeds);
+        if let Some(f) = &self.faults {
+            if f.enabled() {
+                cluster = cluster.with_faults(f.clone());
+            }
+        }
         match &self.federation {
             Some(f) if f.enabled() => cluster.federated(f.build()).run(),
             _ => cluster.run(),
@@ -441,11 +459,27 @@ pub fn run_cluster_federated(policy: &Policy, wl: &Workload, seed: u64,
                              edges: usize, cloud: &CloudSpec,
                              fed: Option<&FederationSpec>)
                              -> ClusterMetrics {
-    let cluster = if edges <= 1 {
+    run_cluster_faulted(policy, wl, seed, edges, cloud, fed, None)
+}
+
+/// [`run_cluster_federated`] with an optional fault-injection schedule
+/// (see [`crate::fault`]). With `None` — or an empty spec — the run is
+/// bit-identical to the fault-free engine.
+pub fn run_cluster_faulted(policy: &Policy, wl: &Workload, seed: u64,
+                           edges: usize, cloud: &CloudSpec,
+                           fed: Option<&FederationSpec>,
+                           faults: Option<&FaultSpec>)
+                           -> ClusterMetrics {
+    let mut cluster = if edges <= 1 {
         Cluster::single(policy, wl, seed, cloud.build())
     } else {
         Cluster::emulation(policy, wl, seed, edges, &|| cloud.build())
     };
+    if let Some(f) = faults {
+        if f.enabled() {
+            cluster = cluster.with_faults(f.clone());
+        }
+    }
     match fed {
         Some(f) if f.enabled() => cluster.federated(f.build()).run(),
         _ => cluster.run(),
@@ -830,6 +864,15 @@ pub fn cost_frontier_report(seed: u64, pool: &Pool) -> Result<Report> {
 fn run_fed_cell(policy: &Policy, wls: &[Workload], seed: u64,
                 cloud: &CloudSpec, fed: Option<Federation>)
                 -> ClusterMetrics {
+    run_fault_cell(policy, wls, seed, cloud, fed, &FaultSpec::default())
+}
+
+/// [`run_fed_cell`] with a fault-injection schedule layered on (an empty
+/// spec leaves the engine untouched) — the cell runner of the chaos
+/// scenarios.
+fn run_fault_cell(policy: &Policy, wls: &[Workload], seed: u64,
+                  cloud: &CloudSpec, fed: Option<Federation>,
+                  faults: &FaultSpec) -> ClusterMetrics {
     let mut platforms = Vec::with_capacity(wls.len());
     let mut arrival_seeds = Vec::with_capacity(wls.len());
     for (e, wl) in wls.iter().enumerate() {
@@ -838,8 +881,11 @@ fn run_fed_cell(policy: &Policy, wls: &[Workload], seed: u64,
         platforms.push(p);
         arrival_seeds.push(aseed);
     }
-    let cluster =
+    let mut cluster =
         Cluster::from_parts_hetero(platforms, wls.to_vec(), arrival_seeds);
+    if faults.enabled() {
+        cluster = cluster.with_faults(faults.clone());
+    }
     match fed {
         Some(f) => cluster.federated(f).run(),
         None => cluster.run(),
@@ -1054,6 +1100,207 @@ pub fn shared_uplink_report(seed: u64, pool: &Pool) -> Result<Report> {
     Ok(rep)
 }
 
+// ---------------------------------------------------- chaos scenarios
+
+/// Crash/recovery schedule shared by the `node-crash` rows and the
+/// scenario pin test: the overloaded station dies at 120 s and reboots
+/// at 210 s.
+fn node_crash_spec(recovery: Recovery) -> FaultSpec {
+    FaultSpec::default()
+        .crash(0, secs(120), Some(secs(210)))
+        .with_recovery(recovery)
+}
+
+/// `node-crash`: a mid-run station crash under the `fed-steal` imbalance
+/// — the overloaded 4D-A station dies at 120 s and reboots at 210 s,
+/// its drones re-homing to a live sibling in between. Isolated edges
+/// lose everything the dead station held; federated stealing keeps
+/// draining its backlog beforehand; `requeue` recovery additionally
+/// relocates the orphaned queue over the federation LAN at the crash
+/// instant. A scenario test pins that federated requeue strictly beats
+/// the isolated fleet on completion rate and total utility.
+pub fn node_crash_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let wls = fed_steal_workloads();
+    // (recovery label, federated, crash schedule applied)
+    let cells: [(&str, bool, Option<Recovery>); 4] = [
+        ("no fault", false, None),
+        ("lose", false, Some(Recovery::Lose)),
+        ("lose", true, Some(Recovery::Lose)),
+        ("requeue", true, Some(Recovery::Requeue)),
+    ];
+    let metrics = pool.run(cells.len(), |j| {
+        let (_, fed_on, rec) = cells[j];
+        let fed = if fed_on { Some(Federation::stealing()) } else { None };
+        let spec = match rec {
+            Some(r) => node_crash_spec(r),
+            None => FaultSpec::default(),
+        };
+        run_fault_cell(&Policy::dems_a(), &wls, seed,
+                       &CloudSpec::NominalWan, fed, &spec)
+    });
+    let mut rep = Report::new(
+        "node-crash",
+        "Chaos — mid-run station crash + recovery under imbalanced load \
+         (DEMS-A, 4D-A + 2×2D-P bursty)",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "recovery", "federation", "tasks", "done", "done %",
+        "total util", "crashes", "relocated", "node-failed",
+        "downtime (s)",
+    ]);
+    for ((label, fed_on, _), cm) in cells.iter().zip(&metrics) {
+        t.push_row(vec![
+            Cell::str(*label),
+            Cell::str(if *fed_on { "steal" } else { "off" }),
+            Cell::uint(cm.generated()),
+            Cell::uint(cm.completed()),
+            Cell::percent(100.0 * cm.completion_rate(), 1),
+            Cell::float(cm.total_utility() / 1e5, 2),
+            Cell::uint(cm.crashes()),
+            Cell::uint(cm.fault_relocated()),
+            Cell::uint(cm.node_failures()),
+            Cell::seconds(cm.downtime(), 1),
+        ]);
+    }
+    rep.table(t);
+    rep.text(
+        "(the overloaded station crashes at 120 s and reboots at 210 s; \
+         its drones re-home to a live sibling for the 90 s of downtime \
+         in every faulted row, and task totals stay identical — faults \
+         change outcomes, never generation. recovery=lose drops the dead \
+         station's queued and in-flight work as node failures; \
+         recovery=requeue relocates the still-feasible queued entries to \
+         a live sibling over the federation LAN at the crash instant — \
+         in-flight work is always lost.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
+/// `region-outage`: the primary FaaS region goes dark for a 100 s
+/// window on the two-region backend — refusals are shaped as throttles,
+/// so invocations fail over to the +40 ms secondary and DEMS-A's §5.4
+/// adaptation window backs off the cloud exactly as it does under WAN
+/// degradation; plain DEMS keeps dispatching into the squeezed path.
+pub fn region_outage_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let wl = Workload::emulation(4, true);
+    let cloud = CloudSpec::MultiRegion {
+        keep_alive: secs(300),
+        concurrency: 4,
+        extra_latency: ms_f(40.0),
+    };
+    let policies = [Policy::dems(), Policy::dems_a()];
+    let mut cells: Vec<(&Policy, bool)> = Vec::new();
+    for policy in &policies {
+        for outage in [false, true] {
+            cells.push((policy, outage));
+        }
+    }
+    let metrics = pool.run(cells.len(), |j| {
+        let (policy, outage) = cells[j];
+        let spec = if outage {
+            FaultSpec::default().outage(0, secs(100), secs(200))
+        } else {
+            FaultSpec::default()
+        };
+        run_cluster_faulted(policy, &wl, seed, FAAS_EDGES, &cloud, None,
+                            Some(&spec))
+    });
+    let mut rep = Report::new(
+        "region-outage",
+        "Chaos — primary FaaS region outage with two-region failover \
+         (4D-A)",
+        seed,
+    );
+    let mut t = faas_table(&["algo", "outage"]);
+    for ((policy, outage), cm) in cells.iter().zip(&metrics) {
+        let mut row = vec![
+            Cell::str(policy.kind.name()),
+            Cell::str(if *outage { "100-200 s" } else { "none" }),
+        ];
+        row.extend(faas_row_tail(cm));
+        t.push_row(row);
+    }
+    rep.table(t);
+    rep.text(
+        "(outage: region 0 refuses every invocation during the window, \
+         shaped as a throttle that clears with the outage — attempts \
+         fail over to the +40 ms secondary and only count as throttled \
+         when the secondary's own ceiling is full too, in which case the \
+         dispatch retries while its deadline allows. The refusals land \
+         in the stations' observed durations — the signal DEMS-A's \
+         adaptation window reacts to.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
+/// `partition`: backhaul and LAN degradation windows ("link flaps") on
+/// the federated fleet — the shared uplink collapses to a trickle, the
+/// steal LAN degrades, or both at once: a soft network partition of the
+/// sibling stations.
+pub fn partition_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let wls = fed_steal_workloads();
+    let (from, until) = (secs(100), secs(200));
+    // (label, uplink flapped, LAN flapped)
+    let cells: [(&str, bool, bool); 4] = [
+        ("none", false, false),
+        ("uplink", true, false),
+        ("lan", false, true),
+        ("both", true, true),
+    ];
+    let metrics = pool.run(cells.len(), |j| {
+        let (_, up, lan) = cells[j];
+        let mut spec = FaultSpec::default();
+        if up {
+            spec = spec.flap(FlapLink::Uplink, from, until, 1.0e6);
+        }
+        if lan {
+            spec = spec.flap(FlapLink::Lan, from, until, 1.0e6);
+        }
+        run_fault_cell(&Policy::dems_a(), &wls, seed,
+                       &CloudSpec::NominalWan,
+                       Some(Federation::stealing().with_uplink(25.0e6)),
+                       &spec)
+    });
+    let mut rep = Report::new(
+        "partition",
+        "Chaos — backhaul/LAN degradation windows on the federated \
+         fleet (DEMS-A, 4D-A + 2×2D-P bursty)",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "degraded", "tasks", "done", "done %", "QoS util", "total util",
+        "x-edge steals", "queued", "uplink delay (s)",
+    ]);
+    for ((label, _, _), cm) in cells.iter().zip(&metrics) {
+        t.push_row(vec![
+            Cell::str(*label),
+            Cell::uint(cm.generated()),
+            Cell::uint(cm.completed()),
+            Cell::percent(100.0 * cm.completion_rate(), 1),
+            Cell::float(cm.total_qos_utility() / 1e5, 2),
+            Cell::float(cm.total_utility() / 1e5, 2),
+            Cell::uint(cm.fed_steals()),
+            Cell::uint(cm.uplink_queued()),
+            Cell::seconds(cm.uplink_wait(), 1),
+        ]);
+    }
+    rep.table(t);
+    rep.text(
+        "(between 100 s and 200 s the flapped link drops to 1 MB/s: \
+         uplink squeezes the 25 MB/s shared backhaul every cloud \
+         transfer serializes through — the queueing delay inflates \
+         observed durations, which DEMS-A's adaptation window backs off \
+         from; lan makes cross-edge steal transfers expensive, so \
+         fewer stolen entries stay deadline-viable. Both links restore \
+         to nominal when the window closes.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
 // ------------------------------------------------- pipeline scenarios
 
 /// Stations per cluster for the split-DNN pipeline scenarios.
@@ -1228,6 +1475,15 @@ pub fn registry() -> Vec<ScenarioEntry> {
         e("partition-sweep",
           "split-DNN pipelines: the full fixed-cut grid vs adaptive",
           false),
+        e("node-crash",
+          "chaos: mid-run station crash — lose vs federated requeue",
+          false),
+        e("region-outage",
+          "chaos: primary FaaS region outage with two-region failover",
+          false),
+        e("partition",
+          "chaos: backhaul/LAN degradation windows on the federated fleet",
+          false),
     ]
 }
 
@@ -1269,6 +1525,9 @@ pub fn run_scenario_jobs(id: &str, seed: u64, jobs: usize) -> Result<Report> {
         "shared-uplink" => shared_uplink_report(seed, &pool),
         "split-pipeline" => split_pipeline_report(seed, &pool),
         "partition-sweep" => partition_sweep_report(seed, &pool),
+        "node-crash" => node_crash_report(seed, &pool),
+        "region-outage" => region_outage_report(seed, &pool),
+        "partition" => partition_report(seed, &pool),
         other => {
             let known: Vec<&str> =
                 registry().iter().map(|e| e.id).collect();
@@ -1475,6 +1734,81 @@ mod tests {
             fed.total_utility(),
             iso.total_utility()
         );
+    }
+
+    #[test]
+    fn crash_recovery_federated_requeue_beats_isolated() {
+        // The acceptance pin: with the overloaded station crashing
+        // mid-run (120 s → 210 s), federated DEMS-A with requeue
+        // recovery strictly beats edge-isolated DEMS-A on completion
+        // rate AND total utility — stealing drains the doomed backlog
+        // before the crash, and requeue relocates the still-feasible
+        // orphaned queue over the LAN at the crash instant, while the
+        // isolated fleet loses everything the dead station held.
+        let wls = fed_steal_workloads();
+        let iso = run_fault_cell(&Policy::dems_a(), &wls, 42,
+                                 &CloudSpec::NominalWan, None,
+                                 &node_crash_spec(Recovery::Lose));
+        let fed = run_fault_cell(&Policy::dems_a(), &wls, 42,
+                                 &CloudSpec::NominalWan,
+                                 Some(Federation::stealing()),
+                                 &node_crash_spec(Recovery::Requeue));
+        assert_eq!(iso.crashes(), 1);
+        assert_eq!(fed.crashes(), 1);
+        assert_eq!(fed.recoveries(), 1);
+        assert_eq!(fed.generated(), iso.generated(),
+                   "faults and stealing never change generation");
+        assert!(fed.fault_relocated() + fed.node_failures() > 0,
+                "the crashed overloaded station must have held work");
+        assert!(
+            fed.completion_rate() > iso.completion_rate(),
+            "federated requeue completion must strictly improve: {} vs {}",
+            fed.completed(),
+            iso.completed()
+        );
+        assert!(
+            fed.total_utility() > iso.total_utility(),
+            "federated requeue total utility must strictly improve: \
+             {:.0} vs {:.0}",
+            fed.total_utility(),
+            iso.total_utility()
+        );
+    }
+
+    #[test]
+    fn empty_fault_spec_keeps_scenario_runs_bit_identical() {
+        assert!(!FaultSpec::default().enabled());
+        assert!(FaultSpec::default().crash(0, secs(5), None).enabled());
+        // An empty spec must leave run_cluster_faulted on the
+        // bit-identical fault-free path.
+        let wl = mini_workload();
+        let a = run_cluster(&Policy::dems(), &wl, 5, 2,
+                            &CloudSpec::NominalWan);
+        let b = run_cluster_faulted(&Policy::dems(), &wl, 5, 2,
+                                    &CloudSpec::NominalWan, None,
+                                    Some(&FaultSpec::default()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn node_crash_report_conserves_generation_across_rows() {
+        let rep = node_crash_report(7, &Pool::new(1)).expect("runs");
+        let tables = rep.tables();
+        assert_eq!(tables.len(), 1);
+        let rows = &tables[0].rows;
+        // no-fault + isolated-lose + federated-lose + federated-requeue.
+        assert_eq!(rows.len(), 4);
+        // Task totals (column 2) identical in every row — crashes change
+        // outcomes, never generation; the crash itself (column 6) shows
+        // in exactly the three faulted rows.
+        for r in &rows[1..] {
+            assert_eq!(r[2].value, rows[0][2].value,
+                       "faults must not change generation totals");
+        }
+        assert_eq!(rows[0][6].value, Value::Int(0));
+        for r in &rows[1..] {
+            assert_eq!(r[6].value, Value::Int(1));
+        }
     }
 
     #[test]

@@ -49,6 +49,12 @@ pub enum Event {
     /// The drone's companion computer finished a pipeline prefix stage
     /// (`started` = when it began, for the exec-duration accounting).
     DroneDone { task: Task, started: Micros },
+    /// A scheduled fault fires (edge crash/recovery, region outage, link
+    /// flap — see [`crate::fault`]). Compiled from a
+    /// [`FaultSpec`](crate::fault::FaultSpec) at cluster setup, so at
+    /// equal timestamps a fault precedes handovers and every in-run event
+    /// (push order breaks ties; faults are pushed first).
+    Fault(crate::fault::FaultAction),
 }
 
 struct Item {

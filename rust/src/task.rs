@@ -96,6 +96,10 @@ pub enum DropReason {
     /// Rejected at the FaaS account's concurrency ceiling with no retry
     /// window left before the deadline (see [`crate::cloud`]).
     Throttled,
+    /// The node owning the task crashed (fault injection, see
+    /// [`crate::fault`]): work in flight or queued on a failed edge that
+    /// could not be relocated to a live sibling.
+    NodeFailure,
 }
 
 /// Completion record appended to the results queue.

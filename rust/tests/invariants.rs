@@ -1,7 +1,9 @@
 //! Dependency-free seeded property-test harness: ~50 randomized
 //! scenarios across arrival process × churn × cloud backend × federation
-//! on/off × split-DNN pipelines, each pinned to the DES conservation
-//! invariants.
+//! on/off × split-DNN pipelines × fault injection (random crash /
+//! outage / link-flap schedules on ~30% of runs), each pinned to the
+//! DES conservation invariants — a crashed station may lose or relocate
+//! work, but every task still closes exactly once.
 //!
 //! Per run, the harness asserts:
 //!
@@ -24,6 +26,7 @@
 //!   equals the manual fold of its `per_edge` metrics.
 
 use ocularone::cluster::{Cluster, ClusterMetrics, Federation, Handover};
+use ocularone::fault::FaultSpec;
 use ocularone::fleet::{Arrival, DroneChurn, Workload};
 use ocularone::model::{DnnKind, ModelProfile};
 use ocularone::pipeline::{Stage, StageGraph};
@@ -215,6 +218,17 @@ fn randomized_scenarios_preserve_conservation_invariants() {
                 concurrency: 1 + rng.below(8),
             },
         };
+        // ~30% of scenarios draw a random fault schedule: 1–2 station
+        // crashes (70% rebooting), maybe a region outage (a no-op
+        // throttle source on non-multi-region clouds), maybe a link
+        // flap, 50/50 lose-vs-requeue recovery. The invariants below
+        // must hold regardless — crashed work is lost or relocated,
+        // never leaked.
+        let faults = if rng.chance(0.3) {
+            Some(FaultSpec::random(&mut rng, n_edges, duration))
+        } else {
+            None
+        };
         let seed = rng.next_u64();
         let mut platforms = Vec::with_capacity(n_edges);
         let mut aseeds = Vec::with_capacity(n_edges);
@@ -225,8 +239,11 @@ fn randomized_scenarios_preserve_conservation_invariants() {
             platforms.push(p);
             aseeds.push(s);
         }
-        let cluster =
+        let mut cluster =
             Cluster::from_parts_hetero(platforms, wls.clone(), aseeds);
+        if let Some(f) = &faults {
+            cluster = cluster.with_faults(f.clone());
+        }
         let total_drones: u32 = wls.iter().map(|w| w.drones).sum();
         let (cluster, fed_desc) = if n_edges >= 2 {
             match rng.below(4) {
@@ -255,9 +272,19 @@ fn randomized_scenarios_preserve_conservation_invariants() {
         } else {
             (cluster, "single-edge")
         };
+        let fault_desc = match &faults {
+            Some(f) => format!(
+                "{}crash/{}outage/{}flap {:?}",
+                f.crashes.len(),
+                f.outages.len(),
+                f.flaps.len(),
+                f.recovery
+            ),
+            None => "off".to_string(),
+        };
         let label = format!(
             "iter {iter} ({} edges, {}, fed={fed_desc}, \
-             pipeline={pipelined}, seed {seed:#x})",
+             pipeline={pipelined}, faults={fault_desc}, seed {seed:#x})",
             n_edges,
             policy.kind.name(),
         );
@@ -290,6 +317,75 @@ fn randomized_scenarios_preserve_conservation_invariants() {
                  {done0} stage-0 completions"
             );
         }
+    }
+}
+
+/// Fault-axis sweep: 50 always-faulted randomized scenarios — every run
+/// draws a random crash/outage/flap schedule (`FaultSpec::random`) on
+/// top of a random workload × policy × cloud × federation point, and
+/// the conservation ledger must still close cluster-wide: a crashed
+/// station's work is executed, dropped as a node failure, or relocated
+/// and closed at a live sibling — never silently lost.
+#[test]
+fn randomized_fault_scenarios_preserve_conservation_invariants() {
+    let policies = [
+        Policy::dems(),
+        Policy::dems_a(),
+        Policy::edf_ec(),
+        Policy::cloud_only(),
+    ];
+    let mut rng = Rng::new(0xFA17_AE55);
+    for iter in 0..50 {
+        let n_edges = 1 + rng.below(3);
+        let policy = policies[rng.below(policies.len())].clone();
+        let duration = secs(15 + rng.below(16) as u64);
+        let mut wls: Vec<Workload> = Vec::new();
+        for _ in 0..n_edges {
+            let drones = 1 + rng.below(3) as u32;
+            let mut wl = Workload::emulation(drones, rng.chance(0.5))
+                .with_duration(duration);
+            if rng.chance(0.3) {
+                wl = wl.with_arrival(Arrival::Poisson);
+            }
+            wls.push(wl);
+        }
+        let cloud = if rng.chance(0.5) {
+            CloudSpec::NominalWan
+        } else {
+            CloudSpec::Faas { keep_alive: secs(30), concurrency: 4 }
+        };
+        let faults = FaultSpec::random(&mut rng, n_edges, duration);
+        let seed = rng.next_u64();
+        let mut platforms = Vec::with_capacity(n_edges);
+        let mut aseeds = Vec::with_capacity(n_edges);
+        for (e, wl) in wls.iter().enumerate() {
+            let (mut p, s) =
+                Cluster::edge_parts(&policy, wl, seed, e, cloud.build());
+            p.metrics.record_completions = true;
+            platforms.push(p);
+            aseeds.push(s);
+        }
+        let mut cluster =
+            Cluster::from_parts_hetero(platforms, wls.clone(), aseeds)
+                .with_faults(faults.clone());
+        let federated = n_edges >= 2 && rng.chance(0.5);
+        if federated {
+            cluster = cluster.federated(Federation::stealing());
+        }
+        let label = format!(
+            "fault iter {iter} ({} edges, {}, fed={federated}, \
+             {}crash/{}outage/{}flap {:?}, seed {seed:#x})",
+            n_edges,
+            policy.kind.name(),
+            faults.crashes.len(),
+            faults.outages.len(),
+            faults.flaps.len(),
+            faults.recovery,
+        );
+        let cm = cluster.run();
+        assert!(cm.generated() > 0, "{label}: degenerate scenario");
+        assert!(cm.crashes() >= 1, "{label}: fault schedule never fired");
+        assert_invariants(&cm, &wls, &label);
     }
 }
 

@@ -70,6 +70,27 @@ fn shared_uplink_parallel_parity() {
 }
 
 #[test]
+fn node_crash_parallel_parity() {
+    // Fault state (the FaultDriver, compiled fault events, re-home
+    // bookkeeping) lives inside each cluster cell, so crash/recovery
+    // outcomes and the relocation ledger reproduce for any worker
+    // count.
+    assert_parity("node-crash", 42);
+}
+
+#[test]
+fn region_outage_parallel_parity() {
+    assert_parity("region-outage", 42);
+}
+
+#[test]
+fn partition_parallel_parity() {
+    // Link-flap windows mutate the cell's own SharedUplink / DegradedLan
+    // cells only; nothing is shared across pool jobs.
+    assert_parity("partition", 42);
+}
+
+#[test]
 fn split_pipeline_parallel_parity() {
     // Pipeline cells build their own cluster (drone tier, stage graphs,
     // handoff transfers) from the raw seed, so the cut sweep reproduces
@@ -161,6 +182,38 @@ fn federation_off_is_bit_identical_to_unfederated() {
             .run();
         assert_eq!(plain, federated,
                    "all-off federation diverged under {}",
+                   policy.kind.name());
+    }
+}
+
+#[test]
+fn empty_fault_spec_is_bit_identical_to_fault_free() {
+    // The chaos-off pin: attaching an empty `FaultSpec` must leave the
+    // whole engine on the fault-free path — no driver, no compiled
+    // events, identical RNG draws, bit for bit. This is what keeps the
+    // existing goldens and parity pins valid with the fault subsystem
+    // compiled in.
+    use ocularone::cloud::CloudBackend;
+    use ocularone::cluster::Cluster;
+    use ocularone::exec::CloudExecModel;
+    use ocularone::fault::FaultSpec;
+    use ocularone::fleet::Workload;
+    use ocularone::net::LognormalWan;
+    use ocularone::policy::Policy;
+
+    fn wan() -> Box<dyn CloudBackend> {
+        CloudExecModel::new(Box::new(LognormalWan::default())).into()
+    }
+    for policy in [Policy::dems(), Policy::dems_a(), Policy::gems(false)]
+    {
+        let wl = Workload::emulation(3, true);
+        let plain =
+            Cluster::emulation(&policy, &wl, 42, 3, &wan).run();
+        let faulted = Cluster::emulation(&policy, &wl, 42, 3, &wan)
+            .with_faults(FaultSpec::default())
+            .run();
+        assert_eq!(plain, faulted,
+                   "empty fault spec diverged under {}",
                    policy.kind.name());
     }
 }
