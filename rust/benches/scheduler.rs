@@ -34,6 +34,7 @@ fn mktask(id: u64, model: DnnKind, at: u64) -> Task {
         id,
         model,
         segment: VideoSegment { id, drone: 0, created_at: at, bytes: 38_000 },
+        pipeline: None,
     }
 }
 
@@ -233,11 +234,52 @@ fn main() {
         let wl = Workload::emulation(3, true);
         suite.bench("full 300s 3D-A sim [DEMS-A, faas backend]", 2000,
                     move || {
-                        let spec = CloudSpec::Faas {
-                            keep_alive: secs(300),
-                            concurrency: 64,
-                        };
+                        let spec = CloudSpec::faas(secs(300), 64);
                         let cm = Cluster::single(&Policy::dems_a(), &wl, 7,
+                                                 spec.build())
+                            .run();
+                        black_box(cm);
+                    });
+    }
+
+    // Resilience-layer hot paths (src/resilience.rs), gated in CI via
+    // `check_bench_regression.py --prefix resilience`: the circuit
+    // breaker's per-dispatch gate+record cost, the degradation
+    // controller's per-start observe cost, and the end-to-end overhead
+    // of a fully armed run vs the plain FaaS run above.
+    {
+        use ocularone::resilience::{CircuitBreaker, DegradeController,
+                                    ResilienceSpec};
+        let spec = ResilienceSpec::full();
+        let mut breaker = CircuitBreaker::new(&spec);
+        let mut now = 0u64;
+        suite.bench("resilience breaker gate+record hot path", 300,
+                    move || {
+                        now += 1_000;
+                        let g = breaker.gate(now);
+                        black_box(g);
+                        // 1-in-4 failures hovers below the trip
+                        // threshold, so both window rolls and state
+                        // checks stay on the measured path.
+                        breaker.record(now, now % 4_000 == 0, false);
+                    });
+        let mut degrade = DegradeController::new(&spec);
+        let mut now = 0u64;
+        suite.bench("resilience degrade observe hot path", 300, move || {
+            now += 1_000;
+            degrade.observe(now, (now / 1_000 % 12) as usize, false);
+            black_box(degrade.lite());
+        });
+        use ocularone::cluster::Cluster;
+        use ocularone::scenario::CloudSpec;
+        use ocularone::time::secs;
+        let wl = Workload::emulation(3, true);
+        suite.bench("resilience full 300s 3D-A sim [DEMS-A armed, faas]",
+                    2000, move || {
+                        let spec = CloudSpec::faas(secs(300), 64);
+                        let policy = Policy::dems_a()
+                            .with_resilience(ResilienceSpec::full());
+                        let cm = Cluster::single(&policy, &wl, 7,
                                                  spec.build())
                             .run();
                         black_box(cm);

@@ -227,6 +227,13 @@ impl CloudBackend for FaasBackend {
         })
     }
 
+    fn probe(&self, _now: Micros) -> bool {
+        // Advisory, so it cannot reap abandoned invocations (`&self`):
+        // a drained-but-unreaped slot may make this pessimistic, never
+        // optimistic — which is the safe direction for hedging.
+        self.in_flight < self.cfg.concurrency
+    }
+
     fn complete(&mut self, kind: DnnKind, token: u32, now: Micros) {
         self.reap_abandoned(now);
         if token == TOKEN_ABANDONED {
@@ -409,6 +416,46 @@ mod tests {
             }
         }
         assert_eq!(be.stats().throttles, 1);
+    }
+
+    #[test]
+    fn default_retry_after_is_pinned_at_200ms() {
+        // The CLI/CloudSpec now expose `retry_after`; the default must
+        // stay bit-identical to the pre-knob engine.
+        assert_eq!(FaasConfig::default().retry_after, ms(200));
+    }
+
+    #[test]
+    fn cancel_bills_in_full_and_releases_the_slot() {
+        let cfg = FaasConfig { concurrency: 1, ..det_cfg() };
+        let mut be = backend(cfg);
+        let mut rng = Rng::new(9);
+        let inv = run(&mut be, 0, &mut rng);
+        let billed = be.stats().dollars;
+        assert!(billed > 0.0);
+        // Client-side cancel of the losing hedge leg: the function ran
+        // anyway, so the cost stands, but the slot frees and the
+        // container parks warm.
+        be.cancel(DnnKind::Hv, inv.token, ms(50));
+        assert_eq!(be.in_flight(), 0);
+        assert!((be.stats().dollars - billed).abs() < 1e-15,
+                "cancel must not refund");
+        let again = run(&mut be, ms(60), &mut rng);
+        assert!(!again.cold, "cancelled leg parks its container warm");
+    }
+
+    #[test]
+    fn probe_tracks_concurrency_headroom() {
+        let cfg = FaasConfig { concurrency: 2, ..det_cfg() };
+        let mut be = backend(cfg);
+        let mut rng = Rng::new(10);
+        assert!(be.probe(0));
+        run(&mut be, 0, &mut rng);
+        assert!(be.probe(0), "one slot left");
+        run(&mut be, 0, &mut rng);
+        assert!(!be.probe(0), "ceiling reached");
+        be.complete(DnnKind::Hv, 0, ms(500));
+        assert!(be.probe(ms(500)));
     }
 
     #[test]

@@ -126,6 +126,24 @@ pub trait CloudBackend: Send {
     /// the warm pool. Backends without container state ignore this.
     fn complete(&mut self, _kind: DnnKind, _token: u32, _now: Micros) {}
 
+    /// An invocation admitted earlier was cancelled client-side at `now`
+    /// (the losing leg of a hedged pair, see [`crate::resilience`]). FaaS
+    /// semantics: a client-side cancel cannot claw back a running
+    /// function — it runs to completion and bills in full — so the
+    /// default (and the FaaS implementation) releases bookkeeping exactly
+    /// like [`complete`](Self::complete) and the cost recorded at
+    /// `invoke` stands.
+    fn cancel(&mut self, kind: DnnKind, token: u32, now: Micros) {
+        self.complete(kind, token, now);
+    }
+
+    /// Would an invocation attempted at `now` plausibly be admitted?
+    /// Advisory (used by resilience probes/hedges to avoid pointless
+    /// attempts); never mutates state and never draws RNG.
+    fn probe(&self, _now: Micros) -> bool {
+        true
+    }
+
     /// Fault injection (see [`crate::fault`]): region `region` is dark
     /// until `until` (0 clears an outage early). A dark region refuses
     /// invocations, shaped as throttles so the scheduler's adaptation

@@ -109,6 +109,17 @@ impl CloudBackend for MultiRegionBackend {
         self.regions[(token & 1) as usize].complete(kind, token >> 1, now);
     }
 
+    fn cancel(&mut self, kind: DnnKind, token: u32, now: Micros) {
+        self.regions[(token & 1) as usize].cancel(kind, token >> 1, now);
+    }
+
+    fn probe(&self, now: Micros) -> bool {
+        // Some region is both outside its outage window and under its
+        // concurrency ceiling.
+        (0..2).any(|r| now >= self.outage_until[r]
+                       && self.regions[r].probe(now))
+    }
+
     fn fault_outage(&mut self, region: usize, until: Micros) {
         if let Some(slot) = self.outage_until.get_mut(region) {
             *slot = until;
@@ -227,6 +238,28 @@ mod tests {
         be.fault_outage(0, 0);
         let (_, t) = invoke(&mut be, secs(2), &mut rng);
         assert_eq!(t & 1, 0, "cleared region serves again");
+    }
+
+    #[test]
+    fn probe_reports_headroom_across_outages_and_ceilings() {
+        let mut be =
+            MultiRegionBackend::new(region(ms(40), 1), region(ms(40), 1));
+        let mut rng = Rng::new(5);
+        assert!(be.probe(0));
+        // Both regions dark → no headroom until the nearer outage ends.
+        be.fault_outage(0, secs(10));
+        be.fault_outage(1, secs(10));
+        assert!(!be.probe(secs(1)));
+        assert!(be.probe(secs(10)), "outage end restores headroom");
+        be.fault_outage(0, 0);
+        be.fault_outage(1, 0);
+        // Fill both single-slot regions → ceiling-driven denial.
+        invoke(&mut be, secs(11), &mut rng);
+        invoke(&mut be, secs(11), &mut rng);
+        assert!(!be.probe(secs(11)));
+        // Cancel routes to the serving region and frees its slot.
+        be.cancel(DnnKind::Hv, 1, secs(12));
+        assert!(be.probe(secs(12)));
     }
 
     #[test]

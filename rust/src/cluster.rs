@@ -257,6 +257,61 @@ impl ClusterMetrics {
     pub fn downtime(&self) -> Micros {
         self.per_edge.iter().map(|m| m.downtime).sum()
     }
+
+    // ----------------------------------------------- resilience columns
+
+    /// Circuit-breaker open transitions across the edges.
+    pub fn breaker_trips(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.breaker_trips).sum()
+    }
+
+    /// Cloud dispatches short-circuited by an open breaker.
+    pub fn breaker_shorted(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.breaker_shorted).sum()
+    }
+
+    /// Half-open probe invocations let through by breakers.
+    pub fn breaker_probes(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.breaker_probes).sum()
+    }
+
+    /// Speculative hedge duplicates launched.
+    pub fn hedge_launches(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.hedge_launches).sum()
+    }
+
+    /// Hedged pairs whose duplicate delivered the usable result.
+    pub fn hedge_wins(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.hedge_wins).sum()
+    }
+
+    /// Losing hedge legs cancelled client-side (billed in full).
+    pub fn hedge_cancels(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.hedge_cancels).sum()
+    }
+
+    /// Edge executions run as lite (degraded) variants.
+    pub fn degraded_tasks(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.degraded_tasks).sum()
+    }
+
+    /// Utility forfeited to lite-variant discounts.
+    pub fn degraded_utility_lost(&self) -> f64 {
+        self.per_edge.iter().map(|m| m.degraded_utility_lost).sum()
+    }
+
+    /// p-th percentile of cloud-leg latency (ms) across every edge and
+    /// model: completed/missed cloud tasks plus client timeouts — the
+    /// tail the hedging mechanism attacks. NaN when no cloud task ran.
+    pub fn cloud_latency_percentile(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self
+            .per_edge
+            .iter()
+            .flat_map(|m| m.per_model.iter())
+            .flat_map(|(_, s)| s.cloud_exec_ms.iter().copied())
+            .collect();
+        metrics::percentile(&xs, p)
+    }
 }
 
 // -------------------------------------------------------------- federation
@@ -712,6 +767,9 @@ impl<S: Scheduler> Cluster<S> {
                 }
                 Event::CloudDone { key } => {
                     edges[e].on_cloud_done(now, key, &mut q)
+                }
+                Event::HedgeFire { key } => {
+                    edges[e].on_hedge_fire(now, key, &mut q)
                 }
                 Event::WindowClose { model_idx } => {
                     if now <= workloads[e].duration {

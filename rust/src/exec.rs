@@ -62,6 +62,38 @@ pub(crate) fn shared_uplink_bytes(bytes: u64, concurrent: usize,
     bytes * (1 + concurrent * host_edges) as u64
 }
 
+// ------------------------------------------------ graceful degradation
+
+/// A degraded ("lite") variant of one DNN: a cheaper checkpoint of the
+/// same task — fewer parameters, lower input resolution — traded for
+/// output quality. Used by the resilience layer's overload controller
+/// ([`crate::resilience::DegradeController`]): under queue pressure the
+/// edge swaps to the lite checkpoint, finishing in
+/// `time_factor × t` and earning `utility_discount × γ` on success.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LiteVariant {
+    /// Execution-time multiplier vs. the full model (< 1).
+    pub time_factor: f64,
+    /// Success-utility multiplier vs. the full model (< 1).
+    pub utility_discount: f64,
+}
+
+/// The lite-variant profile per [`DnnKind`]. The heavy models (YOLOv8m
+/// crowd density, Monodepth2 depth) have the most to shed — swapping to
+/// their nano-class checkpoints more than halves the latency — while the
+/// already-nano detectors gain less and lose less.
+pub fn lite_variant(kind: DnnKind) -> LiteVariant {
+    let (time_factor, utility_discount) = match kind {
+        // YOLOv8n-class detectors: already small; modest shrink.
+        DnnKind::Hv | DnnKind::Dev => (0.75, 0.92),
+        // SSD mask detection / ResNet-18 pose: mid-size backbones.
+        DnnKind::Md | DnnKind::Bp => (0.70, 0.90),
+        // YOLOv8m crowd density / Monodepth2 depth: the heavy pair.
+        DnnKind::Cd | DnnKind::Deo => (0.55, 0.82),
+    };
+    LiteVariant { time_factor, utility_discount }
+}
+
 /// Edge accelerator service-time model: tight lognormal whose p99 equals
 /// the profile's `t_edge` (Fig. 1a shows low variance — the edge has no
 /// network in the path and runs single-threaded).
@@ -346,6 +378,24 @@ mod tests {
         }
         assert!(lo < 0.7, "lower half unexercised: min {lo}");
         assert!(hi > 1.3, "upper half unexercised: max {hi}");
+    }
+
+    #[test]
+    fn lite_variants_are_strict_discounts_and_heaviest_shed_most() {
+        use crate::model::DnnKind;
+        for kind in DnnKind::ALL {
+            let v = lite_variant(kind);
+            assert!(v.time_factor > 0.0 && v.time_factor < 1.0,
+                    "{kind:?} time_factor {}", v.time_factor);
+            assert!(v.utility_discount > 0.0 && v.utility_discount < 1.0,
+                    "{kind:?} discount {}", v.utility_discount);
+        }
+        // The heavy models shed the most time (that is the point of the
+        // downshift) and pay the largest quality discount for it.
+        assert!(lite_variant(DnnKind::Cd).time_factor
+                < lite_variant(DnnKind::Hv).time_factor);
+        assert!(lite_variant(DnnKind::Deo).utility_discount
+                < lite_variant(DnnKind::Md).utility_discount);
     }
 
     #[test]

@@ -42,7 +42,12 @@
 //!   the isolated engine when off. The [`fault`] chaos layer injects
 //!   deterministic edge crashes, region outages and link flaps on the
 //!   same event queue (`simulate --fault crash:0@60-120`), with
-//!   conservation-audited recovery semantics.
+//!   conservation-audited recovery semantics. The [`resilience`] layer
+//!   closes the loop on those faults: per-backend circuit breakers,
+//!   hedged (speculative duplicate) cloud requests and lite-variant
+//!   graceful degradation, all opt-in per policy
+//!   (`simulate --resilience breaker,hedge,degrade`) and bit-identical
+//!   to the plain engine when off.
 //! * [`cloud`] — the pluggable cloud tier behind
 //!   [`cloud::CloudBackend`]: [`cloud::SimpleBackend`] (the calibrated
 //!   legacy sampler, bit-identical default), [`cloud::FaasBackend`]
@@ -96,6 +101,7 @@ pub mod pool;
 pub mod qoe;
 pub mod queues;
 pub mod report;
+pub mod resilience;
 pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

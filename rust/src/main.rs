@@ -38,9 +38,11 @@ USAGE:
                      [--edges N] [--seed N] [--seeds K] [--jobs N]
                      [--cloud wan|trapezium|mobility|faas|multi-region]
                      [--keep-alive SECS] [--concurrency N]
+                     [--retry-after MS]
                      [--federation] [--uplink-mbps F]
                      [--handover DRONE:EDGE@SECS[,..]]
                      [--fault SPEC[,..]] [--recovery lose|requeue]
+                     [--resilience breaker|hedge|degrade|all[,..]]
                                            N>1 emulates N edge stations
                                            through one Cluster engine (§8.1);
                                            --pipeline swaps the workload
@@ -71,7 +73,16 @@ USAGE:
                                            requeue relocates a crashed
                                            station's queue over the
                                            federation LAN instead of
-                                           losing it
+                                           losing it; --retry-after sets
+                                           the FaaS throttle backoff hint
+                                           (milliseconds, --cloud faas
+                                           only); --resilience arms any
+                                           subset of the resilience layer:
+                                           breaker (per-backend circuit
+                                           breaker), hedge (speculative
+                                           cloud duplicates), degrade
+                                           (lite model variants under
+                                           overload), all (everything)
   ocularone serve [--policy ec] [--rate R] [--drones D] [--secs S]
                   [--artifacts DIR]        (requires the pjrt feature)
   ocularone bench-models [--artifacts DIR] (requires the pjrt feature)
@@ -145,10 +156,12 @@ fn parse_jobs(args: &[String]) -> Result<usize> {
 /// Cloud backend spec for `simulate` (see `scenario::CloudSpec`):
 /// `--cloud faas|multi-region` takes `--keep-alive` (seconds) and
 /// `--concurrency` (the in-flight ceiling of each edge station's own
-/// FaaS account — one account per edge). Passing either flag with a
-/// non-FaaS backend is an error, not a silent no-op.
+/// FaaS account — one account per edge); `--cloud faas` additionally
+/// takes `--retry-after` (the throttle backoff hint, milliseconds).
+/// Passing any of the three with a backend it does not apply to is an
+/// error, not a silent no-op.
 fn parse_cloud(args: &[String]) -> Result<scenario::CloudSpec> {
-    use ocularone::time::{ms, secs};
+    use ocularone::time::{ms, ms_f, secs};
     let name = flag(args, "--cloud").unwrap_or_else(|| "wan".into());
     let keep_alive_flag = flag(args, "--keep-alive")
         .map(|s| s.parse::<u64>())
@@ -157,13 +170,24 @@ fn parse_cloud(args: &[String]) -> Result<scenario::CloudSpec> {
     let concurrency_flag: Option<usize> = flag(args, "--concurrency")
         .map(|s| s.parse())
         .transpose()?;
+    let retry_after_flag = flag(args, "--retry-after")
+        .map(|s| s.parse::<f64>())
+        .transpose()?
+        .map(ms_f);
     let keep_alive = keep_alive_flag.unwrap_or(secs(300));
     let concurrency = concurrency_flag.unwrap_or(1000);
     let spec = match name.to_lowercase().as_str() {
         "wan" | "simple" => scenario::CloudSpec::NominalWan,
         "trapezium" => scenario::CloudSpec::TrapeziumLatency,
         "mobility" => scenario::CloudSpec::MobilityBandwidth { device: 3 },
-        "faas" => scenario::CloudSpec::Faas { keep_alive, concurrency },
+        "faas" => match retry_after_flag {
+            Some(retry_after) => scenario::CloudSpec::Faas {
+                keep_alive,
+                concurrency,
+                retry_after,
+            },
+            None => scenario::CloudSpec::faas(keep_alive, concurrency),
+        },
         "multi-region" | "multiregion" => scenario::CloudSpec::MultiRegion {
             keep_alive,
             concurrency,
@@ -182,7 +206,41 @@ fn parse_cloud(args: &[String]) -> Result<scenario::CloudSpec> {
              --cloud faas|multi-region (got --cloud {name})"
         );
     }
+    if retry_after_flag.is_some()
+        && !matches!(spec, scenario::CloudSpec::Faas { .. })
+    {
+        // Multi-region keeps its regions' default backoff; only the
+        // single-account FaaS backend exposes the knob.
+        bail!("--retry-after only applies to --cloud faas (got --cloud {name})");
+    }
     Ok(spec)
+}
+
+/// Resilience arming for `simulate`: `--resilience` takes a comma list
+/// of `breaker`, `hedge`, `degrade` (or `all`) and turns the named
+/// mechanisms on with their default knobs (see
+/// `ocularone::resilience::ResilienceSpec`). Absent, the policy runs
+/// with resilience off — bit-identical to the pre-resilience engine.
+fn parse_resilience(args: &[String])
+                    -> Result<Option<ocularone::resilience::ResilienceSpec>> {
+    use ocularone::resilience::ResilienceSpec;
+    let Some(list) = flag(args, "--resilience") else {
+        return Ok(None);
+    };
+    let mut spec = ResilienceSpec::default();
+    for part in list.split(',') {
+        match part.trim().to_lowercase().as_str() {
+            "breaker" => spec.breaker = true,
+            "hedge" => spec.hedge = true,
+            "degrade" => spec.degrade = true,
+            "all" => spec = ResilienceSpec::full(),
+            other => bail!(
+                "unknown resilience mechanism {other:?} \
+                 (breaker|hedge|degrade|all)"
+            ),
+        }
+    }
+    Ok(Some(spec))
 }
 
 /// Fleet-federation spec for `simulate`: `--federation` turns on
@@ -432,6 +490,23 @@ fn cloud_summary(cm: &ocularone::cluster::ClusterMetrics) -> String {
     )
 }
 
+/// One-line resilience summary for a cluster run.
+fn resilience_summary(cm: &ocularone::cluster::ClusterMetrics) -> String {
+    format!(
+        "resilience: breaker {} trips ({} shorted, {} probes), \
+         hedge {} launched ({} won, {} cancelled), {} degraded \
+         (-{:.0} util)",
+        cm.breaker_trips(),
+        cm.breaker_shorted(),
+        cm.breaker_probes(),
+        cm.hedge_launches(),
+        cm.hedge_wins(),
+        cm.hedge_cancels(),
+        cm.degraded_tasks(),
+        cm.degraded_utility_lost(),
+    )
+}
+
 fn cmd_experiment(args: &[String], seed: u64) -> Result<()> {
     let id = match args.get(1).map(|s| s.as_str()) {
         None => "all",
@@ -525,9 +600,16 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
             &flag(args, "--workload").unwrap_or_else(|| "3D-A".into()),
         )?
     };
-    let policy = parse_policy(
+    let mut policy = parse_policy(
         &flag(args, "--policy").unwrap_or_else(|| "dems".into()),
     )?;
+    let resilient = match parse_resilience(args)? {
+        Some(spec) => {
+            policy = policy.with_resilience(spec);
+            true
+        }
+        None => false,
+    };
     let edges: usize = flag(args, "--edges")
         .map(|s| s.parse())
         .transpose()?
@@ -560,6 +642,9 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
         }
         if faults.is_some() {
             println!("  {}", fault_summary(&cm));
+        }
+        if resilient {
+            println!("  {}", resilience_summary(&cm));
         }
         return Ok(());
     }
@@ -597,6 +682,9 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
     }
     if faults.is_some() {
         println!("  {}", fault_summary(&cm));
+    }
+    if resilient {
+        println!("  {}", resilience_summary(&cm));
     }
     Ok(())
 }
@@ -678,6 +766,16 @@ fn simulate_sweep(name: &str, policy: Policy, wl: &Workload, seed: u64,
         println!(
             "  faults: {crashes} crashes, {relocated} relocated, \
              {failed} node-failed across seeds"
+        );
+    }
+    if policy.resilience.enabled() {
+        let trips: u64 = runs.iter().map(|cm| cm.breaker_trips()).sum();
+        let hedges: u64 = runs.iter().map(|cm| cm.hedge_launches()).sum();
+        let degraded: u64 =
+            runs.iter().map(|cm| cm.degraded_tasks()).sum();
+        println!(
+            "  resilience: {trips} breaker trips, {hedges} hedges, \
+             {degraded} degraded across seeds"
         );
     }
     Ok(())
@@ -817,6 +915,157 @@ fn cmd_navigate(args: &[String], seed: u64) -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ocularone::time::{ms_f, secs};
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Every generated task reached exactly one terminal state.
+    fn assert_conserved(cm: &ocularone::cluster::ClusterMetrics) {
+        let closed: u64 = cm
+            .per_edge
+            .iter()
+            .map(|m| m.executed() + m.dropped())
+            .sum();
+        assert_eq!(cm.generated(), closed,
+                   "every task must be accounted for exactly once");
+    }
+
+    // ---- `--fault` grammar corner cases ---------------------------------
+
+    #[test]
+    fn overlapping_crash_windows_on_one_station_both_parse() {
+        let args = argv(&[
+            "simulate", "--edges", "2", "--fault",
+            "crash:0@50-100,crash:0@80-120",
+        ]);
+        let cloud = parse_cloud(&args).unwrap();
+        let spec = parse_faults(&args, 2, &cloud, None).unwrap().unwrap();
+        assert_eq!(spec.crashes.len(), 2,
+                   "overlapping windows are both kept, not merged");
+        assert!(spec.crashes.iter().all(|c| c.edge == 0));
+        assert_eq!(spec.crashes[0].at, secs(50));
+        assert_eq!(spec.crashes[0].recover_at, Some(secs(100)));
+        assert_eq!(spec.crashes[1].at, secs(80));
+        assert_eq!(spec.crashes[1].recover_at, Some(secs(120)));
+        // The overlapping pair still drives a deterministic run: the
+        // second crash lands on an already-dead station and the engine
+        // must neither double-kill nor double-reboot it.
+        let wl = Workload::emulation(2, false).with_duration(secs(150));
+        let cm = scenario::run_cluster_faulted(
+            &Policy::dems_a(), &wl, 7, 2,
+            &scenario::CloudSpec::NominalWan, None, Some(&spec),
+        );
+        assert_conserved(&cm);
+    }
+
+    #[test]
+    fn crash_without_reboot_then_handover_to_the_dead_edge() {
+        // Station 1 dies at 50 s and never reboots; a handover scheduled
+        // at 100 s re-homes drone 0 onto that dead station. The grammar
+        // accepts the composition and the cluster falls back instead of
+        // wedging.
+        let args = argv(&[
+            "simulate", "--edges", "2", "--federation",
+            "--handover", "0:1@100",
+            "--fault", "crash:1@50",
+        ]);
+        let cloud = parse_cloud(&args).unwrap();
+        let fed = parse_federation(&args, 2).unwrap().unwrap();
+        let spec =
+            parse_faults(&args, 2, &cloud, Some(&fed)).unwrap().unwrap();
+        assert_eq!(spec.crashes.len(), 1);
+        assert_eq!(spec.crashes[0].edge, 1);
+        assert_eq!(spec.crashes[0].at, secs(50));
+        assert_eq!(spec.crashes[0].recover_at, None, "no reboot scheduled");
+        assert_eq!(fed.handovers.len(), 1);
+        assert_eq!(fed.handovers[0].to_edge, 1,
+                   "handover targets the station that will be dead");
+        let wl = Workload::emulation(2, false).with_duration(secs(150));
+        let cm = scenario::run_cluster_faulted(
+            &Policy::dems_a(), &wl, 7, 2, &cloud, Some(&fed), Some(&spec),
+        );
+        assert_conserved(&cm);
+        assert_eq!(cm.crashes(), 1);
+        assert_eq!(cm.recoveries(), 0, "the station never reboots");
+    }
+
+    #[test]
+    fn fault_grammar_rejections() {
+        let cloud = scenario::CloudSpec::NominalWan;
+        // Crash edge out of range.
+        let args = argv(&["simulate", "--fault", "crash:3@50"]);
+        assert!(parse_faults(&args, 2, &cloud, None).is_err());
+        // Outage without a multi-region backend.
+        let args = argv(&["simulate", "--fault", "outage:0@50-100"]);
+        assert!(parse_faults(&args, 2, &cloud, None).is_err());
+        // Requeue recovery without federation.
+        let args = argv(&[
+            "simulate", "--fault", "crash:0@50", "--recovery", "requeue",
+        ]);
+        assert!(parse_faults(&args, 2, &cloud, None).is_err());
+        // Recovery flag with no fault at all.
+        let args = argv(&["simulate", "--recovery", "lose"]);
+        assert!(parse_faults(&args, 2, &cloud, None).is_err());
+    }
+
+    // ---- `--retry-after` gating -----------------------------------------
+
+    #[test]
+    fn retry_after_reaches_the_faas_spec_and_defaults_pin() {
+        let args = argv(&[
+            "simulate", "--cloud", "faas", "--retry-after", "350",
+        ]);
+        match parse_cloud(&args).unwrap() {
+            scenario::CloudSpec::Faas { retry_after, .. } => {
+                assert_eq!(retry_after, ms_f(350.0));
+            }
+            other => panic!("expected Faas, got {other:?}"),
+        }
+        // Default stays the backend's pinned 200 ms backoff.
+        let args = argv(&["simulate", "--cloud", "faas"]);
+        match parse_cloud(&args).unwrap() {
+            scenario::CloudSpec::Faas { retry_after, .. } => {
+                assert_eq!(retry_after, ms_f(200.0));
+            }
+            other => panic!("expected Faas, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn retry_after_rejected_off_the_faas_backend() {
+        for cloud in ["wan", "multi-region"] {
+            let args = argv(&[
+                "simulate", "--cloud", cloud, "--retry-after", "350",
+            ]);
+            assert!(parse_cloud(&args).is_err(),
+                    "--retry-after must be rejected for --cloud {cloud}");
+        }
+    }
+
+    // ---- `--resilience` parsing -----------------------------------------
+
+    #[test]
+    fn resilience_list_arms_the_named_mechanisms() {
+        let spec = parse_resilience(
+            &argv(&["simulate", "--resilience", "breaker,degrade"]),
+        ).unwrap().unwrap();
+        assert!(spec.breaker && spec.degrade && !spec.hedge);
+        let spec = parse_resilience(
+            &argv(&["simulate", "--resilience", "all"]),
+        ).unwrap().unwrap();
+        assert!(spec.breaker && spec.hedge && spec.degrade);
+        assert!(parse_resilience(&argv(&["simulate"])).unwrap().is_none());
+        assert!(parse_resilience(
+            &argv(&["simulate", "--resilience", "breaker,nope"]),
+        ).is_err());
+    }
 }
 
 fn main() -> Result<()> {

@@ -41,6 +41,10 @@ pub struct ModelStats {
     pub gems_rescheduled: u64,
     /// Actual e2e durations of executed tasks (ms) for percentile reports.
     pub exec_ms: Vec<f64>,
+    /// Cloud-side latency samples (ms): completed/missed cloud executions
+    /// plus timed-out invocations — the population whose tail hedged
+    /// requests ([`crate::resilience`]) are meant to cut.
+    pub cloud_exec_ms: Vec<f64>,
 }
 
 impl ModelStats {
@@ -139,6 +143,28 @@ pub struct Metrics {
     /// Total virtual time this edge spent dark (crash → recovery, or to
     /// the horizon when it never recovered).
     pub downtime: Micros,
+    /// Resilience-layer accounting (all zero unless the policy opts into a
+    /// [`ResilienceSpec`](crate::resilience::ResilienceSpec)): times the
+    /// cloud circuit breaker tripped open.
+    pub breaker_trips: u64,
+    /// Cloud dispatches short-circuited by an open breaker (re-planned to
+    /// edge/federation without touching the backend).
+    pub breaker_shorted: u64,
+    /// Half-open probe invocations sent to test backend recovery.
+    pub breaker_probes: u64,
+    /// Speculative duplicate cloud invocations launched (hedged requests).
+    pub hedge_launches: u64,
+    /// Hedged tasks where the speculative duplicate finished first (or the
+    /// primary timed out and the duplicate survived).
+    pub hedge_wins: u64,
+    /// Hedge legs cancelled after their partner won the race.
+    pub hedge_cancels: u64,
+    /// Edge tasks executed on the lite model variant under graceful
+    /// degradation.
+    pub degraded_tasks: u64,
+    /// Utility forfeited to the lite-variant discount on successful
+    /// degraded completions (full-variant utility minus earned).
+    pub degraded_utility_lost: f64,
 }
 
 impl Metrics {
@@ -214,6 +240,14 @@ impl Metrics {
         }
         if o.exec_duration > 0 {
             s.exec_ms.push(to_ms(o.exec_duration));
+            if matches!(
+                o.fate,
+                Fate::Completed(Resource::Cloud)
+                    | Fate::Missed(Resource::Cloud)
+                    | Fate::Dropped(DropReason::Timeout)
+            ) {
+                s.cloud_exec_ms.push(to_ms(o.exec_duration));
+            }
         }
         if self.record_completions {
             self.completions.push(CompletionRecord {
@@ -428,6 +462,25 @@ mod tests {
         m.record(&o2);
         assert_eq!(m.stolen(), 1);
         assert_eq!(m.gems_rescheduled(), 1);
+    }
+
+    #[test]
+    fn cloud_exec_samples_cover_cloud_and_timeout_fates() {
+        let mut m = Metrics::new(&[DnnKind::Hv]);
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Cloud),
+                          100.0));
+        m.record(&outcome(DnnKind::Hv, Fate::Missed(Resource::Cloud),
+                          -25.0));
+        m.record(&outcome(DnnKind::Hv, Fate::Dropped(DropReason::Timeout),
+                          0.0));
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Edge),
+                          124.0));
+        let s = m.stats(DnnKind::Hv);
+        // Cloud completions, cloud misses and invocation timeouts feed the
+        // hedging tail population; the edge completion only feeds exec_ms.
+        assert_eq!(s.cloud_exec_ms.len(), 3);
+        assert_eq!(s.exec_ms.len(), 4);
+        assert!(s.cloud_exec_ms.iter().all(|&v| (v - 50.0).abs() < 1e-9));
     }
 
     #[test]

@@ -26,7 +26,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use crate::cloud::{Attempt, CloudBackend, CloudStats};
-use crate::exec::{DroneExecModel, EdgeExecModel};
+use crate::exec::{lite_variant, DroneExecModel, EdgeExecModel};
 use crate::metrics::{Metrics, TimelinePoint};
 use crate::model::{DnnKind, ModelProfile, Resource};
 use crate::net::{ConstantNet, NetworkModel, SharedUplink};
@@ -34,6 +34,7 @@ use crate::pipeline::{PipelineRef, StageGraph};
 use crate::policy::{PipelineCut, Policy};
 use crate::qoe::WindowMonitor;
 use crate::queues::{CloudEntry, CloudQueue, EdgeEntry, EdgeQueue};
+use crate::resilience::{BreakerGate, ResilienceState};
 use crate::rng::Rng;
 use crate::sched::{CloudReport, SchedCtx, Scheduler};
 use crate::sim::{Event, EventQueue};
@@ -49,6 +50,10 @@ pub(crate) struct RunningEdge {
     /// Actual completion (when `EdgeDone` fires).
     pub(crate) actual_end: Micros,
     pub(crate) stolen: bool,
+    /// Running on the lite model variant (graceful degradation): the
+    /// sampled duration was scaled down and the success utility will be
+    /// discounted at finalize ([`crate::exec::lite_variant`]).
+    pub(crate) degraded: bool,
 }
 
 /// One in-flight FaaS invocation.
@@ -59,6 +64,16 @@ pub(crate) struct CloudRunning {
     pub(crate) timed_out: bool,
     /// Backend routing token (see [`CloudBackend::complete`]).
     pub(crate) token: u32,
+    /// This invocation is the circuit breaker's half-open recovery
+    /// probe; its outcome is reported with `probe = true`.
+    pub(crate) probe: bool,
+    /// This invocation is the speculative duplicate of a hedged pair.
+    /// Exactly one leg of a pair has `is_hedge == false` at any time —
+    /// that leg owns the task's ledger (crash/drain finalize only it).
+    pub(crate) is_hedge: bool,
+    /// Key of the partner leg of a hedged pair while both are in
+    /// flight; cleared on promotion, moot once the loser is cancelled.
+    pub(crate) hedge_pair: Option<u64>,
 }
 
 /// Mechanism-only substrate of one edge base station: queues, executors,
@@ -103,6 +118,11 @@ pub struct Core {
     /// any scheduler can consult them).
     pub(crate) qoe: Vec<WindowMonitor>,
     pub(crate) rng: Rng,
+    /// Resilience state machines (see [`crate::resilience`]), built once
+    /// from the policy's `ResilienceSpec`. Every member is `None` under
+    /// the all-off default, so the hot paths below gate on that and the
+    /// plain engine stays bit-identical.
+    pub(crate) resilience: ResilienceState,
     /// Fault injection (see [`crate::fault`]): the edge is dark — any
     /// work submitted while set is immediately lost with
     /// [`DropReason::NodeFailure`]. Always false without a `FaultSpec`
@@ -131,6 +151,7 @@ impl Core {
             models.iter().map(|m| m.t_edge).min().unwrap_or(0);
         Core {
             edge_q: EdgeQueue::new(policy.edge_order),
+            resilience: ResilienceState::from_spec(&policy.resilience),
             policy,
             metrics: Metrics::new(&kinds),
             models,
@@ -249,6 +270,27 @@ impl Core {
     pub(crate) fn dispatch_cloud(&mut self, now: Micros, e: CloudEntry,
                                  q: &mut EventQueue)
                                  -> Option<(CloudEntry, Micros)> {
+        // Resilience: an open circuit breaker short-circuits the dispatch
+        // *before* the backend is touched. The refusal is throttle-shaped
+        // (`Some((entry, retry_after))`), so the caller's existing
+        // throttle machinery — §5.4 report, t̂ inflation, retry-or-drop —
+        // re-plans the task to edge/federation immediately. The breaker
+        // is fed only by real backend outcomes, never by its own
+        // refusals, so it cannot self-reinforce.
+        let mut probe = false;
+        if let Some(br) = &mut self.resilience.breaker {
+            match br.gate(now) {
+                BreakerGate::Open { until } => {
+                    self.metrics.breaker_shorted += 1;
+                    return Some((e, until.saturating_sub(now).max(1)));
+                }
+                BreakerGate::Probe => {
+                    probe = true;
+                    self.metrics.breaker_probes += 1;
+                }
+                BreakerGate::Closed => {}
+            }
+        }
         // Split field borrows (backend / profile table / RNG are
         // disjoint) instead of cloning the profile per dispatch.
         let i = self.idx(e.task.model);
@@ -261,6 +303,12 @@ impl Core {
         ) {
             Attempt::Run(inv) => inv,
             Attempt::Throttle { retry_after } => {
+                // A refusal at the account/region layer (concurrency
+                // ceiling, PR 7 outage) is a breaker failure signal —
+                // and the verdict of a half-open probe.
+                if let Some(br) = &mut self.resilience.breaker {
+                    br.record(now, true, probe);
+                }
                 return Some((e, retry_after));
             }
         };
@@ -282,6 +330,24 @@ impl Core {
         }
         self.next_cloud_key += 1;
         let key = self.next_cloud_key;
+        // Hedging: a task with enough remaining slack beyond the nominal
+        // cloud duration arms a speculative-duplicate timer. If the
+        // primary is still in flight when it fires (i.e. it landed in the
+        // latency tail), `on_hedge_fire` launches the duplicate. An
+        // invocation that will finish before the timer is never armed
+        // (the fire would be a guaranteed no-op); probes are never
+        // hedged.
+        let hedge_at = match &self.resilience.hedge {
+            Some(h)
+                if !probe
+                    && duration > h.delay
+                    && e.abs_deadline
+                        >= now + self.models[i].t_cloud + h.slack =>
+            {
+                Some(now + h.delay)
+            }
+            _ => None,
+        };
         self.cloud_running.insert(
             key,
             CloudRunning {
@@ -290,10 +356,16 @@ impl Core {
                 duration,
                 timed_out: inv.timed_out,
                 token: inv.token,
+                probe,
+                is_hedge: false,
+                hedge_pair: None,
             },
         );
         self.cloud_inflight += 1;
         q.push(now + duration, Event::CloudDone { key });
+        if let Some(at) = hedge_at {
+            q.push(at, Event::HedgeFire { key });
+        }
         None
     }
 
@@ -302,13 +374,51 @@ impl Core {
     pub(crate) fn start_edge(&mut self, now: Micros, entry: EdgeEntry,
                              stolen: bool, q: &mut EventQueue) {
         let i = self.idx(entry.task.model);
-        let actual = self.edge_exec.sample(&self.models[i], &mut self.rng);
+        let mut actual =
+            self.edge_exec.sample(&self.models[i], &mut self.rng);
+        // Graceful degradation: the lite variant trades accuracy (a
+        // utility discount at finalize) for latency. The full-variant
+        // sample is scaled after the draw — same RNG consumption, so
+        // degrade-off runs stay bit-identical.
+        let degraded = self
+            .resilience
+            .degrade
+            .as_ref()
+            .is_some_and(|dc| dc.lite());
+        if degraded {
+            let f = lite_variant(entry.task.model).time_factor;
+            actual = ((actual as f64) * f).round() as Micros;
+        }
         self.metrics.edge_busy += actual;
         let expected_end = now + entry.t_edge;
         let actual_end = now + actual;
-        self.running_edge =
-            Some(RunningEdge { entry, expected_end, actual_end, stolen });
+        self.running_edge = Some(RunningEdge {
+            entry,
+            expected_end,
+            actual_end,
+            stolen,
+            degraded,
+        });
         q.push(actual_end, Event::EdgeDone);
+    }
+
+    /// Graceful degradation: feed the overload controller its inputs —
+    /// edge-queue depth and whether the cloud escape valve is
+    /// breaker-blocked — at an executor decision point. No-op without a
+    /// [`DegradeController`](crate::resilience::DegradeController).
+    pub(crate) fn update_degrade(&mut self, now: Micros) {
+        if self.resilience.degrade.is_none() {
+            return;
+        }
+        let breaker_open = self
+            .resilience
+            .breaker
+            .as_ref()
+            .is_some_and(|b| b.is_open(now));
+        let pressure = self.edge_q.len();
+        if let Some(dc) = &mut self.resilience.degrade {
+            dc.observe(now, pressure, breaker_open);
+        }
     }
 
     // ------------------------------------------------------- finalization
@@ -567,6 +677,9 @@ impl<S: Scheduler> Platform<S> {
     pub fn into_metrics(self) -> Metrics {
         let mut m = self.core.metrics;
         m.cloud = self.core.cloud.stats();
+        if let Some(br) = &self.core.resilience.breaker {
+            m.breaker_trips = br.trips;
+        }
         m
     }
 
@@ -726,6 +839,9 @@ impl<S: Scheduler> Platform<S> {
         if self.core.running_edge.is_some() || !self.core.policy.use_edge {
             return;
         }
+        // Degrade controller: observe pressure where the pick is made, so
+        // the variant choice below reflects the queue it has to clear.
+        self.core.update_degrade(now);
         loop {
             let steal = {
                 let mut ctx = SchedCtx { now, core: &mut self.core, q: &mut *q };
@@ -761,8 +877,21 @@ impl<S: Scheduler> Platform<S> {
             None => return,
         };
         let success = run.actual_end <= run.entry.abs_deadline;
-        let utility = self.core.stage_utility(&run.entry.task,
-                                              Resource::Edge, success);
+        let mut utility = self.core.stage_utility(&run.entry.task,
+                                                  Resource::Edge, success);
+        if run.degraded {
+            // Lite-variant accounting: the accuracy trade shows up as a
+            // utility discount on success (a degraded miss already earns
+            // the miss penalty; don't deepen it).
+            self.core.metrics.degraded_tasks += 1;
+            if success && utility > 0.0 {
+                let d = lite_variant(run.entry.task.model).utility_discount;
+                let discounted = utility * d;
+                self.core.metrics.degraded_utility_lost +=
+                    utility - discounted;
+                utility = discounted;
+            }
+        }
         let fate = if success {
             Fate::Completed(Resource::Edge)
         } else {
@@ -864,6 +993,48 @@ impl<S: Scheduler> Platform<S> {
         self.core.cloud_inflight -= 1;
         // Release the backend's concurrency slot / warm container.
         self.core.cloud.complete(run.entry.task.model, run.token, now);
+        // Breaker feed: a timeout is the backend-health failure signal (a
+        // deadline miss is a scheduling verdict, not backend health).
+        // Probe outcomes close or re-open a half-open breaker.
+        if let Some(br) = &mut self.core.resilience.breaker {
+            br.record(now, run.timed_out, run.probe);
+        }
+        // Hedged-pair resolution (links are only ever set by
+        // `on_hedge_fire`, so this whole block is inert when hedging is
+        // off). First usable completion wins; exactly one leg of a pair
+        // ever finalizes the task.
+        let partner_alive = run
+            .hedge_pair
+            .filter(|pk| self.core.cloud_running.contains_key(pk));
+        if let Some(pk) = partner_alive {
+            if run.timed_out {
+                // This leg is useless but its partner is still racing:
+                // abandon it silently (backend slot released above, no
+                // finalization) and promote the partner to sole owner of
+                // the task's ledger.
+                if let Some(p) = self.core.cloud_running.get_mut(&pk) {
+                    p.hedge_pair = None;
+                    if p.is_hedge {
+                        p.is_hedge = false;
+                        self.core.metrics.hedge_wins += 1;
+                    }
+                }
+                self.pull_cloud_ready(now, q);
+                return;
+            }
+            // Usable result: cancel the in-flight loser. FaaS semantics —
+            // the backend bills the cancelled invocation in full; only
+            // the slot/container bookkeeping is released.
+            if let Some(loser) = self.core.cloud_running.remove(&pk) {
+                self.core.cloud_inflight -= 1;
+                self.core.cloud.cancel(loser.entry.task.model, loser.token,
+                                       now);
+                self.core.metrics.hedge_cancels += 1;
+            }
+            if run.is_hedge {
+                self.core.metrics.hedge_wins += 1;
+            }
+        }
         let success = !run.timed_out && run.end <= run.entry.abs_deadline;
         // §5.4 observation hook fires before verdicting so adapted
         // expectations (and the timeline's expected_ms) include this sample.
@@ -937,6 +1108,112 @@ impl<S: Scheduler> Platform<S> {
                                       Resource::Cloud, q);
         }
         self.pull_cloud_ready(now, q);
+    }
+
+    /// The hedge timer for in-flight invocation `key` elapsed: if the
+    /// primary is still running — which, with the timer set past the
+    /// median duration, means it landed in the latency tail — launch a
+    /// speculative duplicate on the backend and link the pair. The
+    /// duplicate is strictly opportunistic: no free pool slot, an open
+    /// breaker or a backend throttle simply forfeits the hedge (the
+    /// primary is unaffected).
+    pub fn on_hedge_fire(&mut self, now: Micros, key: u64,
+                         q: &mut EventQueue) {
+        if self.core.resilience.hedge.is_none() {
+            return;
+        }
+        if self.core.cloud_inflight >= self.core.cloud_pool {
+            return;
+        }
+        if self
+            .core
+            .resilience
+            .breaker
+            .as_ref()
+            .is_some_and(|b| b.is_open(now))
+        {
+            return;
+        }
+        let (task, abs_deadline, t_cloud, t_edge, gems, pinned,
+             primary_start) = {
+            let Some(run) = self.core.cloud_running.get(&key) else {
+                return; // primary already done — nothing left to hedge
+            };
+            if run.is_hedge || run.hedge_pair.is_some() || run.probe {
+                return;
+            }
+            (
+                run.entry.task.clone(),
+                run.entry.abs_deadline,
+                run.entry.t_cloud,
+                run.entry.t_edge,
+                run.entry.gems_rescheduled,
+                run.entry.pinned,
+                run.end - run.duration,
+            )
+        };
+        // The duplicate draws its own invocation (cold-start, jitter and
+        // billing are per-invocation). A throttle here is NOT fed to the
+        // breaker or the scheduler — hedges are extra load, and their
+        // refusal must not poison the primary path's health signals.
+        let i = self.core.idx(task.model);
+        let inv = match self.core.cloud.invoke(
+            &self.core.models[i],
+            now,
+            task.payload_bytes(),
+            self.core.cloud_inflight,
+            &mut self.core.rng,
+        ) {
+            Attempt::Run(inv) => inv,
+            Attempt::Throttle { .. } => return,
+        };
+        let mut duration = inv.duration;
+        if let Some(up) = &self.core.uplink {
+            let wait = up
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .acquire(now, task.payload_bytes());
+            if wait > 0 {
+                self.core.metrics.uplink_wait += wait;
+                self.core.metrics.uplink_queued += 1;
+                duration += wait;
+            }
+        }
+        self.core.next_cloud_key += 1;
+        let dup_key = self.core.next_cloud_key;
+        // The duplicate's ledger duration spans from the *primary's*
+        // launch, so exec-duration percentiles report task-level cloud
+        // latency — min(primary, delay + duplicate), the quantity
+        // hedging squeezes.
+        let offset = now - primary_start;
+        self.core.cloud_running.insert(
+            dup_key,
+            CloudRunning {
+                entry: CloudEntry {
+                    task,
+                    abs_deadline,
+                    t_cloud,
+                    t_edge,
+                    trigger: now,
+                    negative_utility: false,
+                    gems_rescheduled: gems,
+                    pinned,
+                },
+                end: now + duration,
+                duration: offset + duration,
+                timed_out: inv.timed_out,
+                token: inv.token,
+                probe: false,
+                is_hedge: true,
+                hedge_pair: Some(key),
+            },
+        );
+        self.core.cloud_inflight += 1;
+        if let Some(primary) = self.core.cloud_running.get_mut(&key) {
+            primary.hedge_pair = Some(dup_key);
+        }
+        self.core.metrics.hedge_launches += 1;
+        q.push(now + duration, Event::CloudDone { key: dup_key });
     }
 
     /// A pool slot freed: pull the next ready entry (re-JIT-checked).
@@ -1056,6 +1333,12 @@ impl<S: Scheduler> Platform<S> {
             if let Some(run) = self.core.cloud_running.remove(&k) {
                 self.core.cloud.complete(run.entry.task.model, run.token,
                                          now);
+                if run.is_hedge {
+                    // The primary leg of the hedged pair (also swept
+                    // here) owns the task's ledger: closing both would
+                    // double-finalize.
+                    continue;
+                }
                 self.core.drop_task(now, run.entry.task,
                                     DropReason::NodeFailure);
                 self.drain_done(now, q);
@@ -1118,11 +1401,18 @@ impl<S: Scheduler> Platform<S> {
             self.core.drop_task(now, run.entry.task, DropReason::JitExpired);
             self.drain_done(now, q);
         }
-        let keys: Vec<u64> = self.core.cloud_running.keys().copied().collect();
+        let mut keys: Vec<u64> =
+            self.core.cloud_running.keys().copied().collect();
+        keys.sort_unstable(); // HashMap order must not leak into the run
         for k in keys {
             if let Some(run) = self.core.cloud_running.remove(&k) {
                 self.core.cloud.complete(run.entry.task.model, run.token,
                                          now);
+                if run.is_hedge {
+                    // Hedge leg of a pair: its primary (also swept here)
+                    // closes the task's ledger exactly once.
+                    continue;
+                }
                 self.core.drop_task(now, run.entry.task, DropReason::Timeout);
                 self.drain_done(now, q);
             }
@@ -1200,6 +1490,7 @@ mod tests {
                 Event::DroneDone { task, started } => {
                     p.on_drone_done(t, task, started, q)
                 }
+                Event::HedgeFire { key } => p.on_hedge_fire(t, key, q),
                 // Segment / federation events: cluster-driver concerns.
                 _ => {}
             }
@@ -1503,6 +1794,172 @@ mod tests {
                 policy.kind.name()
             );
         }
+    }
+
+    // ----------------------------------------------- resilience mechanics
+
+    use crate::resilience::ResilienceSpec;
+    use crate::time::secs;
+
+    #[test]
+    fn breaker_trips_on_timeouts_and_short_circuits_dispatch() {
+        // Every invocation times out → the breaker trips after
+        // min_samples failures; later dispatches are refused before the
+        // backend is touched and re-plan through the throttle path.
+        let mut cloud = CloudExecModel::new(Box::new(ConstantNet {
+            latency: ms(40),
+            bandwidth: 25.0e6,
+        }));
+        cloud.cold_start = 0;
+        cloud.cold_prob = 0.0;
+        cloud.timeout = ms(1);
+        let spec = ResilienceSpec {
+            breaker_window: 4,
+            breaker_min_samples: 2,
+            breaker_cooldown: secs(600),
+            ..ResilienceSpec::breaker_only()
+        };
+        let mut p = Platform::new(
+            Policy::cloud_only().with_resilience(spec),
+            table1(),
+            cloud,
+            7,
+        );
+        p.edge_exec = EdgeExecModel { sigma: 0.0, overhead: (0, 0) };
+        let mut q = EventQueue::new();
+        for i in 0..8u64 {
+            settle(&mut p, &mut q, i * ms(500));
+            let t = mktask(&mut p, DnnKind::Hv, i * ms(500));
+            p.submit_task(i * ms(500), t, &mut q);
+        }
+        settle(&mut p, &mut q, secs(120));
+        let br = p.core.resilience.breaker.as_ref().unwrap();
+        assert!(br.trips >= 1, "timeouts must trip the breaker");
+        assert!(p.metrics.breaker_shorted >= 1,
+                "post-trip dispatches short-circuit: {}",
+                p.metrics.breaker_shorted);
+        let s = p.metrics.stats(DnnKind::Hv);
+        assert_eq!(s.generated, 8);
+        assert_eq!(s.generated, s.executed() + s.dropped(),
+                   "accounting closes under breaking: {s:?}");
+        assert!(s.dropped_throttled >= 1,
+                "short-circuited CLD tasks exhaust their deadline: {s:?}");
+        let m = p.into_metrics();
+        assert!(m.breaker_trips >= 1, "trips fold into metrics");
+    }
+
+    #[test]
+    fn hedged_requests_conserve_and_first_usable_completion_wins() {
+        let spec = ResilienceSpec {
+            hedge_slack: 0,
+            hedge_delay: ms(1),
+            ..ResilienceSpec::hedge_only()
+        };
+        let mut p = mkplatform(Policy::cloud_only().with_resilience(spec));
+        p.metrics.record_completions = true;
+        let mut q = EventQueue::new();
+        for i in 0..6u64 {
+            settle(&mut p, &mut q, i * ms(100));
+            let t = mktask(&mut p, DnnKind::Hv, i * ms(100));
+            p.submit_task(i * ms(100), t, &mut q);
+        }
+        settle(&mut p, &mut q, secs(120));
+        let s = p.metrics.stats(DnnKind::Hv);
+        assert_eq!(s.generated, 6);
+        assert_eq!(s.generated, s.executed() + s.dropped(),
+                   "exactly one finalization per hedged task: {s:?}");
+        assert_eq!(p.metrics.completions.len(), 6,
+                   "one completion record per task, duplicates invisible");
+        assert!(p.metrics.hedge_launches >= 1,
+                "1 ms delay must arm and fire hedges");
+        assert_eq!(p.metrics.hedge_cancels, p.metrics.hedge_launches,
+                   "every race has exactly one cancelled loser");
+        assert_eq!(p.cloud_inflight(), 0, "no leaked pool slots");
+    }
+
+    #[test]
+    fn crash_with_inflight_hedged_pairs_finalizes_each_task_once() {
+        let spec = ResilienceSpec {
+            hedge_slack: 0,
+            hedge_delay: ms(1),
+            ..ResilienceSpec::hedge_only()
+        };
+        let mut p = mkplatform(Policy::cloud_only().with_resilience(spec));
+        p.metrics.record_completions = true;
+        let mut q = EventQueue::new();
+        for _ in 0..4 {
+            let t = mktask(&mut p, DnnKind::Hv, 0);
+            p.submit_task(0, t, &mut q);
+        }
+        settle(&mut p, &mut q, ms(5)); // triggers + hedge timers fire
+        assert!(p.metrics.hedge_launches >= 1, "pairs are in flight");
+        let relocated = p.crash(ms(10), false, &mut q);
+        assert!(relocated.is_empty());
+        settle(&mut p, &mut q, secs(120)); // stale CloudDones no-op
+        let s = p.metrics.stats(DnnKind::Hv);
+        assert_eq!(s.generated, 4);
+        assert_eq!(s.dropped_node_failure, 4,
+                   "each hedged pair closes as ONE node-failure drop");
+        assert_eq!(p.metrics.completions.len(), 4);
+        assert_eq!(p.cloud_inflight(), 0);
+    }
+
+    #[test]
+    fn degradation_discounts_lite_completions_under_pressure() {
+        let spec = ResilienceSpec {
+            degrade_queue_high: 2,
+            degrade_queue_low: 0,
+            degrade_dwell: 0,
+            ..ResilienceSpec::degrade_only()
+        };
+        // Edge-only EDF: all four HVs run on the edge, so the queue-depth
+        // trajectory (3 queued behind the first) is fully deterministic.
+        let mut p =
+            mkplatform(Policy::edge_edf().with_resilience(spec.clone()));
+        let mut q = EventQueue::new();
+        for _ in 0..4 {
+            let t = mktask(&mut p, DnnKind::Hv, 0);
+            p.submit_task(0, t, &mut q);
+        }
+        settle(&mut p, &mut q, secs(30));
+        assert_eq!(p.metrics.degraded_tasks, 3,
+                   "the three queued-behind tasks run lite");
+        assert!(p.metrics.degraded_utility_lost > 0.0,
+                "successful lite completions forfeit the discount");
+        let m = &p.metrics;
+        let total: u64 = m.per_model.iter().map(|(_, s)| s.generated).sum();
+        let closed: u64 = m
+            .per_model
+            .iter()
+            .map(|(_, s)| s.executed() + s.dropped())
+            .sum();
+        assert_eq!(total, closed);
+        // An unloaded executor stays on the full variant.
+        let mut p2 = mkplatform(Policy::edge_edf().with_resilience(spec));
+        let mut q2 = EventQueue::new();
+        let t = mktask(&mut p2, DnnKind::Hv, 0);
+        p2.submit_task(0, t, &mut q2);
+        settle(&mut p2, &mut q2, secs(30));
+        assert_eq!(p2.metrics.degraded_tasks, 0);
+        assert_eq!(p2.metrics.qos_utility(), 124.0,
+                   "idle-queue task earns the undiscounted utility");
+    }
+
+    #[test]
+    fn disabled_mechanisms_build_no_state_regardless_of_knobs() {
+        // Gating is on the three bools, not on knob values: a spec with
+        // exotic knobs but every mechanism off constructs nothing.
+        let spec = ResilienceSpec {
+            breaker_window: 1,
+            breaker_min_samples: 1,
+            hedge_delay: 1,
+            degrade_queue_high: 1,
+            ..ResilienceSpec::default()
+        };
+        let p = mkplatform(Policy::dems_a().with_resilience(spec));
+        assert!(p.core.resilience.breaker.is_none());
+        assert!(p.core.resilience.hedge.is_none());
+        assert!(p.core.resilience.degrade.is_none());
     }
 
     // ------------------------------------------------ pipeline mechanics

@@ -8,6 +8,7 @@
 //! scheduler implementations in [`crate::sched`].
 
 use crate::queues::EdgeOrder;
+use crate::resilience::ResilienceSpec;
 use crate::sched::{CloudOnly, Dems, EcBaseline, EdgeOnly, Gems, Scheduler,
                    Sota1, Sota2};
 use crate::time::{ms, secs, Micros};
@@ -110,6 +111,11 @@ pub struct Policy {
     /// Split-DNN pipeline partitioning (ignored without pipeline
     /// workloads): adaptive per-chain cuts or a fixed partition.
     pub pipeline: PipelineCut,
+    /// Resilience mechanisms (circuit breaker / hedged requests /
+    /// graceful degradation — see [`crate::resilience`]). All-off by
+    /// default: the engine then builds no state machines and stays
+    /// bit-identical to the plain paths.
+    pub resilience: ResilienceSpec,
 }
 
 impl Policy {
@@ -133,6 +139,7 @@ impl Policy {
             sota1_urgent_below: ms(750),
             sota1_extension: 0.10,
             pipeline: PipelineCut::Adaptive,
+            resilience: ResilienceSpec::default(),
         }
     }
 
@@ -140,6 +147,14 @@ impl Policy {
     /// the fixed-cut baselines and the `partition-sweep` scenario.
     pub fn with_pipeline_cut(self, cut: PipelineCut) -> Policy {
         Policy { pipeline: cut, ..self }
+    }
+
+    /// Opt this policy into the resilience layer (breaker / hedge /
+    /// degrade per the spec's flags — see
+    /// [`ResilienceSpec`](crate::resilience::ResilienceSpec)). Orthogonal
+    /// to the heuristic family: any scheduler can run resilient.
+    pub fn with_resilience(self, spec: ResilienceSpec) -> Policy {
+        Policy { resilience: spec, ..self }
     }
 
     pub fn edge_edf() -> Policy {
@@ -335,5 +350,23 @@ mod tests {
         assert_eq!(p.adapt_window, 10);
         assert_eq!(p.adapt_epsilon, ms(10));
         assert_eq!(p.cooling_period, secs(10));
+    }
+
+    #[test]
+    fn resilience_defaults_off_and_opts_in_per_policy() {
+        // Every constructor ships the inert spec (the bit-identity
+        // contract: no breaker, no hedges, no degradation).
+        for p in Policy::fig8_lineup() {
+            assert!(!p.resilience.enabled(), "{:?}", p.kind);
+        }
+        assert!(!Policy::dems_a().resilience.enabled());
+        let r = Policy::dems_a().with_resilience(ResilienceSpec::full());
+        assert!(r.resilience.breaker && r.resilience.hedge
+                && r.resilience.degrade);
+        // Orthogonal to the heuristic flags.
+        assert!(r.migration && r.stealing && r.adaptive);
+        let h = Policy::cloud_only()
+            .with_resilience(ResilienceSpec::hedge_only());
+        assert!(h.resilience.hedge && !h.resilience.breaker);
     }
 }

@@ -1,0 +1,475 @@
+//! Resilience layer: circuit breaking, request hedging and graceful
+//! degradation — three cooperating deterministic state machines over
+//! virtual time (see docs/ARCHITECTURE.md, "Resilience layer").
+//!
+//! The paper's DEMS-A *adapts* to cloud variability through its §5.4
+//! sliding window; this module adds the *active* recovery loop on top
+//! (the ROADMAP's graceful-degradation gap, following A3D / A²-UAV):
+//!
+//! * [`CircuitBreaker`] — closed/open/half-open per cloud backend. A
+//!   sliding failure-rate window is fed by timeouts, throttles and
+//!   outage refusals (a dark region surfaces as throttle-shaped
+//!   refusals, so PR 7 outages feed the same window). An open breaker
+//!   short-circuits `dispatch_cloud` *before* the backend is invoked, so
+//!   DEMS/GEMS see a throttle-shaped report immediately and re-plan to
+//!   edge/federation instead of burning deadline on doomed invocations.
+//!   After the cooldown one half-open probe invocation tests recovery.
+//! * Hedged requests ([`HedgePlan`]) — a cloud task whose remaining
+//!   slack exceeds the hedge threshold schedules a
+//!   [`HedgeFire`](crate::sim::Event::HedgeFire) after a deterministic
+//!   delay; if the primary invocation is still in flight when it fires,
+//!   a speculative duplicate is launched. First usable completion wins
+//!   and cancels the loser (correct FaaS billing/concurrency; exactly
+//!   one finalization per task — the conservation contract).
+//! * [`DegradeController`] — a hysteresis-guarded overload controller
+//!   that downshifts execution to per-`DnnKind` *lite* model variants
+//!   ([`crate::exec::lite_variant`]) when queue pressure or an open
+//!   breaker threatens deadlines, and upshifts when pressure clears.
+//!
+//! Everything is opt-in through [`ResilienceSpec`] on
+//! [`Policy`](crate::policy::Policy); the all-off default constructs no
+//! state machines, draws no RNG and pushes no events, keeping
+//! resilience-off runs bit-identical to the plain engine (same gating
+//! contract as `Federation::default()` and the empty `FaultSpec`).
+
+use crate::time::{ms, secs, Micros};
+
+/// Declarative resilience configuration carried by
+/// [`Policy`](crate::policy::Policy). The default is all-off and inert;
+/// each mechanism is enabled independently (`simulate --resilience
+/// breaker,hedge,degrade`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResilienceSpec {
+    /// Enable the per-backend circuit breaker.
+    pub breaker: bool,
+    /// Enable speculative duplicate cloud invocations.
+    pub hedge: bool,
+    /// Enable lite-variant graceful degradation.
+    pub degrade: bool,
+    /// Breaker sliding-window length (invocation outcomes).
+    pub breaker_window: usize,
+    /// Failure rate within the window that trips the breaker.
+    pub breaker_threshold: f64,
+    /// Minimum outcomes in the window before it may trip.
+    pub breaker_min_samples: usize,
+    /// How long the breaker stays open before a half-open probe.
+    pub breaker_cooldown: Micros,
+    /// Minimum remaining slack beyond the expected cloud duration for a
+    /// dispatch to arm a hedge.
+    pub hedge_slack: Micros,
+    /// Deterministic delay between the primary dispatch and the
+    /// speculative duplicate (a primary still in flight after this long
+    /// is, by construction, in the latency tail worth hedging).
+    pub hedge_delay: Micros,
+    /// Edge-queue depth at/above which the controller downshifts.
+    pub degrade_queue_high: usize,
+    /// Edge-queue depth at/below which the controller may upshift.
+    pub degrade_queue_low: usize,
+    /// Minimum dwell between variant switches (flap guard on top of the
+    /// two-threshold hysteresis).
+    pub degrade_dwell: Micros,
+}
+
+impl Default for ResilienceSpec {
+    fn default() -> Self {
+        ResilienceSpec {
+            breaker: false,
+            hedge: false,
+            degrade: false,
+            breaker_window: 20,
+            breaker_threshold: 0.5,
+            breaker_min_samples: 8,
+            breaker_cooldown: secs(5),
+            hedge_slack: ms(400),
+            hedge_delay: ms(700),
+            degrade_queue_high: 6,
+            degrade_queue_low: 2,
+            degrade_dwell: ms(500),
+        }
+    }
+}
+
+impl ResilienceSpec {
+    /// Any mechanism on? (The engine constructs state machines — and
+    /// deviates from the bit-identical default path — only when true.)
+    pub fn enabled(&self) -> bool {
+        self.breaker || self.hedge || self.degrade
+    }
+
+    /// All three mechanisms with default knobs.
+    pub fn full() -> Self {
+        ResilienceSpec {
+            breaker: true,
+            hedge: true,
+            degrade: true,
+            ..ResilienceSpec::default()
+        }
+    }
+
+    pub fn breaker_only() -> Self {
+        ResilienceSpec { breaker: true, ..ResilienceSpec::default() }
+    }
+
+    pub fn hedge_only() -> Self {
+        ResilienceSpec { hedge: true, ..ResilienceSpec::default() }
+    }
+
+    pub fn degrade_only() -> Self {
+        ResilienceSpec { degrade: true, ..ResilienceSpec::default() }
+    }
+}
+
+/// What the breaker says about a cloud dispatch about to happen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerGate {
+    /// Normal operation — dispatch, and feed the outcome back.
+    Closed,
+    /// Half-open: this dispatch is the recovery probe. Its outcome
+    /// (reported with `probe = true`) closes or re-opens the breaker.
+    Probe,
+    /// Open: do not invoke; retry no earlier than `until`.
+    Open { until: Micros },
+}
+
+/// Closed/open/half-open circuit breaker over a sliding failure-rate
+/// window. Purely virtual-time driven and allocation-stable: the window
+/// is a fixed-capacity ring, so the disabled path aside, breaker math
+/// never perturbs the RNG stream.
+#[derive(Clone, Debug)]
+pub struct CircuitBreaker {
+    window: std::collections::VecDeque<bool>,
+    win_size: usize,
+    threshold: f64,
+    min_samples: usize,
+    cooldown: Micros,
+    /// `Some(until)` while open; cleared on the half-open transition.
+    open_until: Option<Micros>,
+    /// Cooldown elapsed, awaiting the probe verdict.
+    half_open: bool,
+    probe_inflight: bool,
+    /// Closed→open transitions (folded into `Metrics::breaker_trips`).
+    pub trips: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(spec: &ResilienceSpec) -> Self {
+        CircuitBreaker {
+            window: std::collections::VecDeque::with_capacity(
+                spec.breaker_window,
+            ),
+            win_size: spec.breaker_window.max(1),
+            threshold: spec.breaker_threshold,
+            min_samples: spec.breaker_min_samples.max(1),
+            cooldown: spec.breaker_cooldown.max(1),
+            open_until: None,
+            half_open: false,
+            probe_inflight: false,
+            trips: 0,
+        }
+    }
+
+    /// Gate a dispatch at `now`. Returning [`BreakerGate::Probe`] marks
+    /// the probe as in flight — the caller *must* resolve it via
+    /// [`record`](Self::record) with `probe = true` (either from the
+    /// invocation's completion or from an immediate throttle refusal).
+    pub fn gate(&mut self, now: Micros) -> BreakerGate {
+        if let Some(until) = self.open_until {
+            if now < until {
+                return BreakerGate::Open { until };
+            }
+            self.open_until = None;
+            self.half_open = true;
+        }
+        if self.half_open {
+            if self.probe_inflight {
+                // One probe at a time; siblings retry shortly after.
+                let wait = (self.cooldown / 4).max(1);
+                return BreakerGate::Open { until: now + wait };
+            }
+            self.probe_inflight = true;
+            return BreakerGate::Probe;
+        }
+        BreakerGate::Closed
+    }
+
+    /// Whether the breaker currently refuses non-probe dispatches (an
+    /// input to the degrade controller: an open breaker means edge
+    /// pressure is about to rise).
+    pub fn is_open(&self, now: Micros) -> bool {
+        match self.open_until {
+            Some(until) => now < until,
+            None => self.half_open,
+        }
+    }
+
+    /// Feed one invocation outcome. `probe` must be true exactly for
+    /// outcomes whose dispatch was gated [`BreakerGate::Probe`].
+    pub fn record(&mut self, now: Micros, failure: bool, probe: bool) {
+        if probe {
+            self.probe_inflight = false;
+            if failure {
+                self.trip(now);
+            } else {
+                // Recovery confirmed: fully close with a clean window.
+                self.half_open = false;
+                self.window.clear();
+            }
+            return;
+        }
+        if self.open_until.is_some() || self.half_open {
+            // A stale pre-trip invocation completing while open: the
+            // verdict is already in; don't let it flap the state.
+            return;
+        }
+        if self.window.len() == self.win_size {
+            self.window.pop_front();
+        }
+        self.window.push_back(failure);
+        if self.window.len() >= self.min_samples {
+            let fails = self.window.iter().filter(|&&f| f).count();
+            if fails as f64 >= self.threshold * self.window.len() as f64 {
+                self.trip(now);
+            }
+        }
+    }
+
+    fn trip(&mut self, now: Micros) {
+        self.open_until = Some(now + self.cooldown);
+        self.half_open = false;
+        self.probe_inflight = false;
+        self.window.clear();
+        self.trips += 1;
+    }
+}
+
+/// Static hedge thresholds (the hedge mechanism keeps no run state of
+/// its own: arming is decided per dispatch, the pairing lives with the
+/// in-flight invocations in [`crate::platform`]).
+#[derive(Clone, Copy, Debug)]
+pub struct HedgePlan {
+    pub slack: Micros,
+    pub delay: Micros,
+}
+
+/// Hysteresis-guarded overload controller for graceful degradation.
+///
+/// Two-threshold hysteresis (`high`/`low` edge-queue depths) plus a
+/// minimum dwell between switches; an open breaker forces the lite
+/// variant regardless of queue depth (cloud refusals are about to pile
+/// work onto the edge).
+#[derive(Clone, Debug)]
+pub struct DegradeController {
+    high: usize,
+    low: usize,
+    dwell: Micros,
+    lite: bool,
+    last_switch: Option<Micros>,
+    /// Full→lite transitions (observability; the per-task effect is
+    /// counted in `Metrics::degraded_tasks`).
+    pub downshifts: u64,
+    pub upshifts: u64,
+}
+
+impl DegradeController {
+    pub fn new(spec: &ResilienceSpec) -> Self {
+        DegradeController {
+            high: spec.degrade_queue_high.max(1),
+            low: spec.degrade_queue_low.min(spec.degrade_queue_high),
+            dwell: spec.degrade_dwell,
+            lite: false,
+            last_switch: None,
+            downshifts: 0,
+            upshifts: 0,
+        }
+    }
+
+    /// Is the lite variant currently selected?
+    pub fn lite(&self) -> bool {
+        self.lite
+    }
+
+    fn may_switch(&self, now: Micros) -> bool {
+        match self.last_switch {
+            Some(at) => now.saturating_sub(at) >= self.dwell,
+            None => true,
+        }
+    }
+
+    /// Observe queue pressure (edge-queue depth) and breaker state at a
+    /// dispatch point; switch variants when the hysteresis allows.
+    pub fn observe(&mut self, now: Micros, pressure: usize,
+                   breaker_open: bool) {
+        if self.lite {
+            if !breaker_open && pressure <= self.low
+                && self.may_switch(now)
+            {
+                self.lite = false;
+                self.upshifts += 1;
+                self.last_switch = Some(now);
+            }
+        } else if (breaker_open || pressure >= self.high)
+            && self.may_switch(now)
+        {
+            self.lite = true;
+            self.downshifts += 1;
+            self.last_switch = Some(now);
+        }
+    }
+}
+
+/// Per-platform resilience run state, constructed once from the policy's
+/// [`ResilienceSpec`]. Every field is `None` when its mechanism is off —
+/// the platform's hot paths gate on that, so disabled mechanisms cost
+/// nothing and change nothing.
+#[derive(Debug, Default)]
+pub struct ResilienceState {
+    pub breaker: Option<CircuitBreaker>,
+    pub hedge: Option<HedgePlan>,
+    pub degrade: Option<DegradeController>,
+}
+
+impl ResilienceState {
+    pub fn from_spec(spec: &ResilienceSpec) -> Self {
+        ResilienceState {
+            breaker: spec.breaker.then(|| CircuitBreaker::new(spec)),
+            hedge: spec.hedge.then(|| HedgePlan {
+                slack: spec.hedge_slack,
+                delay: spec.hedge_delay,
+            }),
+            degrade: spec.degrade.then(|| DegradeController::new(spec)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ResilienceSpec {
+        ResilienceSpec {
+            breaker_window: 4,
+            breaker_threshold: 0.5,
+            breaker_min_samples: 2,
+            breaker_cooldown: ms(1_000),
+            ..ResilienceSpec::full()
+        }
+    }
+
+    #[test]
+    fn default_spec_is_inert() {
+        let off = ResilienceSpec::default();
+        assert!(!off.enabled());
+        let st = ResilienceState::from_spec(&off);
+        assert!(st.breaker.is_none());
+        assert!(st.hedge.is_none());
+        assert!(st.degrade.is_none());
+        assert!(ResilienceSpec::full().enabled());
+        assert!(ResilienceSpec::breaker_only().enabled());
+    }
+
+    #[test]
+    fn breaker_trips_on_failure_rate_and_reopens_on_failed_probe() {
+        let mut b = CircuitBreaker::new(&spec());
+        assert_eq!(b.gate(0), BreakerGate::Closed);
+        // Two failures in a min-2 window at 50% threshold: trip.
+        b.record(10, true, false);
+        assert_eq!(b.trips, 0, "one sample is below min_samples");
+        b.record(20, true, false);
+        assert_eq!(b.trips, 1);
+        assert!(b.is_open(20));
+        assert_eq!(b.gate(30), BreakerGate::Open { until: ms(1_000) + 20 });
+        // Cooldown elapsed: exactly one probe goes through.
+        let at = ms(1_000) + 20;
+        assert_eq!(b.gate(at), BreakerGate::Probe);
+        assert!(matches!(b.gate(at), BreakerGate::Open { .. }),
+                "second dispatch while the probe is in flight is refused");
+        // Failed probe: back to open, counted as a fresh trip.
+        b.record(at + 10, true, true);
+        assert_eq!(b.trips, 2);
+        assert!(b.is_open(at + 10));
+    }
+
+    #[test]
+    fn successful_probe_closes_with_clean_window() {
+        let mut b = CircuitBreaker::new(&spec());
+        b.record(10, true, false);
+        b.record(20, true, false);
+        let at = ms(1_000) + 20;
+        assert_eq!(b.gate(at), BreakerGate::Probe);
+        b.record(at + 10, false, true);
+        assert!(!b.is_open(at + 10));
+        assert_eq!(b.gate(at + 20), BreakerGate::Closed);
+        // The pre-trip failures were flushed: one new failure alone
+        // cannot re-trip even though 1/1 ≥ 50%... min_samples guards it.
+        b.record(at + 30, true, false);
+        assert_eq!(b.trips, 1);
+    }
+
+    #[test]
+    fn stale_completions_while_open_do_not_flap_the_state() {
+        let mut b = CircuitBreaker::new(&spec());
+        b.record(10, true, false);
+        b.record(20, true, false);
+        assert!(b.is_open(25));
+        // A pre-trip invocation completes successfully mid-cooldown:
+        // ignored — only the probe may close the breaker.
+        b.record(30, false, false);
+        assert!(b.is_open(30));
+        assert_eq!(b.trips, 1);
+    }
+
+    #[test]
+    fn sliding_window_evicts_oldest_outcome() {
+        let mut s = spec();
+        s.breaker_min_samples = 4;
+        let mut b = CircuitBreaker::new(&s);
+        // Two failures, then enough successes to slide them out.
+        for (t, fail) in
+            [(1, true), (2, true), (3, false), (4, false)]
+        {
+            b.record(t, fail, false);
+        }
+        assert_eq!(b.trips, 1, "2/4 hits the 50% threshold exactly");
+        // Fresh breaker: failures age out before the window fills.
+        let mut b = CircuitBreaker::new(&s);
+        for (t, fail) in [(1, true), (2, false), (3, false), (4, false),
+                          (5, false), (6, true)]
+        {
+            b.record(t, fail, false);
+        }
+        assert_eq!(b.trips, 0, "evicted failure no longer counts: 1/4");
+    }
+
+    #[test]
+    fn degrade_hysteresis_and_dwell() {
+        let mut s = spec();
+        s.degrade_queue_high = 4;
+        s.degrade_queue_low = 1;
+        s.degrade_dwell = ms(100);
+        let mut d = DegradeController::new(&s);
+        assert!(!d.lite());
+        d.observe(0, 4, false);
+        assert!(d.lite(), "high watermark downshifts");
+        // Pressure between the thresholds: hold (hysteresis).
+        d.observe(ms(200), 2, false);
+        assert!(d.lite());
+        // At/below the low watermark but within the dwell: hold.
+        d.observe(ms(200) + ms(50), 1, false);
+        assert!(d.lite());
+        d.observe(ms(400), 1, false);
+        assert!(!d.lite(), "low watermark + dwell elapsed upshifts");
+        assert_eq!((d.downshifts, d.upshifts), (1, 1));
+    }
+
+    #[test]
+    fn open_breaker_forces_downshift_regardless_of_queue() {
+        let mut d = DegradeController::new(&spec());
+        d.observe(0, 0, true);
+        assert!(d.lite(), "an open breaker alone downshifts");
+        // And blocks the upshift while it stays open.
+        d.observe(secs(10), 0, true);
+        assert!(d.lite());
+        d.observe(secs(20), 0, false);
+        assert!(!d.lite());
+    }
+}

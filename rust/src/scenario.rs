@@ -29,7 +29,8 @@ use crate::net::{mobility_trace, LognormalWan, TraceBandwidth,
 use crate::policy::{PipelineCut, Policy};
 use crate::pool::Pool;
 use crate::report::{Cell, Report, Table, Value};
-use crate::time::{ms_f, secs, Micros};
+use crate::resilience::ResilienceSpec;
+use crate::time::{ms, ms_f, secs, Micros};
 
 /// Stride between seeds of a sweep (a large odd constant so derived seeds
 /// do not collide with the per-edge `EDGE_SEED_PHI` derivation).
@@ -50,11 +51,13 @@ pub enum CloudSpec {
     MobilityBandwidth { device: u64 },
     /// FaaS account over the nominal WAN: per-model warm pools with
     /// `keep_alive` expiry, a `concurrency` ceiling (throttle + retry),
-    /// Lambda-shaped GB-second billing. [`CloudSpec::build`] runs once
-    /// per platform, so **each edge station holds its own account** —
-    /// the ceiling, pools and bill are per edge, and an N-edge cluster
-    /// has N independent accounts.
-    Faas { keep_alive: Micros, concurrency: usize },
+    /// Lambda-shaped GB-second billing. `retry_after` is the throttle
+    /// backoff handed to rejected callers (the [`FaasConfig`] default,
+    /// 200 ms, keeps pre-knob runs bit-identical). [`CloudSpec::build`]
+    /// runs once per platform, so **each edge station holds its own
+    /// account** — the ceiling, pools and bill are per edge, and an
+    /// N-edge cluster has N independent accounts.
+    Faas { keep_alive: Micros, concurrency: usize, retry_after: Micros },
     /// Two FaaS regions with latency-based failover: the nominal-WAN
     /// primary plus a secondary whose median latency is `extra_latency`
     /// higher; each region has its own `concurrency` ceiling (and, as
@@ -67,6 +70,16 @@ pub enum CloudSpec {
 }
 
 impl CloudSpec {
+    /// A FaaS account with the default 200 ms throttle backoff
+    /// ([`FaasConfig::default`]); the CLI's `--retry-after` overrides it.
+    pub fn faas(keep_alive: Micros, concurrency: usize) -> Self {
+        CloudSpec::Faas {
+            keep_alive,
+            concurrency,
+            retry_after: FaasConfig::default().retry_after,
+        }
+    }
+
     /// Instantiate a fresh cloud backend for one platform.
     pub fn build(&self) -> Box<dyn CloudBackend> {
         match self {
@@ -91,11 +104,12 @@ impl CloudSpec {
                 }))
                 .into()
             }
-            CloudSpec::Faas { keep_alive, concurrency } => {
+            CloudSpec::Faas { keep_alive, concurrency, retry_after } => {
                 Box::new(FaasBackend::new(
                     FaasConfig {
                         keep_alive: *keep_alive,
                         concurrency: *concurrency,
+                        retry_after: *retry_after,
                         ..FaasConfig::default()
                     },
                     Box::new(LognormalWan::default()),
@@ -688,7 +702,7 @@ pub fn cold_start_sweep_report(seed: u64, pool: &Pool) -> Result<Report> {
             &wl,
             seed,
             FAAS_EDGES,
-            &CloudSpec::Faas { keep_alive: ka, concurrency: 64 },
+            &CloudSpec::faas(ka, 64),
         )
     });
     let mut rep = Report::new(
@@ -740,7 +754,7 @@ pub fn throttled_cloud_report(seed: u64, pool: &Pool) -> Result<Report> {
             &wl,
             seed,
             FAAS_EDGES,
-            &CloudSpec::Faas { keep_alive: secs(300), concurrency: conc },
+            &CloudSpec::faas(secs(300), conc),
         )
     });
     let mut rep = Report::new(
@@ -773,7 +787,7 @@ pub fn throttled_cloud_report(seed: u64, pool: &Pool) -> Result<Report> {
                 extra_latency: ms_f(40.0),
             }
         } else {
-            CloudSpec::Faas { keep_alive: secs(300), concurrency: conc }
+            CloudSpec::faas(secs(300), conc)
         };
         run_cluster(&Policy::dems_a(), &wl, seed, FAAS_EDGES, &spec)
     });
@@ -820,7 +834,7 @@ pub fn cost_frontier_report(seed: u64, pool: &Pool) -> Result<Report> {
             &wl,
             seed,
             FAAS_EDGES,
-            &CloudSpec::Faas { keep_alive: ka, concurrency: conc },
+            &CloudSpec::faas(ka, conc),
         )
     });
     let mut rep = Report::new(
@@ -1301,6 +1315,244 @@ pub fn partition_report(seed: u64, pool: &Pool) -> Result<Report> {
     Ok(rep)
 }
 
+// ----------------------------------------------- resilience scenarios
+
+/// Degradation arming shared by the resilience scenarios: thresholds
+/// tuned for DEMS-A's shallow edge queues (its admission offloads before
+/// the queue ever reaches the conservative defaults).
+fn overload_degrade() -> ResilienceSpec {
+    ResilienceSpec {
+        degrade: true,
+        degrade_queue_high: 3,
+        degrade_queue_low: 1,
+        ..ResilienceSpec::default()
+    }
+}
+
+/// Resilience arming for the `breaker-outage` rows and pin test:
+/// circuit breaker + graceful degradation. Hedging is deliberately left
+/// off — under a capacity outage, duplicates would compete with
+/// primaries for the scarce surviving slots (`hedged-tail` studies
+/// hedging where it helps: the latency tail).
+fn breaker_outage_resilience() -> ResilienceSpec {
+    ResilienceSpec { breaker: true, ..overload_degrade() }
+}
+
+/// One `breaker-outage` cell: the region-outage configuration (§ the
+/// `region-outage` scenario) under a plain or resilience-armed policy.
+fn run_breaker_outage_cell(policy: &Policy, outage: bool,
+                           seed: u64) -> ClusterMetrics {
+    let wl = Workload::emulation(4, true);
+    let cloud = CloudSpec::MultiRegion {
+        keep_alive: secs(300),
+        concurrency: 4,
+        extra_latency: ms_f(40.0),
+    };
+    let spec = if outage {
+        FaultSpec::default().outage(0, secs(100), secs(200))
+    } else {
+        FaultSpec::default()
+    };
+    run_cluster_faulted(policy, &wl, seed, FAAS_EDGES, &cloud, None,
+                        Some(&spec))
+}
+
+/// `breaker-outage`: the region-outage chaos configuration with the
+/// resilience layer armed — circuit breakers short-circuit dispatches
+/// into the dead region's throttle storm so DEMS-A re-plans to the edge
+/// immediately, and graceful degradation converts the resulting edge
+/// pressure into discounted completions. A scenario test pins that
+/// DEMS-A+resilience strictly beats plain DEMS-A on completion rate and
+/// total utility under the outage.
+pub fn breaker_outage_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let plain = Policy::dems_a();
+    let armed = Policy::dems_a()
+        .with_resilience(breaker_outage_resilience());
+    let cells: Vec<(&str, &Policy, bool)> = vec![
+        ("dems-a", &plain, false),
+        ("dems-a", &plain, true),
+        ("dems-a+resil", &armed, false),
+        ("dems-a+resil", &armed, true),
+    ];
+    let metrics = pool.run(cells.len(), |j| {
+        let (_, policy, outage) = cells[j];
+        run_breaker_outage_cell(policy, outage, seed)
+    });
+    let mut rep = Report::new(
+        "breaker-outage",
+        "Resilience — circuit breaker + degradation under a primary \
+         FaaS region outage (DEMS-A, 4D-A)",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "algo", "outage", "tasks", "done", "done %", "total util",
+        "trips", "shorted", "probes", "degraded", "throttled",
+    ]);
+    for ((label, _, outage), cm) in cells.iter().zip(&metrics) {
+        t.push_row(vec![
+            Cell::str(*label),
+            Cell::str(if *outage { "100-200 s" } else { "none" }),
+            Cell::uint(cm.generated()),
+            Cell::uint(cm.completed()),
+            Cell::percent(100.0 * cm.completion_rate(), 1),
+            Cell::float(cm.total_utility() / 1e5, 2),
+            Cell::uint(cm.breaker_trips()),
+            Cell::uint(cm.breaker_shorted()),
+            Cell::uint(cm.breaker_probes()),
+            Cell::uint(cm.degraded_tasks()),
+            Cell::uint(cm.throttled()),
+        ]);
+    }
+    rep.table(t);
+    rep.text(
+        "(same outage as `region-outage`: region 0 refuses every \
+         invocation between 100 s and 200 s, shaped as throttles. Plain \
+         DEMS-A burns deadline headroom retrying into the storm; with \
+         the breaker armed, the failure-rate window trips per edge, \
+         open breakers short-circuit further dispatches so the \
+         scheduler re-plans immediately, and half-open probes detect \
+         the recovery. Degradation (lite model variants at a utility \
+         discount) absorbs the extra edge pressure. Hedging is off — \
+         duplicates would fight primaries for the surviving region's \
+         slots.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
+/// Hedge arming for the `hedged-tail` rows and pin test: a 300 ms fire
+/// delay with no extra slack screen, so every cloud invocation whose
+/// sampled duration exceeds the delay launches a deadline-feasible
+/// speculative duplicate.
+fn hedged_tail_resilience() -> ResilienceSpec {
+    ResilienceSpec {
+        hedge: true,
+        hedge_delay: ms(300),
+        hedge_slack: 0,
+        ..ResilienceSpec::default()
+    }
+}
+
+/// One `hedged-tail` cell: a 1 s keep-alive FaaS account (heavy
+/// cold-start tail mass) under plain or hedged DEMS-A.
+fn run_hedged_tail_cell(hedge: bool, seed: u64) -> ClusterMetrics {
+    let policy = if hedge {
+        Policy::dems_a().with_resilience(hedged_tail_resilience())
+    } else {
+        Policy::dems_a()
+    };
+    run_cluster(&policy, &Workload::emulation(4, true), seed, FAAS_EDGES,
+                &CloudSpec::faas(secs(1), 64))
+}
+
+/// `hedged-tail`: speculative duplicates against the cloud latency tail
+/// — a short keep-alive makes cold starts frequent, so the p99 cloud
+/// leg is dominated by 900 ms-class init penalties; a hedge fired
+/// 300 ms in races a fresh draw against the straggler and the first
+/// usable completion wins (the loser is cancelled client-side and
+/// bills in full). A scenario test pins that hedging strictly reduces
+/// the p99 cloud latency.
+pub fn hedged_tail_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let cells = [false, true];
+    let metrics = pool.run(cells.len(), |j| {
+        run_hedged_tail_cell(cells[j], seed)
+    });
+    let mut rep = Report::new(
+        "hedged-tail",
+        "Resilience — hedged requests vs the cold-start latency tail \
+         (DEMS-A, 4D-A, 1 s keep-alive FaaS)",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "hedging", "tasks", "done %", "QoS util", "cloud p50 (ms)",
+        "cloud p99 (ms)", "hedges", "wins", "cancels", "cloud $",
+    ]);
+    for (hedge, cm) in cells.iter().zip(&metrics) {
+        t.push_row(vec![
+            Cell::str(if *hedge { "300 ms" } else { "off" }),
+            Cell::uint(cm.generated()),
+            Cell::percent(100.0 * cm.completion_rate(), 1),
+            Cell::float(cm.total_qos_utility() / 1e5, 2),
+            Cell::float(cm.cloud_latency_percentile(0.50), 0),
+            Cell::float(cm.cloud_latency_percentile(0.99), 0),
+            Cell::uint(cm.hedge_launches()),
+            Cell::uint(cm.hedge_wins()),
+            Cell::uint(cm.hedge_cancels()),
+            Cell::dollars(cm.cloud_stats().dollars),
+        ]);
+    }
+    rep.table(t);
+    rep.text(
+        "(cloud p50/p99 = percentiles of the usable cloud-leg latency \
+         across completed, missed and timed-out cloud tasks. A hedged \
+         task's recorded latency is the winning leg's — effectively \
+         min(primary, 300 ms + duplicate) — so the tail compresses \
+         while the median barely moves. The price is the losing leg's \
+         bill: hedging buys latency with dollars, never with \
+         correctness (each task still finalizes exactly once).)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
+/// One `degraded-overload` cell: the overloaded 4D-A mix under plain or
+/// degradation-armed DEMS-A.
+fn run_degraded_overload_cell(degrade: bool, seed: u64) -> ClusterMetrics {
+    let policy = if degrade {
+        Policy::dems_a().with_resilience(overload_degrade())
+    } else {
+        Policy::dems_a()
+    };
+    run_cluster(&policy, &Workload::emulation(4, true), seed, FAAS_EDGES,
+                &CloudSpec::NominalWan)
+}
+
+/// `degraded-overload`: graceful degradation on the overloaded 4D-A mix
+/// — when the edge queue crosses the high-water mark the controller
+/// switches the station to lite model variants (faster, slightly less
+/// accurate, utility discounted), and hysteresis switches back only
+/// after the queue drains below the low-water mark. A scenario test
+/// pins that degradation strictly improves the completion rate.
+pub fn degraded_overload_report(seed: u64, pool: &Pool) -> Result<Report> {
+    let cells = [false, true];
+    let metrics = pool.run(cells.len(), |j| {
+        run_degraded_overload_cell(cells[j], seed)
+    });
+    let mut rep = Report::new(
+        "degraded-overload",
+        "Resilience — graceful degradation under edge overload \
+         (DEMS-A, 4D-A)",
+        seed,
+    );
+    let mut t = Table::new(&[
+        "degradation", "tasks", "done", "done %", "QoS util",
+        "total util", "degraded", "util lost",
+    ]);
+    for (degrade, cm) in cells.iter().zip(&metrics) {
+        t.push_row(vec![
+            Cell::str(if *degrade { "3/1 hysteresis" } else { "off" }),
+            Cell::uint(cm.generated()),
+            Cell::uint(cm.completed()),
+            Cell::percent(100.0 * cm.completion_rate(), 1),
+            Cell::float(cm.total_qos_utility() / 1e5, 2),
+            Cell::float(cm.total_utility() / 1e5, 2),
+            Cell::uint(cm.degraded_tasks()),
+            Cell::float(cm.degraded_utility_lost() / 1e5, 2),
+        ]);
+    }
+    rep.table(t);
+    rep.text(
+        "(degraded counts edge executions run as lite variants — e.g. \
+         Cd at 0.55× its service time for 0.82× its utility; util lost \
+         totals the discount forfeited on successful lite completions. \
+         Under overload the throughput gained outweighs the discount: \
+         more tasks finish inside their deadlines, at slightly lower \
+         per-task utility.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
 // ------------------------------------------------- pipeline scenarios
 
 /// Stations per cluster for the split-DNN pipeline scenarios.
@@ -1484,6 +1736,15 @@ pub fn registry() -> Vec<ScenarioEntry> {
         e("partition",
           "chaos: backhaul/LAN degradation windows on the federated fleet",
           false),
+        e("breaker-outage",
+          "resilience: circuit breaker + degradation vs a region outage",
+          false),
+        e("hedged-tail",
+          "resilience: hedged requests vs the cold-start latency tail",
+          false),
+        e("degraded-overload",
+          "resilience: graceful degradation under edge overload",
+          false),
     ]
 }
 
@@ -1528,6 +1789,9 @@ pub fn run_scenario_jobs(id: &str, seed: u64, jobs: usize) -> Result<Report> {
         "node-crash" => node_crash_report(seed, &pool),
         "region-outage" => region_outage_report(seed, &pool),
         "partition" => partition_report(seed, &pool),
+        "breaker-outage" => breaker_outage_report(seed, &pool),
+        "hedged-tail" => hedged_tail_report(seed, &pool),
+        "degraded-overload" => degraded_overload_report(seed, &pool),
         other => {
             let known: Vec<&str> =
                 registry().iter().map(|e| e.id).collect();
@@ -1647,8 +1911,16 @@ mod tests {
         let faas = CloudSpec::Faas {
             keep_alive: secs(30),
             concurrency: 8,
+            retry_after: ms_f(350.0),
         };
         assert_eq!(faas.build().name(), "faas");
+        // The convenience constructor pins the backend default backoff.
+        match CloudSpec::faas(secs(30), 8) {
+            CloudSpec::Faas { retry_after, .. } => {
+                assert_eq!(retry_after, ms_f(200.0));
+            }
+            other => panic!("expected Faas, got {other:?}"),
+        }
         let mr = CloudSpec::MultiRegion {
             keep_alive: secs(30),
             concurrency: 8,
@@ -1665,14 +1937,14 @@ mod tests {
             &wl,
             5,
             1,
-            &CloudSpec::Faas { keep_alive: 0, concurrency: 64 },
+            &CloudSpec::faas(0, 64),
         );
         let kept_warm = run_cluster(
             &Policy::dems(),
             &wl,
             5,
             1,
-            &CloudSpec::Faas { keep_alive: secs(120), concurrency: 64 },
+            &CloudSpec::faas(secs(120), 64),
         );
         let (c, w) = (all_cold.cloud_stats(), kept_warm.cloud_stats());
         assert!(c.invocations > 0, "DEMS offloads to the cloud");
@@ -1809,6 +2081,119 @@ mod tests {
         for r in &rows[1..] {
             assert_eq!(r[6].value, Value::Int(1));
         }
+    }
+
+    fn cluster_closed(cm: &ClusterMetrics) -> u64 {
+        cm.per_edge
+            .iter()
+            .flat_map(|m| m.per_model.iter())
+            .map(|(_, s)| s.executed() + s.dropped())
+            .sum()
+    }
+
+    #[test]
+    fn breaker_outage_resilience_strictly_beats_plain_dems_a() {
+        // The acceptance pin: under the 100–200 s primary-region outage,
+        // DEMS-A with breaker+degradation armed strictly beats plain
+        // DEMS-A on completion rate AND total utility — open breakers
+        // stop dispatches burning deadline headroom in the throttle
+        // storm, and lite variants absorb the diverted edge pressure.
+        let plain =
+            run_breaker_outage_cell(&Policy::dems_a(), true, 42);
+        let armed = run_breaker_outage_cell(
+            &Policy::dems_a()
+                .with_resilience(breaker_outage_resilience()),
+            true, 42);
+        assert_eq!(armed.generated(), plain.generated(),
+                   "resilience never changes what is generated");
+        assert_eq!(armed.generated(), cluster_closed(&armed),
+                   "conservation closes with resilience armed");
+        assert!(armed.breaker_trips() > 0,
+                "the outage's throttle storm must trip a breaker");
+        assert!(armed.breaker_shorted() > 0,
+                "open breakers must short-circuit dispatches");
+        assert!(
+            armed.completion_rate() > plain.completion_rate(),
+            "armed completion must strictly improve: {} vs {}",
+            armed.completed(),
+            plain.completed()
+        );
+        assert!(
+            armed.total_utility() > plain.total_utility(),
+            "armed total utility must strictly improve: {:.0} vs {:.0}",
+            armed.total_utility(),
+            plain.total_utility()
+        );
+    }
+
+    #[test]
+    fn hedged_tail_reduces_cloud_p99_latency() {
+        // The acceptance pin: on the 1 s keep-alive account, hedging
+        // strictly reduces the p99 cloud-leg latency — the tail is
+        // cold-start stragglers, and min(primary, 300 ms + duplicate)
+        // beats them.
+        let plain = run_hedged_tail_cell(false, 42);
+        let hedged = run_hedged_tail_cell(true, 42);
+        assert_eq!(hedged.generated(), plain.generated());
+        assert_eq!(hedged.generated(), cluster_closed(&hedged),
+                   "every hedged task finalizes exactly once");
+        assert!(hedged.hedge_launches() > 0, "hedges must fire");
+        assert!(hedged.hedge_wins() > 0,
+                "some duplicates must beat their stragglers");
+        assert!(hedged.hedge_cancels() > 0,
+                "losing legs must be cancelled");
+        let (p99_plain, p99_hedged) = (
+            plain.cloud_latency_percentile(0.99),
+            hedged.cloud_latency_percentile(0.99),
+        );
+        assert!(
+            p99_hedged < p99_plain,
+            "hedging must compress the tail: p99 {p99_hedged:.0} ms vs \
+             {p99_plain:.0} ms"
+        );
+    }
+
+    #[test]
+    fn degraded_overload_strictly_improves_completion() {
+        // The acceptance pin: under the overloaded 4D-A mix, lite-variant
+        // degradation strictly improves the completion rate — throughput
+        // bought with the utility discount.
+        let plain = run_degraded_overload_cell(false, 42);
+        let degraded = run_degraded_overload_cell(true, 42);
+        assert_eq!(degraded.generated(), plain.generated());
+        assert_eq!(degraded.generated(), cluster_closed(&degraded));
+        assert!(degraded.degraded_tasks() > 0,
+                "overload must engage the lite variants");
+        assert!(degraded.degraded_utility_lost() > 0.0);
+        assert!(
+            degraded.completion_rate() > plain.completion_rate(),
+            "degradation must strictly improve completion: {} vs {}",
+            degraded.completed(),
+            plain.completed()
+        );
+    }
+
+    #[test]
+    fn all_off_resilience_spec_is_bit_identical() {
+        // A policy carrying the default (all-off) ResilienceSpec builds
+        // no state machines and must reproduce the plain engine bit for
+        // bit — goldens and --jobs parity stay untouched.
+        let wl = mini_workload();
+        let a = run_cluster(&Policy::dems_a(), &wl, 5, 2,
+                            &CloudSpec::NominalWan);
+        let b = run_cluster(
+            &Policy::dems_a().with_resilience(ResilienceSpec::default()),
+            &wl, 5, 2, &CloudSpec::NominalWan);
+        assert_eq!(a, b, "all-off resilience must change nothing");
+    }
+
+    #[test]
+    fn resilience_reports_tabulate_their_rows() {
+        let rep = breaker_outage_report(7, &Pool::new(1)).expect("runs");
+        assert_eq!(rep.tables()[0].rows.len(), 4);
+        let rep = degraded_overload_report(7, &Pool::new(1))
+            .expect("runs");
+        assert_eq!(rep.tables()[0].rows.len(), 2);
     }
 
     #[test]

@@ -55,6 +55,12 @@ pub enum Event {
     /// equal timestamps a fault precedes handovers and every in-run event
     /// (push order breaks ties; faults are pushed first).
     Fault(crate::fault::FaultAction),
+    /// The hedge delay of in-flight cloud invocation `key` elapsed: if
+    /// the primary is still running, launch the speculative duplicate
+    /// (see [`crate::resilience`]). Pushed only when the policy's
+    /// `ResilienceSpec` enables hedging; a no-op when the primary
+    /// already completed.
+    HedgeFire { key: u64 },
 }
 
 struct Item {

@@ -1,9 +1,11 @@
 //! Dependency-free seeded property-test harness: ~50 randomized
 //! scenarios across arrival process × churn × cloud backend × federation
 //! on/off × split-DNN pipelines × fault injection (random crash /
-//! outage / link-flap schedules on ~30% of runs), each pinned to the
-//! DES conservation invariants — a crashed station may lose or relocate
-//! work, but every task still closes exactly once.
+//! outage / link-flap schedules on ~30% of runs) × the resilience layer
+//! (hedged cloud requests, circuit breakers, lite degradation), each
+//! pinned to the DES conservation invariants — a crashed station may
+//! lose or relocate work and a hedged task may race two cloud legs, but
+//! every task still closes exactly once.
 //!
 //! Per run, the harness asserts:
 //!
@@ -213,10 +215,10 @@ fn randomized_scenarios_preserve_conservation_invariants() {
         let cloud = match rng.below(3) {
             0 => CloudSpec::NominalWan,
             1 => CloudSpec::TrapeziumLatency,
-            _ => CloudSpec::Faas {
-                keep_alive: secs(rng.below(60) as u64),
-                concurrency: 1 + rng.below(8),
-            },
+            _ => CloudSpec::faas(
+                secs(rng.below(60) as u64),
+                1 + rng.below(8),
+            ),
         };
         // ~30% of scenarios draw a random fault schedule: 1–2 station
         // crashes (70% rebooting), maybe a region outage (a no-op
@@ -352,7 +354,7 @@ fn randomized_fault_scenarios_preserve_conservation_invariants() {
         let cloud = if rng.chance(0.5) {
             CloudSpec::NominalWan
         } else {
-            CloudSpec::Faas { keep_alive: secs(30), concurrency: 4 }
+            CloudSpec::faas(secs(30), 4)
         };
         let faults = FaultSpec::random(&mut rng, n_edges, duration);
         let seed = rng.next_u64();
@@ -387,6 +389,124 @@ fn randomized_fault_scenarios_preserve_conservation_invariants() {
         assert!(cm.crashes() >= 1, "{label}: fault schedule never fired");
         assert_invariants(&cm, &wls, &label);
     }
+}
+
+/// Hedging-conservation property: with the resilience layer armed —
+/// speculative cloud duplicates always on, circuit breakers and lite
+/// degradation joining at random — every task still finalizes exactly
+/// once. A hedged pair must collapse to one ledger entry (the winner
+/// finalizes, the loser cancels silently), and random crash schedules
+/// must neither double-close nor leak either leg of an in-flight pair.
+#[test]
+fn randomized_resilience_scenarios_finalize_exactly_once() {
+    use ocularone::resilience::ResilienceSpec;
+    use ocularone::time::ms;
+
+    let policies = [
+        Policy::dems_a(),
+        Policy::edf_ec(),
+        Policy::sjf_ec(),
+        Policy::cloud_only(),
+    ];
+    let mut rng = Rng::new(0x4E51_713E);
+    let mut launches = 0u64;
+    let mut wins = 0u64;
+    let mut cancels = 0u64;
+    for iter in 0..50 {
+        let n_edges = 1 + rng.below(3);
+        // Hedging is always armed (it is the property under test, and an
+        // aggressive delay + zero slack maximizes pair traffic); breaker
+        // and degradation join at random so their interactions with the
+        // hedge ledger are swept too.
+        let spec = ResilienceSpec {
+            hedge: true,
+            hedge_delay: ms(50 + rng.below(400) as u64),
+            hedge_slack: 0,
+            breaker: rng.chance(0.5),
+            degrade: rng.chance(0.5),
+            degrade_queue_high: 3,
+            degrade_queue_low: 1,
+            ..ResilienceSpec::default()
+        };
+        let policy = policies[rng.below(policies.len())]
+            .clone()
+            .with_resilience(spec);
+        let duration = secs(15 + rng.below(16) as u64);
+        let mut wls: Vec<Workload> = Vec::new();
+        for _ in 0..n_edges {
+            let drones = 1 + rng.below(3) as u32;
+            let mut wl = Workload::emulation(drones, rng.chance(0.5))
+                .with_duration(duration);
+            if rng.chance(0.3) {
+                wl = wl.with_arrival(Arrival::Poisson);
+            }
+            wls.push(wl);
+        }
+        // Tight-concurrency FaaS accounts keep throttles and timeouts in
+        // play, so cancelled, abandoned and promoted hedge legs all occur
+        // across the sweep.
+        let cloud = match rng.below(3) {
+            0 => CloudSpec::NominalWan,
+            1 => CloudSpec::faas(
+                secs(1 + rng.below(30) as u64),
+                1 + rng.below(6),
+            ),
+            _ => CloudSpec::MultiRegion {
+                keep_alive: secs(30),
+                concurrency: 1 + rng.below(4),
+                extra_latency: ms(40),
+            },
+        };
+        let faults = if rng.chance(0.3) {
+            Some(FaultSpec::random(&mut rng, n_edges, duration))
+        } else {
+            None
+        };
+        let seed = rng.next_u64();
+        let mut platforms = Vec::with_capacity(n_edges);
+        let mut aseeds = Vec::with_capacity(n_edges);
+        for (e, wl) in wls.iter().enumerate() {
+            let (mut p, s) =
+                Cluster::edge_parts(&policy, wl, seed, e, cloud.build());
+            p.metrics.record_completions = true;
+            platforms.push(p);
+            aseeds.push(s);
+        }
+        let mut cluster =
+            Cluster::from_parts_hetero(platforms, wls.clone(), aseeds);
+        if let Some(f) = &faults {
+            cluster = cluster.with_faults(f.clone());
+        }
+        if n_edges >= 2 && rng.chance(0.5) {
+            cluster = cluster.federated(Federation::stealing());
+        }
+        let label = format!(
+            "resilience iter {iter} ({} edges, {}, faults={}, \
+             seed {seed:#x})",
+            n_edges,
+            policy.kind.name(),
+            faults.is_some(),
+        );
+        let cm = cluster.run();
+        assert!(cm.generated() > 0, "{label}: degenerate scenario");
+        assert_invariants(&cm, &wls, &label);
+        assert!(
+            cm.hedge_wins() <= cm.hedge_launches(),
+            "{label}: more hedge wins than launches"
+        );
+        assert!(
+            cm.hedge_cancels() <= cm.hedge_launches(),
+            "{label}: more hedge cancels than launches"
+        );
+        launches += cm.hedge_launches();
+        wins += cm.hedge_wins();
+        cancels += cm.hedge_cancels();
+    }
+    // The sweep must actually exercise the machinery it pins: pairs
+    // raced, winners finalized, losers were cancelled.
+    assert!(launches > 0, "no hedges launched across the sweep");
+    assert!(wins > 0, "no hedge ever won across the sweep");
+    assert!(cancels > 0, "no hedge loser was ever cancelled");
 }
 
 /// Direct DES-primitive property: under random interleavings of pops
