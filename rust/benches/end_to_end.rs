@@ -44,6 +44,14 @@ fn main() {
                                       wan(), 3);
                 black_box(sim::run(p, &wl2, 3));
             });
+            // Engine-throughput gauge: the run is deterministic, so one
+            // un-timed replay yields the per-iteration event count and
+            // the JSON row gains events + events/sec for the CI gate.
+            let p = Platform::new(policy.clone(), wl2.models.clone(),
+                                  wan(), 3);
+            suite.annotate_events(
+                sim::run(p, &wl2, 3).events_processed,
+            );
         }
     }
 

@@ -33,6 +33,10 @@ pub struct BenchResult {
     /// Fastest sample — the contention-free floor.
     pub min_ns: f64,
     pub iters: u64,
+    /// Simulation events one iteration processes (engine-throughput
+    /// profiling, see [`BenchSuite::annotate_events`]); `None` for
+    /// benches with no event-loop interpretation.
+    pub events: Option<u64>,
 }
 
 impl BenchResult {
@@ -47,16 +51,32 @@ impl BenchResult {
         );
     }
 
+    /// Events/sec gauge for annotated benches: per-iteration event
+    /// count over the p50 per-iteration time (the same robust center
+    /// the regression gate compares). `None` without an annotation.
+    pub fn events_per_sec(&self) -> Option<f64> {
+        self.events
+            .filter(|_| self.p50_ns > 0.0)
+            .map(|e| e as f64 * 1e9 / self.p50_ns)
+    }
+
     /// The `BENCH_<target>.json` row schema.
     pub fn to_json_value(&self) -> JsonValue {
-        JsonValue::Obj(vec![
+        let mut obj = vec![
             ("name".into(), JsonValue::Str(self.name.clone())),
             ("mean_ns".into(), JsonValue::Num(self.mean_ns)),
             ("sd_ns".into(), JsonValue::Num(self.sd_ns)),
             ("p50_ns".into(), JsonValue::Num(self.p50_ns)),
             ("min_ns".into(), JsonValue::Num(self.min_ns)),
             ("iters".into(), JsonValue::Num(self.iters as f64)),
-        ])
+        ];
+        if let Some(e) = self.events {
+            obj.push(("events".into(), JsonValue::Num(e as f64)));
+        }
+        if let Some(eps) = self.events_per_sec() {
+            obj.push(("events_per_sec".into(), JsonValue::Num(eps)));
+        }
+        JsonValue::Obj(obj)
     }
 }
 
@@ -106,6 +126,7 @@ pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> BenchResult {
         p50_ns: sorted[sorted.len() / 2],
         min_ns: sorted[0],
         iters: iters_per_sample * samples as u64,
+        events: None,
     };
     r.print();
     r
@@ -207,6 +228,17 @@ impl BenchSuite {
         &self.results
     }
 
+    /// Attach a per-iteration engine event count to the most recent
+    /// result (measure it on one un-timed run of the same closure via
+    /// `Metrics::events_processed` / `ClusterMetrics::events_processed`).
+    /// The JSON row then carries `events` + an `events_per_sec` gauge,
+    /// which `tools/check_bench_regression.py` gates alongside latency.
+    pub fn annotate_events(&mut self, events: u64) {
+        if let Some(r) = self.results.last_mut() {
+            r.events = Some(events);
+        }
+    }
+
     /// The whole suite as the `BENCH_<target>.json` document.
     pub fn to_json_value(&self) -> JsonValue {
         JsonValue::Obj(vec![
@@ -276,6 +308,7 @@ mod tests {
             p50_ns: 120.0,
             min_ns: 117.0,
             iters: 1000,
+            events: None,
         };
         let json = r.to_json_value().dump();
         let parsed = parse_json(&json).expect("valid JSON");
@@ -283,6 +316,26 @@ mod tests {
         assert!(json.contains("\"name\":\"fig8 demo\""));
         assert!(json.contains("\"p50_ns\":120"));
         assert!(json.contains("\"min_ns\":117"));
+        assert!(!json.contains("events"), "no gauge without annotation");
+    }
+
+    #[test]
+    fn annotated_events_surface_an_events_per_sec_gauge() {
+        let mut r = BenchResult {
+            name: "engine".into(),
+            mean_ns: 2e6,
+            sd_ns: 0.0,
+            p50_ns: 2e6, // 2 ms per iteration…
+            min_ns: 2e6,
+            iters: 10,
+            events: Some(1000), // …over 1000 events = 500k events/s
+        };
+        assert_eq!(r.events_per_sec(), Some(500_000.0));
+        let json = r.to_json_value().dump();
+        assert!(json.contains("\"events\":1000"), "{json}");
+        assert!(json.contains("\"events_per_sec\":500000"), "{json}");
+        r.events = None;
+        assert_eq!(r.events_per_sec(), None);
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::fault::{DegradedLan, FaultAction, FaultDriver, FaultSpec,
                    FlapLink, Recovery};
 use crate::fleet::{Arrival, Workload};
 use crate::metrics::{self, Metrics};
+use crate::obs::{SharedSink, TraceHandle, TraceKind};
 use crate::net::{ConstantNet, NetworkModel, SharedUplink};
 use crate::pipeline::PipelineRef;
 use crate::platform::Platform;
@@ -303,14 +304,38 @@ impl ClusterMetrics {
     /// p-th percentile of cloud-leg latency (ms) across every edge and
     /// model: completed/missed cloud tasks plus client timeouts — the
     /// tail the hedging mechanism attacks. NaN when no cloud task ran.
+    ///
+    /// Served from the O(1)-memory [`LogHistogram`]s (≤ 0.5% relative
+    /// bucket error); enable [`Metrics::record_exact_samples`] and use
+    /// [`metrics::percentile`] over `cloud_exec_ms` for exact values.
+    ///
+    /// [`LogHistogram`]: crate::obs::LogHistogram
+    /// [`Metrics::record_exact_samples`]: crate::metrics::Metrics::record_exact_samples
     pub fn cloud_latency_percentile(&self, p: f64) -> f64 {
-        let xs: Vec<f64> = self
-            .per_edge
-            .iter()
-            .flat_map(|m| m.per_model.iter())
-            .flat_map(|(_, s)| s.cloud_exec_ms.iter().copied())
-            .collect();
-        metrics::percentile(&xs, p)
+        let mut hist = crate::obs::LogHistogram::default();
+        for m in &self.per_edge {
+            for (_, s) in m.per_model.iter() {
+                hist.merge(&s.cloud_exec_hist);
+            }
+        }
+        hist.percentile(p)
+    }
+
+    /// Total simulation events processed across the cluster's engines
+    /// (engine-throughput profiling; see `docs/OBSERVABILITY.md`).
+    pub fn events_processed(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.events_processed).sum()
+    }
+
+    /// Tasks dropped for `reason` across the edges (drop-breakdown
+    /// column group).
+    pub fn dropped_by(&self, reason: crate::task::DropReason) -> u64 {
+        self.per_edge.iter().map(|m| m.dropped_by(reason)).sum()
+    }
+
+    /// Total dropped tasks across the edges.
+    pub fn dropped(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.dropped()).sum()
     }
 }
 
@@ -548,6 +573,33 @@ impl<S: Scheduler> Cluster<S> {
         self
     }
 
+    /// Attach a task-lifecycle trace sink: every edge gets a
+    /// [`TraceHandle`] badged with its station index, so one sink
+    /// receives the whole cluster's event stream (see
+    /// `docs/OBSERVABILITY.md`). Without this call no handle exists and
+    /// the engine's hot paths skip tracing entirely — runs are
+    /// bit-identical to the untraced engine (pinned in
+    /// `tests/observability.rs`).
+    pub fn with_trace(mut self, sink: SharedSink) -> Self {
+        for (e, edge) in self.edges.iter_mut().enumerate() {
+            edge.core.set_trace(TraceHandle::new(e as u32, sink.clone()));
+        }
+        self
+    }
+
+    /// Enable windowed time-series metrics on every edge: each station
+    /// folds its outcomes into an O(1)-memory [`Timeline`] with the
+    /// given window width (virtual µs).
+    ///
+    /// [`Timeline`]: crate::obs::Timeline
+    pub fn with_timeline(mut self, window: crate::time::Micros) -> Self {
+        for edge in self.edges.iter_mut() {
+            edge.core.metrics.windowed =
+                Some(crate::obs::Timeline::new(window));
+        }
+        self
+    }
+
     /// Uniform drone→edge router. Only defined when every edge serves the
     /// same fleet size — on a mixed-fleet cluster the flat
     /// `drones_per_edge` mapping would mis-route drones, so this panics;
@@ -710,6 +762,9 @@ impl<S: Scheduler> Cluster<S> {
             }
             let e = scope as usize;
             q.set_scope(scope);
+            // Engine-throughput profiling: one tick per event actually
+            // processed within the horizon, attributed to the scope edge.
+            edges[e].metrics.events_processed += 1;
             // Which edge this event mutated (differs from the scope only
             // when a handed-over drone's segment emits at its new home).
             let mut touched = e;
@@ -799,6 +854,9 @@ impl<S: Scheduler> Cluster<S> {
                     if let Some(dst) = dst {
                         router.re_home(drone, dst);
                         edges[e].metrics.handovers += 1;
+                        edges[e].core
+                                .emit_trace(now,
+                                            TraceKind::Handover { drone });
                     }
                 }
                 Event::StageArrive { task } => {
@@ -944,7 +1002,7 @@ fn try_fed_steal<S: Scheduler>(now: Micros, thief: usize,
         }
     }
     if let Some((s, idx, _, _, transfer)) = best {
-        let entry = edges[s].take_fed_offer(idx);
+        let entry = edges[s].take_fed_offer(now, idx);
         q.set_scope(thief as u32);
         q.push(now + transfer, Event::FedArrive { task: entry.task });
     }
@@ -1031,7 +1089,7 @@ fn apply_fault<S: Scheduler>(now: Micros, action: FaultAction,
         FaultAction::Recover { edge } => {
             let Some(dt) = d.mark_up(edge, now) else { return };
             edges[edge].metrics.downtime += dt;
-            edges[edge].recover();
+            edges[edge].recover(now);
             // Hand the re-homed streams back: restore each drone's
             // pre-crash mapping (drones a planned handover retargeted
             // mid-downtime were already forgotten).

@@ -24,6 +24,7 @@ use crate::policy::Policy;
 use crate::pool::Pool;
 use crate::report::{Cell, Report, Table, Value};
 use crate::rng::Rng;
+use crate::task::DropReason;
 use crate::scenario::CloudSpec;
 use crate::sim;
 use crate::time::{ms, secs, Micros};
@@ -716,5 +717,29 @@ pub fn summarize(m: &Metrics) -> String {
             m.uplink_wait as f64 / 1e6
         ));
     }
+    s.push_str(&drop_breakdown(m));
     s
+}
+
+/// Drop-breakdown segment for [`summarize`]: per-[`DropReason`]
+/// percentages of generated tasks, listing only nonzero reasons (so a
+/// drop-free run appends nothing and the output stays byte-identical to
+/// the pre-observability harness).
+fn drop_breakdown(m: &Metrics) -> String {
+    let g = m.generated();
+    if g == 0 || m.dropped() == 0 {
+        return String::new();
+    }
+    let parts: Vec<String> = DropReason::ALL
+        .iter()
+        .filter_map(|&r| {
+            let n = m.dropped_by(r);
+            (n > 0).then(|| {
+                format!("{} {:.1}%",
+                        crate::obs::reason_name(r),
+                        100.0 * n as f64 / g as f64)
+            })
+        })
+        .collect();
+    format!(", drops[{}]", parts.join(" "))
 }

@@ -94,6 +94,7 @@ pub mod metrics;
 pub mod model;
 pub mod nav;
 pub mod net;
+pub mod obs;
 pub mod pipeline;
 pub mod platform;
 pub mod policy;

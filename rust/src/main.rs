@@ -17,6 +17,7 @@ use ocularone::fault::{FaultSpec, FlapLink, Recovery};
 use ocularone::fleet::Workload;
 use ocularone::model::orin_field;
 use ocularone::nav;
+use ocularone::obs::{ChromeSink, JsonlSink, SharedSink};
 use ocularone::policy::Policy;
 use ocularone::scenario;
 
@@ -43,6 +44,7 @@ USAGE:
                      [--handover DRONE:EDGE@SECS[,..]]
                      [--fault SPEC[,..]] [--recovery lose|requeue]
                      [--resilience breaker|hedge|degrade|all[,..]]
+                     [--trace FILE] [--trace-format jsonl|chrome]
                                            N>1 emulates N edge stations
                                            through one Cluster engine (§8.1);
                                            --pipeline swaps the workload
@@ -82,7 +84,14 @@ USAGE:
                                            breaker), hedge (speculative
                                            cloud duplicates), degrade
                                            (lite model variants under
-                                           overload), all (everything)
+                                           overload), all (everything);
+                                           --trace streams every task-
+                                           lifecycle event to FILE as
+                                           JSON-lines (default) or Chrome
+                                           trace-event JSON — load the
+                                           latter in Perfetto /
+                                           chrome://tracing (see
+                                           docs/OBSERVABILITY.md)
   ocularone serve [--policy ec] [--rate R] [--drones D] [--secs S]
                   [--artifacts DIR]        (requires the pjrt feature)
   ocularone bench-models [--artifacts DIR] (requires the pjrt feature)
@@ -589,6 +598,42 @@ fn cmd_experiment(args: &[String], seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// Task-lifecycle tracing for `simulate`: `--trace FILE` streams every
+/// engine event to FILE through a shared [`TraceSink`];
+/// `--trace-format` picks the writer — `jsonl` (default, one JSON
+/// object per line) or `chrome` (Chrome trace-event array, loadable in
+/// Perfetto / `chrome://tracing`).
+///
+/// [`TraceSink`]: ocularone::obs::TraceSink
+fn parse_trace(args: &[String]) -> Result<Option<SharedSink>> {
+    use std::sync::{Arc, Mutex};
+    let Some(path) = flag(args, "--trace") else {
+        if flag(args, "--trace-format").is_some() {
+            bail!("--trace-format requires --trace FILE");
+        }
+        return Ok(None);
+    };
+    let format =
+        flag(args, "--trace-format").unwrap_or_else(|| "jsonl".into());
+    let w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    let sink: SharedSink = match format.as_str() {
+        "jsonl" => Arc::new(Mutex::new(JsonlSink::new(w))),
+        "chrome" => Arc::new(Mutex::new(ChromeSink::new(w))),
+        other => {
+            bail!("unknown trace format '{other}' (expected jsonl|chrome)")
+        }
+    };
+    Ok(Some(sink))
+}
+
+/// Flush and close a `--trace` sink after the run (writes the Chrome
+/// array terminator; a poisoned lock means a writer panicked mid-run).
+fn finish_trace(sink: &Option<SharedSink>) {
+    if let Some(s) = sink {
+        s.lock().expect("trace sink poisoned").finish();
+    }
+}
+
 fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
     let wl = if has_flag(args, "--pipeline") {
         if flag(args, "--workload").is_some() {
@@ -625,16 +670,22 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
     let cloud = parse_cloud(args)?;
     let fed = parse_federation(args, edges)?;
     let faults = parse_faults(args, edges, &cloud, fed.as_ref())?;
+    let trace = parse_trace(args)?;
     let name = policy.kind.name().to_string();
     if sweeps > 1 {
+        if trace.is_some() {
+            bail!("--trace records one run; drop --seeds");
+        }
         return simulate_sweep(&name, policy, &wl, seed, edges, sweeps,
                               jobs, &cloud, fed.as_ref(),
                               faults.as_ref());
     }
     if edges == 1 {
-        let cm = scenario::run_cluster_faulted(&policy, &wl, seed, 1,
-                                               &cloud, None,
-                                               faults.as_ref());
+        let cm = scenario::run_cluster_observed(&policy, &wl, seed, 1,
+                                                &cloud, None,
+                                                faults.as_ref(),
+                                                trace.clone(), None);
+        finish_trace(&trace);
         println!("{} on {}: {}", name, wl.name,
                  summarize(&cm.per_edge[0]));
         if cloud_has_accounting(&cloud) {
@@ -648,9 +699,11 @@ fn cmd_simulate(args: &[String], seed: u64) -> Result<()> {
         }
         return Ok(());
     }
-    let cm = scenario::run_cluster_faulted(&policy, &wl, seed, edges,
-                                           &cloud, fed.as_ref(),
-                                           faults.as_ref());
+    let cm = scenario::run_cluster_observed(&policy, &wl, seed, edges,
+                                            &cloud, fed.as_ref(),
+                                            faults.as_ref(),
+                                            trace.clone(), None);
+    finish_trace(&trace);
     println!(
         "{} on {} x {} edges ({} drones, {} tasks):",
         name,

@@ -2,6 +2,7 @@
 
 use crate::cloud::CloudStats;
 use crate::model::{DnnKind, Resource};
+use crate::obs::{LogHistogram, Timeline};
 use crate::task::{DropReason, Fate, TaskOutcome};
 use crate::time::{to_ms, Micros};
 
@@ -39,11 +40,19 @@ pub struct ModelStats {
     pub windows_met: u64,
     pub stolen: u64,
     pub gems_rescheduled: u64,
-    /// Actual e2e durations of executed tasks (ms) for percentile reports.
+    /// Execution-duration distribution of executed tasks (ms), always on:
+    /// O(1) memory per task (log-scale buckets, ≤ 0.5% percentile error —
+    /// see [`LogHistogram`]).
+    pub exec_hist: LogHistogram,
+    /// Cloud-side latency distribution (ms): completed/missed cloud
+    /// executions plus timed-out invocations — the population whose tail
+    /// hedged requests ([`crate::resilience`]) are meant to cut.
+    pub cloud_exec_hist: LogHistogram,
+    /// Exact per-task samples behind `Metrics::record_exact_samples`
+    /// (default off, so metrics memory no longer grows per task); the
+    /// histogram parity tests diff these against the streaming path.
     pub exec_ms: Vec<f64>,
-    /// Cloud-side latency samples (ms): completed/missed cloud executions
-    /// plus timed-out invocations — the population whose tail hedged
-    /// requests ([`crate::resilience`]) are meant to cut.
+    /// Exact counterpart of `cloud_exec_hist` (same gate).
     pub cloud_exec_ms: Vec<f64>,
 }
 
@@ -109,6 +118,16 @@ pub struct Metrics {
     /// Optional per-task finalization log (Fig. 15 / Fig. 17–18 harnesses).
     pub completions: Vec<CompletionRecord>,
     pub record_completions: bool,
+    /// Keep the exact `exec_ms`/`cloud_exec_ms` sample vectors alongside
+    /// the streaming histograms (parity tests and offline drilldowns;
+    /// off by default to bound memory).
+    pub record_exact_samples: bool,
+    /// Optional windowed time-series fold (`experiment timeline`): set to
+    /// `Some(Timeline::new(window))` before the run to enable.
+    pub windowed: Option<Timeline>,
+    /// Discrete events this edge's engine processed (throughput profiling;
+    /// see `BenchSuite` events/sec gauges).
+    pub events_processed: u64,
     /// Edge executor busy time (for the §8.4 utilization numbers).
     pub edge_busy: Micros,
     pub duration: Micros,
@@ -239,15 +258,27 @@ impl Metrics {
             s.gems_rescheduled += 1;
         }
         if o.exec_duration > 0 {
-            s.exec_ms.push(to_ms(o.exec_duration));
-            if matches!(
+            let ms = to_ms(o.exec_duration);
+            let cloud_side = matches!(
                 o.fate,
                 Fate::Completed(Resource::Cloud)
                     | Fate::Missed(Resource::Cloud)
                     | Fate::Dropped(DropReason::Timeout)
-            ) {
-                s.cloud_exec_ms.push(to_ms(o.exec_duration));
+            );
+            s.exec_hist.record(ms);
+            if cloud_side {
+                s.cloud_exec_hist.record(ms);
             }
+            if self.record_exact_samples {
+                let s = self.stats_mut(o.model);
+                s.exec_ms.push(ms);
+                if cloud_side {
+                    s.cloud_exec_ms.push(ms);
+                }
+            }
+        }
+        if let Some(tl) = &mut self.windowed {
+            tl.observe_outcome(o);
         }
         if self.record_completions {
             self.completions.push(CompletionRecord {
@@ -332,6 +363,29 @@ impl Metrics {
     /// Tasks lost to injected node failures across all models.
     pub fn node_failures(&self) -> u64 {
         self.per_model.iter().map(|(_, s)| s.dropped_node_failure).sum()
+    }
+
+    /// Tasks dropped for `reason` across all models (the drop-breakdown
+    /// column group; see [`DropReason::ALL`] for the canonical order).
+    pub fn dropped_by(&self, reason: DropReason) -> u64 {
+        self.per_model
+            .iter()
+            .map(|(_, s)| match reason {
+                DropReason::Infeasible => s.dropped_infeasible,
+                DropReason::NegativeCloudUtility => s.dropped_negative,
+                DropReason::JitExpired => s.dropped_jit,
+                DropReason::TriggerExpired => s.dropped_trigger,
+                DropReason::Shed => s.dropped_shed,
+                DropReason::Timeout => s.dropped_timeout,
+                DropReason::Throttled => s.dropped_throttled,
+                DropReason::NodeFailure => s.dropped_node_failure,
+            })
+            .sum()
+    }
+
+    /// Total dropped tasks across all models and reasons.
+    pub fn dropped(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.dropped()).sum()
     }
 
     /// Edge utilization: busy time / run duration.
@@ -477,10 +531,45 @@ mod tests {
                           124.0));
         let s = m.stats(DnnKind::Hv);
         // Cloud completions, cloud misses and invocation timeouts feed the
-        // hedging tail population; the edge completion only feeds exec_ms.
-        assert_eq!(s.cloud_exec_ms.len(), 3);
-        assert_eq!(s.exec_ms.len(), 4);
-        assert!(s.cloud_exec_ms.iter().all(|&v| (v - 50.0).abs() < 1e-9));
+        // hedging tail population; the edge completion only feeds exec.
+        assert_eq!(s.cloud_exec_hist.count(), 3);
+        assert_eq!(s.exec_hist.count(), 4);
+        // All samples are 50 ms; the 1% buckets resolve them within 0.5%.
+        let p50 = s.cloud_exec_hist.percentile(0.5);
+        assert!((p50 - 50.0).abs() <= 50.0 * 0.005, "{p50}");
+        // Exact per-task vectors stay empty unless explicitly enabled —
+        // default metrics memory no longer grows with the task count.
+        assert!(s.exec_ms.is_empty() && s.cloud_exec_ms.is_empty());
+    }
+
+    #[test]
+    fn exact_samples_are_opt_in_and_mirror_the_histograms() {
+        let mut m = Metrics::new(&[DnnKind::Hv]);
+        m.record_exact_samples = true;
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Cloud),
+                          1.0));
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Edge),
+                          1.0));
+        let s = m.stats(DnnKind::Hv);
+        assert_eq!(s.exec_ms.len(), 2);
+        assert_eq!(s.cloud_exec_ms.len(), 1);
+        assert_eq!(s.exec_hist.count(), 2);
+        assert_eq!(s.cloud_exec_hist.count(), 1);
+    }
+
+    #[test]
+    fn windowed_timeline_folds_outcomes_when_enabled() {
+        let mut m = Metrics::new(&[DnnKind::Hv]);
+        m.windowed = Some(Timeline::new(ms(60)));
+        m.record(&outcome(DnnKind::Hv, Fate::Completed(Resource::Edge),
+                          2.0)); // at = 100 ms → window 1
+        m.record(&outcome(DnnKind::Hv,
+                          Fate::Dropped(DropReason::Shed), 0.0));
+        let tl = m.windowed.as_ref().unwrap();
+        assert_eq!(tl.windows().len(), 2);
+        assert_eq!(tl.windows()[1].completed, 1);
+        assert_eq!(tl.windows()[1].dropped, 1);
+        assert!((tl.windows()[1].utility - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,801 @@
+//! Observability layer: task-lifecycle tracing, O(1)-memory streaming
+//! metrics, and trace writers.
+//!
+//! Three pieces, all opt-in and all pinned bit-identical to the bare
+//! engine when unused (`tests/observability.rs`):
+//!
+//! * **Tracing** — [`TraceSink`] receives typed [`TraceEvent`]s from the
+//!   hook points in `platform.rs` / `cluster.rs`: one event per lifecycle
+//!   transition (generate → admit/enqueue → dispatch → … → finalize).
+//!   The engine holds an `Option<TraceHandle>`; `None` (the default)
+//!   constructs nothing on the hot path. [`VecSink`] buffers in memory
+//!   (tests, conservation checks), [`JsonlSink`] streams one JSON object
+//!   per line, [`ChromeSink`] writes the Chrome trace-event JSON array
+//!   that Perfetto / `chrome://tracing` load directly
+//!   (`simulate --trace FILE --trace-format jsonl|chrome`).
+//! * **[`LogHistogram`]** — fixed-bucket log-scale latency histogram
+//!   (1% bucket growth ⇒ ≤ 0.5% relative error at the geometric bucket
+//!   midpoint) replacing the unbounded per-task `Vec<f64>` sample logs
+//!   in [`crate::metrics::ModelStats`] behind the same rank-selection
+//!   `percentile` semantics.
+//! * **[`Timeline`]** — windowed time-series fold: completions, drops,
+//!   utility, uplink wait and queue-depth samples bucketed into fixed
+//!   virtual-time windows. Memory is O(duration / window), independent
+//!   of task count; rendered by `experiment timeline`.
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use crate::model::{DnnKind, Resource};
+use crate::report::JsonValue;
+use crate::task::{DropReason, Fate, TaskId, TaskOutcome};
+use crate::time::Micros;
+
+// ---------------------------------------------------------------- events
+
+/// One task-lifecycle (or engine-state) transition.
+///
+/// `edge` is the station whose engine emitted the event — for a
+/// federated steal the departure carries the victim edge and the arrival
+/// the thief, so a task's migration is reconstructible from its events.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub at: Micros,
+    pub edge: u32,
+    pub kind: TraceKind,
+}
+
+/// Typed event payloads. Task-scoped variants carry the [`TaskId`];
+/// engine-scoped variants (breaker, crash) are instantaneous markers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceKind {
+    /// A segment produced this task at the base station (`§3.3`).
+    Generate { task: TaskId, model: DnnKind, drone: u32 },
+    /// The task entered the scheduler's admission test.
+    Admit { task: TaskId },
+    /// The task was queued for `queue` (edge HPF queue or cloud ledger).
+    Enqueue { task: TaskId, queue: Resource },
+    /// Execution started on `on` (edge slot, cloud invocation, or the
+    /// drone's companion computer for pipeline stage 0).
+    Dispatch { task: TaskId, on: Resource },
+    /// Federation: the task left its home edge toward a sibling.
+    StealDepart { task: TaskId },
+    /// Federation: the task arrived at the thief edge over the LAN.
+    FedArrive { task: TaskId },
+    /// A drone re-homed to this edge (dynamic router handover).
+    Handover { drone: u32 },
+    /// Resilience: a speculative duplicate was launched for `task`.
+    HedgeFire { task: TaskId },
+    /// Resilience: the hedge duplicate beat the primary.
+    HedgeWin { task: TaskId },
+    /// Resilience: the losing leg of a resolved hedge pair was cancelled.
+    HedgeCancel { task: TaskId },
+    /// Resilience: the cloud circuit breaker tripped Closed→Open.
+    BreakerTrip,
+    /// Resilience: a half-open probe dispatch was allowed through.
+    BreakerProbe,
+    /// Fault injection: this station crashed.
+    Crash,
+    /// Fault injection: this station rebooted.
+    Recover,
+    /// Fault injection: the task was lost to a node failure.
+    FaultLoss { task: TaskId },
+    /// Terminal transition — exactly once per generated task
+    /// (`trace_conservation` in `tests/invariants.rs`).
+    Finalize { task: TaskId, fate: Fate, utility: f64 },
+}
+
+impl TraceKind {
+    /// Stable serialization name (JSONL `ev` field, Chrome event name).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Generate { .. } => "generate",
+            TraceKind::Admit { .. } => "admit",
+            TraceKind::Enqueue { .. } => "enqueue",
+            TraceKind::Dispatch { .. } => "dispatch",
+            TraceKind::StealDepart { .. } => "steal-depart",
+            TraceKind::FedArrive { .. } => "fed-arrive",
+            TraceKind::Handover { .. } => "handover",
+            TraceKind::HedgeFire { .. } => "hedge-fire",
+            TraceKind::HedgeWin { .. } => "hedge-win",
+            TraceKind::HedgeCancel { .. } => "hedge-cancel",
+            TraceKind::BreakerTrip => "breaker-trip",
+            TraceKind::BreakerProbe => "breaker-probe",
+            TraceKind::Crash => "crash",
+            TraceKind::Recover => "recover",
+            TraceKind::FaultLoss { .. } => "fault-loss",
+            TraceKind::Finalize { .. } => "finalize",
+        }
+    }
+
+    /// The task this event concerns, when task-scoped.
+    pub fn task(&self) -> Option<TaskId> {
+        match self {
+            TraceKind::Generate { task, .. }
+            | TraceKind::Admit { task }
+            | TraceKind::Enqueue { task, .. }
+            | TraceKind::Dispatch { task, .. }
+            | TraceKind::StealDepart { task }
+            | TraceKind::FedArrive { task }
+            | TraceKind::HedgeFire { task }
+            | TraceKind::HedgeWin { task }
+            | TraceKind::HedgeCancel { task }
+            | TraceKind::FaultLoss { task }
+            | TraceKind::Finalize { task, .. } => Some(*task),
+            TraceKind::Handover { .. }
+            | TraceKind::BreakerTrip
+            | TraceKind::BreakerProbe
+            | TraceKind::Crash
+            | TraceKind::Recover => None,
+        }
+    }
+}
+
+/// Stable lowercase name for a [`Resource`].
+pub fn resource_name(r: Resource) -> &'static str {
+    match r {
+        Resource::Edge => "edge",
+        Resource::Cloud => "cloud",
+        Resource::Drone => "drone",
+    }
+}
+
+/// Stable lowercase name for a [`DropReason`].
+pub fn reason_name(r: DropReason) -> &'static str {
+    match r {
+        DropReason::Infeasible => "infeasible",
+        DropReason::NegativeCloudUtility => "negative-utility",
+        DropReason::JitExpired => "jit-expired",
+        DropReason::TriggerExpired => "trigger-expired",
+        DropReason::Shed => "shed",
+        DropReason::Timeout => "timeout",
+        DropReason::Throttled => "throttled",
+        DropReason::NodeFailure => "node-failure",
+    }
+}
+
+// ----------------------------------------------------------------- sinks
+
+/// Receiver of trace events. Implementations must be `Send`: a shared
+/// sink crosses thread boundaries with the platforms the parallel sweep
+/// runner moves between workers.
+pub trait TraceSink: Send {
+    fn emit(&mut self, ev: &TraceEvent);
+    /// Flush / close the underlying writer (end of run).
+    fn finish(&mut self) {}
+}
+
+/// A sink shared by every edge of a cluster.
+pub type SharedSink = Arc<Mutex<dyn TraceSink>>;
+
+/// Per-edge handle onto a shared sink. The engine stores
+/// `Option<TraceHandle>`; emission is two loads and a branch when absent.
+#[derive(Clone)]
+pub struct TraceHandle {
+    edge: u32,
+    sink: SharedSink,
+}
+
+impl std::fmt::Debug for TraceHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TraceHandle(edge {})", self.edge)
+    }
+}
+
+impl TraceHandle {
+    pub fn new(edge: u32, sink: SharedSink) -> TraceHandle {
+        TraceHandle { edge, sink }
+    }
+
+    /// The same sink re-badged for another edge (cluster construction).
+    pub fn for_edge(&self, edge: u32) -> TraceHandle {
+        TraceHandle { edge, sink: Arc::clone(&self.sink) }
+    }
+
+    pub fn emit(&self, at: Micros, kind: TraceKind) {
+        self.sink
+            .lock()
+            .expect("trace sink poisoned")
+            .emit(&TraceEvent { at, edge: self.edge, kind });
+    }
+
+    /// Flush the underlying sink (once, after the run).
+    pub fn finish(&self) {
+        self.sink.lock().expect("trace sink poisoned").finish();
+    }
+}
+
+/// In-memory sink: buffers every event (tests, conservation folds).
+#[derive(Debug, Default)]
+pub struct VecSink {
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceSink for VecSink {
+    fn emit(&mut self, ev: &TraceEvent) {
+        self.events.push(*ev);
+    }
+}
+
+/// The event as a JSON object — the JSONL line and the Chrome `args`
+/// payload share this shape.
+pub fn event_json(ev: &TraceEvent) -> JsonValue {
+    let mut kvs = vec![
+        ("at_us".into(), JsonValue::Num(ev.at as f64)),
+        ("edge".into(), JsonValue::Num(ev.edge as f64)),
+        ("ev".into(), JsonValue::Str(ev.kind.name().into())),
+    ];
+    if let Some(task) = ev.kind.task() {
+        kvs.push(("task".into(), JsonValue::Num(task as f64)));
+    }
+    match ev.kind {
+        TraceKind::Generate { model, drone, .. } => {
+            kvs.push(("model".into(), JsonValue::Str(model.name().into())));
+            kvs.push(("drone".into(), JsonValue::Num(drone as f64)));
+        }
+        TraceKind::Enqueue { queue, .. } => {
+            kvs.push((
+                "queue".into(),
+                JsonValue::Str(resource_name(queue).into()),
+            ));
+        }
+        TraceKind::Dispatch { on, .. } => {
+            kvs.push(("on".into(), JsonValue::Str(resource_name(on).into())));
+        }
+        TraceKind::Handover { drone } => {
+            kvs.push(("drone".into(), JsonValue::Num(drone as f64)));
+        }
+        TraceKind::Finalize { fate, utility, .. } => {
+            match fate {
+                Fate::Completed(r) => {
+                    kvs.push((
+                        "fate".into(),
+                        JsonValue::Str("completed".into()),
+                    ));
+                    kvs.push((
+                        "on".into(),
+                        JsonValue::Str(resource_name(r).into()),
+                    ));
+                }
+                Fate::Missed(r) => {
+                    kvs.push(("fate".into(), JsonValue::Str("missed".into())));
+                    kvs.push((
+                        "on".into(),
+                        JsonValue::Str(resource_name(r).into()),
+                    ));
+                }
+                Fate::Dropped(reason) => {
+                    kvs.push((
+                        "fate".into(),
+                        JsonValue::Str("dropped".into()),
+                    ));
+                    kvs.push((
+                        "reason".into(),
+                        JsonValue::Str(reason_name(reason).into()),
+                    ));
+                }
+            }
+            kvs.push(("utility".into(), JsonValue::Num(utility)));
+        }
+        _ => {}
+    }
+    JsonValue::Obj(kvs)
+}
+
+/// Streaming JSONL writer: one compact JSON object per line.
+pub struct JsonlSink<W: Write + Send> {
+    w: W,
+}
+
+impl<W: Write + Send> JsonlSink<W> {
+    pub fn new(w: W) -> JsonlSink<W> {
+        JsonlSink { w }
+    }
+}
+
+impl<W: Write + Send> TraceSink for JsonlSink<W> {
+    fn emit(&mut self, ev: &TraceEvent) {
+        let line = event_json(ev).dump();
+        let _ = writeln!(self.w, "{line}");
+    }
+
+    fn finish(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// Chrome trace-event writer (the JSON-array flavor Perfetto and
+/// `chrome://tracing` load directly). Each task renders as a nestable
+/// async span (`ph:"b"` at generate, `ph:"e"` at finalize, `id` = task
+/// id) on a process track per edge; every other event is an instant
+/// marker. `ts` is virtual microseconds — the trace's time axis is the
+/// simulation clock.
+pub struct ChromeSink<W: Write + Send> {
+    w: W,
+    first: bool,
+}
+
+impl<W: Write + Send> ChromeSink<W> {
+    pub fn new(mut w: W) -> ChromeSink<W> {
+        let _ = w.write_all(b"[");
+        ChromeSink { w, first: true }
+    }
+
+    fn entry(&mut self, obj: JsonValue) {
+        let sep = if self.first { "\n" } else { ",\n" };
+        self.first = false;
+        let _ = write!(self.w, "{sep}{}", obj.dump());
+    }
+}
+
+impl<W: Write + Send> TraceSink for ChromeSink<W> {
+    fn emit(&mut self, ev: &TraceEvent) {
+        let (ph, name) = match ev.kind {
+            TraceKind::Generate { .. } => ("b", "task"),
+            TraceKind::Finalize { .. } => ("e", "task"),
+            _ => ("i", ev.kind.name()),
+        };
+        let mut kvs = vec![
+            ("name".into(), JsonValue::Str(name.into())),
+            ("cat".into(), JsonValue::Str("task".into())),
+            ("ph".into(), JsonValue::Str(ph.into())),
+            ("ts".into(), JsonValue::Num(ev.at as f64)),
+            ("pid".into(), JsonValue::Num(ev.edge as f64)),
+            ("tid".into(), JsonValue::Num(0.0)),
+        ];
+        if let Some(task) = ev.kind.task() {
+            kvs.push(("id".into(), JsonValue::Num(task as f64)));
+        }
+        if ph == "i" {
+            // Instant scope: process track.
+            kvs.push(("s".into(), JsonValue::Str("p".into())));
+        }
+        kvs.push(("args".into(), event_json(ev)));
+        self.entry(JsonValue::Obj(kvs));
+    }
+
+    fn finish(&mut self) {
+        let _ = self.w.write_all(b"\n]\n");
+        let _ = self.w.flush();
+    }
+}
+
+// ------------------------------------------------------------- histogram
+
+/// Per-bucket growth factor: 1% wide log buckets keep the rank-selected
+/// percentile within ±0.5% of the exact sample at the geometric bucket
+/// midpoint (`histogram_percentiles_track_exact_samples`).
+const HIST_GROWTH: f64 = 1.01;
+/// Lowest resolvable sample: one virtual-clock tick, in milliseconds.
+const HIST_MIN: f64 = 0.001;
+
+/// Fixed-bucket log-scale histogram over positive millisecond samples.
+///
+/// Memory is O(log(range)/log(1.01)) ≈ 2.1 k buckets for the full
+/// 1 µs – 1000 s span — grown lazily, bounded, and independent of the
+/// sample count, unlike the `Vec<f64>` per-task logs it replaces.
+/// Exact `min`/`max` are tracked so the p0/p100 extremes are exact and
+/// every interior percentile is clamped into the observed range.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    n: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram {
+            counts: Vec::new(),
+            n: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    fn bucket_of(v: f64) -> usize {
+        if v <= HIST_MIN {
+            return 0;
+        }
+        ((v / HIST_MIN).ln() / HIST_GROWTH.ln()).floor() as usize
+    }
+
+    /// Geometric midpoint of bucket `i` (the representative value).
+    fn bucket_mid(i: usize) -> f64 {
+        HIST_MIN * HIST_GROWTH.powf(i as f64 + 0.5)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let idx = Self::bucket_of(v);
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+        self.n += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Fold another histogram in (cluster-level aggregation).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Rank-selected percentile with the same semantics as the exact
+    /// [`crate::metrics::percentile`]: rank `round((n−1)·p)`, NaN when
+    /// empty. The returned value is the rank's bucket midpoint clamped
+    /// to the observed `[min, max]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        let rank = ((self.n - 1) as f64 * p.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Self::bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+// -------------------------------------------------------------- timeline
+
+/// One fixed window's fold of the run (all counters are totals within
+/// the window).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowStats {
+    /// Tasks generated (admitted to the platform) in the window.
+    pub generated: u64,
+    /// Tasks completed within deadline.
+    pub completed: u64,
+    /// Tasks executed but stale (deadline missed).
+    pub missed: u64,
+    /// Tasks dropped (any [`DropReason`]).
+    pub dropped: u64,
+    /// QoS utility accrued by tasks finalized in the window.
+    pub utility: f64,
+    /// Total shared-uplink wait charged in the window (µs).
+    pub uplink_wait: Micros,
+    /// Sum of queue-depth samples (edge + cloud queue lengths)…
+    pub queue_depth_sum: u64,
+    /// …over this many samples (one per generated task).
+    pub queue_samples: u64,
+}
+
+impl WindowStats {
+    /// Mean sampled queue depth, NaN when unsampled.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_samples == 0 {
+            f64::NAN
+        } else {
+            self.queue_depth_sum as f64 / self.queue_samples as f64
+        }
+    }
+}
+
+/// O(1)-memory-per-task windowed time series: everything folds into
+/// `duration / window` fixed [`WindowStats`] cells keyed by virtual time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Timeline {
+    window: Micros,
+    windows: Vec<WindowStats>,
+}
+
+impl Timeline {
+    pub fn new(window: Micros) -> Timeline {
+        assert!(window > 0, "zero-width timeline window");
+        Timeline { window, windows: Vec::new() }
+    }
+
+    pub fn window(&self) -> Micros {
+        self.window
+    }
+
+    pub fn windows(&self) -> &[WindowStats] {
+        &self.windows
+    }
+
+    fn cell(&mut self, at: Micros) -> &mut WindowStats {
+        let idx = (at / self.window) as usize;
+        if idx >= self.windows.len() {
+            self.windows.resize(idx + 1, WindowStats::default());
+        }
+        &mut self.windows[idx]
+    }
+
+    /// Fold a terminal task outcome into its window (keyed by the
+    /// decision time `at`, like every latency metric in the repo).
+    pub fn observe_outcome(&mut self, o: &TaskOutcome) {
+        let w = self.cell(o.at);
+        match o.fate {
+            Fate::Completed(_) => w.completed += 1,
+            Fate::Missed(_) => w.missed += 1,
+            Fate::Dropped(_) => w.dropped += 1,
+        }
+        w.utility += o.utility;
+    }
+
+    /// A task was generated at `at`; `queue_depth` samples the edge +
+    /// cloud queue lengths at the arrival instant (before admission
+    /// routes the task).
+    pub fn observe_generated(&mut self, at: Micros, queue_depth: usize) {
+        let w = self.cell(at);
+        w.generated += 1;
+        w.queue_depth_sum += queue_depth as u64;
+        w.queue_samples += 1;
+    }
+
+    /// Shared-uplink wait charged at `at`.
+    pub fn observe_uplink_wait(&mut self, at: Micros, wait: Micros) {
+        self.cell(at).uplink_wait += wait;
+    }
+
+    /// Merge a sibling edge's timeline (cluster-level view).
+    pub fn merge(&mut self, other: &Timeline) {
+        assert_eq!(self.window, other.window, "timeline window mismatch");
+        if other.windows.len() > self.windows.len() {
+            self.windows.resize(other.windows.len(), WindowStats::default());
+        }
+        for (i, w) in other.windows.iter().enumerate() {
+            let s = &mut self.windows[i];
+            s.generated += w.generated;
+            s.completed += w.completed;
+            s.missed += w.missed;
+            s.dropped += w.dropped;
+            s.utility += w.utility;
+            s.uplink_wait += w.uplink_wait;
+            s.queue_depth_sum += w.queue_depth_sum;
+            s.queue_samples += w.queue_samples;
+        }
+    }
+}
+
+// ----------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+    use crate::rng::Rng;
+
+    #[test]
+    fn histogram_matches_exact_percentiles_within_half_percent() {
+        let mut rng = Rng::new(0x0B5E_5EED);
+        let mut xs = Vec::new();
+        let mut h = LogHistogram::default();
+        // Log-uniform samples over 0.1 ms – 10 s: the span exec/cloud
+        // latencies actually cover.
+        for _ in 0..5000 {
+            let v = 0.1 * 10f64.powf(rng.f64() * 5.0);
+            xs.push(v);
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5000);
+        for p in [0.0, 0.05, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let exact = metrics::percentile(&xs, p);
+            let approx = h.percentile(p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(
+                rel <= 0.005,
+                "p{p}: exact {exact} vs hist {approx} (rel {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_extremes_are_exact() {
+        let mut h = LogHistogram::default();
+        for v in [3.25, 17.0, 940.0] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), 3.25);
+        assert_eq!(h.percentile(1.0), 940.0);
+        // Single sample: every percentile is that sample.
+        let mut one = LogHistogram::default();
+        one.record(42.0);
+        assert_eq!(one.percentile(0.5), 42.0);
+    }
+
+    #[test]
+    fn histogram_empty_is_nan_and_default_allocates_nothing() {
+        let h = LogHistogram::default();
+        assert!(h.percentile(0.5).is_nan());
+        assert!(h.is_empty());
+        assert_eq!(h.counts.capacity(), 0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_recording() {
+        let (mut a, mut b, mut both) = (
+            LogHistogram::default(),
+            LogHistogram::default(),
+            LogHistogram::default(),
+        );
+        let mut rng = Rng::new(7);
+        for i in 0..400 {
+            let v = 0.5 + rng.f64() * 800.0;
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+    }
+
+    #[test]
+    fn histogram_bucket_monotone_and_sub_tick_clamps() {
+        assert_eq!(LogHistogram::bucket_of(0.0005), 0);
+        assert_eq!(LogHistogram::bucket_of(HIST_MIN), 0);
+        let (a, b) = (
+            LogHistogram::bucket_of(10.0),
+            LogHistogram::bucket_of(10.2),
+        );
+        assert!(b > a, "1% apart ⇒ distinct buckets ({a} vs {b})");
+    }
+
+    #[test]
+    fn timeline_folds_into_fixed_windows() {
+        use crate::model::Resource;
+        let mut tl = Timeline::new(crate::time::secs(10));
+        tl.observe_generated(0, 3);
+        tl.observe_generated(9_999_999, 5);
+        tl.observe_generated(10_000_000, 0);
+        let mk = |at, fate| TaskOutcome {
+            task_id: 1,
+            model: DnnKind::Hv,
+            drone: 0,
+            fate,
+            at,
+            created_at: 0,
+            exec_duration: 0,
+            utility: 1.5,
+            gems_rescheduled: false,
+            stolen: false,
+        };
+        tl.observe_outcome(&mk(5_000_000, Fate::Completed(Resource::Edge)));
+        tl.observe_outcome(&mk(
+            25_000_000,
+            Fate::Dropped(DropReason::Timeout),
+        ));
+        tl.observe_uplink_wait(25_000_000, 1234);
+        let w = tl.windows();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0].generated, 2);
+        assert_eq!(w[0].completed, 1);
+        assert!((w[0].mean_queue_depth() - 4.0).abs() < 1e-12);
+        assert_eq!(w[1].generated, 1);
+        assert_eq!(w[2].dropped, 1);
+        assert_eq!(w[2].uplink_wait, 1234);
+        assert!((w[2].utility - 1.5).abs() < 1e-12);
+        assert!(w[1].mean_queue_depth().is_nan());
+    }
+
+    #[test]
+    fn timeline_merge_is_cellwise() {
+        let mut a = Timeline::new(1000);
+        let mut b = Timeline::new(1000);
+        a.observe_generated(500, 1);
+        b.observe_generated(2500, 7);
+        a.merge(&b);
+        assert_eq!(a.windows().len(), 3);
+        assert_eq!(a.windows()[0].generated, 1);
+        assert_eq!(a.windows()[2].queue_depth_sum, 7);
+    }
+
+    fn ev(at: Micros, kind: TraceKind) -> TraceEvent {
+        TraceEvent { at, edge: 0, kind }
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_object_per_line() {
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.emit(&ev(
+            1000,
+            TraceKind::Generate { task: 7, model: DnnKind::Cd, drone: 2 },
+        ));
+        sink.emit(&ev(
+            2000,
+            TraceKind::Finalize {
+                task: 7,
+                fate: Fate::Dropped(DropReason::Shed),
+                utility: 0.0,
+            },
+        ));
+        sink.finish();
+        let text = String::from_utf8(sink.w).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            "{\"at_us\":1000,\"edge\":0,\"ev\":\"generate\",\"task\":7,\
+             \"model\":\"cd\",\"drone\":2}"
+        );
+        assert!(lines[1].contains("\"reason\":\"shed\""), "{}", lines[1]);
+        for l in lines {
+            crate::report::parse_json(l).expect("valid JSONL line");
+        }
+    }
+
+    #[test]
+    fn chrome_sink_emits_a_loadable_event_array() {
+        let mut sink = ChromeSink::new(Vec::new());
+        sink.emit(&ev(
+            1000,
+            TraceKind::Generate { task: 3, model: DnnKind::Hv, drone: 0 },
+        ));
+        sink.emit(&ev(1500, TraceKind::HedgeFire { task: 3 }));
+        sink.emit(&ev(
+            9000,
+            TraceKind::Finalize {
+                task: 3,
+                fate: Fate::Completed(Resource::Cloud),
+                utility: 2.0,
+            },
+        ));
+        sink.finish();
+        let text = String::from_utf8(sink.w).unwrap();
+        let parsed = crate::report::parse_json(text.trim()).unwrap();
+        let JsonValue::Arr(events) = parsed else {
+            panic!("expected array")
+        };
+        assert_eq!(events.len(), 3);
+        let ph_of = |e: &JsonValue| {
+            let JsonValue::Obj(kvs) = e else { panic!() };
+            kvs.iter()
+                .find(|(k, _)| k == "ph")
+                .map(|(_, v)| v.clone())
+                .unwrap()
+        };
+        assert_eq!(ph_of(&events[0]), JsonValue::Str("b".into()));
+        assert_eq!(ph_of(&events[1]), JsonValue::Str("i".into()));
+        assert_eq!(ph_of(&events[2]), JsonValue::Str("e".into()));
+    }
+
+    #[test]
+    fn vec_sink_through_a_handle_captures_edge_badging() {
+        let sink = Arc::new(Mutex::new(VecSink::default()));
+        let handle = TraceHandle::new(0, sink.clone());
+        let h2 = handle.for_edge(3);
+        handle.emit(100, TraceKind::BreakerTrip);
+        h2.emit(200, TraceKind::Crash);
+        let evs = &sink.lock().unwrap().events;
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].edge, 0);
+        assert_eq!(evs[1].edge, 3);
+        assert_eq!(evs[1].kind, TraceKind::Crash);
+    }
+
+    #[test]
+    fn event_names_and_task_ids_are_stable() {
+        let k = TraceKind::Enqueue { task: 9, queue: Resource::Cloud };
+        assert_eq!(k.name(), "enqueue");
+        assert_eq!(k.task(), Some(9));
+        assert_eq!(TraceKind::BreakerTrip.task(), None);
+        assert_eq!(reason_name(DropReason::NodeFailure), "node-failure");
+        assert_eq!(resource_name(Resource::Drone), "drone");
+    }
+}

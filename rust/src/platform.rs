@@ -30,6 +30,7 @@ use crate::exec::{lite_variant, DroneExecModel, EdgeExecModel};
 use crate::metrics::{Metrics, TimelinePoint};
 use crate::model::{DnnKind, ModelProfile, Resource};
 use crate::net::{ConstantNet, NetworkModel, SharedUplink};
+use crate::obs::{TraceHandle, TraceKind};
 use crate::pipeline::{PipelineRef, StageGraph};
 use crate::policy::{PipelineCut, Policy};
 use crate::qoe::WindowMonitor;
@@ -128,6 +129,10 @@ pub struct Core {
     /// [`DropReason::NodeFailure`]. Always false without a `FaultSpec`
     /// (bit-identity with the fault-free engine).
     pub(crate) crashed: bool,
+    /// Task-lifecycle trace sink (see [`crate::obs`]). `None` — the
+    /// default — constructs nothing on any hot path; the traced engine
+    /// is pinned bit-identical to the untraced one.
+    pub(crate) trace: Option<TraceHandle>,
     next_task_id: TaskId,
     next_cloud_key: u64,
     /// Smallest expected edge duration across models (steal gate, §5.3).
@@ -172,6 +177,7 @@ impl Core {
             qoe,
             rng: Rng::new(seed),
             crashed: false,
+            trace: None,
             next_task_id: 0,
             next_cloud_key: 0,
             min_t_edge,
@@ -180,6 +186,20 @@ impl Core {
     }
 
     // ------------------------------------------------------------ helpers
+
+    /// Install a task-lifecycle trace sink (see [`crate::obs`]).
+    pub fn set_trace(&mut self, handle: TraceHandle) {
+        self.trace = Some(handle);
+    }
+
+    /// Emit a trace event when a sink is installed. The untraced default
+    /// is a single branch on `None` — no event is even constructed.
+    #[inline]
+    pub(crate) fn emit_trace(&self, at: Micros, kind: TraceKind) {
+        if let Some(t) = &self.trace {
+            t.emit(at, kind);
+        }
+    }
 
     pub(crate) fn idx(&self, kind: DnnKind) -> usize {
         self.models
@@ -256,11 +276,28 @@ impl Core {
     /// Queue a cloud entry and register its trigger event (mechanism half
     /// of a cloud offload; the *decision* — deferral window, negative
     /// utility handling — is made by the scheduler before calling this).
-    pub(crate) fn push_cloud(&mut self, entry: CloudEntry,
+    pub(crate) fn push_cloud(&mut self, now: Micros, entry: CloudEntry,
                              q: &mut EventQueue) {
+        self.emit_trace(now, TraceKind::Enqueue {
+            task: entry.task.id,
+            queue: Resource::Cloud,
+        });
         let trigger = entry.trigger;
         self.cloud_q.insert(entry);
         q.push(trigger, Event::CloudTrigger);
+    }
+
+    /// Queue a task for the edge executor under this edge's priority
+    /// order (the single funnel every admission path routes through, so
+    /// the enqueue trace hook sees each of them).
+    pub(crate) fn enqueue_edge(&mut self, now: Micros, task: Task,
+                               abs_deadline: Micros, t_edge: Micros,
+                               hpf_priority: f64) {
+        self.emit_trace(now, TraceKind::Enqueue {
+            task: task.id,
+            queue: Resource::Edge,
+        });
+        self.edge_q.insert(task, abs_deadline, t_edge, hpf_priority);
     }
 
     /// Hand an entry to the cloud backend. `None` when the invocation is
@@ -291,6 +328,9 @@ impl Core {
                 BreakerGate::Closed => {}
             }
         }
+        if probe {
+            self.emit_trace(now, TraceKind::BreakerProbe);
+        }
         // Split field borrows (backend / profile table / RNG are
         // disjoint) instead of cloning the profile per dispatch.
         let i = self.idx(e.task.model);
@@ -306,8 +346,14 @@ impl Core {
                 // A refusal at the account/region layer (concurrency
                 // ceiling, PR 7 outage) is a breaker failure signal —
                 // and the verdict of a half-open probe.
+                let mut tripped = false;
                 if let Some(br) = &mut self.resilience.breaker {
+                    let before = br.trips;
                     br.record(now, true, probe);
+                    tripped = br.trips > before;
+                }
+                if tripped {
+                    self.emit_trace(now, TraceKind::BreakerTrip);
                 }
                 return Some((e, retry_after));
             }
@@ -325,9 +371,16 @@ impl Core {
             if wait > 0 {
                 self.metrics.uplink_wait += wait;
                 self.metrics.uplink_queued += 1;
+                if let Some(tl) = &mut self.metrics.windowed {
+                    tl.observe_uplink_wait(now, wait);
+                }
                 duration += wait;
             }
         }
+        self.emit_trace(now, TraceKind::Dispatch {
+            task: e.task.id,
+            on: Resource::Cloud,
+        });
         self.next_cloud_key += 1;
         let key = self.next_cloud_key;
         // Hedging: a task with enough remaining slack beyond the nominal
@@ -373,6 +426,10 @@ impl Core {
 
     pub(crate) fn start_edge(&mut self, now: Micros, entry: EdgeEntry,
                              stolen: bool, q: &mut EventQueue) {
+        self.emit_trace(now, TraceKind::Dispatch {
+            task: entry.task.id,
+            on: Resource::Edge,
+        });
         let i = self.idx(entry.task.model);
         let mut actual =
             self.edge_exec.sample(&self.models[i], &mut self.rng);
@@ -435,6 +492,11 @@ impl Core {
     /// Plain tasks and final stages keep the pre-pipeline accounting.
     pub(crate) fn finalize(&mut self, outcome: TaskOutcome,
                            pipeline: Option<&PipelineRef>) {
+        self.emit_trace(outcome.at, TraceKind::Finalize {
+            task: outcome.task_id,
+            fate: outcome.fate,
+            utility: outcome.utility,
+        });
         let kind = outcome.model;
         let success = outcome.success();
         self.metrics.record(&outcome);
@@ -460,6 +522,9 @@ impl Core {
     /// Finalize a drop without execution.
     pub fn drop_task(&mut self, now: Micros, task: Task,
                      reason: DropReason) {
+        if reason == DropReason::NodeFailure {
+            self.emit_trace(now, TraceKind::FaultLoss { task: task.id });
+        }
         let outcome = TaskOutcome {
             task_id: task.id,
             model: task.model,
@@ -518,6 +583,10 @@ impl Core {
     /// after a sampled companion-computer duration.
     pub(crate) fn start_drone(&mut self, now: Micros, task: Task,
                               q: &mut EventQueue) {
+        self.emit_trace(now, TraceKind::Dispatch {
+            task: task.id,
+            on: Resource::Drone,
+        });
         let i = self.idx(task.model);
         let actual = self.drone_exec.sample(&self.models[i], &mut self.rng);
         q.push(now + actual, Event::DroneDone { task, started: now });
@@ -714,6 +783,18 @@ impl<S: Scheduler> Platform<S> {
     pub fn submit_task(&mut self, now: Micros, task: Task,
                        q: &mut EventQueue) {
         self.core.metrics.stats_mut(task.model).generated += 1;
+        self.core.emit_trace(now, TraceKind::Generate {
+            task: task.id,
+            model: task.model,
+            drone: task.segment.drone,
+        });
+        if self.core.metrics.windowed.is_some() {
+            let depth =
+                self.core.edge_q.len() + self.core.cloud_q.len();
+            if let Some(tl) = &mut self.core.metrics.windowed {
+                tl.observe_generated(now, depth);
+            }
+        }
         if self.core.crashed {
             // The station is dark (fault injection): the task is still
             // *generated* — the drone streamed it — but nothing can
@@ -728,8 +809,10 @@ impl<S: Scheduler> Platform<S> {
                 return;
             }
             Route::FixedCloud => self.enqueue_fixed_cloud(now, task, q),
-            Route::FixedEdge => self.enqueue_fixed_edge(task),
+            Route::FixedEdge => self.enqueue_fixed_edge(now, task),
             Route::Admit => {
+                self.core.emit_trace(now,
+                                     TraceKind::Admit { task: task.id });
                 let mut ctx =
                     SchedCtx { now, core: &mut self.core, q: &mut *q };
                 self.sched.admit(&mut ctx, task);
@@ -769,6 +852,7 @@ impl<S: Scheduler> Platform<S> {
         };
         let t_hat = self.sched.expected_cloud(&self.core, task.model);
         self.core.push_cloud(
+            now,
             CloudEntry {
                 task,
                 abs_deadline: dl,
@@ -786,13 +870,13 @@ impl<S: Scheduler> Platform<S> {
     /// Fixed-cut stage on the edge side of the cloud cut: straight into
     /// the edge queue under this edge's priority order, bypassing
     /// admission. The executor's JIT check still guards staleness.
-    fn enqueue_fixed_edge(&mut self, task: Task) {
+    fn enqueue_fixed_edge(&mut self, now: Micros, task: Task) {
         let (dl, te, hp) = {
             let p = self.core.profile(task.model);
             (task.absolute_deadline(p.deadline), p.t_edge,
              p.hpf_priority())
         };
-        self.core.edge_q.insert(task, dl, te, hp);
+        self.core.enqueue_edge(now, task, dl, te, hp);
     }
 
     /// The drone's companion computer finished a pipeline prefix stage:
@@ -976,7 +1060,7 @@ impl<S: Scheduler> Platform<S> {
         let t_hat = self.sched.expected_cloud(&self.core, e.task.model);
         if retry_at + t_hat <= e.abs_deadline {
             e.trigger = retry_at;
-            self.core.push_cloud(e, q);
+            self.core.push_cloud(now, e, q);
         } else {
             self.sched.on_cloud_skip(&self.core, now, e.task.model);
             self.core.drop_task(now, e.task, DropReason::Throttled);
@@ -996,8 +1080,14 @@ impl<S: Scheduler> Platform<S> {
         // Breaker feed: a timeout is the backend-health failure signal (a
         // deadline miss is a scheduling verdict, not backend health).
         // Probe outcomes close or re-open a half-open breaker.
+        let mut tripped = false;
         if let Some(br) = &mut self.core.resilience.breaker {
+            let before = br.trips;
             br.record(now, run.timed_out, run.probe);
+            tripped = br.trips > before;
+        }
+        if tripped {
+            self.core.emit_trace(now, TraceKind::BreakerTrip);
         }
         // Hedged-pair resolution (links are only ever set by
         // `on_hedge_fire`, so this whole block is inert when hedging is
@@ -1012,12 +1102,19 @@ impl<S: Scheduler> Platform<S> {
                 // abandon it silently (backend slot released above, no
                 // finalization) and promote the partner to sole owner of
                 // the task's ledger.
+                let mut promoted = false;
                 if let Some(p) = self.core.cloud_running.get_mut(&pk) {
                     p.hedge_pair = None;
                     if p.is_hedge {
                         p.is_hedge = false;
                         self.core.metrics.hedge_wins += 1;
+                        promoted = true;
                     }
+                }
+                if promoted {
+                    self.core.emit_trace(now, TraceKind::HedgeWin {
+                        task: run.entry.task.id,
+                    });
                 }
                 self.pull_cloud_ready(now, q);
                 return;
@@ -1030,9 +1127,15 @@ impl<S: Scheduler> Platform<S> {
                 self.core.cloud.cancel(loser.entry.task.model, loser.token,
                                        now);
                 self.core.metrics.hedge_cancels += 1;
+                self.core.emit_trace(now, TraceKind::HedgeCancel {
+                    task: run.entry.task.id,
+                });
             }
             if run.is_hedge {
                 self.core.metrics.hedge_wins += 1;
+                self.core.emit_trace(now, TraceKind::HedgeWin {
+                    task: run.entry.task.id,
+                });
             }
         }
         let success = !run.timed_out && run.end <= run.entry.abs_deadline;
@@ -1176,9 +1279,13 @@ impl<S: Scheduler> Platform<S> {
             if wait > 0 {
                 self.core.metrics.uplink_wait += wait;
                 self.core.metrics.uplink_queued += 1;
+                if let Some(tl) = &mut self.core.metrics.windowed {
+                    tl.observe_uplink_wait(now, wait);
+                }
                 duration += wait;
             }
         }
+        let hedged_task = task.id;
         self.core.next_cloud_key += 1;
         let dup_key = self.core.next_cloud_key;
         // The duplicate's ledger duration spans from the *primary's*
@@ -1213,6 +1320,8 @@ impl<S: Scheduler> Platform<S> {
             primary.hedge_pair = Some(dup_key);
         }
         self.core.metrics.hedge_launches += 1;
+        self.core
+            .emit_trace(now, TraceKind::HedgeFire { task: hedged_task });
         q.push(now + duration, Event::CloudDone { key: dup_key });
     }
 
@@ -1259,6 +1368,8 @@ impl<S: Scheduler> Platform<S> {
     pub fn accept_federated(&mut self, now: Micros, task: Task,
                             q: &mut EventQueue) {
         self.core.metrics.fed_steals_in += 1;
+        self.core
+            .emit_trace(now, TraceKind::FedArrive { task: task.id });
         let (dl, te, hp) = {
             let p = self.core.profile(task.model);
             (task.absolute_deadline(p.deadline), p.t_edge,
@@ -1271,7 +1382,7 @@ impl<S: Scheduler> Platform<S> {
             self.drain_done(now, q);
             return;
         }
-        self.core.edge_q.insert(task, dl, te, hp);
+        self.core.enqueue_edge(now, task, dl, te, hp);
         self.try_start_edge(now, q);
     }
 
@@ -1280,10 +1391,14 @@ impl<S: Scheduler> Platform<S> {
     /// rank). The stale trigger event it leaves behind is harmless — the
     /// trigger handler pops by due time, exactly as local §5.3 steals
     /// always have.
-    pub(crate) fn take_fed_offer(&mut self, idx: usize)
+    pub(crate) fn take_fed_offer(&mut self, now: Micros, idx: usize)
                                  -> crate::queues::CloudEntry {
         self.core.metrics.fed_steals_out += 1;
-        self.core.cloud_q.remove_at(idx)
+        let entry = self.core.cloud_q.remove_at(idx);
+        self.core.emit_trace(now, TraceKind::StealDepart {
+            task: entry.task.id,
+        });
+        entry
     }
 
     /// Fleet federation: a stolen task was still in LAN transfer when the
@@ -1321,6 +1436,7 @@ impl<S: Scheduler> Platform<S> {
                  q: &mut EventQueue) -> Vec<(Task, Micros, Micros)> {
         self.core.crashed = true;
         self.core.metrics.crashes += 1;
+        self.core.emit_trace(now, TraceKind::Crash);
         if let Some(run) = self.core.running_edge.take() {
             self.core.drop_task(now, run.entry.task,
                                 DropReason::NodeFailure);
@@ -1376,9 +1492,10 @@ impl<S: Scheduler> Platform<S> {
 
     /// Fault injection: the station reboots — queues are already empty
     /// (swept at crash), so it simply starts accepting work again.
-    pub fn recover(&mut self) {
+    pub fn recover(&mut self, now: Micros) {
         self.core.crashed = false;
         self.core.metrics.recoveries += 1;
+        self.core.emit_trace(now, TraceKind::Recover);
     }
 
     /// Fault injection: a task was bound for this edge (a federated

@@ -26,6 +26,8 @@ use crate::metrics::Metrics;
 use crate::model::{ModelProfile, Resource};
 use crate::net::{mobility_trace, LognormalWan, TraceBandwidth,
                  TrapeziumLatency};
+use crate::obs::{SharedSink, Timeline};
+use crate::task::DropReason;
 use crate::policy::{PipelineCut, Policy};
 use crate::pool::Pool;
 use crate::report::{Cell, Report, Table, Value};
@@ -484,6 +486,25 @@ pub fn run_cluster_faulted(policy: &Policy, wl: &Workload, seed: u64,
                            fed: Option<&FederationSpec>,
                            faults: Option<&FaultSpec>)
                            -> ClusterMetrics {
+    run_cluster_observed(policy, wl, seed, edges, cloud, fed, faults,
+                         None, None)
+}
+
+/// [`run_cluster_faulted`] with the observability layer attached: an
+/// optional task-lifecycle [`TraceSink`] (every edge badged through one
+/// shared sink) and an optional windowed-[`Timeline`] width. Both `None`
+/// is bit-identical to [`run_cluster_faulted`] — the hooks stay inert.
+///
+/// [`TraceSink`]: crate::obs::TraceSink
+/// [`Timeline`]: crate::obs::Timeline
+#[allow(clippy::too_many_arguments)]
+pub fn run_cluster_observed(policy: &Policy, wl: &Workload, seed: u64,
+                            edges: usize, cloud: &CloudSpec,
+                            fed: Option<&FederationSpec>,
+                            faults: Option<&FaultSpec>,
+                            trace: Option<SharedSink>,
+                            timeline_window: Option<Micros>)
+                            -> ClusterMetrics {
     let mut cluster = if edges <= 1 {
         Cluster::single(policy, wl, seed, cloud.build())
     } else {
@@ -493,6 +514,12 @@ pub fn run_cluster_faulted(policy: &Policy, wl: &Workload, seed: u64,
         if f.enabled() {
             cluster = cluster.with_faults(f.clone());
         }
+    }
+    if let Some(sink) = trace {
+        cluster = cluster.with_trace(sink);
+    }
+    if let Some(w) = timeline_window {
+        cluster = cluster.with_timeline(w);
     }
     match fed {
         Some(f) if f.enabled() => cluster.federated(f.build()).run(),
@@ -1116,6 +1143,97 @@ pub fn shared_uplink_report(seed: u64, pool: &Pool) -> Result<Report> {
 
 // ---------------------------------------------------- chaos scenarios
 
+/// `timeline`: the windowed time-series fold — every per-task outcome,
+/// arrival-instant queue depth and uplink wait folded into fixed 30 s
+/// virtual-time windows by the O(1)-memory [`Timeline`], DEMS vs DEMS-A
+/// on the 4-drone analytics mix across 3 stations. Where `fig8` reports
+/// one aggregate number per run, this shows *when* the completions,
+/// drops and queue pressure happened — the §8 QoS story as a time
+/// series instead of a total.
+pub fn timeline_report(seed: u64, pool: &Pool) -> Result<Report> {
+    const WINDOW: Micros = secs(30);
+    let wl = Workload::emulation(4, true);
+    let policies = [Policy::dems(), Policy::dems_a()];
+    let metrics = pool.run(policies.len(), |j| {
+        run_cluster_observed(&policies[j], &wl, seed, 3,
+                             &CloudSpec::NominalWan, None, None, None,
+                             Some(WINDOW))
+    });
+    let mut rep = Report::new(
+        "timeline",
+        "Observability — windowed time-series metrics \
+         (30 s windows, DEMS vs DEMS-A, 4D-A × 3 edges)",
+        seed,
+    );
+    for (policy, cm) in policies.iter().zip(&metrics) {
+        let mut tl = Timeline::new(WINDOW);
+        for m in &cm.per_edge {
+            tl.merge(m.windowed.as_ref().expect("timeline enabled"));
+        }
+        rep.text(format!("### {}", policy.kind.name()));
+        let mut t = Table::new(&[
+            "window", "start (s)", "tasks", "done", "missed", "dropped",
+            "mean queue", "uplink wait (s)", "QoS util",
+        ]);
+        for (i, w) in tl.windows().iter().enumerate() {
+            let queue = if w.queue_samples == 0 {
+                Cell::fmt(Value::Null, "-")
+            } else {
+                Cell::float(w.mean_queue_depth(), 2)
+            };
+            t.push_row(vec![
+                Cell::uint(i as u64),
+                Cell::uint(i as u64 * (WINDOW / 1_000_000)),
+                Cell::uint(w.generated),
+                Cell::uint(w.completed),
+                Cell::uint(w.missed),
+                Cell::uint(w.dropped),
+                queue,
+                Cell::seconds(w.uplink_wait, 2),
+                Cell::float(w.utility / 1e5, 2),
+            ]);
+        }
+        rep.table(t);
+    }
+    rep.text(
+        "(each row folds every task finalized inside one 30 s \
+         virtual-time window, merged across the 3 stations; `mean \
+         queue` averages the edge+cloud queue depth sampled at each \
+         arrival instant in the window. Memory is O(windows), not \
+         O(tasks) — see docs/OBSERVABILITY.md.)"
+            .to_string(),
+    );
+    Ok(rep)
+}
+
+/// Drop-breakdown column group for the chaos reports: appends one
+/// `<reason> %` column (share of generated tasks) per [`DropReason`]
+/// observed anywhere in `metrics`, plus the matching cells on every
+/// row. Columns go AFTER the existing ones, so positional pins on the
+/// base tables stay valid, and reasons nobody hit add no noise.
+fn push_drop_breakdown(t: &mut Table, metrics: &[ClusterMetrics]) {
+    let reasons: Vec<DropReason> = DropReason::ALL
+        .iter()
+        .copied()
+        .filter(|&r| metrics.iter().any(|cm| cm.dropped_by(r) > 0))
+        .collect();
+    for &r in &reasons {
+        t.columns
+         .push(format!("{} %", crate::obs::reason_name(r)));
+    }
+    for (row, cm) in t.rows.iter_mut().zip(metrics) {
+        let g = cm.generated();
+        for &r in &reasons {
+            let pct = if g == 0 {
+                0.0
+            } else {
+                100.0 * cm.dropped_by(r) as f64 / g as f64
+            };
+            row.push(Cell::percent(pct, 1));
+        }
+    }
+}
+
 /// Crash/recovery schedule shared by the `node-crash` rows and the
 /// scenario pin test: the overloaded station dies at 120 s and reboots
 /// at 210 s.
@@ -1177,6 +1295,7 @@ pub fn node_crash_report(seed: u64, pool: &Pool) -> Result<Report> {
             Cell::seconds(cm.downtime(), 1),
         ]);
     }
+    push_drop_breakdown(&mut t, &metrics);
     rep.table(t);
     rep.text(
         "(the overloaded station crashes at 120 s and reboots at 210 s; \
@@ -1403,6 +1522,7 @@ pub fn breaker_outage_report(seed: u64, pool: &Pool) -> Result<Report> {
             Cell::uint(cm.throttled()),
         ]);
     }
+    push_drop_breakdown(&mut t, &metrics);
     rep.table(t);
     rep.text(
         "(same outage as `region-outage`: region 0 refuses every \
@@ -1745,6 +1865,9 @@ pub fn registry() -> Vec<ScenarioEntry> {
         e("degraded-overload",
           "resilience: graceful degradation under edge overload",
           false),
+        e("timeline",
+          "observability: windowed time-series metrics over one run",
+          false),
     ]
 }
 
@@ -1792,6 +1915,7 @@ pub fn run_scenario_jobs(id: &str, seed: u64, jobs: usize) -> Result<Report> {
         "breaker-outage" => breaker_outage_report(seed, &pool),
         "hedged-tail" => hedged_tail_report(seed, &pool),
         "degraded-overload" => degraded_overload_report(seed, &pool),
+        "timeline" => timeline_report(seed, &pool),
         other => {
             let known: Vec<&str> =
                 registry().iter().map(|e| e.id).collect();

@@ -124,14 +124,14 @@ pub trait Scheduler: Send {
                     (task.absolute_deadline(p.deadline), p.t_edge,
                      p.hpf_priority())
                 };
-                ctx.core.edge_q.insert(task, dl, te, hp);
+                ctx.core.enqueue_edge(ctx.now, task, dl, te, hp);
             }
             Placement::EdgeWithDeadline(dl) => {
                 let (te, hp) = {
                     let p = ctx.core.profile(task.model);
                     (p.t_edge, p.hpf_priority())
                 };
-                ctx.core.edge_q.insert(task, dl, te, hp);
+                ctx.core.enqueue_edge(ctx.now, task, dl, te, hp);
             }
             Placement::Cloud => {
                 self.offer_cloud(ctx, task, false);
@@ -259,7 +259,7 @@ pub trait Scheduler: Send {
                     gems_rescheduled: gems,
                     pinned: false,
                 };
-                ctx.core.push_cloud(entry, ctx.q);
+                ctx.core.push_cloud(ctx.now, entry, ctx.q);
                 return true;
             }
             ctx.core.drop_task(ctx.now, task,
@@ -287,7 +287,7 @@ pub trait Scheduler: Send {
             gems_rescheduled: gems,
             pinned: false,
         };
-        ctx.core.push_cloud(entry, ctx.q);
+        ctx.core.push_cloud(ctx.now, entry, ctx.q);
         true
     }
 }
@@ -411,13 +411,13 @@ pub(crate) fn dem_admit<S: Scheduler + ?Sized>(s: &mut S,
                 let victim = ctx.core.edge_q.remove_at(vi);
                 s.offer_cloud(ctx, victim.task, false);
             }
-            ctx.core.edge_q.insert(task, dl, t_edge, hpf);
+            ctx.core.enqueue_edge(ctx.now, task, dl, t_edge, hpf);
         } else {
             // Retain existing tasks; incoming goes to the cloud
             // (Fig. 5, scenario 3).
             s.offer_cloud(ctx, task, false);
         }
     } else {
-        ctx.core.edge_q.insert(task, dl, t_edge, hpf);
+        ctx.core.enqueue_edge(ctx.now, task, dl, t_edge, hpf);
     }
 }

@@ -102,6 +102,21 @@ pub enum DropReason {
     NodeFailure,
 }
 
+impl DropReason {
+    /// Every variant, in declaration order — drives the drop-breakdown
+    /// column groups and the trace-fold conservation test.
+    pub const ALL: [DropReason; 8] = [
+        DropReason::Infeasible,
+        DropReason::NegativeCloudUtility,
+        DropReason::JitExpired,
+        DropReason::TriggerExpired,
+        DropReason::Shed,
+        DropReason::Timeout,
+        DropReason::Throttled,
+        DropReason::NodeFailure,
+    ];
+}
+
 /// Completion record appended to the results queue.
 #[derive(Clone, Debug)]
 pub struct TaskOutcome {

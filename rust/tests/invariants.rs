@@ -26,6 +26,9 @@
 //!   interleaving.
 //! * **Cluster fold == per-edge sum** — every `ClusterMetrics` aggregate
 //!   equals the manual fold of its `per_edge` metrics.
+//! * **Trace conservation** — folding the task-lifecycle trace of a
+//!   federated + faulted + hedged run reproduces the `ClusterMetrics`
+//!   ledger exactly, and every generated task finalizes exactly once.
 
 use ocularone::cluster::{Cluster, ClusterMetrics, Federation, Handover};
 use ocularone::fault::FaultSpec;
@@ -507,6 +510,233 @@ fn randomized_resilience_scenarios_finalize_exactly_once() {
     assert!(launches > 0, "no hedges launched across the sweep");
     assert!(wins > 0, "no hedge ever won across the sweep");
     assert!(cancels > 0, "no hedge loser was ever cancelled");
+}
+
+/// Trace-conservation property: the task-lifecycle trace is a complete,
+/// exact mirror of the metrics ledger. Federated + always-faulted +
+/// always-hedged clusters run with a buffering [`VecSink`]; folding the
+/// captured events must reproduce every `ClusterMetrics` counter —
+/// completions, misses, per-reason drops, QoS utility, hedge
+/// fire/win/cancel, breaker trip/probe, crash/recover, steal
+/// departures/arrivals, handovers, fault losses — and every generated
+/// task must finalize exactly once (per-id generate/finalize balance),
+/// even when it migrates edges or races a hedged duplicate.
+#[test]
+fn trace_fold_reproduces_cluster_metrics_exactly() {
+    use ocularone::obs::{SharedSink, TraceKind, VecSink};
+    use ocularone::resilience::ResilienceSpec;
+    use ocularone::task::{DropReason, Fate};
+    use ocularone::time::ms;
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+
+    let policies =
+        [Policy::dems_a(), Policy::edf_ec(), Policy::cloud_only()];
+    let mut rng = Rng::new(0x7AC3_F01D);
+    let mut launches = 0u64;
+    let mut steals = 0u64;
+    for iter in 0..10 {
+        let n_edges = 2 + rng.below(2);
+        // Hedging always armed (aggressive delay, zero slack) and faults
+        // always on, so the trace covers the richest lifecycle paths.
+        let spec = ResilienceSpec {
+            hedge: true,
+            hedge_delay: ms(50 + rng.below(400) as u64),
+            hedge_slack: 0,
+            breaker: rng.chance(0.5),
+            ..ResilienceSpec::default()
+        };
+        let policy = policies[rng.below(policies.len())]
+            .clone()
+            .with_resilience(spec);
+        let duration = secs(15 + rng.below(11) as u64);
+        let mut wls: Vec<Workload> = Vec::new();
+        for _ in 0..n_edges {
+            let drones = 1 + rng.below(3) as u32;
+            let mut wl = Workload::emulation(drones, rng.chance(0.5))
+                .with_duration(duration);
+            if rng.chance(0.3) {
+                wl = wl.with_arrival(Arrival::Poisson);
+            }
+            wls.push(wl);
+        }
+        let cloud = if rng.chance(0.5) {
+            CloudSpec::NominalWan
+        } else {
+            CloudSpec::faas(secs(1 + rng.below(30) as u64), 1 + rng.below(6))
+        };
+        let faults = FaultSpec::random(&mut rng, n_edges, duration);
+        let seed = rng.next_u64();
+        let mut platforms = Vec::with_capacity(n_edges);
+        let mut aseeds = Vec::with_capacity(n_edges);
+        for (e, wl) in wls.iter().enumerate() {
+            let (p, s) =
+                Cluster::edge_parts(&policy, wl, seed, e, cloud.build());
+            platforms.push(p);
+            aseeds.push(s);
+        }
+        let mut fed = Federation::stealing();
+        let total_drones: u32 = wls.iter().map(|w| w.drones).sum();
+        if rng.chance(0.5) {
+            fed = fed.with_handover(Handover {
+                at: secs(rng.below(12) as u64),
+                drone: rng.below(total_drones as usize) as u32,
+                to_edge: rng.below(n_edges),
+            });
+        }
+        let sink = Arc::new(Mutex::new(VecSink::default()));
+        let shared: SharedSink = sink.clone();
+        let cm = Cluster::from_parts_hetero(platforms, wls.clone(), aseeds)
+            .with_faults(faults.clone())
+            .federated(fed)
+            .with_trace(shared)
+            .run();
+        let label = format!(
+            "trace iter {iter} ({n_edges} edges, {}, seed {seed:#x})",
+            policy.kind.name(),
+        );
+        assert!(cm.generated() > 0, "{label}: degenerate scenario");
+        assert!(cm.crashes() >= 1, "{label}: fault schedule never fired");
+
+        // ---- fold the captured trace --------------------------------
+        let events =
+            std::mem::take(&mut sink.lock().unwrap().events);
+        // Task ids are per-platform counters, so an id may repeat across
+        // edges; the generate/finalize *balance* per id must still close
+        // at zero (a steal finalizes at the thief, a hedge pair exactly
+        // once).
+        let mut balance: HashMap<u64, i64> = HashMap::new();
+        let mut generated = 0u64;
+        let mut finalized = 0u64;
+        let mut completed = 0u64;
+        let mut missed = 0u64;
+        let mut dropped = [0u64; 8];
+        let mut utility = 0.0f64;
+        let mut hedge_fire = 0u64;
+        let mut hedge_win = 0u64;
+        let mut hedge_cancel = 0u64;
+        let mut breaker_trip = 0u64;
+        let mut breaker_probe = 0u64;
+        let mut crash = 0u64;
+        let mut recover = 0u64;
+        let mut steal_depart = 0u64;
+        let mut fed_arrive = 0u64;
+        let mut handover = 0u64;
+        let mut fault_loss = 0u64;
+        for ev in &events {
+            match ev.kind {
+                TraceKind::Generate { task, .. } => {
+                    generated += 1;
+                    *balance.entry(task).or_insert(0) += 1;
+                }
+                TraceKind::Finalize { task, fate, utility: u } => {
+                    finalized += 1;
+                    *balance.entry(task).or_insert(0) -= 1;
+                    match fate {
+                        Fate::Completed(_) => {
+                            completed += 1;
+                            utility += u;
+                        }
+                        Fate::Missed(_) => {
+                            missed += 1;
+                            utility += u;
+                        }
+                        Fate::Dropped(r) => {
+                            let i = DropReason::ALL
+                                .iter()
+                                .position(|&x| x == r)
+                                .expect("reason in ALL");
+                            dropped[i] += 1;
+                        }
+                    }
+                }
+                TraceKind::HedgeFire { .. } => hedge_fire += 1,
+                TraceKind::HedgeWin { .. } => hedge_win += 1,
+                TraceKind::HedgeCancel { .. } => hedge_cancel += 1,
+                TraceKind::BreakerTrip => breaker_trip += 1,
+                TraceKind::BreakerProbe => breaker_probe += 1,
+                TraceKind::Crash => crash += 1,
+                TraceKind::Recover => recover += 1,
+                TraceKind::StealDepart { .. } => steal_depart += 1,
+                TraceKind::FedArrive { .. } => fed_arrive += 1,
+                TraceKind::Handover { .. } => handover += 1,
+                TraceKind::FaultLoss { .. } => fault_loss += 1,
+                TraceKind::Admit { .. }
+                | TraceKind::Enqueue { .. }
+                | TraceKind::Dispatch { .. } => {}
+            }
+        }
+
+        // ---- the fold must equal the metrics ledger -----------------
+        assert_eq!(generated, cm.generated(), "{label}: generate events");
+        assert_eq!(
+            finalized,
+            cm.generated(),
+            "{label}: every generated task finalizes"
+        );
+        for (id, b) in &balance {
+            assert_eq!(
+                *b, 0i64,
+                "{label}: task {id} generate/finalize imbalance"
+            );
+        }
+        assert_eq!(completed, cm.completed(), "{label}: completions");
+        let missed_metric: u64 = cm
+            .per_edge
+            .iter()
+            .flat_map(|m| m.per_model.iter())
+            .map(|(_, s)| s.missed_edge + s.missed_cloud + s.missed_drone)
+            .sum();
+        assert_eq!(missed, missed_metric, "{label}: misses");
+        for (i, &r) in DropReason::ALL.iter().enumerate() {
+            assert_eq!(
+                dropped[i],
+                cm.dropped_by(r),
+                "{label}: {r:?} drops"
+            );
+        }
+        let qos = cm.total_qos_utility();
+        assert!(
+            (utility - qos).abs() <= 1e-6 + 1e-9 * qos.abs(),
+            "{label}: trace utility {utility} vs ledger {qos}"
+        );
+        assert_eq!(hedge_fire, cm.hedge_launches(), "{label}: hedge fires");
+        assert_eq!(hedge_win, cm.hedge_wins(), "{label}: hedge wins");
+        assert_eq!(
+            hedge_cancel,
+            cm.hedge_cancels(),
+            "{label}: hedge cancels"
+        );
+        assert_eq!(
+            breaker_trip,
+            cm.breaker_trips(),
+            "{label}: breaker trips"
+        );
+        assert_eq!(
+            breaker_probe,
+            cm.breaker_probes(),
+            "{label}: breaker probes"
+        );
+        assert_eq!(crash, cm.crashes(), "{label}: crashes");
+        assert_eq!(recover, cm.recoveries(), "{label}: recoveries");
+        assert_eq!(
+            steal_depart,
+            cm.fed_offers(),
+            "{label}: steal departures"
+        );
+        assert_eq!(fed_arrive, cm.fed_steals(), "{label}: steal arrivals");
+        assert_eq!(handover, cm.handovers(), "{label}: handovers");
+        assert_eq!(
+            fault_loss,
+            cm.dropped_by(DropReason::NodeFailure),
+            "{label}: fault losses"
+        );
+        launches += cm.hedge_launches();
+        steals += cm.fed_steals();
+    }
+    // The sweep must exercise the machinery whose trace it pins.
+    assert!(launches > 0, "no hedges launched across the trace sweep");
+    assert!(steals > 0, "no steals occurred across the trace sweep");
 }
 
 /// Direct DES-primitive property: under random interleavings of pops

@@ -1,0 +1,286 @@
+//! Integration pins for the observability layer (`rust/src/obs.rs`):
+//!
+//! * **Bit-identity** — attaching a trace sink must not perturb the run:
+//!   the traced engine's `ClusterMetrics` (every counter, utility sum,
+//!   histogram and events-processed tick) equals the untraced engine's.
+//! * **Histogram parity** — the O(1)-memory `LogHistogram` percentiles
+//!   stay within ±0.5% of the exact `Vec<f64>` sample path they replaced
+//!   (re-enabled via `Metrics::record_exact_samples`) on a fig8-style
+//!   stress run, and the exact vectors stay empty by default so metrics
+//!   memory no longer grows per task.
+//! * **Timeline conservation** — the windowed time-series fold sums back
+//!   to the run's ledger: generated / completed / missed / dropped /
+//!   QoS utility / uplink wait across windows equal the run totals.
+//! * **Writer round-trip** — a real run streamed through `JsonlSink` is
+//!   valid JSON per line, and through `ChromeSink` a loadable trace-event
+//!   array with balanced begin/end spans.
+
+use std::sync::{Arc, Mutex};
+
+use ocularone::exec::CloudExecModel;
+use ocularone::fault::FaultSpec;
+use ocularone::fleet::Workload;
+use ocularone::metrics;
+use ocularone::net::LognormalWan;
+use ocularone::obs::{ChromeSink, JsonlSink, SharedSink, Timeline, VecSink};
+use ocularone::platform::Platform;
+use ocularone::policy::Policy;
+use ocularone::report::{parse_json, JsonValue};
+use ocularone::resilience::ResilienceSpec;
+use ocularone::rng::Rng;
+use ocularone::scenario::{
+    run_cluster_observed, CloudSpec, FederationSpec,
+};
+use ocularone::sim;
+use ocularone::time::{ms, secs};
+
+fn wan() -> CloudExecModel {
+    CloudExecModel::new(Box::new(LognormalWan::default()))
+}
+
+/// Tracing must be a pure observer: the traced run's metrics — including
+/// per-model histograms, utilities and the events-processed counter —
+/// are bit-identical to the untraced run's, across federation, faults
+/// and the resilience layer.
+#[test]
+fn traced_run_is_bit_identical_to_untraced() {
+    let policy = Policy::dems_a().with_resilience(ResilienceSpec {
+        hedge: true,
+        hedge_delay: ms(200),
+        hedge_slack: 0,
+        breaker: true,
+        ..ResilienceSpec::default()
+    });
+    let wl = Workload::emulation(3, true).with_duration(secs(20));
+    let fed = FederationSpec::stealing();
+    let faults = FaultSpec::random(&mut Rng::new(0xF00D), 3, secs(20));
+    let untraced = run_cluster_observed(
+        &policy, &wl, 42, 3, &CloudSpec::NominalWan, Some(&fed),
+        Some(&faults), None, None,
+    );
+    let sink = Arc::new(Mutex::new(VecSink::default()));
+    let shared: SharedSink = sink.clone();
+    let traced = run_cluster_observed(
+        &policy, &wl, 42, 3, &CloudSpec::NominalWan, Some(&fed),
+        Some(&faults), Some(shared), None,
+    );
+    assert!(
+        !sink.lock().unwrap().events.is_empty(),
+        "trace sink saw no events"
+    );
+    assert!(untraced.generated() > 0, "degenerate scenario");
+    assert_eq!(traced, untraced, "tracing perturbed the run");
+}
+
+/// The streaming histograms replace the per-task sample vectors behind
+/// the same `percentile` semantics: within ±0.5% of the exact value at
+/// every probed quantile of a fig8-style stress run, for both the
+/// all-executions and the cloud-side distributions.
+#[test]
+fn histogram_percentiles_track_exact_samples_on_a_fig8_run() {
+    let wl = Workload::emulation(4, true);
+    let mut p = Platform::new(Policy::dems(), wl.models.clone(), wan(), 3);
+    p.metrics.record_exact_samples = true;
+    let m = sim::run(p, &wl, 3);
+    let mut checked = 0usize;
+    for (kind, s) in &m.per_model {
+        for (exact_ms, hist) in [
+            (&s.exec_ms, &s.exec_hist),
+            (&s.cloud_exec_ms, &s.cloud_exec_hist),
+        ] {
+            assert_eq!(
+                exact_ms.len() as u64,
+                hist.count(),
+                "{kind:?}: exact and streaming paths saw different \
+                 populations"
+            );
+            if exact_ms.len() < 50 {
+                continue;
+            }
+            for pct in [0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let exact = metrics::percentile(exact_ms, pct);
+                let approx = hist.percentile(pct);
+                let rel = (approx - exact).abs() / exact;
+                assert!(
+                    rel <= 0.005,
+                    "{kind:?} p{pct}: exact {exact} vs hist {approx} \
+                     (rel {rel})"
+                );
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "no distribution dense enough to probe");
+}
+
+/// By default the exact sample vectors (and the completion log) stay
+/// empty — per-task memory growth is opt-in, the streaming histograms
+/// carry the percentiles.
+#[test]
+fn metrics_memory_does_not_grow_per_task_by_default() {
+    let wl = Workload::emulation(4, true);
+    let p = Platform::new(Policy::dems(), wl.models.clone(), wan(), 3);
+    let m = sim::run(p, &wl, 3);
+    assert!(m.generated() > 0);
+    assert!(m.completions.is_empty(), "completion log is opt-in");
+    let mut executed = 0u64;
+    for (kind, s) in &m.per_model {
+        assert!(
+            s.exec_ms.is_empty() && s.cloud_exec_ms.is_empty(),
+            "{kind:?}: exact samples recorded without opt-in"
+        );
+        executed += s.executed();
+        if s.executed() > 0 {
+            assert!(
+                !s.exec_hist.is_empty(),
+                "{kind:?}: streaming histogram missed executions"
+            );
+        }
+    }
+    assert!(executed > 0, "degenerate run");
+}
+
+/// The windowed time-series fold conserves the ledger: summing every
+/// window reproduces the run's generated / completed / missed / dropped
+/// counts, QoS utility, uplink wait, and one queue-depth sample per
+/// generated task.
+#[test]
+fn timeline_windows_sum_to_run_totals() {
+    const WINDOW: u64 = 10_000_000; // 10 s of virtual time
+    let fed = FederationSpec {
+        steal: true,
+        uplink_bytes_per_sec: Some(2.0e6),
+        ..FederationSpec::default()
+    };
+    let wl = Workload::emulation(4, true).with_duration(secs(30));
+    let cm = run_cluster_observed(
+        &Policy::dems_a(), &wl, 7, 3, &CloudSpec::NominalWan, Some(&fed),
+        None, None, Some(WINDOW),
+    );
+    let mut tl = Timeline::new(WINDOW);
+    for m in &cm.per_edge {
+        tl.merge(m.windowed.as_ref().expect("timeline enabled"));
+    }
+    assert!(tl.windows().len() >= 3, "run spans several windows");
+    let sum = |f: &dyn Fn(&ocularone::obs::WindowStats) -> u64| -> u64 {
+        tl.windows().iter().map(f).sum()
+    };
+    assert_eq!(sum(&|w| w.generated), cm.generated(), "generated");
+    assert_eq!(sum(&|w| w.completed), cm.completed(), "completed");
+    assert_eq!(sum(&|w| w.dropped), cm.dropped(), "dropped");
+    assert_eq!(
+        sum(&|w| w.queue_samples),
+        cm.generated(),
+        "one queue sample per generated task"
+    );
+    let missed: u64 = cm
+        .per_edge
+        .iter()
+        .flat_map(|m| m.per_model.iter())
+        .map(|(_, s)| s.missed_edge + s.missed_cloud + s.missed_drone)
+        .sum();
+    assert_eq!(sum(&|w| w.missed), missed, "missed");
+    assert_eq!(
+        sum(&|w| w.uplink_wait),
+        cm.uplink_wait(),
+        "uplink wait"
+    );
+    let utility: f64 = tl.windows().iter().map(|w| w.utility).sum();
+    let qos = cm.total_qos_utility();
+    assert!(
+        (utility - qos).abs() <= 1e-6 + 1e-9 * qos.abs(),
+        "windowed utility {utility} vs ledger {qos}"
+    );
+    assert!(cm.events_processed() > 0, "engine profiling counter ticks");
+}
+
+/// A real run streamed through the CLI's JSONL writer: one valid JSON
+/// object per line, at least a generate + finalize pair per task.
+#[test]
+fn jsonl_trace_of_a_run_parses_line_by_line() {
+    let dir = std::path::Path::new(env!("CARGO_TARGET_TMPDIR"));
+    let path = dir.join("obs_trace.jsonl");
+    let wl = Workload::emulation(2, false).with_duration(secs(10));
+    let file = std::io::BufWriter::new(
+        std::fs::File::create(&path).expect("create trace file"),
+    );
+    let sink = Arc::new(Mutex::new(JsonlSink::new(file)));
+    let shared: SharedSink = sink.clone();
+    let cm = run_cluster_observed(
+        &Policy::dems(), &wl, 11, 1, &CloudSpec::NominalWan, None, None,
+        Some(shared), None,
+    );
+    ocularone::obs::TraceSink::finish(&mut *sink.lock().unwrap());
+    let text = std::fs::read_to_string(&path).expect("read trace back");
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(
+        lines.len() as u64 >= 2 * cm.generated(),
+        "fewer trace lines ({}) than generate+finalize pairs ({})",
+        lines.len(),
+        2 * cm.generated()
+    );
+    let mut generates = 0u64;
+    let mut finalizes = 0u64;
+    for line in &lines {
+        let JsonValue::Obj(kvs) =
+            parse_json(line).expect("valid JSONL line")
+        else {
+            panic!("trace line is not an object: {line}");
+        };
+        let ev = kvs
+            .iter()
+            .find(|(k, _)| k == "ev")
+            .map(|(_, v)| v.clone())
+            .expect("every event carries an ev field");
+        if ev == JsonValue::Str("generate".into()) {
+            generates += 1;
+        }
+        if ev == JsonValue::Str("finalize".into()) {
+            finalizes += 1;
+        }
+    }
+    assert_eq!(generates, cm.generated(), "one generate line per task");
+    assert_eq!(finalizes, cm.generated(), "one finalize line per task");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The same run through the Chrome trace-event writer: one loadable JSON
+/// array whose async task spans balance (`ph:"b"` per generate,
+/// `ph:"e"` per finalize).
+#[test]
+fn chrome_trace_of_a_run_is_a_balanced_event_array() {
+    let dir = std::path::Path::new(env!("CARGO_TARGET_TMPDIR"));
+    let path = dir.join("obs_trace_chrome.json");
+    let wl = Workload::emulation(2, false).with_duration(secs(10));
+    let file = std::io::BufWriter::new(
+        std::fs::File::create(&path).expect("create trace file"),
+    );
+    let sink = Arc::new(Mutex::new(ChromeSink::new(file)));
+    let shared: SharedSink = sink.clone();
+    let cm = run_cluster_observed(
+        &Policy::dems(), &wl, 11, 1, &CloudSpec::NominalWan, None, None,
+        Some(shared), None,
+    );
+    ocularone::obs::TraceSink::finish(&mut *sink.lock().unwrap());
+    let text = std::fs::read_to_string(&path).expect("read trace back");
+    let JsonValue::Arr(events) =
+        parse_json(text.trim()).expect("loadable trace-event JSON")
+    else {
+        panic!("chrome trace is not an array");
+    };
+    assert!(!events.is_empty());
+    let ph_count = |ph: &str| -> u64 {
+        events
+            .iter()
+            .filter(|e| {
+                let JsonValue::Obj(kvs) = e else { return false };
+                kvs.iter().any(|(k, v)| {
+                    k == "ph" && *v == JsonValue::Str(ph.into())
+                })
+            })
+            .count() as u64
+    };
+    assert_eq!(ph_count("b"), cm.generated(), "begin span per task");
+    assert_eq!(ph_count("e"), cm.generated(), "end span per task");
+    let _ = std::fs::remove_file(&path);
+}

@@ -104,6 +104,14 @@ fn partition_sweep_parallel_parity() {
 }
 
 #[test]
+fn timeline_parallel_parity() {
+    // The windowed-timeline scenario folds per-edge `Timeline`s built
+    // inside each policy cell; the merge order is fixed by edge index,
+    // so the rendered windows are byte-identical across `--jobs` values.
+    assert_parity("timeline", 42);
+}
+
+#[test]
 fn single_stage_pipeline_is_bit_identical_to_plain() {
     // The pipeline-off pin: wrapping a workload's first model in a
     // degenerate 1-stage graph (same kind, same deadline, no handoff

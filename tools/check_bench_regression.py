@@ -14,6 +14,10 @@ Usage:
   ``--prefix`` (default ``fig8``, the end-to-end figure benches) gate.
 * The comparison uses ``p50_ns`` (robust center — a single descheduled CI
   sample skews the mean, not the median).
+* Rows carrying an ``events_per_sec`` gauge (engine-throughput profiling,
+  see rust/src/obs.rs) additionally gate raw engine throughput: a bench
+  whose events/sec dropped past the same threshold fails even if its
+  latency number survived (e.g. the run shrank).
 * A missing baseline file is an informational pass: the first CI run
   seeds it — download the ``bench-json`` artifact and commit it at the
   baseline path (see docs/PERF.md).
@@ -106,6 +110,22 @@ def main(argv):
         )
         if ratio > threshold:
             failures.append((name, ratio))
+        # Engine-throughput gate: only when BOTH sides carry the gauge
+        # (a baseline predating the annotation stays informational).
+        cur_eps = current[name].get("events_per_sec")
+        base_eps = baseline[name].get("events_per_sec")
+        if cur_eps and base_eps:
+            eps_ratio = (
+                base_eps / cur_eps if cur_eps > 0 else float("inf")
+            )
+            marker = "FAIL" if eps_ratio > threshold else "ok"
+            print(
+                f"  [{marker}] {name}: {cur_eps / 1e6:.2f}M events/s vs "
+                f"baseline {base_eps / 1e6:.2f}M ({eps_ratio:.2f}x "
+                "slowdown)"
+            )
+            if eps_ratio > threshold:
+                failures.append((name + " [events/sec]", eps_ratio))
 
     if failures:
         print(
