@@ -8,6 +8,8 @@
 //! * Fig 13   — weak scaling to 28 edges.
 //! * Fig 14/15 + Table 2 — GEMS on WL1/WL2.
 //! * Fig 17/18 — the field workload + navigation coupling.
+//! * queue — event-core micro-bench: the time-wheel `EventQueue` vs the
+//!   retired binary-heap reference on a 10⁶-op DES churn loop.
 //!
 //! CLI (see `benchutil`): `--quick` for the CI smoke mode, `--json
 //! [--out DIR]` to write `BENCH_end_to_end.json` — the file the
@@ -135,6 +137,57 @@ fn main() {
                 .collect();
             black_box(nav::fly(&events, m.duration, 17));
         });
+    }
+
+    // Event-core micro-bench: the time-wheel vs the retired binary-heap
+    // reference on a synthetic DES churn loop — preload a working set,
+    // then 10⁶ pop→push cycles whose inter-event gaps match the
+    // simulator's shape (segment cadence + jitter, so events land a few
+    // dozen wheel buckets ahead). Deliberately NOT `fig8`-prefixed: the
+    // rows inform the JSON artifact but the regression gate stays on the
+    // engine-level fig8 family, which is what users actually feel.
+    {
+        use ocularone::rng::Rng;
+        use ocularone::sim::{Event, EventQueue, HeapQueue};
+
+        const PRELOAD: u64 = 10_000;
+        const OPS: u64 = 1_000_000;
+
+        suite.bench("queue wheel 1e6 pop/push churn", 2500, || {
+            let mut q = EventQueue::new();
+            let mut rng = Rng::new(0x0BE7_C0DE);
+            for i in 0..PRELOAD {
+                q.push(rng.below(1_000_000) as u64,
+                       Event::Segment { drone: 0, tick: i });
+            }
+            let mut now = 0u64;
+            for i in 0..OPS {
+                let (t, _) = q.pop().expect("churn keeps the queue loaded");
+                now = t;
+                q.push(now + 33_000 + rng.below(200_000) as u64,
+                       Event::Segment { drone: 1, tick: i });
+            }
+            black_box(now);
+        });
+        suite.annotate_events(OPS);
+
+        suite.bench("queue heap 1e6 pop/push churn (reference)", 2500, || {
+            let mut q = HeapQueue::new();
+            let mut rng = Rng::new(0x0BE7_C0DE);
+            for i in 0..PRELOAD {
+                q.push(rng.below(1_000_000) as u64,
+                       Event::Segment { drone: 0, tick: i });
+            }
+            let mut now = 0u64;
+            for i in 0..OPS {
+                let (t, _) = q.pop().expect("churn keeps the queue loaded");
+                now = t;
+                q.push(now + 33_000 + rng.below(200_000) as u64,
+                       Event::Segment { drone: 1, tick: i });
+            }
+            black_box(now);
+        });
+        suite.annotate_events(OPS);
     }
 
     suite.finish().expect("write BENCH_end_to_end.json");

@@ -1,0 +1,155 @@
+//! Slot-reusing arena: index handles instead of owned values in motion.
+//!
+//! The hot paths of the engine used to move whole [`Task`](crate::task)
+//! structs (and ~100-byte queue entries) through the event heap and the
+//! priority rings. An [`Arena`] parks the value once and hands back a
+//! `u32` slot index; everything downstream shuffles 4-byte handles. Slots
+//! freed by [`Arena::remove`] are recycled LIFO, so a steady-state run
+//! settles into a fixed allocation footprint — [`Arena::clear`] keeps the
+//! backing capacity, which is what lets one event queue be reused across
+//! cluster runs without re-growing (see
+//! [`EventQueue::clear`](crate::sim::EventQueue::clear)).
+//!
+//! Deliberately minimal: no generation counters. The engine's handles are
+//! single-owner — a slot is stashed by exactly one producer and taken by
+//! exactly one consumer (the conservation invariants in
+//! `tests/invariants.rs` pin that every task closes exactly once), so ABA
+//! safety comes from the protocol, not the container. `remove` of a dead
+//! slot panics loudly rather than aliasing.
+
+/// A slab of `T` with `u32` handles and LIFO slot reuse.
+#[derive(Debug)]
+pub struct Arena<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<u32>,
+}
+
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Arena { slots: Vec::new(), free: Vec::new() }
+    }
+}
+
+impl<T> Arena<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Park a value; returns its slot handle.
+    pub fn insert(&mut self, value: T) -> u32 {
+        match self.free.pop() {
+            Some(h) => {
+                debug_assert!(self.slots[h as usize].is_none());
+                self.slots[h as usize] = Some(value);
+                h
+            }
+            None => {
+                let h = self.slots.len() as u32;
+                self.slots.push(Some(value));
+                h
+            }
+        }
+    }
+
+    /// Take the value back, freeing the slot for reuse. Panics on a dead
+    /// slot — a double-take is a protocol bug, never silent aliasing.
+    pub fn remove(&mut self, handle: u32) -> T {
+        let v = self.slots[handle as usize]
+            .take()
+            .expect("arena slot taken twice");
+        self.free.push(handle);
+        v
+    }
+
+    /// Borrow a live slot.
+    pub fn get(&self, handle: u32) -> Option<&T> {
+        self.slots.get(handle as usize).and_then(|s| s.as_ref())
+    }
+
+    /// Mutably borrow a live slot.
+    pub fn get_mut(&mut self, handle: u32) -> Option<&mut T> {
+        self.slots.get_mut(handle as usize).and_then(|s| s.as_mut())
+    }
+
+    /// Number of live values.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every value but keep both backing allocations, so a reused
+    /// arena re-fills without touching the allocator.
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.free.clear();
+    }
+
+    /// Reserved slot capacity (allocation-footprint accounting; see the
+    /// queue-reuse pin in `sim.rs`).
+    pub fn capacity(&self) -> usize {
+        self.slots.capacity() + self.free.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_round_trips() {
+        let mut a = Arena::new();
+        let h1 = a.insert("one");
+        let h2 = a.insert("two");
+        assert_ne!(h1, h2);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.get(h1), Some(&"one"));
+        assert_eq!(a.remove(h2), "two");
+        assert_eq!(a.remove(h1), "one");
+        assert!(a.is_empty());
+        assert_eq!(a.get(h1), None);
+    }
+
+    #[test]
+    fn freed_slots_are_reused_lifo() {
+        let mut a = Arena::new();
+        let h1 = a.insert(1u64);
+        let h2 = a.insert(2);
+        a.remove(h1);
+        a.remove(h2);
+        // LIFO reuse: the most recently freed slot comes back first.
+        assert_eq!(a.insert(3), h2);
+        assert_eq!(a.insert(4), h1);
+        // No new slots were grown.
+        assert_eq!(a.insert(5), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arena slot taken twice")]
+    fn double_remove_panics() {
+        let mut a = Arena::new();
+        let h = a.insert(9u8);
+        a.remove(h);
+        a.remove(h);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut a = Arena::new();
+        let handles: Vec<u32> = (0..64).map(|i| a.insert(i)).collect();
+        for h in handles {
+            a.remove(h);
+        }
+        let cap = a.capacity();
+        assert!(cap >= 128, "64 slots + 64 free entries reserved");
+        a.clear();
+        assert!(a.is_empty());
+        assert_eq!(a.capacity(), cap, "clear must not shrink");
+        for i in 0..64 {
+            a.insert(i);
+        }
+        assert_eq!(a.capacity(), cap, "refill within retained capacity");
+    }
+}

@@ -754,7 +754,14 @@ impl<S: Scheduler> Cluster<S> {
                     | Event::DroneDone { task, .. } => {
                         let e = scope as usize;
                         q.set_scope(scope);
+                        let task = q.take_task(task);
                         edges[e].drop_in_transit(horizon, task, &mut *q);
+                    }
+                    // A successor still in handoff was never submitted
+                    // (and never charged `generated`): just free its
+                    // arena slot.
+                    Event::StageArrive { task } => {
+                        let _ = q.take_task(task);
                     }
                     _ => {}
                 }
@@ -835,6 +842,7 @@ impl<S: Scheduler> Cluster<S> {
                     // A transfer landing on an edge that crashed while
                     // it was on the LAN dies here — closed exactly once
                     // (it was charged `generated` at its origin).
+                    let task = q.take_task(task);
                     if driver.as_ref().map_or(false, |d| d.is_down(e)) {
                         edges[e].drop_failed(now, task, &mut q);
                     } else {
@@ -860,11 +868,13 @@ impl<S: Scheduler> Cluster<S> {
                     }
                 }
                 Event::StageArrive { task } => {
+                    let task = q.take_task(task);
                     edges[e].submit_task(now, task, &mut q)
                 }
                 Event::DroneDone { task, started } => {
                     // The drone survives, but the station that would
                     // collect its result is dark.
+                    let task = q.take_task(task);
                     if driver.as_ref().map_or(false, |d| d.is_down(e)) {
                         edges[e].drop_failed(now, task, &mut q);
                     } else {
@@ -1004,7 +1014,8 @@ fn try_fed_steal<S: Scheduler>(now: Micros, thief: usize,
     if let Some((s, idx, _, _, transfer)) = best {
         let entry = edges[s].take_fed_offer(now, idx);
         q.set_scope(thief as u32);
-        q.push(now + transfer, Event::FedArrive { task: entry.task });
+        let slot = q.stash_task(entry.task);
+        q.push(now + transfer, Event::FedArrive { task: slot });
     }
 }
 
@@ -1079,7 +1090,9 @@ fn apply_fault<S: Scheduler>(now: Micros, action: FaultAction,
                     // closes.
                     edges[edge].metrics.fed_steals_out += 1;
                     q.set_scope(target as u32);
-                    q.push(now + transfer, Event::FedArrive { task });
+                    let slot = q.stash_task(task);
+                    q.push(now + transfer,
+                           Event::FedArrive { task: slot });
                     q.set_scope(edge as u32);
                 } else {
                     edges[edge].drop_failed(now, task, q);

@@ -82,6 +82,7 @@
 //! experiments, and `serve` for the real-inference serving loop.
 
 pub mod adapt;
+pub mod arena;
 pub mod benchutil;
 pub mod cloud;
 pub mod cluster;

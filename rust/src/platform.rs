@@ -589,7 +589,9 @@ impl Core {
         });
         let i = self.idx(task.model);
         let actual = self.drone_exec.sample(&self.models[i], &mut self.rng);
-        q.push(now + actual, Event::DroneDone { task, started: now });
+        let slot = q.stash_task(task);
+        q.push(now + actual,
+               Event::DroneDone { task: slot, started: now });
     }
 
     /// A non-final pipeline stage completed: mint the successor stage as
@@ -622,7 +624,8 @@ impl Core {
             segment: done.segment.clone(),
             pipeline: Some(next_ref),
         };
-        q.push(at, Event::StageArrive { task });
+        let slot = q.stash_task(task);
+        q.push(at, Event::StageArrive { task: slot });
     }
 
     /// Next finalized (model, success) pair awaiting the scheduler's
@@ -1603,8 +1606,12 @@ mod tests {
                 Event::WindowClose { model_idx } => {
                     p.on_window_close(t, model_idx, q)
                 }
-                Event::StageArrive { task } => p.submit_task(t, task, q),
+                Event::StageArrive { task } => {
+                    let task = q.take_task(task);
+                    p.submit_task(t, task, q)
+                }
                 Event::DroneDone { task, started } => {
+                    let task = q.take_task(task);
                     p.on_drone_done(t, task, started, q)
                 }
                 Event::HedgeFire { key } => p.on_hedge_fire(t, key, q),

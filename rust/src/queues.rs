@@ -1,12 +1,20 @@
 //! Edge and cloud task queues (§3.3, §5).
 //!
 //! The paper implements these as custom priority queues over a doubly linked
-//! list; here they are sorted ring buffers (`VecDeque`: cache-friendly,
-//! O(log n) position search + O(n) insert — queues hold at most a few dozen
-//! entries at the paper's workloads — and, unlike the earlier sorted `Vec`,
-//! **O(1) head pops**: `pop`/`pop_due` fire on every executor/trigger event,
-//! and `Vec::remove(0)` shifted the whole queue each time; see
-//! docs/PERF.md).
+//! list; here each queue is an [`Arena`] slab of entries plus a sorted ring
+//! of `u32` handles (`VecDeque`: cache-friendly, O(log n) position search +
+//! O(n) insert — queues hold at most a few dozen entries at the paper's
+//! workloads — and **O(1) head pops**: `pop`/`pop_due` fire on every
+//! executor/trigger event). The slab/handle split means an ordered insert
+//! shifts 4-byte handles, not ~100-byte `EdgeEntry`/`CloudEntry` structs,
+//! and a popped entry moves out of the slab exactly once — the same
+//! zero-copy discipline as the event queue's task arena (see
+//! docs/ARCHITECTURE.md "Event core" and docs/PERF.md).
+//!
+//! Ring positions are the public indices: `get(idx)`/`remove_at(idx)`
+//! address the idx-th entry *in priority order*, exactly as the previous
+//! entry-ring representation did, so DEM victim indices and steal indices
+//! carry over unchanged.
 //!
 //! * [`EdgeQueue`] — priority-ordered pending tasks for the single-lane edge
 //!   executor. The priority key is pluggable ([`EdgeOrder`]): EDF for
@@ -19,14 +27,16 @@
 
 use std::collections::VecDeque;
 
+use crate::arena::Arena;
 use crate::model::DnnKind;
 use crate::task::{Task, TaskId};
 use crate::time::{Micros, MicrosDelta};
 
 /// Priority regime for the edge queue.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum EdgeOrder {
     /// Earliest absolute deadline first (t′ⱼ + δᵢ) — DEMS and E+C.
+    #[default]
     Edf,
     /// Shortest expected edge execution first — SJF (E+C) and SOTA 2.
     Sjf,
@@ -66,32 +76,38 @@ pub struct InsertProbe {
 
 #[derive(Default, Debug)]
 pub struct EdgeQueue {
-    entries: VecDeque<EdgeEntry>,
+    slab: Arena<EdgeEntry>,
+    /// Priority order, head first; each element is a slab handle.
+    ring: VecDeque<u32>,
     seq: u64,
     order: EdgeOrder,
 }
 
-impl Default for EdgeOrder {
-    fn default() -> Self {
-        EdgeOrder::Edf
-    }
-}
-
 impl EdgeQueue {
     pub fn new(order: EdgeOrder) -> Self {
-        EdgeQueue { entries: VecDeque::new(), seq: 0, order }
+        EdgeQueue {
+            slab: Arena::new(),
+            ring: VecDeque::new(),
+            seq: 0,
+            order,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.ring.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.ring.is_empty()
+    }
+
+    #[inline]
+    fn entry(&self, handle: u32) -> &EdgeEntry {
+        self.slab.get(handle).expect("edge-queue handle live")
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &EdgeEntry> {
-        self.entries.iter()
+        self.ring.iter().map(|&h| self.entry(h))
     }
 
     /// Compute the priority key for a prospective entry.
@@ -108,7 +124,7 @@ impl EdgeQueue {
 
     fn position_for(&self, key: u64) -> usize {
         // Insert after all entries with key <= new key (FIFO among equals).
-        self.entries.partition_point(|e| e.key <= key)
+        self.ring.partition_point(|&h| self.entry(h).key <= key)
     }
 
     /// Probe the effect of inserting a task *without* mutating the queue.
@@ -121,13 +137,13 @@ impl EdgeQueue {
         let key = self.key_for(abs_deadline, t_edge, hpf_priority);
         let pos = self.position_for(key);
         let mut t = busy_until;
-        for e in self.entries.iter().take(pos) {
+        for e in self.iter().take(pos) {
             t += e.t_edge;
         }
         t += t_edge;
         let completion = t;
         let mut victims = Vec::new();
-        for (i, e) in self.entries.iter().enumerate().skip(pos) {
+        for (i, e) in self.iter().enumerate().skip(pos) {
             t += e.t_edge;
             if t > e.abs_deadline {
                 victims.push(i);
@@ -138,7 +154,7 @@ impl EdgeQueue {
 
     /// Expected completion time of the queue's last task (for slack math).
     pub fn backlog_until(&self, busy_until: Micros) -> Micros {
-        busy_until + self.entries.iter().map(|e| e.t_edge).sum::<Micros>()
+        busy_until + self.iter().map(|e| e.t_edge).sum::<Micros>()
     }
 
     /// Would appending this task (per its priority) meet `abs_deadline`?
@@ -149,60 +165,60 @@ impl EdgeQueue {
             <= abs_deadline
     }
 
-    /// Insert an entry at its priority position.
+    /// Insert an entry at its priority position — the slab takes the
+    /// entry once; only a 4-byte handle shifts in the ring.
     pub fn insert(&mut self, task: Task, abs_deadline: Micros, t_edge: Micros,
                   hpf_priority: f64) -> usize {
         let key = self.key_for(abs_deadline, t_edge, hpf_priority);
         let pos = self.position_for(key);
         self.seq += 1;
-        self.entries.insert(
-            pos,
-            EdgeEntry {
-                task,
-                abs_deadline,
-                t_edge,
-                key,
-                seq: self.seq,
-                gems_rescheduled: false,
-            },
-        );
+        let handle = self.slab.insert(EdgeEntry {
+            task,
+            abs_deadline,
+            t_edge,
+            key,
+            seq: self.seq,
+            gems_rescheduled: false,
+        });
+        self.ring.insert(pos, handle);
         pos
     }
 
-    /// Pop the highest-priority entry — O(1) on the ring buffer (this
+    /// Pop the highest-priority entry — O(1) on the handle ring (this
     /// fires once per edge execution).
     pub fn pop(&mut self) -> Option<EdgeEntry> {
-        self.entries.pop_front()
+        self.ring.pop_front().map(|h| self.slab.remove(h))
     }
 
     /// Peek the head entry.
     pub fn peek(&self) -> Option<&EdgeEntry> {
-        self.entries.front()
+        self.ring.front().map(|&h| self.entry(h))
     }
 
-    /// Direct index access (perf: DEM victim scoring is O(victims), not
-    /// O(n·victims) — see EXPERIMENTS.md §Perf L3).
+    /// Direct index access, in priority order (perf: DEM victim scoring
+    /// is O(victims), not O(n·victims) — see EXPERIMENTS.md §Perf L3).
     #[inline]
     pub fn get(&self, idx: usize) -> Option<&EdgeEntry> {
-        self.entries.get(idx)
+        self.ring.get(idx).map(|&h| self.entry(h))
     }
 
     /// Remove an entry by index (used by DEM migration).
     pub fn remove_at(&mut self, idx: usize) -> EdgeEntry {
-        self.entries.remove(idx).expect("edge-queue index in range")
+        let h = self.ring.remove(idx).expect("edge-queue index in range");
+        self.slab.remove(h)
     }
 
     /// Remove an entry by task id (used by GEMS rescheduling).
     pub fn remove_task(&mut self, id: TaskId) -> Option<EdgeEntry> {
-        let idx = self.entries.iter().position(|e| e.task.id == id)?;
-        self.entries.remove(idx)
+        let idx =
+            self.ring.iter().position(|&h| self.entry(h).task.id == id)?;
+        Some(self.remove_at(idx))
     }
 
     /// Snapshot of (index, task-id, model) for tasks of one model, head
     /// first — the GEMS edge-queue scan (§6.1, Alg. 1 lines 9–14).
     pub fn tasks_of_model(&self, model: DnnKind) -> Vec<(usize, TaskId)> {
-        self.entries
-            .iter()
+        self.iter()
             .enumerate()
             .filter(|(_, e)| e.task.model == model)
             .map(|(i, e)| (i, e.task.id))
@@ -231,45 +247,62 @@ pub struct CloudEntry {
     pub pinned: bool,
 }
 
-/// Trigger-time priority queue for the cloud executor.
+/// Trigger-time priority queue for the cloud executor — the same
+/// slab + sorted handle-ring layout as [`EdgeQueue`].
 #[derive(Default, Debug)]
 pub struct CloudQueue {
-    entries: VecDeque<CloudEntry>, // sorted by trigger ascending
+    slab: Arena<CloudEntry>,
+    /// Trigger order ascending, head first; slab handles.
+    ring: VecDeque<u32>,
 }
 
 impl CloudQueue {
     pub fn new() -> Self {
-        CloudQueue { entries: VecDeque::new() }
+        CloudQueue { slab: Arena::new(), ring: VecDeque::new() }
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.ring.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.ring.is_empty()
+    }
+
+    #[inline]
+    fn entry(&self, handle: u32) -> &CloudEntry {
+        self.slab.get(handle).expect("cloud-queue handle live")
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &CloudEntry> {
-        self.entries.iter()
+        self.ring.iter().map(|&h| self.entry(h))
     }
 
     pub fn insert(&mut self, e: CloudEntry) {
-        let pos = self.entries.partition_point(|x| x.trigger <= e.trigger);
-        self.entries.insert(pos, e);
+        let pos =
+            self.ring.partition_point(|&h| {
+                self.entry(h).trigger <= e.trigger
+            });
+        let handle = self.slab.insert(e);
+        self.ring.insert(pos, handle);
     }
 
     /// Earliest trigger time, if any.
     pub fn next_trigger(&self) -> Option<Micros> {
-        self.entries.front().map(|e| e.trigger)
+        self.ring.front().map(|&h| self.entry(h).trigger)
     }
 
     /// Pop the head entry if its trigger time has arrived — O(1) on the
-    /// ring buffer (this fires once per trigger event *and* once more to
+    /// handle ring (this fires once per trigger event *and* once more to
     /// detect "nothing due", so it is the hottest cloud-queue op).
     pub fn pop_due(&mut self, now: Micros) -> Option<CloudEntry> {
-        if self.entries.front().map(|e| e.trigger <= now).unwrap_or(false) {
-            self.entries.pop_front()
+        if self
+            .ring
+            .front()
+            .map(|&h| self.entry(h).trigger <= now)
+            .unwrap_or(false)
+        {
+            self.ring.pop_front().map(|h| self.slab.remove(h))
         } else {
             None
         }
@@ -285,7 +318,7 @@ impl CloudQueue {
             return None;
         }
         let mut best: Option<(usize, bool, f64)> = None;
-        for (i, e) in self.entries.iter().enumerate() {
+        for (i, e) in self.iter().enumerate() {
             if e.pinned {
                 continue; // fixed-cut pipeline stages stay on the cloud
             }
@@ -321,7 +354,8 @@ impl CloudQueue {
     }
 
     pub fn remove_at(&mut self, idx: usize) -> CloudEntry {
-        self.entries.remove(idx).expect("cloud-queue index in range")
+        let h = self.ring.remove(idx).expect("cloud-queue index in range");
+        self.slab.remove(h)
     }
 }
 
@@ -445,6 +479,27 @@ mod tests {
         assert_eq!(ids, vec![2, 1]);
     }
 
+    #[test]
+    fn slab_reuses_slots_across_churn() {
+        // Heavy insert/pop churn must not grow the slab past the peak
+        // population — freed handles recycle (the zero-alloc contract).
+        let mut q = EdgeQueue::new(EdgeOrder::Edf);
+        for round in 0..50u64 {
+            for i in 0..4 {
+                let id = round * 4 + i;
+                q.insert(task(id, 0), ms(500 + id), ms(10), 1.0);
+            }
+            for _ in 0..4 {
+                q.pop().unwrap();
+            }
+        }
+        assert!(q.is_empty());
+        // Peak population was 4, so at most a handful of slots exist.
+        let probe = q.insert(task(999, 0), ms(100), ms(10), 1.0);
+        assert_eq!(probe, 0);
+        assert_eq!(q.pop().unwrap().task.id, 999);
+    }
+
     fn centry(id: TaskId, trigger: Micros, t_edge: Micros,
               abs_deadline: Micros, neg: bool) -> CloudEntry {
         CloudEntry {
@@ -543,5 +598,21 @@ mod tests {
         q.insert(centry(2, ms(500), ms(100), ms(50), false));
         let idx = q.best_steal(ms(100), ms(250) as i64, |_| 1.0).unwrap();
         assert_eq!(q.remove_at(idx).task.id, 1);
+    }
+
+    #[test]
+    fn middle_removal_keeps_ring_order() {
+        // remove_at on a middle index must keep the surviving entries'
+        // priority order intact (handles shift; slab slots recycle).
+        let mut q = CloudQueue::new();
+        q.insert(centry(1, ms(100), ms(10), ms(900), false));
+        q.insert(centry(2, ms(200), ms(10), ms(900), false));
+        q.insert(centry(3, ms(300), ms(10), ms(900), false));
+        assert_eq!(q.remove_at(1).task.id, 2);
+        // The freed slot is recycled by the next insert, but order is
+        // still by trigger.
+        q.insert(centry(4, ms(250), ms(10), ms(900), false));
+        let ids: Vec<TaskId> = q.iter().map(|e| e.task.id).collect();
+        assert_eq!(ids, vec![1, 4, 3]);
     }
 }

@@ -6,14 +6,36 @@
 //! single-edge study run through the same deterministic loop. [`run`] here
 //! is the convenience wrapper for the 1-edge case every unit study uses.
 //!
+//! ## The time-wheel queue
+//!
+//! [`EventQueue`] is a bucketed calendar queue keyed on the millisecond
+//! quantum of the virtual clock ([`QUANTUM_US`]): a ring of
+//! [`WHEEL_SLOTS`] buckets covers a ~1 s horizon, an overflow list parks
+//! far-future events (QoE window closes, fault schedules), and pops drain
+//! one *activated* bucket at a time — the same-tick batch — so the common
+//! push/pop pair is O(1) instead of the old `BinaryHeap`'s O(log n)
+//! sift. Events inside a bucket are only ordered when the bucket
+//! activates (one `sort_unstable` by the unique `(time, push-seq)` key),
+//! which keeps the queue's observable stream *bit-identical* to the heap
+//! it replaced: `tests/queue_differential.rs` drives both implementations
+//! (the heap survives as [`HeapQueue`]) through randomized op sequences
+//! and asserts identical `(at, scope, event)` streams.
+//!
+//! Tasks never ride inside events any more: the queue owns a per-run
+//! [`Arena`] of [`Task`]s and the task-carrying variants carry a 4-byte
+//! [`TaskSlot`] handle ([`EventQueue::stash_task`] /
+//! [`EventQueue::take_task`]), shrinking the moved `Event` payload and
+//! cutting per-event task clone/move traffic through the engine.
+//!
 //! A 300 s × 4-drone × 6-model experiment (7 200 tasks) runs in a few
 //! milliseconds, which is what makes the full Fig. 8–18 reproduction sweep
 //! tractable. The same platform state machine is also driven by the
 //! real-time serving loop in `serve` (behind the `pjrt` feature).
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
+use crate::arena::Arena;
 use crate::cluster::{Cluster, ARRIVAL_SEED_XOR};
 use crate::fleet::Workload;
 use crate::metrics::Metrics;
@@ -22,8 +44,18 @@ use crate::sched::Scheduler;
 use crate::task::Task;
 use crate::time::{secs, Micros};
 
-/// Platform events, ordered by virtual time.
-#[derive(Clone, Debug)]
+/// Handle to a [`Task`] parked in the event queue's per-run arena
+/// ([`EventQueue::stash_task`]). Single-owner: exactly one pending event
+/// refers to a slot, and its handler takes the task back out
+/// ([`EventQueue::take_task`]); the conservation invariants pin that
+/// every stashed task is taken exactly once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TaskSlot(u32);
+
+/// Platform events, ordered by virtual time. `Copy` since the arena
+/// refactor: task payloads live in the queue's [`Arena`] and events carry
+/// only [`TaskSlot`] handles.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Event {
     /// A video segment tick for one drone (self-rescheduling).
     Segment { drone: u32, tick: u64 },
@@ -37,7 +69,7 @@ pub enum Event {
     WindowClose { model_idx: usize },
     /// A cross-edge stolen task arrives at its destination edge after
     /// its LAN transfer (fleet federation; scope = destination edge).
-    FedArrive { task: Task },
+    FedArrive { task: TaskSlot },
     /// A drone re-homes to another edge (fleet handover; scope = the
     /// destination edge, which records the handover).
     Handover { drone: u32, to_edge: u32 },
@@ -45,10 +77,10 @@ pub enum Event {
     /// — pushed at the predecessor's completion time plus the wireless
     /// transfer when the handoff leaves the drone tier
     /// ([`crate::pipeline`]).
-    StageArrive { task: Task },
+    StageArrive { task: TaskSlot },
     /// The drone's companion computer finished a pipeline prefix stage
     /// (`started` = when it began, for the exec-duration accounting).
-    DroneDone { task: Task, started: Micros },
+    DroneDone { task: TaskSlot, started: Micros },
     /// A scheduled fault fires (edge crash/recovery, region outage, link
     /// flap — see [`crate::fault`]). Compiled from a
     /// [`FaultSpec`](crate::fault::FaultSpec) at cluster setup, so at
@@ -63,6 +95,8 @@ pub enum Event {
     HedgeFire { key: u64 },
 }
 
+/// One queued event: timestamp, FIFO tie-break sequence, edge scope.
+#[derive(Clone, Copy, Debug)]
 struct Item {
     at: Micros,
     seq: u64,
@@ -88,13 +122,37 @@ impl Ord for Item {
     }
 }
 
-/// Time-ordered event queue (min-heap, FIFO among equal timestamps).
+/// Wheel quantum: one bucket per virtual millisecond. Executor/transfer
+/// durations are tens of ms, so consecutive events land a few buckets
+/// apart and the cursor scan stays short.
+pub const QUANTUM_US: Micros = 1_000;
+
+/// Wheel size (power of two): ~1.02 s of horizon. Beyond it events go to
+/// the overflow list and are promoted when the wheel next runs dry.
+pub const WHEEL_SLOTS: usize = 1024;
+
+/// Time-ordered event queue (bucketed time wheel, FIFO among equal
+/// timestamps).
 ///
 /// Every pushed event is stamped with the queue's *current scope* (an edge
 /// index, set by the cluster driver before dispatching into a platform), so
 /// one queue can interleave N independent platforms deterministically. The
 /// scope is ignored in single-edge runs; relative ordering is always
 /// `(time, push order)`, never scope.
+///
+/// Layout — three tiers by distance from "now":
+///
+/// * `active`: the currently activated bucket, sorted ascending by
+///   `(at, seq)`; pops come off its front. Same-quantum (and rare
+///   past-time) pushes sorted-insert here, preserving exact heap order.
+/// * `buckets[q % WHEEL_SLOTS]`: unsorted spill lists for quanta within
+///   the rotation window `[wheel_base, wheel_base + WHEEL_SLOTS)`. A
+///   bucket is sorted once, when the cursor reaches it.
+/// * `overflow`: everything at or beyond the window end. When the wheel
+///   runs dry the window re-bases onto the earliest overflow quantum and
+///   in-window items are promoted into buckets — one O(overflow) sweep
+///   per re-base, amortized across the (sparse, far-future) events that
+///   use it.
 ///
 /// Cross-edge tie-break (audited for the fleet-federation layer): when a
 /// federated event — a steal arrival, a handover — lands on the same
@@ -105,18 +163,49 @@ impl Ord for Item {
 /// chain from `t − period`); steal arrivals are pushed at steal time, so
 /// they rank after any same-instant event that was already pending. This
 /// order is pinned by `cross_edge_equal_timestamp_ties_break_by_push_order`
-/// below — federation stays deterministic because every tie is resolved
-/// by push order alone.
-#[derive(Default)]
+/// below and by the heap-vs-wheel differential harness — federation stays
+/// deterministic because every tie is resolved by push order alone.
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<Item>>,
+    active: VecDeque<Item>,
+    /// Quantum of the last activated bucket: pushes at `q <= active_q`
+    /// sorted-insert into `active` (the same-tick batch); later quanta go
+    /// to the wheel. Invariant: `cursor == active_q + 1` after any
+    /// activation, so no push can land behind the cursor.
+    active_q: u64,
+    buckets: Vec<Vec<Item>>,
+    /// Total items across all buckets (cheap dry-wheel check).
+    in_buckets: usize,
+    /// Quantum at the rotation window's start; the window covers
+    /// `[wheel_base, wheel_base + WHEEL_SLOTS)`.
+    wheel_base: u64,
+    /// Next quantum the dry-active scan will probe.
+    cursor: u64,
+    overflow: Vec<Item>,
     seq: u64,
     scope: u32,
+    tasks: Arena<Task>,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl EventQueue {
     pub fn new() -> Self {
-        Self::default()
+        EventQueue {
+            active: VecDeque::new(),
+            active_q: 0,
+            buckets: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            in_buckets: 0,
+            wheel_base: 0,
+            cursor: 0,
+            overflow: Vec::new(),
+            seq: 0,
+            scope: 0,
+            tasks: Arena::new(),
+        }
     }
 
     /// Set the edge scope stamped onto subsequently pushed events.
@@ -124,10 +213,188 @@ impl EventQueue {
         self.scope = scope;
     }
 
-    /// Reset to the empty state (scope and FIFO tie-break counter
-    /// included) while keeping the heap's allocation, so one queue can be
-    /// reused across cluster runs with bit-identical results
-    /// ([`crate::cluster::Cluster::run_with`]).
+    /// Reset to the empty state (scope, FIFO tie-break counter, wheel
+    /// position and task arena included) while keeping every backing
+    /// allocation, so one queue can be reused across cluster runs with
+    /// bit-identical results and a stable allocation footprint
+    /// ([`crate::cluster::Cluster::run_with`]; pinned by
+    /// `queue_reuse_keeps_allocation_footprint`).
+    pub fn clear(&mut self) {
+        self.active.clear();
+        for b in self.buckets.iter_mut() {
+            b.clear();
+        }
+        self.in_buckets = 0;
+        self.overflow.clear();
+        self.tasks.clear();
+        self.seq = 0;
+        self.scope = 0;
+        self.active_q = 0;
+        self.wheel_base = 0;
+        self.cursor = 0;
+    }
+
+    /// Park a task in the per-run arena; the handle rides in the event.
+    pub fn stash_task(&mut self, task: Task) -> TaskSlot {
+        TaskSlot(self.tasks.insert(task))
+    }
+
+    /// Take a stashed task back out, freeing its slot.
+    pub fn take_task(&mut self, slot: TaskSlot) -> Task {
+        self.tasks.remove(slot.0)
+    }
+
+    /// Tasks currently parked in the arena (should be zero once a run
+    /// fully drains — every stash has exactly one take).
+    pub fn tasks_in_flight(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn push(&mut self, at: Micros, event: Event) {
+        self.seq += 1;
+        let it = Item { at, seq: self.seq, scope: self.scope, event };
+        let q = at / QUANTUM_US;
+        if q <= self.active_q {
+            // Same-tick (or past-time) push: keep `active` sorted by the
+            // unique (at, seq) key. `seq` is fresh-maximal, so among
+            // equal timestamps this lands after its peers — push-order
+            // FIFO, exactly the heap's order.
+            let pos = self
+                .active
+                .partition_point(|x| (x.at, x.seq) < (it.at, it.seq));
+            self.active.insert(pos, it);
+        } else if q < self.wheel_base + WHEEL_SLOTS as u64 {
+            self.buckets[(q % WHEEL_SLOTS as u64) as usize].push(it);
+            self.in_buckets += 1;
+        } else {
+            self.overflow.push(it);
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<(Micros, Event)> {
+        self.pop_item().map(|i| (i.at, i.event))
+    }
+
+    /// Pop with the edge scope the event was pushed under.
+    pub fn pop_scoped(&mut self) -> Option<(Micros, u32, Event)> {
+        self.pop_item().map(|i| (i.at, i.scope, i.event))
+    }
+
+    fn pop_item(&mut self) -> Option<Item> {
+        if let Some(it) = self.active.pop_front() {
+            return Some(it);
+        }
+        self.advance()
+    }
+
+    /// The active batch ran dry: scan the wheel to the next non-empty
+    /// bucket (re-basing onto the overflow list when the whole wheel is
+    /// dry), activate it — one `sort_unstable` by the unique
+    /// `(at, seq)` key — and pop its head.
+    fn advance(&mut self) -> Option<Item> {
+        loop {
+            if self.in_buckets == 0 {
+                if self.overflow.is_empty() {
+                    return None;
+                }
+                self.rebase_onto_overflow();
+            }
+            let horizon = self.wheel_base + WHEEL_SLOTS as u64;
+            while self.cursor < horizon {
+                let slot = (self.cursor % WHEEL_SLOTS as u64) as usize;
+                if self.buckets[slot].is_empty() {
+                    self.cursor += 1;
+                    continue;
+                }
+                let bucket = &mut self.buckets[slot];
+                bucket.sort_unstable_by_key(|i| (i.at, i.seq));
+                self.in_buckets -= bucket.len();
+                // `drain` keeps the bucket's capacity — the reuse
+                // contract for steady-state zero allocation.
+                self.active.extend(bucket.drain(..));
+                self.active_q = self.cursor;
+                self.cursor += 1;
+                return self.active.pop_front();
+            }
+            // Window exhausted: every bucketed quantum lies in the
+            // window, so a dry scan implies a dry wheel — loop to
+            // re-base onto the overflow list (or finish).
+            debug_assert_eq!(
+                self.in_buckets, 0,
+                "wheel scan passed a live bucket"
+            );
+        }
+    }
+
+    /// Re-base the rotation window onto the earliest overflow quantum
+    /// and promote every now-in-window item into its bucket.
+    fn rebase_onto_overflow(&mut self) {
+        let min_q = self
+            .overflow
+            .iter()
+            .map(|i| i.at / QUANTUM_US)
+            .min()
+            .expect("re-base on non-empty overflow");
+        self.wheel_base = min_q;
+        self.cursor = min_q;
+        let horizon = min_q + WHEEL_SLOTS as u64;
+        let mut i = 0;
+        while i < self.overflow.len() {
+            let q = self.overflow[i].at / QUANTUM_US;
+            if q < horizon {
+                let it = self.overflow.swap_remove(i);
+                self.buckets[(q % WHEEL_SLOTS as u64) as usize].push(it);
+                self.in_buckets += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.active.len() + self.in_buckets + self.overflow.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total element capacity reserved across the active batch, every
+    /// wheel bucket, the overflow list and the task arena. Two
+    /// consecutive identical runs on one queue must report the same
+    /// footprint — the steady-state zero-allocation contract
+    /// (`queue_reuse_keeps_allocation_footprint` in
+    /// `tests/queue_differential.rs`).
+    pub fn allocation_footprint(&self) -> usize {
+        self.active.capacity()
+            + self.buckets.iter().map(|b| b.capacity()).sum::<usize>()
+            + self.overflow.capacity()
+            + self.tasks.capacity()
+    }
+}
+
+/// The engine's previous comparison-based queue (`BinaryHeap` over
+/// `(at, seq)`), kept as the reference implementation for the
+/// heap-vs-wheel differential harness (`tests/queue_differential.rs`)
+/// and the queue micro-bench (`benches/end_to_end.rs`). Same push/pop
+/// API and the same `(time, push order)` contract; no task arena — the
+/// harness threads [`TaskSlot`]-free events through both queues.
+#[derive(Default)]
+pub struct HeapQueue {
+    heap: BinaryHeap<Reverse<Item>>,
+    seq: u64,
+    scope: u32,
+}
+
+impl HeapQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set_scope(&mut self, scope: u32) {
+        self.scope = scope;
+    }
+
     pub fn clear(&mut self) {
         self.heap.clear();
         self.seq = 0;
@@ -148,7 +415,6 @@ impl EventQueue {
         self.heap.pop().map(|Reverse(i)| (i.at, i.event))
     }
 
-    /// Pop with the edge scope the event was pushed under.
     pub fn pop_scoped(&mut self) -> Option<(Micros, u32, Event)> {
         self.heap.pop().map(|Reverse(i)| (i.at, i.scope, i.event))
     }
@@ -236,7 +502,8 @@ mod tests {
         };
         let mut q = EventQueue::new();
         q.set_scope(1);
-        q.push(100, Event::FedArrive { task: mktask() });
+        let slot = q.stash_task(mktask());
+        q.push(100, Event::FedArrive { task: slot });
         q.set_scope(0);
         q.push(100, Event::CloudTrigger);
         let (t, s, e) = q.pop_scoped().unwrap();
@@ -250,7 +517,8 @@ mod tests {
         q.set_scope(0);
         q.push(100, Event::CloudTrigger);
         q.set_scope(1);
-        q.push(100, Event::FedArrive { task: mktask() });
+        let slot = q.stash_task(mktask());
+        q.push(100, Event::FedArrive { task: slot });
         let (_, s, e) = q.pop_scoped().unwrap();
         assert_eq!(s, 0);
         assert!(matches!(e, Event::CloudTrigger));
@@ -277,5 +545,183 @@ mod tests {
         assert_eq!((t, s), (100, 0));
         let (t, s, _) = q.pop_scoped().unwrap();
         assert_eq!((t, s), (200, 9));
+    }
+
+    #[test]
+    fn stash_take_round_trips_and_reuses_slots() {
+        use crate::model::DnnKind;
+        use crate::task::VideoSegment;
+        let mktask = |id: u64| Task {
+            id,
+            model: DnnKind::Hv,
+            segment: VideoSegment {
+                id,
+                drone: 0,
+                created_at: 0,
+                bytes: 38_000,
+            },
+            pipeline: None,
+        };
+        let mut q = EventQueue::new();
+        let a = q.stash_task(mktask(1));
+        let b = q.stash_task(mktask(2));
+        assert_eq!(q.tasks_in_flight(), 2);
+        assert_eq!(q.take_task(a).id, 1);
+        assert_eq!(q.take_task(b).id, 2);
+        assert_eq!(q.tasks_in_flight(), 0);
+        // Freed slots are recycled, so steady-state stash/take cycles
+        // never grow the arena.
+        let c = q.stash_task(mktask(3));
+        assert!(c == a || c == b);
+    }
+
+    #[test]
+    fn bucket_boundary_orders_across_the_quantum_edge() {
+        // 999 µs and 1000 µs land in adjacent buckets; 1000 and 1001
+        // share one. All orderings must be exact regardless.
+        let mut q = EventQueue::new();
+        q.push(QUANTUM_US + 1, Event::EdgeDone);
+        q.push(QUANTUM_US - 1, Event::CloudTrigger);
+        q.push(QUANTUM_US, Event::Segment { drone: 0, tick: 0 });
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().0, QUANTUM_US - 1);
+        assert_eq!(q.pop().unwrap().0, QUANTUM_US);
+        assert_eq!(q.pop().unwrap().0, QUANTUM_US + 1);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_tick_pushes_during_drain_stay_ordered() {
+        // A handler at t pushing more work at t (EdgeDone chains do
+        // this) must see it pop after already-pending same-tick events —
+        // push-order FIFO inside the activated bucket.
+        let mut q = EventQueue::new();
+        q.push(5_500, Event::EdgeDone);
+        q.push(5_500, Event::CloudTrigger);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!(t, 5_500);
+        assert!(matches!(e, Event::EdgeDone));
+        // Same-instant push while the bucket is active.
+        q.push(5_500, Event::Segment { drone: 1, tick: 0 });
+        // An earlier-microsecond push within the same quantum jumps the
+        // line, exactly as the heap would order it.
+        q.push(5_400, Event::CloudDone { key: 7 });
+        assert!(matches!(q.pop().unwrap().1, Event::CloudDone { .. }));
+        assert!(matches!(q.pop().unwrap().1, Event::CloudTrigger));
+        assert!(matches!(q.pop().unwrap().1, Event::Segment { .. }));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn overflow_promotion_preserves_order() {
+        // Far-future events (beyond the wheel window) park in overflow
+        // and must pop in exact (time, push-order) sequence after the
+        // wheel re-bases — including ties inside the overflow list.
+        let span = WHEEL_SLOTS as u64 * QUANTUM_US;
+        let mut q = EventQueue::new();
+        q.push(3 * span + 500, Event::EdgeDone);
+        q.push(span + 250, Event::CloudTrigger);
+        q.push(span + 250, Event::CloudDone { key: 1 });
+        q.push(100, Event::Segment { drone: 0, tick: 0 });
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.pop().unwrap().0, 100);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!(t, span + 250);
+        assert!(matches!(e, Event::CloudTrigger), "overflow FIFO tie");
+        assert_eq!(q.pop().unwrap().0, span + 250);
+        // Second re-base: the remaining event is two windows further out.
+        assert_eq!(q.pop().unwrap().0, 3 * span + 500);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn wheel_wraps_around_slot_indices() {
+        // Quanta mapping to the same slot index modulo WHEEL_SLOTS must
+        // never collide within one window, and successive windows reuse
+        // the slots cleanly.
+        let span = WHEEL_SLOTS as u64 * QUANTUM_US;
+        let mut q = EventQueue::new();
+        // Slot 5 of window 0 and slot 5 of window 1 (same index).
+        q.push(5 * QUANTUM_US + 10, Event::EdgeDone);
+        q.push(span + 5 * QUANTUM_US + 20, Event::CloudTrigger);
+        assert_eq!(q.pop().unwrap().0, 5 * QUANTUM_US + 10);
+        assert_eq!(q.pop().unwrap().0, span + 5 * QUANTUM_US + 20);
+        assert!(q.pop().is_none());
+        // Long interleaved stream marching through several rotations.
+        let mut q = EventQueue::new();
+        let mut expect = Vec::new();
+        for i in 0..3_000u64 {
+            let at = i * 700; // strides across quantum + slot boundaries
+            q.push(at, Event::Segment { drone: 0, tick: i });
+            expect.push(at);
+        }
+        let mut got = Vec::new();
+        while let Some((t, _)) = q.pop() {
+            got.push(t);
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn clear_resets_state_but_keeps_capacity() {
+        let mut q = EventQueue::new();
+        let span = WHEEL_SLOTS as u64 * QUANTUM_US;
+        for i in 0..500u64 {
+            q.push(i * 2_000, Event::EdgeDone);
+        }
+        q.push(2 * span, Event::CloudTrigger); // overflow
+        for _ in 0..200 {
+            q.pop();
+        }
+        let footprint = q.allocation_footprint();
+        assert!(footprint > 0);
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        assert!(q.pop().is_none());
+        assert_eq!(
+            q.allocation_footprint(),
+            footprint,
+            "clear must keep every backing allocation"
+        );
+        // Post-clear pushes start from a fresh clock: seq and wheel
+        // position reset, so a replay is bit-identical to a new queue.
+        q.push(100, Event::EdgeDone);
+        q.push(100, Event::CloudTrigger);
+        assert!(matches!(q.pop().unwrap().1, Event::EdgeDone));
+        assert!(matches!(q.pop().unwrap().1, Event::CloudTrigger));
+    }
+
+    #[test]
+    fn heap_reference_matches_on_a_smoke_sequence() {
+        // The full randomized differential lives in
+        // tests/queue_differential.rs; this is the in-module smoke pin.
+        let mut h = HeapQueue::new();
+        let mut w = EventQueue::new();
+        let pushes = [
+            (500u64, 2u32),
+            (100, 0),
+            (100, 1),
+            (2_000_000, 3),
+            (100, 2),
+            (999, 0),
+            (1_000, 1),
+        ];
+        for (i, &(at, scope)) in pushes.iter().enumerate() {
+            h.set_scope(scope);
+            w.set_scope(scope);
+            let ev = Event::Segment { drone: scope, tick: i as u64 };
+            h.push(at, ev);
+            w.push(at, ev);
+        }
+        loop {
+            let a = h.pop_scoped();
+            let b = w.pop_scoped();
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 }

@@ -1,0 +1,66 @@
+//! Golden bit-identity pins for the arena-backed event core: the three
+//! scenarios that lean hardest on the refactored paths — `fed-steal`
+//! (cross-edge task handles through the steal/transfer path),
+//! `node-crash` (fault relocation re-stashing tasks under a foreign
+//! scope), and `split-pipeline` (drone/edge/cloud stage handoffs via
+//! `StageArrive`/`DroneDone` slots) — rendered to markdown and compared
+//! byte-for-byte against committed goldens.
+//!
+//! The time-wheel + arena refactor is required to be *bit-identical* to
+//! the heap it replaced, so these files must never change for a pure
+//! event-core change. They follow the repo's self-recording pattern
+//! (see `report_api.rs::fig8_markdown_matches_pre_redesign_format`):
+//! the first local run records the file; afterwards any drift fails.
+//! Under `CI=...` a missing golden is a hard failure.
+
+use ocularone::scenario::run_scenario;
+
+/// Seed shared by all three pins (same fixed seed the report-layer
+/// tests use, so a drift here cross-checks against their goldens).
+const SEED: u64 = 42;
+
+fn pin_markdown(id: &str, file: &str) {
+    let rep = run_scenario(id, SEED)
+        .unwrap_or_else(|e| panic!("{id} runs: {e:?}"));
+    let md = rep.to_markdown();
+    let path = format!(
+        "{}/tests/{file}",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => assert_eq!(
+            md, golden,
+            "{id} markdown drifted from the recorded golden ({path}); \
+             the event core must stay bit-identical — if the change is \
+             an intentional semantic change elsewhere, delete the file \
+             to re-record"
+        ),
+        Err(_) => {
+            assert!(
+                std::env::var_os("CI").is_none(),
+                "no {id} markdown golden at {path}: record it locally \
+                 (run this test once and commit the file) before \
+                 relying on CI"
+            );
+            std::fs::write(&path, &md)
+                .unwrap_or_else(|e| panic!("record {id} golden: {e}"));
+            eprintln!("recorded new {id} markdown golden at {path}; \
+                       commit it");
+        }
+    }
+}
+
+#[test]
+fn fed_steal_markdown_matches_golden() {
+    pin_markdown("fed-steal", "golden_pin_fed_steal_md.txt");
+}
+
+#[test]
+fn node_crash_markdown_matches_golden() {
+    pin_markdown("node-crash", "golden_pin_node_crash_md.txt");
+}
+
+#[test]
+fn split_pipeline_markdown_matches_golden() {
+    pin_markdown("split-pipeline", "golden_pin_split_pipeline_md.txt");
+}

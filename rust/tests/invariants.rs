@@ -29,6 +29,10 @@
 //! * **Trace conservation** — folding the task-lifecycle trace of a
 //!   federated + faulted + hedged run reproduces the `ClusterMetrics`
 //!   ledger exactly, and every generated task finalizes exactly once.
+//! * **Arena-backed bit-identity** — 25 all-axes scenarios each run
+//!   twice from the same seed on one reused event queue: the time-wheel
+//!   + task-arena core must reproduce identical `ClusterMetrics` and
+//!   drain its task arena to zero both times.
 
 use ocularone::cluster::{Cluster, ClusterMetrics, Federation, Handover};
 use ocularone::fault::FaultSpec;
@@ -737,6 +741,137 @@ fn trace_fold_reproduces_cluster_metrics_exactly() {
     // The sweep must exercise the machinery whose trace it pins.
     assert!(launches > 0, "no hedges launched across the trace sweep");
     assert!(steals > 0, "no steals occurred across the trace sweep");
+}
+
+/// Arena-backed determinism sweep for the time-wheel event core: 25
+/// random scenarios spanning every axis at once — federation on/off,
+/// random fault schedules, the resilience layer (hedges, breakers,
+/// degradation), split-DNN pipelines, and all four cloud-backend
+/// families — each built twice from the same sampled point and run
+/// back-to-back on ONE reused [`EventQueue`]. Every run must satisfy
+/// the conservation invariants, drain the task arena to zero, and the
+/// two same-seed runs must produce bit-identical [`ClusterMetrics`]: a
+/// leaked arena slot, a stale wheel cursor, or a `clear()` that forgot
+/// state would all surface here before reaching the goldens.
+#[test]
+fn arena_backed_scenarios_are_run_twice_bit_identical() {
+    use ocularone::resilience::ResilienceSpec;
+    use ocularone::time::ms;
+
+    let policies = [
+        Policy::dems(),
+        Policy::dems_a(),
+        Policy::edf_ec(),
+        Policy::sjf_ec(),
+        Policy::cloud_only(),
+        Policy::edge_edf(),
+    ];
+    let mut rng = Rng::new(0x0A2E_4A10);
+    let mut q = EventQueue::new();
+    for iter in 0..25 {
+        // ---- sample the whole scenario up front, then build twice ----
+        let n_edges = 1 + rng.below(3);
+        let mut policy = policies[rng.below(policies.len())].clone();
+        let duration = secs(15 + rng.below(11) as u64);
+        let pipelined = rng.chance(0.4);
+        let shared_active = rng.chance(0.5);
+        let resilient = rng.chance(0.5);
+        if resilient {
+            policy = policy.with_resilience(ResilienceSpec {
+                hedge: true,
+                hedge_delay: ms(50 + rng.below(400) as u64),
+                hedge_slack: 0,
+                breaker: rng.chance(0.5),
+                degrade: rng.chance(0.5),
+                degrade_queue_high: 3,
+                degrade_queue_low: 1,
+                ..ResilienceSpec::default()
+            });
+        }
+        let mut wls: Vec<Workload> = Vec::new();
+        for _ in 0..n_edges {
+            let drones = 1 + rng.below(3) as u32;
+            let active =
+                if pipelined { shared_active } else { rng.chance(0.5) };
+            let mut wl = Workload::emulation(drones, active)
+                .with_duration(duration);
+            if pipelined {
+                wl = wl.with_pipeline(two_stage_graph(&wl.models));
+            }
+            if rng.chance(0.3) {
+                wl = wl.with_arrival(Arrival::Poisson);
+            }
+            wls.push(wl);
+        }
+        let cloud = match rng.below(4) {
+            0 => CloudSpec::NominalWan,
+            1 => CloudSpec::TrapeziumLatency,
+            2 => CloudSpec::faas(
+                secs(1 + rng.below(30) as u64),
+                1 + rng.below(6),
+            ),
+            _ => CloudSpec::MultiRegion {
+                keep_alive: secs(30),
+                concurrency: 1 + rng.below(4),
+                extra_latency: ms(40),
+            },
+        };
+        let faults = if rng.chance(0.4) {
+            Some(FaultSpec::random(&mut rng, n_edges, duration))
+        } else {
+            None
+        };
+        let fed_mode = if n_edges >= 2 { rng.below(3) } else { 0 };
+        let seed = rng.next_u64();
+        let build = || {
+            let mut platforms = Vec::with_capacity(n_edges);
+            let mut aseeds = Vec::with_capacity(n_edges);
+            for (e, wl) in wls.iter().enumerate() {
+                let (mut p, s) =
+                    Cluster::edge_parts(&policy, wl, seed, e, cloud.build());
+                p.metrics.record_completions = true;
+                platforms.push(p);
+                aseeds.push(s);
+            }
+            let mut cluster =
+                Cluster::from_parts_hetero(platforms, wls.clone(), aseeds);
+            if let Some(f) = &faults {
+                cluster = cluster.with_faults(f.clone());
+            }
+            match fed_mode {
+                1 => cluster = cluster.federated(Federation::stealing()),
+                2 => {
+                    cluster = cluster.federated(
+                        Federation::stealing().with_uplink(10.0e6),
+                    )
+                }
+                _ => {}
+            }
+            cluster
+        };
+        let label = format!(
+            "arena iter {iter} ({n_edges} edges, {}, \
+             pipeline={pipelined}, resilience={resilient}, \
+             fed={fed_mode}, faults={}, seed {seed:#x})",
+            policy.kind.name(),
+            faults.is_some(),
+        );
+        let cm1 = build().run_with(&mut q);
+        assert_eq!(
+            q.tasks_in_flight(),
+            0,
+            "{label}: task arena leaked a slot (run 1)"
+        );
+        let cm2 = build().run_with(&mut q);
+        assert_eq!(
+            q.tasks_in_flight(),
+            0,
+            "{label}: task arena leaked a slot (run 2)"
+        );
+        assert!(cm1.generated() > 0, "{label}: degenerate scenario");
+        assert_invariants(&cm1, &wls, &label);
+        assert_eq!(cm1, cm2, "{label}: same-seed runs diverged");
+    }
 }
 
 /// Direct DES-primitive property: under random interleavings of pops

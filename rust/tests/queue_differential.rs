@@ -1,0 +1,241 @@
+//! Differential determinism harness for the event core: the time-wheel
+//! [`EventQueue`] must be *stream-identical* to the comparison-based
+//! reference [`HeapQueue`] it replaced — same `(at, scope, event)`
+//! triple from every pop, including equal-timestamp push-order
+//! tie-breaks, across randomized seeded push/pop/clear sequences and
+//! the wheel's structural corners (bucket boundaries, overflow
+//! promotion, window wraparound, mid-sequence clears).
+//!
+//! The engine-level counterpart — identical `ClusterMetrics` and report
+//! bytes on the real simulator — lives in `tests/invariants.rs` and
+//! `tests/golden_pin.rs`; this file isolates the queue itself, so an
+//! ordering regression pinpoints the data structure rather than
+//! surfacing as a drifted golden three layers up.
+
+use ocularone::cluster::{Cluster, Federation};
+use ocularone::fleet::Workload;
+use ocularone::policy::Policy;
+use ocularone::rng::Rng;
+use ocularone::scenario::CloudSpec;
+use ocularone::sim::{Event, EventQueue, HeapQueue, QUANTUM_US,
+                     WHEEL_SLOTS};
+use ocularone::time::secs;
+
+/// A queue-shape-diverse event sampler (no task-carrying variants: those
+/// need arena slots, and the slot allocation itself is pinned by the
+/// engine-level tests).
+fn sample_event(rng: &mut Rng, i: u64) -> Event {
+    match rng.below(7) {
+        0 => Event::Segment { drone: rng.below(8) as u32, tick: i },
+        1 => Event::EdgeDone,
+        2 => Event::CloudTrigger,
+        3 => Event::CloudDone { key: rng.next_u64() % 1_000 },
+        4 => Event::WindowClose { model_idx: rng.below(6) },
+        5 => Event::Handover {
+            drone: rng.below(8) as u32,
+            to_edge: rng.below(4) as u32,
+        },
+        _ => Event::HedgeFire { key: rng.next_u64() % 1_000 },
+    }
+}
+
+/// Push-time sampler spanning every wheel tier: same-tick, in-window,
+/// far-future (overflow), and occasionally before the current virtual
+/// time (a heap accepts any timestamp; the wheel must too).
+fn sample_at(rng: &mut Rng, now: u64) -> u64 {
+    match rng.below(10) {
+        // Same quantum / same microsecond — tie-break territory.
+        0 | 1 => now + rng.below(3) as u64,
+        // Within a few buckets.
+        2..=5 => now + rng.below(50_000) as u64,
+        // Deep into the window.
+        6 | 7 => now + rng.below((WHEEL_SLOTS / 2) * 1_000) as u64,
+        // Beyond the window → overflow list.
+        8 => now + QUANTUM_US * WHEEL_SLOTS as u64
+            + rng.below(5_000_000) as u64,
+        // Behind the clock (stale pushes must still order exactly).
+        _ => rng.below((now + 1).min(100_000) as usize) as u64,
+    }
+}
+
+fn assert_streams_match(seed: u64, ops: usize, clear_chance: f64) {
+    let mut rng = Rng::new(seed);
+    let mut heap = HeapQueue::new();
+    let mut wheel = EventQueue::new();
+    let mut now = 0u64;
+    let mut clears = 0u32;
+    for i in 0..ops as u64 {
+        if clear_chance > 0.0 && rng.chance(clear_chance) {
+            heap.clear();
+            wheel.clear();
+            now = 0;
+            clears += 1;
+            continue;
+        }
+        if rng.chance(0.6) {
+            let at = sample_at(&mut rng, now);
+            let scope = rng.below(4) as u32;
+            let ev = sample_event(&mut rng, i);
+            heap.set_scope(scope);
+            wheel.set_scope(scope);
+            heap.push(at, ev);
+            wheel.push(at, ev);
+        } else {
+            // Alternate the two pop flavors; both must agree exactly.
+            if rng.chance(0.5) {
+                let a = heap.pop_scoped();
+                let b = wheel.pop_scoped();
+                assert_eq!(a, b, "seed {seed:#x} op {i}: scoped pop");
+                if let Some((t, _, _)) = a {
+                    now = t;
+                }
+            } else {
+                let a = heap.pop();
+                let b = wheel.pop();
+                assert_eq!(a, b, "seed {seed:#x} op {i}: pop");
+                if let Some((t, _)) = a {
+                    now = t;
+                }
+            }
+            assert_eq!(heap.len(), wheel.len(),
+                       "seed {seed:#x} op {i}: len");
+            assert_eq!(heap.is_empty(), wheel.is_empty());
+        }
+    }
+    // Drain both to exhaustion: the tails must agree too.
+    loop {
+        let a = heap.pop_scoped();
+        let b = wheel.pop_scoped();
+        assert_eq!(a, b, "seed {seed:#x}: drain tail");
+        if a.is_none() {
+            break;
+        }
+    }
+    if clear_chance > 0.0 {
+        assert!(clears > 0, "seed {seed:#x}: clear never sampled");
+    }
+}
+
+#[test]
+fn randomized_streams_match_the_heap_reference() {
+    // ≥1000 randomized operations per seed, several seeds, no clears —
+    // pure ordering equivalence.
+    for seed in [0xD1FF_0001u64, 0xD1FF_0002, 0xD1FF_0003, 0xD1FF_0004,
+                 0xD1FF_0005] {
+        assert_streams_match(seed, 2_000, 0.0);
+    }
+}
+
+#[test]
+fn randomized_streams_match_across_mid_sequence_clears() {
+    // clear() resets the FIFO tie-break counter and the wheel position;
+    // the post-clear stream must replay bit-identically to a fresh
+    // queue on both implementations.
+    for seed in [0xC1EA_0001u64, 0xC1EA_0002, 0xC1EA_0003] {
+        assert_streams_match(seed, 2_000, 0.01);
+    }
+}
+
+#[test]
+fn equal_timestamp_bursts_preserve_push_order() {
+    // Dense tie storm: many events on few distinct microseconds across
+    // bucket boundaries — the pure FIFO-among-equals stress.
+    let mut rng = Rng::new(0x7135_70B1);
+    let mut heap = HeapQueue::new();
+    let mut wheel = EventQueue::new();
+    let instants = [0u64, 999, 1_000, 1_001, 2_000,
+                    QUANTUM_US * WHEEL_SLOTS as u64 + 5];
+    for i in 0..600u64 {
+        let at = instants[rng.below(instants.len())];
+        let scope = rng.below(3) as u32;
+        let ev = Event::Segment { drone: scope, tick: i };
+        heap.set_scope(scope);
+        wheel.set_scope(scope);
+        heap.push(at, ev);
+        wheel.push(at, ev);
+    }
+    loop {
+        let a = heap.pop_scoped();
+        let b = wheel.pop_scoped();
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn overflow_promotion_under_interleaved_pops() {
+    // March virtual time through many window re-bases while far-future
+    // events are pending, popping as we go — the overflow promotion
+    // path under realistic interleaving rather than a one-shot drain.
+    let mut rng = Rng::new(0x0F10_3357);
+    let mut heap = HeapQueue::new();
+    let mut wheel = EventQueue::new();
+    let span = QUANTUM_US * WHEEL_SLOTS as u64;
+    // Sparse far-future schedule (fault/window-close shaped).
+    for k in 1..=12u64 {
+        let at = k * span + rng.below(1_000_000) as u64;
+        heap.push(at, Event::CloudTrigger);
+        wheel.push(at, Event::CloudTrigger);
+    }
+    let mut now = 0u64;
+    for i in 0..3_000u64 {
+        // Dense near-term chatter riding over the sparse schedule.
+        let at = now + rng.below(40_000) as u64;
+        let ev = Event::Segment { drone: 0, tick: i };
+        heap.push(at, ev);
+        wheel.push(at, ev);
+        let a = heap.pop();
+        let b = wheel.pop();
+        assert_eq!(a, b, "op {i}");
+        now = a.expect("queues non-empty").0;
+    }
+    loop {
+        let a = heap.pop();
+        let b = wheel.pop();
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+/// Satellite fix pin: `EventQueue::clear` + the thread-local reuse in
+/// `Cluster::run` carry over to the wheel — two consecutive identical
+/// cluster runs on ONE queue allocation produce identical metrics *and*
+/// an identical allocation footprint (no per-run bucket/arena regrowth),
+/// and the task arena fully drains.
+#[test]
+fn queue_reuse_keeps_allocation_footprint() {
+    let build = || {
+        let policy = Policy::dems();
+        let wls: Vec<Workload> = (0..2)
+            .map(|_| Workload::emulation(3, true).with_duration(secs(20)))
+            .collect();
+        let mut platforms = Vec::new();
+        let mut aseeds = Vec::new();
+        for (e, wl) in wls.iter().enumerate() {
+            let (p, s) = Cluster::edge_parts(
+                &policy, wl, 0xA110C, e, CloudSpec::NominalWan.build());
+            platforms.push(p);
+            aseeds.push(s);
+        }
+        Cluster::from_parts_hetero(platforms, wls, aseeds)
+            .federated(Federation::stealing())
+    };
+    let mut q = EventQueue::new();
+    let cm1 = build().run_with(&mut q);
+    assert_eq!(q.tasks_in_flight(), 0, "task arena leaked a slot");
+    let after_first = q.allocation_footprint();
+    assert!(after_first > 0);
+    let cm2 = build().run_with(&mut q);
+    assert_eq!(q.tasks_in_flight(), 0, "task arena leaked a slot");
+    assert_eq!(
+        q.allocation_footprint(),
+        after_first,
+        "second identical run re-grew the queue's allocations"
+    );
+    // Reuse is also bit-identical (the clear() contract).
+    assert_eq!(cm1, cm2, "queue reuse perturbed the simulation");
+}
